@@ -1,0 +1,32 @@
+//! Quickstart: simulate one benchmark point of the paper in ~10 lines.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use smart_pim::cnn::VggVariant;
+use smart_pim::config::{ArchConfig, NocKind, Scenario};
+use smart_pim::sim::evaluate;
+
+fn main() {
+    // The paper's node: 320 tiles of 12 cores x 8 ReRAM subarrays.
+    let arch = ArchConfig::paper_node();
+
+    // Best case of Fig. 8: VGG-E with weight replication + batch
+    // pipelining on the SMART NoC.
+    let report = evaluate(
+        VggVariant::E,
+        Scenario::ReplicationBatch,
+        NocKind::Smart,
+        &arch,
+    );
+
+    println!("VGG-E, scenario (4), SMART NoC:");
+    println!("  injection interval : {:.0} logical cycles", report.interval_cycles);
+    println!("  per-image latency  : {:.0} logical cycles", report.latency_cycles);
+    println!("  throughput         : {:.0} FPS = {:.4} TOPS", report.fps, report.tops);
+    println!("  energy / image     : {:.2} mJ", report.energy.total_mj());
+    println!("  efficiency         : {:.4} TOPS/W", report.tops_per_watt);
+    println!();
+    println!("paper (Fig. 8, smart/(4)): 40.4027 TOPS, 1029 FPS; Fig. 9: 3.5914 TOPS/W");
+}

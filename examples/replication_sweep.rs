@@ -1,0 +1,72 @@
+//! Design-space exploration: how does the weight-replication budget shape
+//! throughput? Sweeps the auto-planner's max replication factor for each
+//! VGG and compares against the paper's hand-tuned Fig. 7 plans — the
+//! ablation behind the paper's "balanced pipeline design" claim (Sec. VI-C).
+//!
+//! ```bash
+//! cargo run --release --example replication_sweep
+//! ```
+
+use smart_pim::cnn::{vgg, VggVariant};
+use smart_pim::config::ArchConfig;
+use smart_pim::mapping::{plan_tiles, NetworkMapping, ReplicationPlan};
+use smart_pim::pipeline::build_plans;
+use smart_pim::sim::engine::{Engine, NocAdjust};
+use smart_pim::util::table::{fnum, Table};
+
+fn throughput_fps(arch: &ArchConfig, v: VggVariant, plan: &ReplicationPlan) -> (f64, usize) {
+    let net = vgg::build(v);
+    let tiles = plan_tiles(&net, arch, &plan.factors);
+    let m = NetworkMapping::build(&net, arch, plan).expect("plan must fit");
+    let plans = build_plans(&net, &m, arch);
+    let adj = NocAdjust::identity(plans.len());
+    let sim = Engine::new(&plans, &adj, true, 8).run();
+    let fps = 1.0 / (sim.steady_interval() * arch.logical_cycle_ns * 1e-9);
+    (fps, tiles)
+}
+
+fn main() {
+    let arch = ArchConfig::paper_node();
+
+    let mut t = Table::new(
+        "auto-planner sweep: FPS (tiles used) by max replication factor",
+        &["vgg", "r<=1", "r<=2", "r<=4", "r<=8", "r<=16", "fig7 hand plan"],
+    );
+    for v in VggVariant::ALL {
+        let net = vgg::build(v);
+        let mut row = vec![v.name().to_string()];
+        for max_r in [1usize, 2, 4, 8, 16] {
+            let plan = ReplicationPlan::auto(&net, &arch, max_r);
+            let (fps, tiles) = throughput_fps(&arch, v, &plan);
+            row.push(format!("{} ({tiles})", fnum(fps, 0)));
+        }
+        let (fps, tiles) = throughput_fps(&arch, v, &ReplicationPlan::fig7(v));
+        row.push(format!("{} ({tiles})", fnum(fps, 0)));
+        t.row(&row);
+    }
+    t.print();
+
+    println!();
+    println!("Ablation — what if conv1 were NOT replicated 16x (VGG-E)?");
+    let mut t = Table::new(
+        "conv1 replication ablation (others per Fig. 7)",
+        &["conv1 r", "interval (cycles)", "FPS"],
+    );
+    for r1 in [1usize, 2, 4, 8, 16] {
+        let mut plan = ReplicationPlan::fig7(VggVariant::E);
+        plan.factors[0] = r1;
+        let net = vgg::build(VggVariant::E);
+        let m = NetworkMapping::build(&net, &arch, &plan).unwrap();
+        let plans = build_plans(&net, &m, &arch);
+        let adj = NocAdjust::identity(plans.len());
+        let sim = Engine::new(&plans, &adj, true, 8).run();
+        let interval = sim.steady_interval();
+        t.row(&[
+            format!("{r1}"),
+            fnum(interval, 0),
+            fnum(1.0 / (interval * arch.logical_cycle_ns * 1e-9), 0),
+        ]);
+    }
+    t.print();
+    println!("(the busiest stage gates the whole pipeline: balance, not peak, wins)");
+}

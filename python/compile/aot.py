@@ -1,0 +1,139 @@
+"""AOT lowering: jax graphs -> HLO *text* artifacts for the Rust runtime.
+
+HLO text (NOT ``lowered.compile().serialize()`` / serialized HloModuleProto)
+is the interchange format: jax >= 0.5 emits protos with 64-bit instruction
+ids which xla_extension 0.5.1 (what the published ``xla`` 0.1.6 crate links)
+rejects (``proto.id() <= INT_MAX``); the HLO text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts written to --out-dir (default ../artifacts):
+
+  crossbar_gemm_128.hlo.txt   single 128x128 subarray GEMM (microbench)
+  vgg_tiny_b1.hlo.txt         tiny-VGG inference, batch 1
+  vgg_tiny_b4.hlo.txt         tiny-VGG inference, batch 4
+  weights_vgg_tiny.bin        int32 weight tensors for the runtime
+  expected_logits_b{1,4}.txt  golden outputs for the Rust integration tests
+  manifest.txt                one line per artifact: name, arity, shapes
+
+Run via ``make artifacts`` (a no-op when inputs are unchanged).
+
+Usage: python -m compile.aot [--out-dir DIR] [--seed N]
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+import struct
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.crossbar import crossbar_gemm_signed
+
+WEIGHTS_MAGIC = 0x534D5057  # "SMPW"
+
+
+def to_hlo_text(lowered) -> str:
+    """Lower a jitted function to XLA HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write_weights_bin(path: str, tensors: Sequence[np.ndarray], names: Sequence[str]) -> None:
+    """Simple little-endian tensor container parsed by rust/src/runtime/weights.rs."""
+    assert len(tensors) == len(names)
+    with open(path, "wb") as f:
+        f.write(struct.pack("<II", WEIGHTS_MAGIC, len(tensors)))
+        for name, t in zip(names, tensors):
+            t = np.ascontiguousarray(t.astype(np.int32))
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", t.ndim))
+            f.write(struct.pack(f"<{t.ndim}I", *t.shape))
+            f.write(t.tobytes())
+
+
+def lower_crossbar_gemm() -> str:
+    spec = jax.ShapeDtypeStruct((128, 128), jnp.int32)
+    fn = functools.partial(crossbar_gemm_signed, adc_bits=model.DEFAULT_ADC_BITS)
+    return to_hlo_text(jax.jit(fn).lower(spec, spec))
+
+
+def lower_vgg_tiny(batch: int, weights: List[np.ndarray]) -> str:
+    img_spec = jax.ShapeDtypeStruct(
+        (batch, model.TINY_VGG.image_hw, model.TINY_VGG.image_hw, 3), jnp.float32
+    )
+    w_specs = [jax.ShapeDtypeStruct(w.shape, jnp.int32) for w in weights]
+
+    def fn(image, *ws):
+        return model.vgg_tiny_forward(image, ws)
+
+    return to_hlo_text(jax.jit(fn).lower(img_spec, *w_specs))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--skip-gemm", action="store_true", help="only the model artifacts")
+    args = ap.parse_args()
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+
+    manifest: List[str] = []
+
+    if not args.skip_gemm:
+        text = lower_crossbar_gemm()
+        _write(out, "crossbar_gemm_128.hlo.txt", text)
+        manifest.append(
+            "crossbar_gemm_128 inputs=i32[128,128],i32[128,128] output=i32[128,128]"
+        )
+
+    weights = model.init_weights(model.TINY_VGG, seed=args.seed)
+    names = [f"w{i}" for i in range(len(weights))]
+    write_weights_bin(os.path.join(out, "weights_vgg_tiny.bin"), weights, names)
+    manifest.append(
+        "weights_vgg_tiny tensors="
+        + ",".join(f"{n}:{'x'.join(map(str, w.shape))}" for n, w in zip(names, weights))
+    )
+
+    for batch in (1, 4):
+        text = lower_vgg_tiny(batch, weights)
+        _write(out, f"vgg_tiny_b{batch}.hlo.txt", text)
+        manifest.append(
+            f"vgg_tiny_b{batch} inputs=f32[{batch},32,32,3]+{len(weights)}xweights "
+            f"output=f32[{batch},10]"
+        )
+        # Golden outputs for the Rust integration tests.
+        img = model.test_image(batch)
+        logits = np.asarray(
+            model.vgg_tiny_forward(jnp.asarray(img), [jnp.asarray(w) for w in weights])
+        )
+        lines = [" ".join(f"{v:.6f}" for v in row) for row in logits]
+        _write(out, f"expected_logits_b{batch}.txt", "\n".join(lines) + "\n")
+        img_lines = [" ".join(f"{v:.8f}" for v in row.reshape(-1)) for row in img]
+        _write(out, f"test_image_b{batch}.txt", "\n".join(img_lines) + "\n")
+
+    _write(out, "manifest.txt", "\n".join(manifest) + "\n")
+    print(f"artifacts written to {out}")
+
+
+def _write(out_dir: str, name: str, text: str) -> None:
+    path = os.path.join(out_dir, name)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  {name}: {len(text)} chars")
+
+
+if __name__ == "__main__":
+    main()

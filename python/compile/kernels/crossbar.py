@@ -1,0 +1,160 @@
+"""L1 — Pallas kernel: bit-serial ReRAM crossbar GEMM.
+
+Functional model of the paper's analog compute path (Sec. II-C / III):
+
+  1-bit DACs stream the 16-bit activation in 16 bit-phases onto the word
+  lines; each weight is stored as 8 x 2-bit MLC cells across 8 adjacent bit
+  lines; the analog column current (a Kirchhoff sum) is sampled, converted by
+  an 8-bit ADC, and the per-phase / per-slice partial sums are recombined by
+  the shift & add units.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the 128x128 subarray maps
+onto a 128x128 MXU-aligned block; the bit-serial DAC becomes a loop over bit
+planes (each plane is a {0,1} matrix x cell matrix product — exactly what the
+array computes in one phase); VMEM holds one weight block + one activation
+stripe per grid step, mirroring the eDRAM input register staging.
+
+Signed weights use the ISAAC-style bias trick (Sec. II-D): weights are stored
+biased by +2**15 as unsigned 16-bit, and the bias is subtracted digitally
+using the per-plane row-sums of the activation bits (which the hardware gets
+for free from a dedicated always-on column).
+
+Everything is integer-exact; ADC saturation is the only lossy step, and it is
+configurable (`adc_bits`). With adc_bits >= ceil(log2(rows*3)) + 1 the kernel
+is bit-exact equal to the plain int GEMM (property-tested in
+python/tests/test_kernel.py).
+
+The kernel MUST run with interpret=True: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Fixed by the paper's architecture (Sec. III).
+INPUT_BITS = 16  # 16-bit IFM, streamed 1 bit/phase through 1-bit DACs
+CELL_BITS = 2  # 2-bit MLC ReRAM cells
+N_SLICES = 8  # 16-bit weight = 8 x 2-bit cells across 8 columns
+WEIGHT_BIAS = 1 << 15  # ISAAC-style bias for signed weights
+SUBARRAY = 128  # 128x128 crossbar subarray == MXU tile
+
+
+def slice_weights(w: jax.Array) -> jax.Array:
+    """Slice signed int weights (K, N) into biased 2-bit cells (K, N*8).
+
+    Cell layout: column-major slices — cells of output column n occupy
+    columns [n*8, n*8+8) of the returned matrix, least-significant slice
+    first, exactly like the paper's "eight cells across eight different
+    columns".
+    """
+    wb = (w.astype(jnp.int32) + WEIGHT_BIAS).astype(jnp.uint32)  # unsigned 16-bit
+    shifts = jnp.arange(N_SLICES, dtype=jnp.uint32) * CELL_BITS  # (8,)
+    cells = (wb[:, :, None] >> shifts[None, None, :]) & 0x3  # (K, N, 8)
+    k, n = w.shape
+    return cells.astype(jnp.int32).reshape(k, n * N_SLICES)
+
+
+def _crossbar_kernel(x_ref, wc_ref, o_ref, *, adc_bits: int, input_bits: int):
+    """One grid step: (bm, bk) activation block x (bk, bn*8) cell block.
+
+    Grid is (M/bm, N/bn, K/bk); K is the innermost (fastest) dimension so the
+    output block accumulates across K steps (subarrays stacked over the
+    reduction dimension, recombined by the tile-level shift & add).
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.uint32)  # (bm, bk) unsigned activations
+    wc = wc_ref[...]  # (bk, bn*8) int32 cells in 0..3
+    bm, bk = x.shape
+    bn8 = wc.shape[1]
+    adc_max = (1 << adc_bits) - 1
+
+    acc = jnp.zeros((bm, bn8 // N_SLICES), jnp.int32)
+    bias_acc = jnp.zeros((bm, 1), jnp.int32)
+    # Bit-serial phases: one {0,1} plane per clock through the 1-bit DACs.
+    for b in range(input_bits):
+        plane = ((x >> b) & 1).astype(jnp.int32)  # (bm, bk)
+        # Analog column currents for all 8 slices at once (Kirchhoff sum),
+        # then the ADC clips each column sample to its dynamic range.
+        col = jax.lax.dot_general(
+            plane, wc, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )  # (bm, bn*8)
+        col = jnp.minimum(col, adc_max)
+        # Shift & add: recombine the 8 cell slices (x4 each) and the input
+        # bit weight (x2 each phase).
+        sliced = col.reshape(bm, bn8 // N_SLICES, N_SLICES)
+        shifts = (1 << (CELL_BITS * jnp.arange(N_SLICES, dtype=jnp.int32)))
+        acc += (sliced * shifts[None, None, :]).sum(axis=2) << b
+        # Row-sum of the plane = the always-on bias column sample.
+        bias_acc += plane.sum(axis=1, keepdims=True) << b
+    # Digital bias correction: y = y_biased - 2^15 * sum_i a_i.
+    o_ref[...] += acc - bias_acc * WEIGHT_BIAS
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("adc_bits", "input_bits", "block_m", "block_n", "block_k"),
+)
+def crossbar_gemm(
+    x: jax.Array,
+    w_cells: jax.Array,
+    *,
+    adc_bits: int = 10,
+    input_bits: int = INPUT_BITS,
+    block_m: int = SUBARRAY,
+    block_n: int = SUBARRAY,
+    block_k: int = SUBARRAY,
+) -> jax.Array:
+    """Bit-serial crossbar GEMM: (M, K) uint activations x pre-sliced cells.
+
+    Args:
+      x: (M, K) int32, values in [0, 2**input_bits) — unsigned fixed-point
+        IFM (post-ReLU activations are non-negative).
+      w_cells: (K, N*8) int32 cells in 0..3 from :func:`slice_weights`.
+      adc_bits: ADC resolution; sums are clipped to 2**adc_bits - 1. The
+        paper's array (128 rows, 1-bit input, 2-bit cells) needs 10 bits to
+        be lossless; 8 saturates on dense high inputs (fidelity experiments).
+      input_bits: DAC phases (16 in the paper).
+      block_m/n/k: VMEM block shape; 128 matches subarray == MXU tile.
+
+    Returns:
+      (M, N) int32 — exact signed GEMM result when the ADC does not clip.
+    """
+    m, k = x.shape
+    k2, n8 = w_cells.shape
+    assert k == k2, f"reduction mismatch {k} vs {k2}"
+    assert n8 % N_SLICES == 0
+    n = n8 // N_SLICES
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (
+        f"shapes ({m},{k})x({k},{n}) must tile by ({block_m},{block_k},{block_n})"
+    )
+
+    grid = (m // block_m, n // block_n, k // block_k)
+    return pl.pallas_call(
+        functools.partial(
+            _crossbar_kernel, adc_bits=adc_bits, input_bits=input_bits
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n * N_SLICES), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, w_cells)
+
+
+def crossbar_gemm_signed(
+    x: jax.Array, w: jax.Array, **kw
+) -> jax.Array:
+    """Convenience wrapper: slices signed weights then runs the kernel."""
+    return crossbar_gemm(x, slice_weights(w), **kw)

@@ -1,0 +1,60 @@
+"""Pure-jnp oracle for the crossbar kernel — the CORE correctness signal.
+
+Implements exactly the same bit-serial / cell-sliced / ADC-clipped math as
+``crossbar.py`` but with straight-line jnp (no pallas, no blocking), plus the
+trivially-correct exact integer GEMM the lossless configuration must equal.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .crossbar import (
+    CELL_BITS,
+    N_SLICES,
+    WEIGHT_BIAS,
+    slice_weights,
+)
+
+
+def exact_gemm(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Plain signed integer GEMM — what a lossless crossbar must compute."""
+    return jax.lax.dot_general(
+        x.astype(jnp.int32),
+        w.astype(jnp.int32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def crossbar_gemm_ref(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    adc_bits: int = 10,
+    input_bits: int = 16,
+) -> jax.Array:
+    """Reference bit-serial crossbar GEMM over signed weights (K, N).
+
+    Mirrors the analog path step by step: bias the weights, slice into 2-bit
+    cells, stream input bit-planes, clip each per-phase/per-slice column sum
+    to the ADC range, shift & add, subtract the digital bias term.
+    """
+    m, k = x.shape
+    _, n = w.shape
+    cells = slice_weights(w).reshape(k, n, N_SLICES)  # (K, N, 8) in 0..3
+    xu = x.astype(jnp.uint32)
+    adc_max = (1 << adc_bits) - 1
+
+    out = jnp.zeros((m, n), jnp.int32)
+    bias = jnp.zeros((m, 1), jnp.int32)
+    for b in range(input_bits):
+        plane = ((xu >> b) & 1).astype(jnp.int32)  # (M, K)
+        # per-slice analog column sums, one ADC sample each
+        col = jnp.einsum("mk,kns->mns", plane, cells)
+        col = jnp.minimum(col, adc_max)
+        shifts = 1 << (CELL_BITS * jnp.arange(N_SLICES, dtype=jnp.int32))
+        out = out + ((col * shifts[None, None, :]).sum(axis=2) << b)
+        bias = bias + (plane.sum(axis=1, keepdims=True) << b)
+    return out - bias * WEIGHT_BIAS

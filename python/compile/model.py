@@ -1,0 +1,257 @@
+"""L2 — quantized CNN forward graph built on the L1 crossbar kernel.
+
+This is the paper's compute graph written in JAX: every convolution and
+fully-connected layer is lowered to an im2col GEMM executed by the bit-serial
+ReRAM crossbar kernel (``kernels.crossbar``), with the same 16-bit activation
+/ 16-bit weight quantization the architecture fixes (Sec. III). Pooling,
+activation-requantization ("sigmoid unit" in the paper; we use ReLU as all
+VGG variants do) and the final classifier head are digital and stay in jnp —
+exactly like the tile-level shift&add / sigmoid / maxpool peripherals.
+
+The paper's evaluation network is VGG A-E at 224x224; for the runnable
+end-to-end artifact we use the same layer structure scaled to a tiny VGG on
+32x32 (the full-scale networks are modeled cycle-accurately on the Rust
+side — timing does not depend on pixel values). Weights are generated
+deterministically from a seed and shipped to the Rust runtime through
+``artifacts/weights_*.bin``; the HLO graph takes them as parameters so the
+artifact stays small and the runtime exercises a realistic weight-loading
+path.
+
+Build-time only: nothing in this file is imported at serving time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.crossbar import INPUT_BITS, SUBARRAY, crossbar_gemm, slice_weights
+
+# ---------------------------------------------------------------------------
+# Quantization parameters (paper: fixed 16-bit weights and feature maps).
+# ---------------------------------------------------------------------------
+ACT_FRAC_BITS = 8  # activations are unsigned Q8.8 fixed point
+ACT_SCALE = float(1 << ACT_FRAC_BITS)
+ACT_MAX = (1 << INPUT_BITS) - 1
+WEIGHT_FRAC_BITS = 12  # weights are signed Q3.12
+WEIGHT_SCALE = float(1 << WEIGHT_FRAC_BITS)
+WEIGHT_MAX = (1 << 15) - 1
+DEFAULT_ADC_BITS = 10  # lossless for a 128-row subarray (DESIGN.md §1)
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    """One 3x3-conv (stride 1, SAME) + optional 2x2 maxpool stage."""
+
+    in_ch: int
+    out_ch: int
+    pool: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class TinyVggSpec:
+    """VGG-style network scaled to a small input resolution."""
+
+    image_hw: int
+    convs: Tuple[ConvSpec, ...]
+    fc_dims: Tuple[int, ...]  # hidden dims then classes
+
+    @property
+    def flat_dim(self) -> int:
+        hw = self.image_hw
+        for c in self.convs:
+            if c.pool:
+                hw //= 2
+        return hw * hw * self.convs[-1].out_ch
+
+
+TINY_VGG = TinyVggSpec(
+    image_hw=32,
+    convs=(
+        ConvSpec(3, 16, pool=True),
+        ConvSpec(16, 32, pool=True),
+        ConvSpec(32, 32, pool=True),
+    ),
+    fc_dims=(64, 10),
+)
+
+
+def _round_up(x: int, to: int) -> int:
+    return (x + to - 1) // to * to
+
+
+# ---------------------------------------------------------------------------
+# Weight generation (build-time, deterministic).
+# ---------------------------------------------------------------------------
+def init_weights(spec: TinyVggSpec, seed: int = 0) -> List[np.ndarray]:
+    """He-initialized float weights quantized to signed int16 (as int32).
+
+    Returns one (K, N) matrix per GEMM layer: convs first (K = in_ch*9,
+    N = out_ch), then FCs. These are the arrays shipped to the Rust runtime.
+    """
+    rng = np.random.default_rng(seed)
+    mats: List[np.ndarray] = []
+    for c in spec.convs:
+        k = c.in_ch * 9
+        std = float(np.sqrt(2.0 / k))
+        w = rng.normal(0.0, std, (k, c.out_ch))
+        mats.append(_quantize_weights(w))
+    in_dim = spec.flat_dim
+    for out_dim in spec.fc_dims:
+        std = float(np.sqrt(2.0 / in_dim))
+        w = rng.normal(0.0, std, (in_dim, out_dim))
+        mats.append(_quantize_weights(w))
+        in_dim = out_dim
+    return mats
+
+
+def _quantize_weights(w: np.ndarray) -> np.ndarray:
+    q = np.clip(np.round(w * WEIGHT_SCALE), -WEIGHT_MAX, WEIGHT_MAX)
+    return q.astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Graph pieces.
+# ---------------------------------------------------------------------------
+def quantize_act(x: jax.Array) -> jax.Array:
+    """Float activations -> unsigned Q8.8 int32 (the 16-bit IFM format)."""
+    q = jnp.round(x * ACT_SCALE)
+    return jnp.clip(q, 0, ACT_MAX).astype(jnp.int32)
+
+
+def dequantize_acc(acc: jax.Array) -> jax.Array:
+    """int32 GEMM accumulator -> float (activation x weight scales)."""
+    return acc.astype(jnp.float32) / (ACT_SCALE * WEIGHT_SCALE)
+
+
+def im2col(x: jax.Array, ksize: int = 3) -> jax.Array:
+    """(B, H, W, C) -> (B*H*W, ksize*ksize*C) SAME-padded patches.
+
+    Row-major kernel stride, matching Eq. (1)-(2)'s row-majored walk.
+    """
+    b, h, w, c = x.shape
+    pad = ksize // 2
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    patches = [
+        xp[:, dy : dy + h, dx : dx + w, :]
+        for dy in range(ksize)
+        for dx in range(ksize)
+    ]
+    stacked = jnp.concatenate(patches, axis=-1)  # (B, H, W, k*k*C)
+    return stacked.reshape(b * h * w, ksize * ksize * c)
+
+
+def crossbar_matmul(
+    x_q: jax.Array,
+    w_q: jax.Array,
+    *,
+    adc_bits: int = DEFAULT_ADC_BITS,
+) -> jax.Array:
+    """Pad (M, K) x (K, N) to subarray multiples and run the Pallas kernel.
+
+    Zero-padding is exact under the biased-cell encoding: padded activation
+    rows contribute no charge and no bias counts; padded weight columns decode
+    to exactly zero after bias correction.
+    """
+    m, k = x_q.shape
+    k2, n = w_q.shape
+    assert k == k2, f"GEMM mismatch ({m},{k}) x ({k2},{n})"
+    mp = _round_up(m, SUBARRAY)
+    kp = _round_up(k, SUBARRAY)
+    np_ = _round_up(n, SUBARRAY)
+    xpad = jnp.pad(x_q, ((0, mp - m), (0, kp - k)))
+    wpad = jnp.pad(w_q, ((0, kp - k), (0, np_ - n)))
+    out = crossbar_gemm(xpad, slice_weights(wpad), adc_bits=adc_bits)
+    return out[:m, :n]
+
+
+def maxpool2(x: jax.Array) -> jax.Array:
+    """2x2 stride-2 max pooling on (B, H, W, C) — the tile's MP unit."""
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, 2, 2, 1),
+        window_strides=(1, 2, 2, 1),
+        padding="VALID",
+    )
+
+
+def vgg_tiny_forward(
+    image: jax.Array,
+    weights: Sequence[jax.Array],
+    *,
+    spec: TinyVggSpec = TINY_VGG,
+    adc_bits: int = DEFAULT_ADC_BITS,
+) -> jax.Array:
+    """Quantized tiny-VGG inference: (B, 32, 32, 3) float in [0,1] -> logits.
+
+    Every GEMM goes through the bit-serial crossbar kernel; inter-layer
+    requantization reproduces the IR/OR + shift&add digital path.
+    """
+    b = image.shape[0]
+    x = jnp.clip(image, 0.0, 1.0)
+    hw = spec.image_hw
+    n_conv = len(spec.convs)
+    for i, c in enumerate(spec.convs):
+        x_q = quantize_act(x)  # (B, hw, hw, in_ch) uint16-valued
+        cols = im2col(x_q)  # (B*hw*hw, in_ch*9)
+        acc = crossbar_matmul(cols, weights[i], adc_bits=adc_bits)
+        y = dequantize_acc(acc).reshape(b, hw, hw, c.out_ch)
+        y = jax.nn.relu(y)
+        if c.pool:
+            y = maxpool2(y)
+            hw //= 2
+        x = y
+    x = x.reshape(b, -1)  # (B, flat_dim)
+    for j, out_dim in enumerate(spec.fc_dims):
+        x_q = quantize_act(x)
+        acc = crossbar_matmul(x_q, weights[n_conv + j], adc_bits=adc_bits)
+        x = dequantize_acc(acc)
+        if j + 1 < len(spec.fc_dims):
+            x = jax.nn.relu(x)
+    return x  # (B, classes) float logits
+
+
+def vgg_tiny_forward_float(
+    image: jax.Array,
+    weights: Sequence[jax.Array],
+    *,
+    spec: TinyVggSpec = TINY_VGG,
+) -> jax.Array:
+    """Float reference of the same network (dequantized weights, exact conv).
+
+    Used by pytest to bound the quantization error of the crossbar path.
+    """
+    b = image.shape[0]
+    x = jnp.clip(image, 0.0, 1.0)
+    hw = spec.image_hw
+    n_conv = len(spec.convs)
+    for i, c in enumerate(spec.convs):
+        wf = weights[i].astype(jnp.float32) / WEIGHT_SCALE
+        cols = im2col(x)
+        y = (cols @ wf).reshape(b, hw, hw, c.out_ch)
+        y = jax.nn.relu(y)
+        if c.pool:
+            y = maxpool2(y)
+            hw //= 2
+        x = y
+    x = x.reshape(b, -1)
+    for j, _ in enumerate(spec.fc_dims):
+        wf = weights[n_conv + j].astype(jnp.float32) / WEIGHT_SCALE
+        x = x @ wf
+        if j + 1 < len(spec.fc_dims):
+            x = jax.nn.relu(x)
+    return x
+
+
+def test_image(batch: int, seed: int = 7) -> np.ndarray:
+    """Deterministic synthetic image batch in [0, 1] (B, 32, 32, 3)."""
+    rng = np.random.default_rng(seed)
+    return rng.uniform(
+        0.0, 1.0, (batch, TINY_VGG.image_hw, TINY_VGG.image_hw, 3)
+    ).astype(np.float32)

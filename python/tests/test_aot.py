@@ -1,0 +1,88 @@
+"""AOT path: HLO-text emission and the weights container format."""
+
+import os
+import struct
+
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+class TestWeightsBin:
+    def test_container_round_trip(self, tmp_path):
+        tensors = [
+            np.arange(6, dtype=np.int32).reshape(2, 3),
+            np.asarray([-7], dtype=np.int32),
+        ]
+        path = tmp_path / "w.bin"
+        aot.write_weights_bin(str(path), tensors, ["a", "b"])
+        raw = path.read_bytes()
+        magic, count = struct.unpack_from("<II", raw, 0)
+        assert magic == aot.WEIGHTS_MAGIC
+        assert count == 2
+        # parse manually
+        off = 8
+        for want in tensors:
+            (nlen,) = struct.unpack_from("<I", raw, off)
+            off += 4 + nlen
+            (ndim,) = struct.unpack_from("<I", raw, off)
+            off += 4
+            dims = struct.unpack_from(f"<{ndim}I", raw, off)
+            off += 4 * ndim
+            n = int(np.prod(dims))
+            data = np.frombuffer(raw, dtype="<i4", count=n, offset=off)
+            off += 4 * n
+            np.testing.assert_array_equal(data.reshape(dims), want)
+        assert off == len(raw)
+
+
+class TestHloText:
+    def test_gemm_lowering_is_hlo_text(self):
+        text = aot.lower_crossbar_gemm()
+        assert "HloModule" in text
+        assert "ENTRY" in text
+        # int32 128x128 params visible in the signature
+        assert "s32[128,128]" in text
+
+    @pytest.mark.slow
+    def test_model_lowering_contains_loops(self):
+        ws = model.init_weights(model.TINY_VGG, seed=0)
+        text = aot.lower_vgg_tiny(1, ws)
+        assert "HloModule" in text
+        assert "f32[1,10]" in text  # logits signature
+
+
+class TestArtifactsDir:
+    """Checks over the committed artifacts when present (post `make
+    artifacts`); skipped otherwise so the suite runs pre-build too."""
+
+    ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+    def _need(self, name):
+        path = os.path.join(self.ART, name)
+        if not os.path.exists(path):
+            pytest.skip(f"{name} absent — run `make artifacts`")
+        return path
+
+    def test_manifest_lists_artifacts(self):
+        path = self._need("manifest.txt")
+        text = open(path).read()
+        for key in ("crossbar_gemm_128", "vgg_tiny_b1", "vgg_tiny_b4", "weights_vgg_tiny"):
+            assert key in text, f"{key} missing from manifest"
+
+    def test_expected_logits_match_model(self):
+        self._need("expected_logits_b1.txt")
+        import jax.numpy as jnp
+
+        ws = [jnp.asarray(w) for w in model.init_weights(model.TINY_VGG, seed=0)]
+        img = jnp.asarray(model.test_image(1))
+        got = np.asarray(model.vgg_tiny_forward(img, ws))[0]
+        want = np.loadtxt(os.path.join(self.ART, "expected_logits_b1.txt"))
+        np.testing.assert_allclose(got, want, atol=2e-5)
+
+    def test_hlo_artifacts_parse_as_text(self):
+        for name in ("crossbar_gemm_128.hlo.txt", "vgg_tiny_b1.hlo.txt"):
+            path = self._need(name)
+            head = open(path).read(200)
+            assert head.startswith("HloModule"), f"{name} is not HLO text"

@@ -1,0 +1,180 @@
+"""L1 correctness: the Pallas crossbar kernel vs the pure-jnp oracle —
+the CORE correctness signal of the build (DESIGN.md §6).
+
+hypothesis sweeps shapes, bit-widths, signs and block shapes; every case
+must be bit-exact against ref.py, and the lossless configuration must equal
+the plain integer GEMM.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.crossbar import (
+    N_SLICES,
+    SUBARRAY,
+    crossbar_gemm,
+    crossbar_gemm_signed,
+    slice_weights,
+)
+from compile.kernels.ref import crossbar_gemm_ref, exact_gemm
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def rand_case(rng, m, k, n, x_max=1 << 16, w_max=1 << 15):
+    x = jnp.asarray(rng.integers(0, x_max, (m, k)), jnp.int32)
+    w = jnp.asarray(rng.integers(-w_max, w_max, (k, n)), jnp.int32)
+    return x, w
+
+
+class TestSliceWeights:
+    def test_cells_in_range(self):
+        rng = np.random.default_rng(0)
+        _, w = rand_case(rng, 1, 16, 8)
+        cells = np.asarray(slice_weights(w))
+        assert cells.min() >= 0 and cells.max() <= 3
+        assert cells.shape == (16, 8 * N_SLICES)
+
+    def test_cells_decode_back(self):
+        rng = np.random.default_rng(1)
+        _, w = rand_case(rng, 1, 8, 4)
+        cells = np.asarray(slice_weights(w)).reshape(8, 4, N_SLICES)
+        shifts = 4 ** np.arange(N_SLICES)
+        decoded = (cells * shifts).sum(axis=2) - (1 << 15)
+        np.testing.assert_array_equal(decoded, np.asarray(w))
+
+    @given(st.integers(-(1 << 15), (1 << 15) - 1))
+    def test_single_weight_round_trip(self, w):
+        wa = jnp.asarray([[w]], jnp.int32)
+        cells = np.asarray(slice_weights(wa)).reshape(N_SLICES)
+        val = sum(int(c) << (2 * i) for i, c in enumerate(cells)) - (1 << 15)
+        assert val == w
+
+
+class TestRefOracle:
+    """The oracle itself must equal the exact GEMM when lossless."""
+
+    @given(
+        m=st.integers(1, 6),
+        k=st.integers(1, 40),
+        n=st.integers(1, 6),
+        seed=st.integers(0, 2**31),
+    )
+    def test_lossless_equals_exact(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        x, w = rand_case(rng, m, k, n)
+        # adc wide enough for k rows of 1-bit x 2-bit products
+        adc = max(2, int(np.ceil(np.log2(k * 3 + 1))))
+        got = crossbar_gemm_ref(x, w, adc_bits=adc)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(exact_gemm(x, w)))
+
+    def test_adc_clipping_bites_on_dense_input(self):
+        # All-ones 16-bit input with max-positive weights must clip at 8 bits.
+        k = 128
+        x = jnp.full((1, k), (1 << 16) - 1, jnp.int32)
+        w = jnp.full((k, 1), (1 << 15) - 1, jnp.int32)
+        lossless = crossbar_gemm_ref(x, w, adc_bits=10)
+        clipped = crossbar_gemm_ref(x, w, adc_bits=8)
+        np.testing.assert_array_equal(
+            np.asarray(lossless), np.asarray(exact_gemm(x, w))
+        )
+        assert np.all(np.asarray(clipped) != np.asarray(lossless))
+
+    def test_clipping_monotone_in_adc_bits(self):
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.integers(1 << 15, 1 << 16, (2, 64)), jnp.int32)
+        w = jnp.asarray(rng.integers(1 << 13, 1 << 15, (64, 2)), jnp.int32)
+        errs = []
+        for adc in (6, 7, 8, 9, 10):
+            got = np.asarray(crossbar_gemm_ref(x, w, adc_bits=adc))
+            errs.append(np.abs(got - np.asarray(exact_gemm(x, w))).max())
+        assert all(a >= b for a, b in zip(errs, errs[1:])), errs
+        assert errs[-1] == 0
+
+
+class TestPallasKernel:
+    """The Pallas kernel must be bit-exact against the oracle."""
+
+    @pytest.mark.parametrize("adc_bits", [8, 10])
+    def test_subarray_shape_exact(self, adc_bits):
+        rng = np.random.default_rng(7)
+        x, w = rand_case(rng, SUBARRAY, SUBARRAY, SUBARRAY)
+        got = crossbar_gemm_signed(x, w, adc_bits=adc_bits)
+        want = crossbar_gemm_ref(x, w, adc_bits=adc_bits)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @given(
+        mb=st.integers(1, 2),
+        kb=st.integers(1, 2),
+        nb=st.integers(1, 2),
+        block=st.sampled_from([8, 16, 32]),
+        adc_bits=st.sampled_from([6, 8, 10]),
+        seed=st.integers(0, 2**31),
+    )
+    def test_blocked_shapes_vs_ref(self, mb, kb, nb, block, adc_bits, seed):
+        rng = np.random.default_rng(seed)
+        m, k, n = mb * block, kb * block, nb * block
+        x, w = rand_case(rng, m, k, n)
+        got = crossbar_gemm(
+            x,
+            slice_weights(w),
+            adc_bits=adc_bits,
+            block_m=block,
+            block_k=block,
+            block_n=block,
+        )
+        want = crossbar_gemm_ref(x, w, adc_bits=adc_bits)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @given(
+        input_bits=st.sampled_from([4, 8, 16]),
+        seed=st.integers(0, 2**31),
+    )
+    def test_reduced_input_bits(self, input_bits, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.integers(0, 1 << input_bits, (8, 16)), jnp.int32)
+        w = jnp.asarray(rng.integers(-(1 << 15), 1 << 15, (16, 8)), jnp.int32)
+        got = crossbar_gemm(
+            x,
+            slice_weights(w),
+            adc_bits=10,
+            input_bits=input_bits,
+            block_m=8,
+            block_k=16,
+            block_n=8,
+        )
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(exact_gemm(x, w))
+        )
+
+    def test_zero_input_zero_output(self):
+        x = jnp.zeros((8, 8), jnp.int32)
+        w = jnp.asarray(
+            np.random.default_rng(0).integers(-100, 100, (8, 8)), jnp.int32
+        )
+        got = crossbar_gemm_signed(x, w, adc_bits=10, block_m=8, block_k=8, block_n=8)
+        assert np.all(np.asarray(got) == 0)
+
+    def test_zero_weights_zero_output(self):
+        # Padding exactness: zero weights decode to exactly zero despite the
+        # biased cell encoding.
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.integers(0, 1 << 16, (8, 8)), jnp.int32)
+        w = jnp.zeros((8, 8), jnp.int32)
+        got = crossbar_gemm_signed(x, w, adc_bits=10, block_m=8, block_k=8, block_n=8)
+        assert np.all(np.asarray(got) == 0)
+
+    def test_shape_mismatch_raises(self):
+        x = jnp.zeros((8, 9), jnp.int32)
+        w = jnp.zeros((8, 8), jnp.int32)
+        with pytest.raises(AssertionError):
+            crossbar_gemm_signed(x, w, block_m=8, block_k=8, block_n=8)
+
+    def test_non_divisible_block_raises(self):
+        x = jnp.zeros((8, 8), jnp.int32)
+        w = jnp.zeros((8, 8), jnp.int32)
+        with pytest.raises(AssertionError):
+            crossbar_gemm_signed(x, w, block_m=16, block_k=16, block_n=16)

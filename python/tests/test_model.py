@@ -1,0 +1,128 @@
+"""L2 correctness: the quantized tiny-VGG graph (crossbar-kernel GEMMs)
+against its float reference, plus shape and padding invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import exact_gemm
+
+settings.register_profile("ci", max_examples=10, deadline=None)
+settings.load_profile("ci")
+
+
+@pytest.fixture(scope="module")
+def weights():
+    return [jnp.asarray(w) for w in model.init_weights(model.TINY_VGG, seed=0)]
+
+
+class TestQuantization:
+    def test_act_quant_range(self):
+        x = jnp.asarray([[-1.0, 0.0, 0.5, 1.0, 300.0]])
+        q = np.asarray(model.quantize_act(x))
+        assert q[0, 0] == 0  # clipped below
+        assert q[0, 1] == 0
+        assert q[0, 2] == 128  # 0.5 * 256
+        assert q[0, 3] == 256
+        assert q[0, 4] == model.ACT_MAX  # clipped above
+
+    def test_weight_quant_symmetric(self):
+        w = model._quantize_weights(np.asarray([[1.0, -1.0]]))
+        assert w[0, 0] == 1 << model.WEIGHT_FRAC_BITS
+        assert w[0, 1] == -(1 << model.WEIGHT_FRAC_BITS)
+
+    @given(seed=st.integers(0, 2**31))
+    def test_dequant_inverts_scales(self, seed):
+        rng = np.random.default_rng(seed)
+        acc = jnp.asarray(rng.integers(-(1 << 24), 1 << 24, (3, 3)), jnp.int32)
+        f = np.asarray(model.dequantize_acc(acc))
+        np.testing.assert_allclose(
+            f, np.asarray(acc) / (model.ACT_SCALE * model.WEIGHT_SCALE), rtol=1e-6
+        )
+
+
+class TestIm2col:
+    def test_shape(self):
+        x = jnp.zeros((2, 8, 8, 3))
+        cols = model.im2col(x)
+        assert cols.shape == (2 * 64, 27)
+
+    def test_center_pixel_identity(self):
+        # With a delta kernel the center column reproduces the input.
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.uniform(size=(1, 5, 5, 2)), jnp.float32)
+        cols = model.im2col(x)
+        # patch layout: (dy, dx) majors, channels minor; center = (1,1)
+        center = np.asarray(cols).reshape(25, 9, 2)[:, 4, :]
+        np.testing.assert_allclose(center, np.asarray(x).reshape(25, 2))
+
+    def test_padding_zeros_at_corner(self):
+        x = jnp.ones((1, 4, 4, 1))
+        cols = np.asarray(model.im2col(x)).reshape(16, 9)
+        # top-left output pixel: the (0,0) tap comes from SAME padding
+        assert cols[0, 0] == 0.0
+        assert cols[0, 4] == 1.0
+
+
+class TestCrossbarMatmul:
+    @given(
+        m=st.integers(1, 9),
+        k=st.integers(1, 40),
+        n=st.integers(1, 9),
+        seed=st.integers(0, 2**31),
+    )
+    def test_padded_gemm_exact(self, m, k, n, seed):
+        # crossbar_matmul pads to 128-multiples; padding must be exact.
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.integers(0, 1 << 16, (m, k)), jnp.int32)
+        w = jnp.asarray(rng.integers(-(1 << 15), 1 << 15, (k, n)), jnp.int32)
+        got = model.crossbar_matmul(x, w)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(exact_gemm(x, w)))
+
+
+class TestTinyVgg:
+    def test_logit_shapes(self, weights):
+        img = jnp.asarray(model.test_image(2))
+        logits = model.vgg_tiny_forward(img, weights)
+        assert logits.shape == (2, 10)
+
+    def test_quantized_close_to_float(self, weights):
+        img = jnp.asarray(model.test_image(1))
+        q = model.vgg_tiny_forward(img, weights)
+        f = model.vgg_tiny_forward_float(img, weights)
+        err = float(jnp.abs(q - f).max())
+        assert err < 0.05, f"quantization error {err}"
+
+    def test_batch_elements_independent(self, weights):
+        imgs = model.test_image(4)
+        batched = np.asarray(model.vgg_tiny_forward(jnp.asarray(imgs), weights))
+        single = np.asarray(
+            model.vgg_tiny_forward(jnp.asarray(imgs[2:3]), weights)
+        )
+        np.testing.assert_allclose(batched[2:3], single, atol=1e-5)
+
+    def test_deterministic(self, weights):
+        img = jnp.asarray(model.test_image(1))
+        a = np.asarray(model.vgg_tiny_forward(img, weights))
+        b = np.asarray(model.vgg_tiny_forward(img, weights))
+        np.testing.assert_array_equal(a, b)
+
+    def test_flat_dim_matches_weights(self):
+        spec = model.TINY_VGG
+        ws = model.init_weights(spec)
+        assert ws[len(spec.convs)].shape[0] == spec.flat_dim
+        assert ws[-1].shape[1] == spec.fc_dims[-1]
+
+    def test_jit_lowerable(self, weights):
+        # The exact graph aot.py lowers must trace without concrete inputs.
+        img_spec = jax.ShapeDtypeStruct((1, 32, 32, 3), jnp.float32)
+        w_specs = [jax.ShapeDtypeStruct(w.shape, jnp.int32) for w in weights]
+
+        def fn(image, *ws):
+            return model.vgg_tiny_forward(image, ws)
+
+        lowered = jax.jit(fn).lower(img_spec, *w_specs)
+        assert "xla" in str(type(lowered)).lower() or lowered is not None

@@ -1,0 +1,111 @@
+//! Bench: regenerate Figs. 10 and 11 — injection rate vs latency and vs
+//! reception rate for the six synthetic traffic patterns on the 8x8 mesh
+//! (Sec. VII), wormhole vs SMART.
+
+use smart_pim::config::{ArchConfig, NocKind};
+use smart_pim::noc::{run_synthetic, Mesh, Pattern, SyntheticConfig};
+use smart_pim::util::bench::Bencher;
+use smart_pim::util::table::{fnum, Table};
+
+const RATES: [f64; 10] = [0.02, 0.05, 0.08, 0.12, 0.16, 0.2, 0.3, 0.5, 0.65, 0.8];
+
+fn main() {
+    let arch = ArchConfig::paper_node();
+    let mesh = Mesh::new(8, 8);
+
+    println!("== regenerating Fig. 10 (latency) and Fig. 11 (reception) ==");
+    let mut saturation: Vec<(String, f64, f64)> = Vec::new();
+    for pattern in Pattern::ALL {
+        let mut t = Table::new(
+            format!("{} — latency / reception per injection rate", pattern.name()),
+            &[
+                "rate",
+                "wormhole lat",
+                "smart lat",
+                "wormhole recv",
+                "smart recv",
+            ],
+        );
+        let mut sat_w = f64::NAN;
+        let mut sat_s = f64::NAN;
+        for &rate in &RATES {
+            let cfg = SyntheticConfig {
+                pattern,
+                injection_rate: rate,
+                warmup: 1_500,
+                measure: 6_000,
+                drain: 12_000,
+                ..Default::default()
+            };
+            let w = run_synthetic(NocKind::Wormhole, mesh, &cfg, arch.hpc_max);
+            let s = run_synthetic(NocKind::Smart, mesh, &cfg, arch.hpc_max);
+            if w.saturated() && sat_w.is_nan() {
+                sat_w = rate;
+            }
+            if s.saturated() && sat_s.is_nan() {
+                sat_s = rate;
+            }
+            t.row(&[
+                format!("{rate}"),
+                format!("{}{}", fnum(w.avg_latency, 1), sat(&w)),
+                format!("{}{}", fnum(s.avg_latency, 1), sat(&s)),
+                fnum(w.reception_rate, 4),
+                fnum(s.reception_rate, 4),
+            ]);
+        }
+        t.print();
+        saturation.push((pattern.name().to_string(), sat_w, sat_s));
+        println!();
+    }
+
+    let mut t = Table::new(
+        "saturation points (first saturated rate)",
+        &["pattern", "wormhole", "smart", "paper wormhole", "paper smart"],
+    );
+    let paper_pts = [
+        ("uniform_random", "0.05", "0.25"),
+        ("transpose", "0.05", "0.25"),
+        ("tornado", "0.05", "0.25"),
+        ("shuffle", "0.05", "0.25"),
+        ("neighbor", "0.2", "0.8"),
+        ("bit_complement", "0.05", "0.25"),
+    ];
+    for ((name, w, s), (_, pw, ps)) in saturation.iter().zip(paper_pts) {
+        t.row(&[
+            name.clone(),
+            fmt_sat(*w),
+            fmt_sat(*s),
+            pw.into(),
+            ps.into(),
+        ]);
+    }
+    t.print();
+
+    println!("\n== timing: one sweep point ==");
+    let mut b = Bencher::macro_bench();
+    for kind in [NocKind::Wormhole, NocKind::Smart] {
+        let cfg = SyntheticConfig {
+            injection_rate: 0.1,
+            ..Default::default()
+        };
+        b.bench(&format!("uniform 0.1 {} (12k cycles)", kind.name()), || {
+            run_synthetic(kind, mesh, &cfg, arch.hpc_max).completed
+        });
+    }
+}
+
+fn sat(s: &smart_pim::noc::NocStats) -> &'static str {
+    if s.saturated() {
+        " SAT"
+    } else {
+        ""
+    }
+}
+
+fn fmt_sat(x: f64) -> String {
+    if x.is_nan() {
+        ">0.8".into()
+    } else {
+        format!("{x}")
+    }
+}

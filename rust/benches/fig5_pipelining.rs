@@ -1,0 +1,51 @@
+//! Bench: regenerate Fig. 5 — speedup of pipelining scenarios (2)-(4) over
+//! the baseline (1) for every VGG, per NoC — and time the underlying
+//! simulations with the built-in harness (`cargo bench`).
+
+use smart_pim::cnn::VggVariant;
+use smart_pim::config::{ArchConfig, NocKind, Scenario};
+use smart_pim::metrics::{paper, Grid};
+use smart_pim::sim::evaluate;
+use smart_pim::util::bench::Bencher;
+
+fn main() {
+    let arch = ArchConfig::paper_node();
+
+    println!("== regenerating Fig. 5 (all NoCs) ==");
+    for noc in NocKind::ALL {
+        let grid = Grid::run(&arch, &VggVariant::ALL, &Scenario::ALL, &[noc]);
+        let (table, geo) = grid.fig5_table(noc, &VggVariant::ALL);
+        table.print();
+        println!(
+            "paper geomeans {:.4} / {:.4} / {:.4} | ours {:.4} / {:.4} / {:.4}\n",
+            paper::FIG5_GEOMEANS[0],
+            paper::FIG5_GEOMEANS[1],
+            paper::FIG5_GEOMEANS[2],
+            geo[0],
+            geo[1],
+            geo[2]
+        );
+    }
+
+    println!("== timing: single benchmark points ==");
+    let mut b = Bencher::macro_bench();
+    b.bench("evaluate vggA baseline ideal", || {
+        evaluate(VggVariant::A, Scenario::Baseline, NocKind::Ideal, &arch)
+    });
+    b.bench("evaluate vggE repl+batch ideal", || {
+        evaluate(
+            VggVariant::E,
+            Scenario::ReplicationBatch,
+            NocKind::Ideal,
+            &arch,
+        )
+    });
+    b.bench("evaluate vggE repl+batch smart (co-sim)", || {
+        evaluate(
+            VggVariant::E,
+            Scenario::ReplicationBatch,
+            NocKind::Smart,
+            &arch,
+        )
+    });
+}

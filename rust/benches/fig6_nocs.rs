@@ -1,0 +1,42 @@
+//! Bench: regenerate Fig. 6 — speedup of SMART and ideal NoCs over the
+//! wormhole baseline for every VGG in every pipelining scenario.
+
+use smart_pim::cnn::VggVariant;
+use smart_pim::config::{ArchConfig, NocKind, Scenario};
+use smart_pim::metrics::{paper, Grid};
+use smart_pim::util::bench::Bencher;
+use smart_pim::util::stats::geomean;
+
+fn main() {
+    let arch = ArchConfig::paper_node();
+    println!("== regenerating Fig. 6 (all scenarios) ==");
+    let grid = Grid::run(&arch, &VggVariant::ALL, &Scenario::ALL, &NocKind::ALL);
+    let mut smart_all = Vec::new();
+    let mut ideal_all = Vec::new();
+    for scenario in Scenario::ALL {
+        let (table, geo) = grid.fig6_table(scenario, &VggVariant::ALL);
+        table.print();
+        smart_all.push(geo[0]);
+        ideal_all.push(geo[1]);
+        println!();
+    }
+    println!(
+        "overall geomean — smart/wormhole {:.4}, ideal/wormhole {:.4} (paper ideal: {:.4})",
+        geomean(&smart_all),
+        geomean(&ideal_all),
+        paper::FIG6_IDEAL_GEOMEAN
+    );
+
+    println!("\n== timing: NoC co-simulation per kind ==");
+    let mut b = Bencher::macro_bench();
+    for noc in NocKind::ALL {
+        b.bench(&format!("co-sim vggD scenario4 {}", noc.name()), || {
+            smart_pim::sim::evaluate(
+                VggVariant::D,
+                Scenario::ReplicationBatch,
+                noc,
+                &arch,
+            )
+        });
+    }
+}

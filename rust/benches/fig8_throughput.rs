@@ -1,0 +1,60 @@
+//! Bench: regenerate Fig. 8 — VGG-E throughput (TOPS and FPS) for every
+//! NoC x scenario combination, with paper values side by side.
+
+use smart_pim::cnn::VggVariant;
+use smart_pim::config::{ArchConfig, NocKind, Scenario};
+use smart_pim::metrics::{paper, Grid};
+use smart_pim::util::bench::Bencher;
+use smart_pim::util::table::{fnum, Table};
+
+fn main() {
+    let arch = ArchConfig::paper_node();
+    println!("== regenerating Fig. 8 ==");
+    let grid = Grid::run(&arch, &[VggVariant::E], &Scenario::ALL, &NocKind::ALL);
+    grid.fig8_table().print();
+
+    // Paper values for the same grid (Sec. VI, Fig. 8).
+    let mut t = Table::new(
+        "Fig. 8 — paper reference: TOPS (FPS)",
+        &["noc", "(1)", "(2)", "(3)", "(4)"],
+    );
+    t.row(&[
+        "wormhole".into(),
+        "2.7092 (69)".into(),
+        "2.8270 (72)".into(),
+        "23.1265 (589)".into(),
+        "36.7904 (937)".into(),
+    ]);
+    t.row(&[
+        "smart".into(),
+        "2.9055 (74)".into(),
+        "3.0233 (77)".into(),
+        "26.9744 (687)".into(),
+        "40.4027 (1029)".into(),
+    ]);
+    t.row(&[
+        "ideal".into(),
+        "2.9448 (75)".into(),
+        "3.0626 (78)".into(),
+        "27.9952 (713)".into(),
+        "40.9131 (1042)".into(),
+    ]);
+    t.print();
+
+    let best = grid.get(VggVariant::E, Scenario::ReplicationBatch, NocKind::Smart);
+    println!(
+        "headline: ours {} TOPS / {} FPS vs paper {} TOPS / {} FPS",
+        fnum(best.tops, 4),
+        fnum(best.fps, 0),
+        paper::FIG8_BEST_TOPS,
+        paper::FIG8_BEST_FPS
+    );
+
+    println!("\n== timing ==");
+    let mut b = Bencher::macro_bench();
+    b.bench("full fig8 grid (12 points)", || {
+        Grid::run(&arch, &[VggVariant::E], &Scenario::ALL, &NocKind::ALL)
+            .reports
+            .len()
+    });
+}

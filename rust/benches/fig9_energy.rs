@@ -1,0 +1,49 @@
+//! Bench: regenerate Fig. 9 — energy efficiency (TOPS/W) of each VGG, with
+//! the per-image energy breakdown.
+
+use smart_pim::cnn::VggVariant;
+use smart_pim::config::{ArchConfig, NocKind, Scenario};
+use smart_pim::metrics::{paper, Grid};
+use smart_pim::util::bench::Bencher;
+use smart_pim::util::table::{fnum, Table};
+
+fn main() {
+    let arch = ArchConfig::paper_node();
+    println!("== regenerating Fig. 9 ==");
+    let grid = Grid::run(
+        &arch,
+        &VggVariant::ALL,
+        &[Scenario::ReplicationBatch],
+        &[NocKind::Smart],
+    );
+    let mut t = Table::new(
+        "Fig. 9 — energy efficiency (smart, scenario 4)",
+        &["vgg", "TOPS/W ours", "TOPS/W paper", "E/img (mJ)", "core", "tile", "noc"],
+    );
+    for (i, v) in VggVariant::ALL.iter().enumerate() {
+        let r = grid.get(*v, Scenario::ReplicationBatch, NocKind::Smart);
+        t.row(&[
+            v.name().into(),
+            fnum(r.tops_per_watt, 4),
+            fnum(paper::FIG9_TOPS_PER_WATT[i], 4),
+            fnum(r.energy.total_mj(), 2),
+            fnum(r.energy.core_mj, 2),
+            fnum(r.energy.tile_mj, 2),
+            fnum(r.energy.noc_mj, 3),
+        ]);
+    }
+    t.print();
+    println!("(paper's best case: VGG-E at 3.5914 TOPS/W)");
+
+    println!("\n== timing: energy model alone ==");
+    let mut b = Bencher::default();
+    use smart_pim::cnn::vgg;
+    use smart_pim::mapping::{NetworkMapping, ReplicationPlan};
+    use smart_pim::power::EnergyModel;
+    let net = vgg::build(VggVariant::E);
+    let plan = ReplicationPlan::fig7(VggVariant::E);
+    let m = NetworkMapping::build(&net, &arch, &plan).unwrap();
+    let em = EnergyModel::new(&arch);
+    let hops = vec![3.0; net.len()];
+    b.bench("image_energy vggE", || em.image_energy(&net, &m, &hops));
+}

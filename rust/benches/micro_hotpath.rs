@@ -1,0 +1,119 @@
+//! Micro-benchmarks of the simulator hot paths — the profile targets of the
+//! performance pass (EXPERIMENTS.md §Perf): NoC cycles/sec, engine
+//! cycles/sec, and the PJRT crossbar GEMM when artifacts exist.
+
+use smart_pim::cnn::{vgg, VggVariant};
+use smart_pim::config::ArchConfig;
+use smart_pim::mapping::{NetworkMapping, ReplicationPlan};
+use smart_pim::noc::{Mesh, Network};
+use smart_pim::pipeline::build_plans;
+use smart_pim::sim::engine::{Engine, NocAdjust};
+use smart_pim::util::bench::{fmt_duration, Bencher};
+use smart_pim::util::Rng;
+
+fn main() {
+    let mut b = Bencher::default();
+
+    // --- NoC simulator inner loop -------------------------------------
+    // Steady uniform-random load on an 8x8 mesh; report flit-hops/s.
+    let cycles = 3_000u64;
+    let r = b.bench("noc 8x8 smart 0.2 load, 3k cycles", || {
+        let mesh = Mesh::new(8, 8);
+        let mut net = Network::new(mesh, 14, 1, 4);
+        let mut rng = Rng::new(1);
+        for c in 0..cycles {
+            if c % 2 == 0 {
+                for src in 0..mesh.nodes() {
+                    if rng.chance(0.05) {
+                        let dst = rng.below_usize(mesh.nodes());
+                        if dst != src {
+                            net.enqueue(src, dst, 4);
+                        }
+                    }
+                }
+            }
+            net.step();
+        }
+        net.flits_ejected
+    });
+    let per_cycle = r.median() / cycles as f64;
+    println!(
+        "  -> {} per NoC cycle ({:.2} Mcycles/s)",
+        fmt_duration(per_cycle),
+        1e-6 / per_cycle
+    );
+
+    // --- 16x20 CNN-scale mesh -----------------------------------------
+    b.bench("noc 16x20 wormhole idle+load, 2k cycles", || {
+        let mesh = Mesh::new(16, 20);
+        let mut net = Network::new(mesh, 1, 4, 4);
+        let mut rng = Rng::new(2);
+        for _ in 0..2_000u64 {
+            for src in (0..mesh.nodes()).step_by(7) {
+                if rng.chance(0.02) {
+                    let dst = rng.below_usize(mesh.nodes());
+                    if dst != src {
+                        net.enqueue(src, dst, 8);
+                    }
+                }
+            }
+            net.step();
+        }
+        net.flits_ejected
+    });
+
+    // --- pipeline engine -----------------------------------------------
+    let arch = ArchConfig::paper_node();
+    let net = vgg::build(VggVariant::E);
+    let plan = ReplicationPlan::fig7(VggVariant::E);
+    let m = NetworkMapping::build(&net, &arch, &plan).unwrap();
+    let plans = build_plans(&net, &m, &arch);
+    let adj = NocAdjust::identity(plans.len());
+    let r = b.bench("engine vggE repl+batch, 10 images", || {
+        Engine::new(&plans, &adj, true, 10).run().cycles
+    });
+    // steady interval 3136 x ~10 images ≈ 36k cycles per run.
+    let run_cycles = Engine::new(&plans, &adj, true, 10).run().cycles;
+    let eng_per_cycle = r.median() / run_cycles as f64;
+    println!(
+        "  -> {} per engine cycle ({:.2} Mcycles/s, {} stages)",
+        fmt_duration(eng_per_cycle),
+        1e-6 / eng_per_cycle,
+        plans.len()
+    );
+
+    let plan1 = ReplicationPlan::none(&net);
+    let m1 = NetworkMapping::build(&net, &arch, &plan1).unwrap();
+    let plans1 = build_plans(&net, &m1, &arch);
+    let adj1 = NocAdjust::identity(plans1.len());
+    b.bench("engine vggE baseline, 1 image (~52k cycles)", || {
+        Engine::new(&plans1, &adj1, false, 1).run().cycles
+    });
+
+    // --- PJRT crossbar GEMM (needs artifacts) ---------------------------
+    if std::path::Path::new("artifacts/crossbar_gemm_128.hlo.txt").exists() {
+        use smart_pim::runtime::{literal_i32, Runtime};
+        let rt = Runtime::new("artifacts").unwrap();
+        let exe = rt.load("crossbar_gemm_128").unwrap();
+        let x: Vec<i32> = (0..128 * 128).map(|i| (i % 65536) as i32).collect();
+        let w: Vec<i32> = (0..128 * 128).map(|i| (i % 65536) as i32 - 32768).collect();
+        let xl = literal_i32(&x, &[128, 128]).unwrap();
+        let wl = literal_i32(&w, &[128, 128]).unwrap();
+        let r = b.bench("pjrt crossbar_gemm 128x128x128 (bit-serial)", || {
+            exe.run_i32(&[
+                xl.clone().reshape(&[128, 128]).unwrap(),
+                wl.clone().reshape(&[128, 128]).unwrap(),
+            ])
+            .unwrap()
+            .len()
+        });
+        // 16 bit-planes x 128^3 MACs x 2 ops.
+        let ops = 16.0 * 128f64.powi(3) * 2.0;
+        println!(
+            "  -> {:.2} GOPS bit-serial equivalent",
+            ops / r.median() / 1e9
+        );
+    } else {
+        println!("(skipping PJRT bench: run `make artifacts`)");
+    }
+}

@@ -1,0 +1,208 @@
+//! CNN layer descriptors and shape/operation arithmetic.
+//!
+//! Following the paper's notation (Sec. IV): the IFM of a layer is
+//! `c x h x w`, the kernel is `n x c x l x l`, and the OFM is `n x h' x w'`.
+
+/// One layer of a CNN, with its input feature-map geometry resolved.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    /// IFM height.
+    pub in_h: usize,
+    /// IFM width.
+    pub in_w: usize,
+    /// IFM channels (`c`).
+    pub in_ch: usize,
+}
+
+/// Layer type. Pooling is attached to the preceding conv layer (`pool_after`)
+/// because the paper treats "conv + pool" as one pipelined stage with its own
+/// intra-layer pipeline variant (Sec. IV-A).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv {
+        /// Kernel count `n` (output channels).
+        out_ch: usize,
+        /// Kernel spatial size `l` (VGG: 3, or 1 for the C-variant 1x1s).
+        ksize: usize,
+        /// Stride (VGG: always 1).
+        stride: usize,
+        /// SAME padding (VGG: ksize/2).
+        pad: usize,
+        /// 2x2/2 max-pool fused after this conv.
+        pool_after: bool,
+    },
+    /// Fully connected: `out` neurons over the flattened input.
+    Fc { out: usize },
+}
+
+impl Layer {
+    pub fn conv(
+        name: impl Into<String>,
+        in_hw: (usize, usize),
+        in_ch: usize,
+        out_ch: usize,
+        ksize: usize,
+        pool_after: bool,
+    ) -> Self {
+        Self {
+            name: name.into(),
+            kind: LayerKind::Conv {
+                out_ch,
+                ksize,
+                stride: 1,
+                pad: ksize / 2,
+                pool_after,
+            },
+            in_h: in_hw.0,
+            in_w: in_hw.1,
+            in_ch,
+        }
+    }
+
+    pub fn fc(name: impl Into<String>, in_dim: usize, out: usize) -> Self {
+        Self {
+            name: name.into(),
+            kind: LayerKind::Fc { out },
+            in_h: 1,
+            in_w: 1,
+            in_ch: in_dim,
+        }
+    }
+
+    pub fn is_conv(&self) -> bool {
+        matches!(self.kind, LayerKind::Conv { .. })
+    }
+
+    pub fn has_pool(&self) -> bool {
+        matches!(
+            self.kind,
+            LayerKind::Conv {
+                pool_after: true,
+                ..
+            }
+        )
+    }
+
+    pub fn ksize(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv { ksize, .. } => ksize,
+            LayerKind::Fc { .. } => 1,
+        }
+    }
+
+    /// Pre-pool convolution output spatial dims (`h'`, `w'`).
+    pub fn conv_out_hw(&self) -> (usize, usize) {
+        match self.kind {
+            LayerKind::Conv {
+                ksize, stride, pad, ..
+            } => {
+                let oh = (self.in_h + 2 * pad - ksize) / stride + 1;
+                let ow = (self.in_w + 2 * pad - ksize) / stride + 1;
+                (oh, ow)
+            }
+            LayerKind::Fc { .. } => (1, 1),
+        }
+    }
+
+    /// OFM spatial dims after the fused pool (if any).
+    pub fn out_hw(&self) -> (usize, usize) {
+        let (h, w) = self.conv_out_hw();
+        if self.has_pool() {
+            (h / 2, w / 2)
+        } else {
+            (h, w)
+        }
+    }
+
+    /// OFM channels.
+    pub fn out_ch(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv { out_ch, .. } => out_ch,
+            LayerKind::Fc { out } => out,
+        }
+    }
+
+    /// Flattened OFM size (next layer's FC input dim).
+    pub fn out_dim(&self) -> usize {
+        let (h, w) = self.out_hw();
+        h * w * self.out_ch()
+    }
+
+    /// Output "pixels" the layer streams (all channels of one position count
+    /// as one pixel — the unit of the paper's intra-layer pipeline).
+    pub fn out_pixels(&self) -> u64 {
+        let (h, w) = self.conv_out_hw();
+        (h * w) as u64
+    }
+
+    /// GEMM view: the kernel matrix is `gemm_k()` rows x `gemm_n()` columns.
+    pub fn gemm_k(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv { ksize, .. } => self.in_ch * ksize * ksize,
+            LayerKind::Fc { .. } => self.in_ch,
+        }
+    }
+
+    pub fn gemm_n(&self) -> usize {
+        self.out_ch()
+    }
+
+    /// Multiply-accumulate operations for one inference of this layer.
+    pub fn macs(&self) -> u64 {
+        let (oh, ow) = self.conv_out_hw();
+        (oh * ow) as u64 * self.gemm_k() as u64 * self.gemm_n() as u64
+    }
+
+    /// Operations (1 MAC = 2 ops, the paper's TOPS accounting).
+    pub fn ops(&self) -> u64 {
+        2 * self.macs()
+    }
+
+    /// Weight count (no biases in the crossbar model).
+    pub fn weights(&self) -> u64 {
+        self.gemm_k() as u64 * self.gemm_n() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_shapes_vgg_first_layer() {
+        let l = Layer::conv("conv1", (224, 224), 3, 64, 3, false);
+        assert_eq!(l.conv_out_hw(), (224, 224));
+        assert_eq!(l.out_hw(), (224, 224));
+        assert_eq!(l.gemm_k(), 27);
+        assert_eq!(l.gemm_n(), 64);
+        assert_eq!(l.macs(), 224 * 224 * 27 * 64);
+        assert_eq!(l.out_pixels(), 224 * 224);
+    }
+
+    #[test]
+    fn pool_halves_output() {
+        let l = Layer::conv("c", (224, 224), 3, 64, 3, true);
+        assert_eq!(l.conv_out_hw(), (224, 224));
+        assert_eq!(l.out_hw(), (112, 112));
+        assert_eq!(l.out_dim(), 112 * 112 * 64);
+    }
+
+    #[test]
+    fn one_by_one_conv() {
+        // VGG-C's 1x1 convolutions.
+        let l = Layer::conv("c", (56, 56), 256, 256, 1, false);
+        assert_eq!(l.conv_out_hw(), (56, 56));
+        assert_eq!(l.gemm_k(), 256);
+    }
+
+    #[test]
+    fn fc_shapes() {
+        let l = Layer::fc("fc1", 25088, 4096);
+        assert_eq!(l.out_pixels(), 1);
+        assert_eq!(l.macs(), 25088 * 4096);
+        assert_eq!(l.out_dim(), 4096);
+        assert!(!l.is_conv());
+    }
+}

@@ -1,0 +1,10 @@
+//! CNN workload descriptors: layers, networks, and the VGG A-E zoo the
+//! paper evaluates (Sec. VI-B).
+
+pub mod layer;
+pub mod network;
+pub mod vgg;
+
+pub use layer::{Layer, LayerKind};
+pub use network::Network;
+pub use vgg::VggVariant;

@@ -1,0 +1,147 @@
+//! Network container: an ordered list of layers with validated shape chain.
+
+use super::layer::{Layer, LayerKind};
+
+/// A validated feed-forward CNN.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub name: String,
+    layers: Vec<Layer>,
+}
+
+impl Network {
+    /// Build and validate: each layer's input must match its predecessor's
+    /// output (spatial dims and channels for conv; flattened dim for FC).
+    pub fn new(name: impl Into<String>, layers: Vec<Layer>) -> Result<Self, String> {
+        let name = name.into();
+        if layers.is_empty() {
+            return Err(format!("network {name}: no layers"));
+        }
+        for i in 1..layers.len() {
+            let prev = &layers[i - 1];
+            let cur = &layers[i];
+            match cur.kind {
+                LayerKind::Conv { .. } => {
+                    let (h, w) = prev.out_hw();
+                    if (cur.in_h, cur.in_w) != (h, w) || cur.in_ch != prev.out_ch() {
+                        return Err(format!(
+                            "network {name}: {} out {}x{}x{} != {} in {}x{}x{}",
+                            prev.name,
+                            h,
+                            w,
+                            prev.out_ch(),
+                            cur.name,
+                            cur.in_h,
+                            cur.in_w,
+                            cur.in_ch
+                        ));
+                    }
+                }
+                LayerKind::Fc { .. } => {
+                    if cur.in_ch != prev.out_dim() {
+                        return Err(format!(
+                            "network {name}: {} flat out {} != {} in {}",
+                            prev.name,
+                            prev.out_dim(),
+                            cur.name,
+                            cur.in_ch
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(Self { name, layers })
+    }
+
+    pub fn layers(&self) -> &[Layer] {
+        &self.layers
+    }
+
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    pub fn conv_layers(&self) -> impl Iterator<Item = &Layer> {
+        self.layers.iter().filter(|l| l.is_conv())
+    }
+
+    pub fn n_conv(&self) -> usize {
+        self.conv_layers().count()
+    }
+
+    pub fn n_fc(&self) -> usize {
+        self.layers.iter().filter(|l| !l.is_conv()).count()
+    }
+
+    /// Total MACs for one inference.
+    pub fn macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    /// Total operations (2 x MACs, the paper's TOPS accounting).
+    pub fn ops(&self) -> u64 {
+        2 * self.macs()
+    }
+
+    /// Total weights.
+    pub fn weights(&self) -> u64 {
+        self.layers.iter().map(|l| l.weights()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::layer::Layer;
+
+    #[test]
+    fn valid_chain_builds() {
+        let net = Network::new(
+            "mini",
+            vec![
+                Layer::conv("c1", (8, 8), 3, 4, 3, true),
+                Layer::conv("c2", (4, 4), 4, 8, 3, false),
+                Layer::fc("fc", 4 * 4 * 8, 10),
+            ],
+        )
+        .unwrap();
+        assert_eq!(net.len(), 3);
+        assert_eq!(net.n_conv(), 2);
+        assert_eq!(net.n_fc(), 1);
+    }
+
+    #[test]
+    fn mismatched_channels_rejected() {
+        let err = Network::new(
+            "bad",
+            vec![
+                Layer::conv("c1", (8, 8), 3, 4, 3, false),
+                Layer::conv("c2", (8, 8), 5, 8, 3, false), // 5 != 4
+            ],
+        )
+        .unwrap_err();
+        assert!(err.contains("c1"), "{err}");
+    }
+
+    #[test]
+    fn mismatched_fc_dim_rejected() {
+        let err = Network::new(
+            "bad",
+            vec![
+                Layer::conv("c1", (8, 8), 3, 4, 3, false),
+                Layer::fc("fc", 999, 10),
+            ],
+        )
+        .unwrap_err();
+        assert!(err.contains("flat out"), "{err}");
+    }
+
+    #[test]
+    fn empty_network_rejected() {
+        assert!(Network::new("empty", vec![]).is_err());
+    }
+}

@@ -1,0 +1,207 @@
+//! The VGG model zoo (Simonyan & Zisserman 2014) at ImageNet resolution —
+//! the paper's workloads (Sec. VI-B): configurations A through E.
+//!
+//! Pooling is fused into the preceding conv stage, matching the paper's
+//! pipelining model; the final pool feeds the 25088-dim FC stack.
+
+use super::layer::Layer;
+use super::network::Network;
+
+/// VGG variant identifiers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum VggVariant {
+    A,
+    B,
+    C,
+    D,
+    E,
+}
+
+impl VggVariant {
+    pub const ALL: [VggVariant; 5] = [
+        VggVariant::A,
+        VggVariant::B,
+        VggVariant::C,
+        VggVariant::D,
+        VggVariant::E,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            VggVariant::A => "vggA",
+            VggVariant::B => "vggB",
+            VggVariant::C => "vggC",
+            VggVariant::D => "vggD",
+            VggVariant::E => "vggE",
+        }
+    }
+
+    /// Conv-stage plan: (out_ch, ksize) per conv, grouped into the five
+    /// blocks; the last conv of each block carries the 2x2 max-pool.
+    fn blocks(&self) -> Vec<Vec<(usize, usize)>> {
+        // (out_ch, ksize); VGG-C uses 1x1 convs as the third conv of blocks
+        // 3-5 (the original paper's "C" configuration).
+        match self {
+            VggVariant::A => vec![
+                vec![(64, 3)],
+                vec![(128, 3)],
+                vec![(256, 3), (256, 3)],
+                vec![(512, 3), (512, 3)],
+                vec![(512, 3), (512, 3)],
+            ],
+            VggVariant::B => vec![
+                vec![(64, 3), (64, 3)],
+                vec![(128, 3), (128, 3)],
+                vec![(256, 3), (256, 3)],
+                vec![(512, 3), (512, 3)],
+                vec![(512, 3), (512, 3)],
+            ],
+            VggVariant::C => vec![
+                vec![(64, 3), (64, 3)],
+                vec![(128, 3), (128, 3)],
+                vec![(256, 3), (256, 3), (256, 1)],
+                vec![(512, 3), (512, 3), (512, 1)],
+                vec![(512, 3), (512, 3), (512, 1)],
+            ],
+            VggVariant::D => vec![
+                vec![(64, 3), (64, 3)],
+                vec![(128, 3), (128, 3)],
+                vec![(256, 3), (256, 3), (256, 3)],
+                vec![(512, 3), (512, 3), (512, 3)],
+                vec![(512, 3), (512, 3), (512, 3)],
+            ],
+            VggVariant::E => vec![
+                vec![(64, 3), (64, 3)],
+                vec![(128, 3), (128, 3)],
+                vec![(256, 3), (256, 3), (256, 3), (256, 3)],
+                vec![(512, 3), (512, 3), (512, 3), (512, 3)],
+                vec![(512, 3), (512, 3), (512, 3), (512, 3)],
+            ],
+        }
+    }
+}
+
+impl std::str::FromStr for VggVariant {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_uppercase().as_str() {
+            "A" | "VGGA" | "VGG11" => Ok(VggVariant::A),
+            "B" | "VGGB" | "VGG13" => Ok(VggVariant::B),
+            "C" | "VGGC" => Ok(VggVariant::C),
+            "D" | "VGGD" | "VGG16" => Ok(VggVariant::D),
+            "E" | "VGGE" | "VGG19" => Ok(VggVariant::E),
+            other => Err(format!("unknown VGG variant {other:?} (A..E)")),
+        }
+    }
+}
+
+/// Build a VGG variant at ImageNet resolution (224x224x3, 1000 classes).
+pub fn build(variant: VggVariant) -> Network {
+    build_at(variant, 224, 1000)
+}
+
+/// Build at an arbitrary input resolution (must be divisible by 32).
+pub fn build_at(variant: VggVariant, input_hw: usize, classes: usize) -> Network {
+    assert!(input_hw % 32 == 0, "VGG needs input divisible by 32");
+    let mut layers = Vec::new();
+    let mut hw = input_hw;
+    let mut ch = 3;
+    let mut idx = 0;
+    for block in variant.blocks() {
+        let n = block.len();
+        for (j, &(out_ch, ksize)) in block.iter().enumerate() {
+            idx += 1;
+            let pool = j + 1 == n; // pool after the last conv of the block
+            layers.push(Layer::conv(
+                format!("conv{idx}"),
+                (hw, hw),
+                ch,
+                out_ch,
+                ksize,
+                pool,
+            ));
+            ch = out_ch;
+        }
+        hw /= 2;
+    }
+    let flat = hw * hw * ch; // 7*7*512 = 25088 at 224
+    layers.push(Layer::fc("fc1", flat, 4096));
+    layers.push(Layer::fc("fc2", 4096, 4096));
+    layers.push(Layer::fc("fc3", 4096, classes));
+    Network::new(variant.name(), layers).expect("VGG construction must validate")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_counts_match_fig7() {
+        // Fig. 7: A has 8 conv layers, B 10, C 13, D 13, E 16; all have 3 FC.
+        let want = [
+            (VggVariant::A, 8),
+            (VggVariant::B, 10),
+            (VggVariant::C, 13),
+            (VggVariant::D, 13),
+            (VggVariant::E, 16),
+        ];
+        for (v, n) in want {
+            let net = build(v);
+            assert_eq!(net.n_conv(), n, "{}", v.name());
+            assert_eq!(net.n_fc(), 3, "{}", v.name());
+        }
+    }
+
+    #[test]
+    fn downsample_chain_is_five_pools() {
+        // Sec. VI-C: 224 -> 112 -> 56 -> 28 -> 14 -> 7.
+        let net = build(VggVariant::E);
+        let pools: Vec<usize> = net
+            .layers()
+            .iter()
+            .filter(|l| l.has_pool())
+            .map(|l| l.out_hw().0)
+            .collect();
+        assert_eq!(pools, vec![112, 56, 28, 14, 7]);
+    }
+
+    #[test]
+    fn fc_input_is_25088() {
+        for v in VggVariant::ALL {
+            let net = build(v);
+            let fc1 = net.layers().iter().find(|l| !l.is_conv()).unwrap();
+            assert_eq!(fc1.in_ch, 25088, "{}", v.name());
+        }
+    }
+
+    #[test]
+    fn vgg_e_total_macs_about_19_6_g() {
+        // Known figure: VGG-19 ≈ 19.5-19.7 GMACs at 224x224.
+        let net = build(VggVariant::E);
+        let g = net.macs() as f64 / 1e9;
+        assert!((19.0..20.5).contains(&g), "VGG-E GMACs = {g}");
+    }
+
+    #[test]
+    fn vgg_a_weights_about_132_m() {
+        // VGG-11 has ≈ 132.9 M parameters (no biases in our model).
+        let net = build(VggVariant::A);
+        let m = net.weights() as f64 / 1e6;
+        assert!((130.0..135.0).contains(&m), "VGG-A params = {m} M");
+    }
+
+    #[test]
+    fn parse_variants() {
+        assert_eq!("vgg19".parse::<VggVariant>().unwrap(), VggVariant::E);
+        assert_eq!("a".parse::<VggVariant>().unwrap(), VggVariant::A);
+        assert!("vgg7".parse::<VggVariant>().is_err());
+    }
+
+    #[test]
+    fn reduced_resolution_build() {
+        let net = build_at(VggVariant::A, 32, 10);
+        let fc1 = net.layers().iter().find(|l| !l.is_conv()).unwrap();
+        assert_eq!(fc1.in_ch, 512); // 1*1*512
+    }
+}

@@ -1,0 +1,199 @@
+//! Architecture configuration: the paper's node / tile / core / subarray
+//! hierarchy (Sec. III) plus the timing calibration constants (DESIGN.md §5).
+
+/// Geometry and electrical parameters of one PIM node.
+///
+/// Defaults reproduce the paper's node: a 16x20 mesh of tiles, 12 cores per
+/// tile, 8 subarrays of 128x128 2-bit-MLC ReRAM per core, 16-bit weights and
+/// feature maps, 1-bit DACs (bit-serial input over 16 phases) and 8-bit ADCs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArchConfig {
+    /// Mesh width in tiles (X dimension of the NoC).
+    pub tiles_x: usize,
+    /// Mesh height in tiles (Y dimension of the NoC).
+    pub tiles_y: usize,
+    /// Cores per tile.
+    pub cores_per_tile: usize,
+    /// ReRAM subarrays per core.
+    pub subarrays_per_core: usize,
+    /// Subarray rows (word lines).
+    pub subarray_rows: usize,
+    /// Subarray columns (bit lines).
+    pub subarray_cols: usize,
+    /// Bits stored per ReRAM cell (MLC level).
+    pub cell_bits: usize,
+    /// Weight precision in bits.
+    pub weight_bits: usize,
+    /// Activation (IFM) precision in bits == DAC phases (1-bit DAC).
+    pub act_bits: usize,
+    /// ADC resolution in bits.
+    pub adc_bits: usize,
+    /// NoC link width in bits == flit size (Sec. V: 128).
+    pub flit_bits: usize,
+    /// Duration of one *logical* cycle (one intra-layer pipeline beat:
+    /// 16 bit-serial phases with ADC-pipelined column conversion) in ns.
+    /// Calibrated so ideal-NoC VGG-E scenario (4) lands at the paper's
+    /// 1042 FPS: 1 / (1042 x 3136) ≈ 306 ns (DESIGN.md §5).
+    pub logical_cycle_ns: f64,
+    /// NoC router clock period in ns (garnet-style 1 GHz router).
+    pub noc_cycle_ns: f64,
+    /// SMART: maximum hops bypassed in one cycle (HPC_max; paper Sec. VII
+    /// assumes >= 14 for a chip this size).
+    pub hpc_max: usize,
+    /// Router pipeline depth in NoC cycles for the wormhole baseline
+    /// (BW / RC+SA / ST stages, garnet2.0-like 3-stage + link).
+    pub router_latency: usize,
+    /// Per-input-port flit buffer depth (wormhole).
+    pub buffer_depth: usize,
+    /// FC layers exceed on-chip capacity and time-multiplex their crossbars;
+    /// number of sequential reload rounds charged per FC layer (DESIGN.md §1).
+    /// 8 is the smallest power of two under which every Fig. 7 plan meets
+    /// the paper's 320-tile constraint.
+    pub fc_reload_rounds: u64,
+}
+
+impl Default for ArchConfig {
+    fn default() -> Self {
+        Self::paper_node()
+    }
+}
+
+impl ArchConfig {
+    /// The paper's node exactly as specified in Sec. III / Fig. 4.
+    pub fn paper_node() -> Self {
+        Self {
+            tiles_x: 16,
+            tiles_y: 20,
+            cores_per_tile: 12,
+            subarrays_per_core: 8,
+            subarray_rows: 128,
+            subarray_cols: 128,
+            cell_bits: 2,
+            weight_bits: 16,
+            act_bits: 16,
+            adc_bits: 8,
+            flit_bits: 128,
+            logical_cycle_ns: 306.0,
+            noc_cycle_ns: 1.0,
+            hpc_max: 14,
+            router_latency: 3,
+            buffer_depth: 4,
+            fc_reload_rounds: 8,
+        }
+    }
+
+    /// A small node for fast unit tests (same ratios, 4x4 tiles).
+    pub fn test_node() -> Self {
+        Self {
+            tiles_x: 4,
+            tiles_y: 4,
+            ..Self::paper_node()
+        }
+    }
+
+    /// Total tiles on the node (paper: 320).
+    pub fn total_tiles(&self) -> usize {
+        self.tiles_x * self.tiles_y
+    }
+
+    /// Subarrays per tile (paper: 96).
+    pub fn subarrays_per_tile(&self) -> usize {
+        self.cores_per_tile * self.subarrays_per_core
+    }
+
+    /// Total subarrays on the node (paper: 30720).
+    pub fn total_subarrays(&self) -> usize {
+        self.total_tiles() * self.subarrays_per_tile()
+    }
+
+    /// Cell columns needed to store one weight (paper: 16/2 = 8 slices).
+    pub fn slices_per_weight(&self) -> usize {
+        debug_assert_eq!(self.weight_bits % self.cell_bits, 0);
+        self.weight_bits / self.cell_bits
+    }
+
+    /// Whole weights stored per subarray row (paper: 128/8 = 16).
+    pub fn weights_per_row(&self) -> usize {
+        self.subarray_cols / self.slices_per_weight()
+    }
+
+    /// On-chip weight capacity in bits.
+    pub fn weight_capacity_bits(&self) -> u64 {
+        (self.total_subarrays() * self.subarray_rows * self.subarray_cols) as u64
+            * self.cell_bits as u64
+    }
+
+    /// NoC cycles elapsed in one logical cycle.
+    pub fn noc_cycles_per_logical(&self) -> f64 {
+        self.logical_cycle_ns / self.noc_cycle_ns
+    }
+
+    /// 16-bit values carried per flit (paper: 128/16 = 8).
+    pub fn values_per_flit(&self) -> usize {
+        self.flit_bits / self.act_bits
+    }
+
+    /// Validate internal consistency; returns a human-readable error list.
+    pub fn validate(&self) -> Result<(), Vec<String>> {
+        let mut errs = Vec::new();
+        if self.tiles_x == 0 || self.tiles_y == 0 {
+            errs.push("mesh dimensions must be positive".into());
+        }
+        if self.weight_bits % self.cell_bits != 0 {
+            errs.push(format!(
+                "weight_bits {} not divisible by cell_bits {}",
+                self.weight_bits, self.cell_bits
+            ));
+        } else if self.subarray_cols % self.slices_per_weight().max(1) != 0 {
+            errs.push("subarray columns must hold whole weights".into());
+        }
+        if self.flit_bits % self.act_bits != 0 {
+            errs.push("flit must carry whole values".into());
+        }
+        if self.logical_cycle_ns <= 0.0 || self.noc_cycle_ns <= 0.0 {
+            errs.push("cycle times must be positive".into());
+        }
+        if self.hpc_max == 0 {
+            errs.push("hpc_max must be >= 1".into());
+        }
+        if errs.is_empty() {
+            Ok(())
+        } else {
+            Err(errs)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_node_derived_quantities() {
+        let a = ArchConfig::paper_node();
+        assert_eq!(a.total_tiles(), 320);
+        assert_eq!(a.subarrays_per_tile(), 96);
+        assert_eq!(a.total_subarrays(), 30720);
+        assert_eq!(a.slices_per_weight(), 8);
+        assert_eq!(a.weights_per_row(), 16);
+        assert_eq!(a.values_per_flit(), 8);
+        a.validate().expect("paper node must validate");
+    }
+
+    #[test]
+    fn capacity_is_one_gigabit_class() {
+        let a = ArchConfig::paper_node();
+        // 30720 subarrays x 16384 cells x 2 bits ≈ 1.007 Gbit.
+        assert_eq!(a.weight_capacity_bits(), 30720 * 16384 * 2);
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut a = ArchConfig::paper_node();
+        a.weight_bits = 15; // not divisible by 2
+        assert!(a.validate().is_err());
+        let mut b = ArchConfig::paper_node();
+        b.hpc_max = 0;
+        assert!(b.validate().is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Configuration layer: architecture geometry/timing and the evaluation
+//! grid (scenarios x NoCs x workloads).
+
+pub mod arch;
+pub mod parse;
+pub mod scenario;
+
+pub use arch::ArchConfig;
+pub use parse::{load_arch, parse_arch, render_arch};
+pub use scenario::{NocKind, Scenario};

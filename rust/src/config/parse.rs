@@ -1,0 +1,178 @@
+//! Config-file support: a minimal `key = value` format (TOML-subset; the
+//! vendored crate set has no serde/toml) so deployments can override the
+//! paper's node without recompiling.
+//!
+//! ```text
+//! # smart-pim architecture config
+//! tiles_x = 16
+//! tiles_y = 20
+//! cores_per_tile = 12
+//! logical_cycle_ns = 306.0
+//! hpc_max = 14
+//! ```
+//!
+//! Unknown keys are errors (typos must fail loudly); omitted keys keep the
+//! paper-node defaults; the result is re-validated.
+
+use super::arch::ArchConfig;
+
+/// Parse a config string on top of `base`.
+pub fn parse_arch(text: &str, base: &ArchConfig) -> Result<ArchConfig, String> {
+    let mut cfg = base.clone();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = key.trim();
+        let value = value.trim();
+        apply(&mut cfg, key, value).map_err(|e| format!("line {}: {e}", lineno + 1))?;
+    }
+    cfg.validate()
+        .map_err(|errs| format!("invalid config: {}", errs.join("; ")))?;
+    Ok(cfg)
+}
+
+/// Load from a file path.
+pub fn load_arch(path: &str, base: &ArchConfig) -> Result<ArchConfig, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    parse_arch(&text, base)
+}
+
+fn apply(cfg: &mut ArchConfig, key: &str, value: &str) -> Result<(), String> {
+    fn p<T: std::str::FromStr>(key: &str, value: &str) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        value
+            .parse::<T>()
+            .map_err(|e| format!("{key} = {value:?}: {e}"))
+    }
+    match key {
+        "tiles_x" => cfg.tiles_x = p(key, value)?,
+        "tiles_y" => cfg.tiles_y = p(key, value)?,
+        "cores_per_tile" => cfg.cores_per_tile = p(key, value)?,
+        "subarrays_per_core" => cfg.subarrays_per_core = p(key, value)?,
+        "subarray_rows" => cfg.subarray_rows = p(key, value)?,
+        "subarray_cols" => cfg.subarray_cols = p(key, value)?,
+        "cell_bits" => cfg.cell_bits = p(key, value)?,
+        "weight_bits" => cfg.weight_bits = p(key, value)?,
+        "act_bits" => cfg.act_bits = p(key, value)?,
+        "adc_bits" => cfg.adc_bits = p(key, value)?,
+        "flit_bits" => cfg.flit_bits = p(key, value)?,
+        "logical_cycle_ns" => cfg.logical_cycle_ns = p(key, value)?,
+        "noc_cycle_ns" => cfg.noc_cycle_ns = p(key, value)?,
+        "hpc_max" => cfg.hpc_max = p(key, value)?,
+        "router_latency" => cfg.router_latency = p(key, value)?,
+        "buffer_depth" => cfg.buffer_depth = p(key, value)?,
+        "fc_reload_rounds" => cfg.fc_reload_rounds = p(key, value)?,
+        other => {
+            return Err(format!(
+                "unknown key {other:?} (see config/parse.rs for the schema)"
+            ))
+        }
+    }
+    Ok(())
+}
+
+/// Render a config back to the file format (round-trips through
+/// `parse_arch`; used by `smart-pim` to dump the active config).
+pub fn render_arch(cfg: &ArchConfig) -> String {
+    format!(
+        "# smart-pim architecture config\n\
+         tiles_x = {}\ntiles_y = {}\ncores_per_tile = {}\n\
+         subarrays_per_core = {}\nsubarray_rows = {}\nsubarray_cols = {}\n\
+         cell_bits = {}\nweight_bits = {}\nact_bits = {}\nadc_bits = {}\n\
+         flit_bits = {}\nlogical_cycle_ns = {}\nnoc_cycle_ns = {}\n\
+         hpc_max = {}\nrouter_latency = {}\nbuffer_depth = {}\n\
+         fc_reload_rounds = {}\n",
+        cfg.tiles_x,
+        cfg.tiles_y,
+        cfg.cores_per_tile,
+        cfg.subarrays_per_core,
+        cfg.subarray_rows,
+        cfg.subarray_cols,
+        cfg.cell_bits,
+        cfg.weight_bits,
+        cfg.act_bits,
+        cfg.adc_bits,
+        cfg.flit_bits,
+        cfg.logical_cycle_ns,
+        cfg.noc_cycle_ns,
+        cfg.hpc_max,
+        cfg.router_latency,
+        cfg.buffer_depth,
+        cfg.fc_reload_rounds,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_keeps_defaults() {
+        let base = ArchConfig::paper_node();
+        let cfg = parse_arch("", &base).unwrap();
+        assert_eq!(cfg, base);
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let base = ArchConfig::paper_node();
+        let cfg = parse_arch(
+            "tiles_x = 8\n# comment\nhpc_max=7\nlogical_cycle_ns = 100.5\n",
+            &base,
+        )
+        .unwrap();
+        assert_eq!(cfg.tiles_x, 8);
+        assert_eq!(cfg.hpc_max, 7);
+        assert_eq!(cfg.logical_cycle_ns, 100.5);
+        assert_eq!(cfg.tiles_y, base.tiles_y);
+    }
+
+    #[test]
+    fn unknown_key_rejected_with_line() {
+        let err = parse_arch("tiles = 8\n", &ArchConfig::paper_node()).unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+        assert!(err.contains("unknown key"), "{err}");
+    }
+
+    #[test]
+    fn bad_value_rejected() {
+        let err = parse_arch("tiles_x = lots\n", &ArchConfig::paper_node()).unwrap_err();
+        assert!(err.contains("tiles_x"), "{err}");
+    }
+
+    #[test]
+    fn invalid_result_rejected() {
+        // weight_bits 15 not divisible by cell_bits 2 -> validation error.
+        let err = parse_arch("weight_bits = 15\n", &ArchConfig::paper_node()).unwrap_err();
+        assert!(err.contains("invalid config"), "{err}");
+    }
+
+    #[test]
+    fn missing_equals_rejected() {
+        let err = parse_arch("tiles_x 8\n", &ArchConfig::paper_node()).unwrap_err();
+        assert!(err.contains("expected key = value"), "{err}");
+    }
+
+    #[test]
+    fn render_round_trips() {
+        let mut base = ArchConfig::paper_node();
+        base.tiles_x = 4;
+        base.hpc_max = 9;
+        let text = render_arch(&base);
+        let parsed = parse_arch(&text, &ArchConfig::paper_node()).unwrap();
+        assert_eq!(parsed, base);
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let cfg = parse_arch("\n# only comments\n\n   \n", &ArchConfig::paper_node()).unwrap();
+        assert_eq!(cfg, ArchConfig::paper_node());
+    }
+}

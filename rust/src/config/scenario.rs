@@ -1,0 +1,133 @@
+//! The paper's 60-benchmark evaluation grid (Sec. VI-B): 5 VGG variants x
+//! 4 pipelining scenarios x 3 NoC flow controls.
+
+/// The four pipelining scenarios of Sec. VI-B.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scenario {
+    /// (1) no weight replication, no batch pipelining — the baseline.
+    Baseline,
+    /// (2) no weight replication, with batch pipelining.
+    BatchOnly,
+    /// (3) with weight replication, no batch pipelining.
+    ReplicationOnly,
+    /// (4) with weight replication and batch pipelining — best case.
+    ReplicationBatch,
+}
+
+impl Scenario {
+    pub const ALL: [Scenario; 4] = [
+        Scenario::Baseline,
+        Scenario::BatchOnly,
+        Scenario::ReplicationOnly,
+        Scenario::ReplicationBatch,
+    ];
+
+    pub fn replication(&self) -> bool {
+        matches!(self, Scenario::ReplicationOnly | Scenario::ReplicationBatch)
+    }
+
+    pub fn batch(&self) -> bool {
+        matches!(self, Scenario::BatchOnly | Scenario::ReplicationBatch)
+    }
+
+    /// Paper's "(1)".."(4)" labels.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Scenario::Baseline => "(1)",
+            Scenario::BatchOnly => "(2)",
+            Scenario::ReplicationOnly => "(3)",
+            Scenario::ReplicationBatch => "(4)",
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scenario::Baseline => "no-repl/no-batch",
+            Scenario::BatchOnly => "no-repl/batch",
+            Scenario::ReplicationOnly => "repl/no-batch",
+            Scenario::ReplicationBatch => "repl/batch",
+        }
+    }
+}
+
+/// NoC flow-control selection (Sec. V / VI-B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum NocKind {
+    /// Wormhole flow control — the interconnect baseline.
+    Wormhole,
+    /// SMART single-cycle multi-hop bypass.
+    Smart,
+    /// Ideal 1-cycle fully-connected-equivalent interconnect.
+    Ideal,
+}
+
+impl NocKind {
+    pub const ALL: [NocKind; 3] = [NocKind::Wormhole, NocKind::Smart, NocKind::Ideal];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            NocKind::Wormhole => "wormhole",
+            NocKind::Smart => "smart",
+            NocKind::Ideal => "ideal",
+        }
+    }
+}
+
+impl std::str::FromStr for NocKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "wormhole" => Ok(NocKind::Wormhole),
+            "smart" => Ok(NocKind::Smart),
+            "ideal" => Ok(NocKind::Ideal),
+            other => Err(format!("unknown NoC kind {other:?}")),
+        }
+    }
+}
+
+impl std::str::FromStr for Scenario {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "1" | "baseline" => Ok(Scenario::Baseline),
+            "2" | "batch" => Ok(Scenario::BatchOnly),
+            "3" | "repl" => Ok(Scenario::ReplicationOnly),
+            "4" | "repl-batch" => Ok(Scenario::ReplicationBatch),
+            other => Err(format!("unknown scenario {other:?} (1|2|3|4)")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenario_predicates() {
+        assert!(!Scenario::Baseline.replication());
+        assert!(!Scenario::Baseline.batch());
+        assert!(Scenario::BatchOnly.batch() && !Scenario::BatchOnly.replication());
+        assert!(Scenario::ReplicationOnly.replication() && !Scenario::ReplicationOnly.batch());
+        assert!(Scenario::ReplicationBatch.replication() && Scenario::ReplicationBatch.batch());
+    }
+
+    #[test]
+    fn parse_round_trip() {
+        for s in ["wormhole", "smart", "ideal"] {
+            let k: NocKind = s.parse().unwrap();
+            assert_eq!(k.name(), s);
+        }
+        assert!("toroidal".parse::<NocKind>().is_err());
+        for (s, want) in [("1", Scenario::Baseline), ("4", Scenario::ReplicationBatch)] {
+            assert_eq!(s.parse::<Scenario>().unwrap(), want);
+        }
+    }
+
+    #[test]
+    fn grid_is_sixty_benchmarks() {
+        // 5 VGGs x 4 scenarios x 3 NoCs = 60 (Sec. VI-B).
+        assert_eq!(5 * Scenario::ALL.len() * NocKind::ALL.len(), 60);
+    }
+}

@@ -1,0 +1,173 @@
+//! Dynamic batching policy (pure logic, decoupled from threads so it is
+//! property-testable): prefer the largest executable batch the queue can
+//! fill; after `max_wait`, serve what is there — padding a nearly-full
+//! large batch when the padding overhead beats running singles.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use super::request::Request;
+
+/// A formed batch: the requests to serve together and how many padding
+/// images to append (padding outputs are discarded).
+#[derive(Debug)]
+pub struct FormedBatch {
+    pub requests: Vec<Request>,
+    pub padding: usize,
+}
+
+impl FormedBatch {
+    pub fn size(&self) -> usize {
+        self.requests.len() + self.padding
+    }
+}
+
+/// Batching policy over the supported executable sizes.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// Supported batch sizes, descending (e.g. [4, 1]).
+    pub sizes: Vec<usize>,
+    /// Maximum time the oldest request may wait before we stop hoarding.
+    pub max_wait: Duration,
+    /// Pad to a larger batch when at least this fraction of it is real
+    /// work (e.g. 0.5: two reals may ride a 4-batch).
+    pub min_fill: f64,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self {
+            sizes: vec![4, 1],
+            max_wait: Duration::from_millis(5),
+            min_fill: 0.5,
+        }
+    }
+}
+
+impl BatchPolicy {
+    /// Decide the next batch from `queue` at time `now`. Returns `None` to
+    /// keep waiting. Pops the consumed requests from the queue.
+    pub fn form(&self, queue: &mut VecDeque<Request>, now: Instant) -> Option<FormedBatch> {
+        let oldest = queue.front()?;
+        let biggest = *self.sizes.first()?;
+        if queue.len() >= biggest {
+            let requests: Vec<Request> = queue.drain(..biggest).collect();
+            return Some(FormedBatch {
+                requests,
+                padding: 0,
+            });
+        }
+        if now.duration_since(oldest.submitted) < self.max_wait {
+            return None; // hoard a little longer
+        }
+        // Timeout: serve everything pending with the cheapest shape mix.
+        let n = queue.len();
+        // Find the smallest supported size >= n worth padding to.
+        let padded = self
+            .sizes
+            .iter()
+            .copied()
+            .filter(|&s| s >= n && n as f64 >= s as f64 * self.min_fill)
+            .min();
+        let take = match padded {
+            Some(_) => n,
+            None => {
+                // Serve as many exact batches as possible, then singles.
+                let exact = self
+                    .sizes
+                    .iter()
+                    .copied()
+                    .filter(|&s| s <= n)
+                    .max()
+                    .unwrap_or(1);
+                exact
+            }
+        };
+        let requests: Vec<Request> = queue.drain(..take).collect();
+        let target = padded.unwrap_or(take);
+        Some(FormedBatch {
+            padding: target - requests.len(),
+            requests,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, age: Duration, now: Instant) -> Request {
+        Request {
+            id,
+            image: vec![0.0; 4],
+            submitted: now - age,
+        }
+    }
+
+    fn policy() -> BatchPolicy {
+        BatchPolicy {
+            sizes: vec![4, 1],
+            max_wait: Duration::from_millis(5),
+            min_fill: 0.5,
+        }
+    }
+
+    #[test]
+    fn full_batch_forms_immediately() {
+        let now = Instant::now();
+        let mut q: VecDeque<Request> =
+            (0..5).map(|i| req(i, Duration::ZERO, now)).collect();
+        let b = policy().form(&mut q, now).unwrap();
+        assert_eq!(b.requests.len(), 4);
+        assert_eq!(b.padding, 0);
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn fresh_partial_waits() {
+        let now = Instant::now();
+        let mut q: VecDeque<Request> =
+            (0..2).map(|i| req(i, Duration::from_millis(1), now)).collect();
+        assert!(policy().form(&mut q, now).is_none());
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn stale_pair_pads_to_four() {
+        let now = Instant::now();
+        let mut q: VecDeque<Request> =
+            (0..2).map(|i| req(i, Duration::from_millis(10), now)).collect();
+        let b = policy().form(&mut q, now).unwrap();
+        assert_eq!(b.requests.len(), 2);
+        assert_eq!(b.padding, 2);
+        assert_eq!(b.size(), 4);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn stale_single_runs_alone() {
+        let now = Instant::now();
+        let mut q: VecDeque<Request> =
+            std::iter::once(req(0, Duration::from_millis(10), now)).collect();
+        let b = policy().form(&mut q, now).unwrap();
+        assert_eq!(b.requests.len(), 1);
+        assert_eq!(b.padding, 0); // 1 < 4 * 0.5: not worth padding
+        assert_eq!(b.size(), 1);
+    }
+
+    #[test]
+    fn empty_queue_yields_none() {
+        let mut q = VecDeque::new();
+        assert!(policy().form(&mut q, Instant::now()).is_none());
+    }
+
+    #[test]
+    fn order_preserved_fifo() {
+        let now = Instant::now();
+        let mut q: VecDeque<Request> =
+            (0..6).map(|i| req(i, Duration::ZERO, now)).collect();
+        let b = policy().form(&mut q, now).unwrap();
+        let ids: Vec<u64> = b.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+}

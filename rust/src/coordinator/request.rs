@@ -1,0 +1,121 @@
+//! Request/response types and serving statistics.
+
+use std::time::{Duration, Instant};
+
+/// An inference request: one image, flattened `32 x 32 x 3` in [0, 1].
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub image: Vec<f32>,
+    pub submitted: Instant,
+}
+
+/// The served result.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub logits: Vec<f32>,
+    pub class: usize,
+    /// Queueing + batching + execution time.
+    pub latency: Duration,
+    /// Batch size this request was served in.
+    pub batch: usize,
+}
+
+/// Online serving statistics.
+#[derive(Debug, Default, Clone)]
+pub struct ServeStats {
+    pub served: u64,
+    pub batches: u64,
+    /// Batch-size histogram indexed by size (0 unused).
+    pub batch_hist: [u64; 5],
+    latencies_us: Vec<u64>,
+    started: Option<Instant>,
+    finished: Option<Instant>,
+}
+
+impl ServeStats {
+    pub fn record(&mut self, resp: &Response, now: Instant) {
+        if self.started.is_none() {
+            self.started = Some(resp.submitted_proxy(now));
+        }
+        self.finished = Some(now);
+        self.served += 1;
+        self.latencies_us.push(resp.latency.as_micros() as u64);
+    }
+
+    pub fn record_batch(&mut self, size: usize) {
+        self.batches += 1;
+        if size < self.batch_hist.len() {
+            self.batch_hist[size] += 1;
+        }
+    }
+
+    /// Requests per second over the serving span.
+    pub fn throughput(&self) -> f64 {
+        match (self.started, self.finished) {
+            (Some(s), Some(f)) if f > s => self.served as f64 / (f - s).as_secs_f64(),
+            _ => 0.0,
+        }
+    }
+
+    pub fn latency_percentile_ms(&self, p: f64) -> f64 {
+        if self.latencies_us.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.latencies_us.clone();
+        v.sort_unstable();
+        let rank = (p / 100.0 * (v.len() - 1) as f64).round() as usize;
+        v[rank.min(v.len() - 1)] as f64 / 1000.0
+    }
+
+    pub fn mean_latency_ms(&self) -> f64 {
+        if self.latencies_us.is_empty() {
+            return 0.0;
+        }
+        self.latencies_us.iter().sum::<u64>() as f64 / self.latencies_us.len() as f64 / 1000.0
+    }
+}
+
+impl Response {
+    fn submitted_proxy(&self, now: Instant) -> Instant {
+        now.checked_sub(self.latency).unwrap_or(now)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn resp(id: u64, ms: u64) -> Response {
+        Response {
+            id,
+            logits: vec![0.0; 10],
+            class: 0,
+            latency: Duration::from_millis(ms),
+            batch: 1,
+        }
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut s = ServeStats::default();
+        let t = Instant::now();
+        for i in 0..10 {
+            s.record(&resp(i, 10 + i), t + Duration::from_millis(i as u64 * 5));
+            s.record_batch(1);
+        }
+        assert_eq!(s.served, 10);
+        assert_eq!(s.batches, 10);
+        assert!(s.mean_latency_ms() >= 10.0);
+        assert!(s.latency_percentile_ms(50.0) >= 10.0);
+        assert!(s.latency_percentile_ms(99.0) <= 19.1);
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let s = ServeStats::default();
+        assert_eq!(s.throughput(), 0.0);
+        assert_eq!(s.mean_latency_ms(), 0.0);
+    }
+}

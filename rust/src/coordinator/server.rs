@@ -1,0 +1,223 @@
+//! The serving loop: a worker thread owns the PJRT runtime (PJRT handles
+//! are not Send, so the worker constructs them) and drains a request
+//! channel through the dynamic batcher. std threads + channels — the
+//! vendored crate set has no tokio, and a single compute-bound worker
+//! matches one PIM node anyway.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::runtime::vgg_tiny::{CLASSES, IMAGE_LEN};
+use crate::runtime::{Runtime, VggTiny};
+
+use super::batcher::BatchPolicy;
+use super::request::{Request, Response, ServeStats};
+
+enum Msg {
+    Infer(Request, Sender<Result<Response, String>>),
+    Shutdown(Sender<ServeStats>),
+}
+
+/// Handle to a running serving coordinator.
+pub struct Server {
+    tx: Sender<Msg>,
+    worker: Option<JoinHandle<()>>,
+    next_id: u64,
+}
+
+impl Server {
+    /// Start the worker; fails fast (through the returned channel probe) if
+    /// artifacts are missing.
+    pub fn start(artifacts_dir: String, policy: BatchPolicy) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let worker = std::thread::Builder::new()
+            .name("smart-pim-serve".into())
+            .spawn(move || worker_loop(artifacts_dir, policy, rx, ready_tx))?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("worker died during startup"))?
+            .map_err(|e| anyhow::anyhow!("worker startup failed: {e}"))?;
+        Ok(Self {
+            tx,
+            worker: Some(worker),
+            next_id: 0,
+        })
+    }
+
+    /// Submit an image; returns a receiver for the response.
+    pub fn submit(&mut self, image: Vec<f32>) -> Receiver<Result<Response, String>> {
+        let (rtx, rrx) = mpsc::channel();
+        let req = Request {
+            id: self.next_id,
+            image,
+            submitted: Instant::now(),
+        };
+        self.next_id += 1;
+        // A send error means the worker is gone; the receiver will error.
+        let _ = self.tx.send(Msg::Infer(req, rtx));
+        rrx
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn infer(&mut self, image: Vec<f32>) -> Result<Response> {
+        self.submit(image)
+            .recv()
+            .map_err(|_| anyhow::anyhow!("worker dropped the request"))?
+            .map_err(|e| anyhow::anyhow!(e))
+    }
+
+    /// Stop the worker and collect statistics.
+    pub fn shutdown(mut self) -> ServeStats {
+        let (stx, srx) = mpsc::channel();
+        let _ = self.tx.send(Msg::Shutdown(stx));
+        let stats = srx.recv().unwrap_or_default();
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+        stats
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        if let Some(h) = self.worker.take() {
+            let (stx, _srx) = mpsc::channel();
+            let _ = self.tx.send(Msg::Shutdown(stx));
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(
+    artifacts_dir: String,
+    policy: BatchPolicy,
+    rx: Receiver<Msg>,
+    ready_tx: Sender<Result<(), String>>,
+) {
+    let model = match Runtime::new(artifacts_dir).and_then(|rt| VggTiny::load(&rt)) {
+        Ok(m) => {
+            let _ = ready_tx.send(Ok(()));
+            m
+        }
+        Err(e) => {
+            let _ = ready_tx.send(Err(format!("{e:#}")));
+            return;
+        }
+    };
+
+    let mut queue: VecDeque<Request> = VecDeque::new();
+    let mut waiters: std::collections::HashMap<u64, Sender<Result<Response, String>>> =
+        std::collections::HashMap::new();
+    let mut stats = ServeStats::default();
+    let mut shutdown_to: Option<Sender<ServeStats>> = None;
+
+    'outer: loop {
+        // Drain the channel (non-blocking if we already hold work).
+        loop {
+            let msg = if queue.is_empty() && shutdown_to.is_none() {
+                match rx.recv() {
+                    Ok(m) => m,
+                    Err(_) => break 'outer,
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(m) => m,
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        if queue.is_empty() {
+                            break 'outer;
+                        }
+                        break;
+                    }
+                }
+            };
+            match msg {
+                Msg::Infer(req, resp_tx) => {
+                    if req.image.len() != IMAGE_LEN {
+                        let _ = resp_tx.send(Err(format!(
+                            "image must be {IMAGE_LEN} floats, got {}",
+                            req.image.len()
+                        )));
+                        continue;
+                    }
+                    waiters.insert(req.id, resp_tx);
+                    queue.push_back(req);
+                }
+                Msg::Shutdown(stx) => {
+                    shutdown_to = Some(stx);
+                }
+            }
+        }
+
+        // Form and serve batches. At shutdown, flush regardless of age.
+        let now = Instant::now();
+        let flushing = shutdown_to.is_some();
+        let batch = if flushing && !queue.is_empty() {
+            let n = queue.len().min(4);
+            let take = if n >= 2 { n } else { 1 };
+            Some(super::batcher::FormedBatch {
+                padding: if take > 1 { 4 - take } else { 0 },
+                requests: queue.drain(..take).collect(),
+            })
+        } else {
+            policy.form(&mut queue, now)
+        };
+
+        if let Some(b) = batch {
+            let size = b.size();
+            stats.record_batch(size);
+            let mut flat = Vec::with_capacity(size * IMAGE_LEN);
+            for r in &b.requests {
+                flat.extend_from_slice(&r.image);
+            }
+            flat.resize(size * IMAGE_LEN, 0.0);
+            let done = Instant::now();
+            match model.infer(&flat) {
+                Ok(logits) => {
+                    for (i, r) in b.requests.iter().enumerate() {
+                        let row = &logits[i * CLASSES..(i + 1) * CLASSES];
+                        let class = row
+                            .iter()
+                            .enumerate()
+                            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                            .unwrap()
+                            .0;
+                        let resp = Response {
+                            id: r.id,
+                            logits: row.to_vec(),
+                            class,
+                            latency: done.elapsed() + (done - r.submitted),
+                            batch: size,
+                        };
+                        stats.record(&resp, Instant::now());
+                        if let Some(tx) = waiters.remove(&r.id) {
+                            let _ = tx.send(Ok(resp));
+                        }
+                    }
+                }
+                Err(e) => {
+                    for r in &b.requests {
+                        if let Some(tx) = waiters.remove(&r.id) {
+                            let _ = tx.send(Err(format!("{e:#}")));
+                        }
+                    }
+                }
+            }
+        } else if shutdown_to.is_none() {
+            // Partial queue still hoarding: nap briefly.
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        }
+
+        if queue.is_empty() {
+            if let Some(stx) = shutdown_to.take() {
+                let _ = stx.send(stats.clone());
+                break;
+            }
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! # smart-pim
+//!
+//! A production-quality reproduction of *"SMART Paths for Latency Reduction
+//! in ReRAM Processing-In-Memory Architecture for CNN Inference"*
+//! (Ko & Yu, 2020): an analog-ReRAM PIM accelerator for CNN inference with
+//! intra-layer / inter-layer / batch pipelining, weight replication, and a
+//! SMART-flow-control NoC, implemented as a three-layer Rust + JAX + Pallas
+//! stack (see DESIGN.md).
+//!
+//! - **Layer 3 (this crate)** — cycle-accurate processing-side simulator,
+//!   flit-level NoC simulator (wormhole / SMART / ideal), power/energy
+//!   model, and a serving coordinator that executes real quantized CNN
+//!   inference through AOT-compiled XLA artifacts (PJRT).
+//! - **Layer 2 (python/compile/model.py)** — the quantized CNN forward
+//!   graph in JAX, lowered once to HLO text at build time.
+//! - **Layer 1 (python/compile/kernels/crossbar.py)** — the bit-serial
+//!   2-bit-MLC crossbar GEMM as a Pallas kernel.
+
+pub mod cnn;
+pub mod config;
+pub mod coordinator;
+pub mod mapping;
+pub mod metrics;
+pub mod noc;
+pub mod pipeline;
+pub mod power;
+pub mod runtime;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,464 @@
+//! smart-pim CLI — the leader entrypoint.
+//!
+//! Subcommands regenerate every table/figure of the paper, run ad-hoc
+//! simulations, and serve real quantized CNN inference through the PJRT
+//! runtime:
+//!
+//! ```text
+//! smart-pim fig4                      # component power/area table
+//! smart-pim fig5 [--noc smart]        # pipelining speedups
+//! smart-pim fig6 [--scenario 4]       # NoC speedups
+//! smart-pim fig7                      # weight replication plans
+//! smart-pim fig8                      # VGG-E throughput grid
+//! smart-pim fig9                      # energy efficiency
+//! smart-pim fig10 | fig11             # synthetic-traffic sweeps
+//! smart-pim simulate --vgg E --scenario 4 --noc smart [--gantt]
+//! smart-pim noc --pattern tornado --rate 0.1 [--noc smart]
+//! smart-pim serve --requests 64 [--artifacts artifacts]
+//! smart-pim dump-config               # active ArchConfig in file format
+//! smart-pim report-all                # everything (minutes)
+//! ```
+//!
+//! Every command accepts `--config FILE` (a `key = value` override file,
+//! see `config/parse.rs`) to simulate nodes other than the paper's.
+
+use smart_pim::cnn::{vgg, VggVariant};
+use smart_pim::config::{ArchConfig, NocKind, Scenario};
+use smart_pim::coordinator::{BatchPolicy, Server};
+use smart_pim::mapping::{plan_tiles, ReplicationPlan};
+use smart_pim::metrics::{paper, Grid};
+use smart_pim::noc::{run_synthetic, Mesh, Pattern, SyntheticConfig};
+use smart_pim::power::components::{aggregates, CORE_ROWS, TILE_ROWS};
+use smart_pim::power::AreaBreakdown;
+use smart_pim::sim::evaluate;
+use smart_pim::util::cli::Args;
+use smart_pim::util::table::{fnum, Table};
+use smart_pim::util::Rng;
+
+fn main() {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        eprintln!("usage: smart-pim <fig4..fig11|simulate|noc|serve|report-all> [options]");
+        std::process::exit(2);
+    }
+    let cmd = argv.remove(0);
+    let args = match Args::parse(argv, &["batch", "no-batch", "gantt"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = init_arch(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    }
+    let result = match cmd.as_str() {
+        "fig4" => fig4(),
+        "fig5" => fig5(&args),
+        "fig6" => fig6(&args),
+        "fig7" => fig7(),
+        "fig8" => fig8(),
+        "fig9" => fig9(),
+        "fig10" => fig10_11(&args, true),
+        "fig11" => fig10_11(&args, false),
+        "simulate" => simulate(&args),
+        "noc" => noc_cmd(&args),
+        "serve" => serve(&args),
+        "dump-config" => {
+            print!("{}", smart_pim::config::render_arch(&arch()));
+            Ok(())
+        }
+        "report-all" => report_all(&args),
+        other => Err(format!("unknown command {other:?}")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+static ACTIVE_ARCH: once_cell::sync::OnceCell<ArchConfig> = once_cell::sync::OnceCell::new();
+
+/// Resolve `--config FILE` once; all commands read the active config.
+fn init_arch(args: &Args) -> Result<(), String> {
+    let cfg = match args.get("config") {
+        Some(path) => smart_pim::config::load_arch(path, &ArchConfig::paper_node())?,
+        None => ArchConfig::paper_node(),
+    };
+    let _ = ACTIVE_ARCH.set(cfg);
+    Ok(())
+}
+
+fn arch() -> ArchConfig {
+    ACTIVE_ARCH
+        .get()
+        .cloned()
+        .unwrap_or_else(ArchConfig::paper_node)
+}
+
+fn fig4() -> Result<(), String> {
+    let mut t = Table::new(
+        "Fig. 4 — power and area of each hardware component (32 nm)",
+        &["component", "area (mm^2)", "power (mW)", "count", "spec"],
+    );
+    for r in CORE_ROWS.iter().chain(TILE_ROWS) {
+        t.row(&[
+            r.name.into(),
+            format!("{}", r.area_mm2),
+            format!("{}", r.power_mw),
+            format!("{}", r.count),
+            r.spec.into(),
+        ]);
+    }
+    t.row(&[
+        "Core".into(),
+        format!("{}", aggregates::CORE_AREA_MM2),
+        format!("{}", aggregates::CORE_POWER_MW),
+        "12/tile".into(),
+        "".into(),
+    ]);
+    t.row(&[
+        "Tile".into(),
+        format!("{}", aggregates::TILE_AREA_MM2),
+        format!("{}", aggregates::TILE_POWER_MW),
+        "320/node".into(),
+        "".into(),
+    ]);
+    t.row(&[
+        "Node".into(),
+        format!("{}", aggregates::NODE_AREA_MM2),
+        format!("{}", aggregates::NODE_POWER_MW),
+        "1".into(),
+        "peak, all units active".into(),
+    ]);
+    t.print();
+    let a = AreaBreakdown::node(&arch());
+    println!(
+        "node area check: tiles {} + routers {} = {} mm^2",
+        fnum(a.tiles_mm2, 3),
+        fnum(a.routers_mm2, 3),
+        fnum(a.total_mm2(), 3)
+    );
+    Ok(())
+}
+
+fn fig5(args: &Args) -> Result<(), String> {
+    args.check_known(&["noc", "config"])?;
+    let noc: NocKind = args.get_or("noc", "smart").parse()?;
+    let a = arch();
+    let grid = Grid::run(&a, &VggVariant::ALL, &Scenario::ALL, &[noc]);
+    let (t, geo) = grid.fig5_table(noc, &VggVariant::ALL);
+    t.print();
+    println!(
+        "paper geomeans: {} / {} / {}",
+        paper::FIG5_GEOMEANS[0],
+        paper::FIG5_GEOMEANS[1],
+        paper::FIG5_GEOMEANS[2]
+    );
+    println!(
+        "ours:           {} / {} / {}",
+        fnum(geo[0], 4),
+        fnum(geo[1], 4),
+        fnum(geo[2], 4)
+    );
+    Ok(())
+}
+
+fn fig6(args: &Args) -> Result<(), String> {
+    args.check_known(&["scenario", "config"])?;
+    let scenario: Scenario = args.get_or("scenario", "4").parse()?;
+    let a = arch();
+    let grid = Grid::run(&a, &VggVariant::ALL, &[scenario], &NocKind::ALL);
+    let (t, geo) = grid.fig6_table(scenario, &VggVariant::ALL);
+    t.print();
+    println!(
+        "paper geomean (ideal/wormhole): {}; ours smart {} ideal {}",
+        paper::FIG6_IDEAL_GEOMEAN,
+        fnum(geo[0], 4),
+        fnum(geo[1], 4)
+    );
+    Ok(())
+}
+
+fn fig7() -> Result<(), String> {
+    let a = arch();
+    let max_convs = 16;
+    let mut header: Vec<String> = vec!["layer".into()];
+    header.extend(
+        VggVariant::ALL
+            .iter()
+            .map(|v| format!("{} replicate", v.name())),
+    );
+    let hdr_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new("Fig. 7 — weight replications of each VGG", &hdr_refs);
+    let plans: Vec<(usize, ReplicationPlan)> = VggVariant::ALL
+        .iter()
+        .map(|&v| {
+            let net = vgg::build(v);
+            (net.n_conv(), ReplicationPlan::fig7(v))
+        })
+        .collect();
+    for i in 0..max_convs {
+        let mut row = vec![format!("conv layer {}", i + 1)];
+        for (n_conv, plan) in &plans {
+            row.push(if i < *n_conv {
+                plan.factor(i).to_string()
+            } else {
+                "N/A".into()
+            });
+        }
+        t.row(&row);
+    }
+    for f in 0..3 {
+        let mut row = vec![format!("fc layer {}", f + 1)];
+        for (n_conv, plan) in &plans {
+            row.push(plan.factor(n_conv + f).to_string());
+        }
+        t.row(&row);
+    }
+    t.print();
+    for (v, (_, plan)) in VggVariant::ALL.iter().zip(&plans) {
+        let net = vgg::build(*v);
+        let tiles = plan_tiles(&net, &a, &plan.factors);
+        println!("{}: {} tiles (budget 320)", v.name(), tiles);
+    }
+    Ok(())
+}
+
+fn fig8() -> Result<(), String> {
+    let a = arch();
+    let grid = Grid::run(&a, &[VggVariant::E], &Scenario::ALL, &NocKind::ALL);
+    grid.fig8_table().print();
+    println!(
+        "paper best case: {} TOPS ({} FPS, smart scenario 4); wormhole {} TOPS",
+        paper::FIG8_BEST_TOPS,
+        paper::FIG8_BEST_FPS,
+        paper::FIG8_WORMHOLE_TOPS
+    );
+    Ok(())
+}
+
+fn fig9() -> Result<(), String> {
+    let a = arch();
+    let grid = Grid::run(
+        &a,
+        &VggVariant::ALL,
+        &[Scenario::ReplicationBatch],
+        &[NocKind::Smart],
+    );
+    grid.fig9_table(&VggVariant::ALL).print();
+    println!("paper: A 2.8841, B 2.5538, C 2.5846, D 3.1271, E 3.5914 TOPS/W");
+    Ok(())
+}
+
+fn fig10_11(args: &Args, latency: bool) -> Result<(), String> {
+    args.check_known(&["rates", "measure", "seed", "scenario", "noc", "config"])?;
+    let rates: Vec<f64> = args
+        .get_or("rates", "0.02,0.05,0.08,0.12,0.2,0.3,0.5,0.8")
+        .split(',')
+        .map(|s| s.parse::<f64>().map_err(|e| format!("{s:?}: {e}")))
+        .collect::<Result<_, _>>()?;
+    let measure = args.get_parse_or("measure", 6_000u64)?;
+    let seed = args.get_parse_or("seed", 0xA5A5u64)?;
+    let mesh = Mesh::new(8, 8);
+    let which = if latency {
+        "latency (cycles)"
+    } else {
+        "reception (flits/node/cycle)"
+    };
+    for pattern in Pattern::ALL {
+        let mut t = Table::new(
+            format!(
+                "Fig. {} — {} / {}",
+                if latency { 10 } else { 11 },
+                pattern.name(),
+                which
+            ),
+            &["rate", "wormhole", "smart"],
+        );
+        for &rate in &rates {
+            let cfg = SyntheticConfig {
+                pattern,
+                injection_rate: rate,
+                measure,
+                warmup: measure / 4,
+                drain: measure * 2,
+                seed,
+                ..Default::default()
+            };
+            let w = run_synthetic(NocKind::Wormhole, mesh, &cfg, arch().hpc_max);
+            let s = run_synthetic(NocKind::Smart, mesh, &cfg, arch().hpc_max);
+            let cell = |x: &smart_pim::noc::NocStats| {
+                let v = if latency {
+                    x.avg_latency
+                } else {
+                    x.reception_rate
+                };
+                format!(
+                    "{}{}",
+                    fnum(v, if latency { 1 } else { 4 }),
+                    if x.saturated() { " SAT" } else { "" }
+                )
+            };
+            t.row(&[format!("{rate}"), cell(&w), cell(&s)]);
+        }
+        t.print();
+    }
+    Ok(())
+}
+
+fn simulate(args: &Args) -> Result<(), String> {
+    args.check_known(&["vgg", "scenario", "noc", "config"])?;
+    let v: VggVariant = args.get_or("vgg", "E").parse()?;
+    let s: Scenario = args.get_or("scenario", "4").parse()?;
+    let n: NocKind = args.get_or("noc", "smart").parse()?;
+    let a = arch();
+    let r = evaluate(v, s, n, &a);
+    let mut t = Table::new(
+        format!(
+            "simulate {} scenario {} noc {}",
+            v.name(),
+            s.label(),
+            n.name()
+        ),
+        &["metric", "value"],
+    );
+    t.row(&[
+        "interval (logical cycles)".into(),
+        fnum(r.interval_cycles, 1),
+    ]);
+    t.row(&[
+        "latency (logical cycles)".into(),
+        fnum(r.latency_cycles, 1),
+    ]);
+    t.row(&["throughput (FPS)".into(), fnum(r.fps, 1)]);
+    t.row(&["throughput (TOPS)".into(), fnum(r.tops, 4)]);
+    t.row(&["energy/image (mJ)".into(), fnum(r.energy.total_mj(), 3)]);
+    t.row(&["  core (mJ)".into(), fnum(r.energy.core_mj, 3)]);
+    t.row(&["  tile periph (mJ)".into(), fnum(r.energy.tile_mj, 3)]);
+    t.row(&["  noc (mJ)".into(), fnum(r.energy.noc_mj, 3)]);
+    t.row(&["efficiency (TOPS/W)".into(), fnum(r.tops_per_watt, 4)]);
+    {
+        use smart_pim::power::EnergyModel;
+        let em = EnergyModel::new(&a);
+        t.row(&[
+            "avg power (W)".into(),
+            fnum(em.avg_power_w(&r.energy, r.fps), 2),
+        ]);
+        t.row(&[
+            "peak-power utilization".into(),
+            format!("{:.1} %", 100.0 * em.peak_utilization(&r.energy, r.fps)),
+        ]);
+    }
+    if args.flag("gantt") {
+        // Re-derive the stage plans for the trace view.
+        use smart_pim::mapping::{NetworkMapping, Placement, ReplicationPlan};
+        use smart_pim::pipeline::build_plans;
+        let net = vgg::build(v);
+        let plan = if s.replication() {
+            ReplicationPlan::fig7(v)
+        } else {
+            ReplicationPlan::none(&net)
+        };
+        let m = NetworkMapping::build(&net, &a, &plan)?;
+        let _ = Placement::snake(&a);
+        let plans = build_plans(&net, &m, &a);
+        println!("{}", smart_pim::sim::gantt(&plans, &r.sim, 100));
+    }
+    t.print();
+    Ok(())
+}
+
+fn noc_cmd(args: &Args) -> Result<(), String> {
+    args.check_known(&["pattern", "rate", "noc", "mesh", "measure", "seed", "config"])?;
+    let pattern: Pattern = args.get_or("pattern", "uniform_random").parse()?;
+    let rate: f64 = args.get_parse_or("rate", 0.1)?;
+    let kind: NocKind = args.get_or("noc", "smart").parse()?;
+    let mesh_s = args.get_or("mesh", "8x8");
+    let (w, h) = mesh_s
+        .split_once('x')
+        .ok_or_else(|| format!("--mesh {mesh_s:?} (expected WxH)"))?;
+    let mesh = Mesh::new(
+        w.parse().map_err(|e| format!("{e}"))?,
+        h.parse().map_err(|e| format!("{e}"))?,
+    );
+    let cfg = SyntheticConfig {
+        pattern,
+        injection_rate: rate,
+        measure: args.get_parse_or("measure", 10_000u64)?,
+        seed: args.get_parse_or("seed", 0xA5A5u64)?,
+        ..Default::default()
+    };
+    let s = run_synthetic(kind, mesh, &cfg, arch().hpc_max);
+    println!(
+        "{} {} rate {}: net latency {}, total latency {}, reception {}, completed {}, dropped {}{}",
+        kind.name(),
+        pattern.name(),
+        rate,
+        fnum(s.avg_net_latency, 1),
+        fnum(s.avg_latency, 1),
+        fnum(s.reception_rate, 4),
+        s.completed,
+        s.dropped,
+        if s.saturated() { " [SATURATED]" } else { "" }
+    );
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<(), String> {
+    args.check_known(&["requests", "artifacts", "seed", "config"])?;
+    let n: usize = args.get_parse_or("requests", 32usize)?;
+    let dir = args.get_or("artifacts", "artifacts").to_string();
+    let seed: u64 = args.get_parse_or("seed", 7u64)?;
+    let mut server = Server::start(dir, BatchPolicy::default()).map_err(|e| format!("{e:#}"))?;
+    let mut rng = Rng::new(seed);
+    println!("serving {n} synthetic images through the PJRT-compiled tiny-VGG ...");
+    let mut pending = Vec::new();
+    for _ in 0..n {
+        let image: Vec<f32> = (0..32 * 32 * 3).map(|_| rng.next_f64() as f32).collect();
+        pending.push(server.submit(image));
+    }
+    let mut classes = vec![0u64; 10];
+    for rx in pending {
+        let resp = rx.recv().map_err(|_| "worker died".to_string())??;
+        classes[resp.class] += 1;
+    }
+    let stats = server.shutdown();
+    println!(
+        "served {} requests in {} batches (hist 1:{} 2:{} 3:{} 4:{})",
+        stats.served,
+        stats.batches,
+        stats.batch_hist[1],
+        stats.batch_hist[2],
+        stats.batch_hist[3],
+        stats.batch_hist[4]
+    );
+    println!(
+        "throughput {} req/s, latency mean {} ms, p50 {} ms, p99 {} ms",
+        fnum(stats.throughput(), 1),
+        fnum(stats.mean_latency_ms(), 2),
+        fnum(stats.latency_percentile_ms(50.0), 2),
+        fnum(stats.latency_percentile_ms(99.0), 2)
+    );
+    println!("class histogram: {classes:?}");
+    Ok(())
+}
+
+fn report_all(args: &Args) -> Result<(), String> {
+    fig4()?;
+    println!();
+    fig7()?;
+    println!();
+    fig5(args)?;
+    println!();
+    fig6(args)?;
+    println!();
+    fig8()?;
+    println!();
+    fig9()?;
+    println!();
+    fig10_11(args, true)?;
+    fig10_11(args, false)?;
+    Ok(())
+}

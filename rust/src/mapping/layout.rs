@@ -1,0 +1,151 @@
+//! Layer → tile allocation: turns a network + replication plan into the
+//! per-layer resource map the pipeline simulator and the NoC traffic
+//! extractor consume.
+
+use crate::cnn::Network;
+use crate::config::ArchConfig;
+
+use super::replication::{validate_plan, ReplicationPlan};
+use super::subarray::SubarrayDemand;
+
+/// Resolved mapping of one layer.
+#[derive(Debug, Clone)]
+pub struct LayerMapping {
+    /// Index into `Network::layers()`.
+    pub layer_idx: usize,
+    pub name: String,
+    /// Replication factor `r`.
+    pub replication: usize,
+    pub demand: SubarrayDemand,
+    /// Tiles owned by this layer (ids into the placement order).
+    pub tile_ids: Vec<usize>,
+    /// True if all replicas fit one tile (picks the 24/29-cycle intra-layer
+    /// pipeline variants; multi-tile layers use 26/31).
+    pub single_tile: bool,
+    /// FC layers time-multiplex crossbars over this many reload rounds.
+    pub reload_rounds: u64,
+}
+
+/// Whole-network mapping.
+#[derive(Debug, Clone)]
+pub struct NetworkMapping {
+    pub layers: Vec<LayerMapping>,
+    pub total_tiles: usize,
+}
+
+impl NetworkMapping {
+    /// Allocate tiles to layers in order. Layers own disjoint, contiguous
+    /// runs of tile ids; the placement module maps ids to mesh coordinates
+    /// so that consecutive layers are physically adjacent.
+    pub fn build(
+        net: &Network,
+        arch: &ArchConfig,
+        plan: &ReplicationPlan,
+    ) -> Result<Self, String> {
+        validate_plan(net, arch, plan)?;
+        let mut layers = Vec::with_capacity(net.len());
+        let mut next_tile = 0usize;
+        for (i, layer) in net.layers().iter().enumerate() {
+            let r = plan.factor(i);
+            let demand = SubarrayDemand::of(layer, arch);
+            let (tiles, reload_rounds) = if layer.is_conv() {
+                (demand.tiles(r, arch), 1)
+            } else {
+                let t = demand
+                    .subarrays_replicated(r)
+                    .div_ceil(arch.fc_reload_rounds as usize)
+                    .div_ceil(arch.subarrays_per_tile())
+                    .max(1);
+                (t, arch.fc_reload_rounds)
+            };
+            let tile_ids: Vec<usize> = (next_tile..next_tile + tiles).collect();
+            next_tile += tiles;
+            layers.push(LayerMapping {
+                layer_idx: i,
+                name: layer.name.clone(),
+                replication: r,
+                demand,
+                single_tile: tiles == 1,
+                tile_ids,
+                reload_rounds,
+            });
+        }
+        if next_tile > arch.total_tiles() {
+            return Err(format!(
+                "mapping needs {next_tile} tiles > {}",
+                arch.total_tiles()
+            ));
+        }
+        Ok(Self {
+            layers,
+            total_tiles: next_tile,
+        })
+    }
+
+    /// Convenience accessor.
+    pub fn layer(&self, i: usize) -> &LayerMapping {
+        &self.layers[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::vgg;
+    use crate::cnn::VggVariant;
+
+    #[test]
+    fn vgg_e_fig7_mapping_builds() {
+        let arch = ArchConfig::paper_node();
+        let net = vgg::build(VggVariant::E);
+        let plan = ReplicationPlan::fig7(VggVariant::E);
+        let m = NetworkMapping::build(&net, &arch, &plan).unwrap();
+        assert_eq!(m.layers.len(), net.len());
+        assert!(m.total_tiles <= 320, "tiles = {}", m.total_tiles);
+        // Tile runs are disjoint and contiguous.
+        let mut seen = vec![false; m.total_tiles];
+        for lm in &m.layers {
+            for &t in &lm.tile_ids {
+                assert!(!seen[t], "tile {t} double-assigned");
+                seen[t] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn conv1_single_tile_under_fig7() {
+        let arch = ArchConfig::paper_node();
+        let net = vgg::build(VggVariant::E);
+        let plan = ReplicationPlan::fig7(VggVariant::E);
+        let m = NetworkMapping::build(&net, &arch, &plan).unwrap();
+        // conv1 at r=16 needs 64 subarrays <= 96 -> single tile.
+        assert!(m.layer(0).single_tile);
+        assert_eq!(m.layer(0).tile_ids.len(), 1);
+    }
+
+    #[test]
+    fn all_vggs_map_under_budget() {
+        let arch = ArchConfig::paper_node();
+        for v in VggVariant::ALL {
+            let net = vgg::build(v);
+            for plan in [ReplicationPlan::none(&net), ReplicationPlan::fig7(v)] {
+                let m = NetworkMapping::build(&net, &arch, &plan)
+                    .unwrap_or_else(|e| panic!("{}: {e}", v.name()));
+                assert!(m.total_tiles <= 320, "{}: {}", v.name(), m.total_tiles);
+            }
+        }
+    }
+
+    #[test]
+    fn fc_layers_record_reload_rounds() {
+        let arch = ArchConfig::paper_node();
+        let net = vgg::build(VggVariant::A);
+        let plan = ReplicationPlan::none(&net);
+        let m = NetworkMapping::build(&net, &arch, &plan).unwrap();
+        for lm in &m.layers {
+            let is_conv = net.layers()[lm.layer_idx].is_conv();
+            assert_eq!(lm.reload_rounds, if is_conv { 1 } else { 8 });
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! Weight mapping: subarray packing, replication planning (Fig. 7), layer →
+//! tile layout, and physical placement on the mesh.
+
+pub mod layout;
+pub mod placement;
+pub mod replication;
+pub mod subarray;
+
+pub use layout::{LayerMapping, NetworkMapping};
+pub use placement::{Coord, Placement};
+pub use replication::{plan_tiles, validate_plan, ReplicationPlan};
+pub use subarray::SubarrayDemand;

@@ -1,0 +1,168 @@
+//! Tile placement: map the layout's linear tile ids onto mesh coordinates.
+//!
+//! Layers are allocated contiguous id runs; a boustrophedon (snake) walk of
+//! the mesh keeps consecutive ids — and therefore producer/consumer layer
+//! pairs — physically adjacent, which is what a sane mapper does and what
+//! keeps the baseline NoC comparison fair (the paper's gains must come from
+//! flow control, not from a strawman placement).
+
+use crate::config::ArchConfig;
+
+/// (x, y) mesh coordinate of a tile/router.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Coord {
+    pub x: usize,
+    pub y: usize,
+}
+
+impl Coord {
+    /// Manhattan distance == minimal XY-route hop count.
+    pub fn hops(&self, other: &Coord) -> usize {
+        self.x.abs_diff(other.x) + self.y.abs_diff(other.y)
+    }
+}
+
+/// Placement of linear tile ids onto the mesh.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    coords: Vec<Coord>,
+    pub width: usize,
+    pub height: usize,
+}
+
+impl Placement {
+    /// Snake order: row 0 left→right, row 1 right→left, ...
+    pub fn snake(arch: &ArchConfig) -> Self {
+        let (w, h) = (arch.tiles_x, arch.tiles_y);
+        let mut coords = Vec::with_capacity(w * h);
+        for y in 0..h {
+            if y % 2 == 0 {
+                for x in 0..w {
+                    coords.push(Coord { x, y });
+                }
+            } else {
+                for x in (0..w).rev() {
+                    coords.push(Coord { x, y });
+                }
+            }
+        }
+        Self {
+            coords,
+            width: w,
+            height: h,
+        }
+    }
+
+    /// Row-major order (for comparison/ablation).
+    pub fn row_major(arch: &ArchConfig) -> Self {
+        let (w, h) = (arch.tiles_x, arch.tiles_y);
+        let coords = (0..w * h)
+            .map(|i| Coord { x: i % w, y: i / w })
+            .collect();
+        Self {
+            coords,
+            width: w,
+            height: h,
+        }
+    }
+
+    pub fn coord(&self, tile_id: usize) -> Coord {
+        self.coords[tile_id]
+    }
+
+    pub fn len(&self) -> usize {
+        self.coords.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.coords.is_empty()
+    }
+
+    /// Router index (y * width + x) for the NoC simulator.
+    pub fn node_of(&self, tile_id: usize) -> usize {
+        let c = self.coord(tile_id);
+        c.y * self.width + c.x
+    }
+
+    /// Mean Manhattan distance between two id sets (layer i tiles → layer
+    /// i+1 tiles), the hop-count input of Eq. (3).
+    pub fn mean_hops(&self, from: &[usize], to: &[usize]) -> f64 {
+        if from.is_empty() || to.is_empty() {
+            return 0.0;
+        }
+        let mut sum = 0usize;
+        for &a in from {
+            for &b in to {
+                sum += self.coord(a).hops(&self.coord(b));
+            }
+        }
+        sum as f64 / (from.len() * to.len()) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snake_covers_mesh_once() {
+        let arch = ArchConfig::paper_node();
+        let p = Placement::snake(&arch);
+        assert_eq!(p.len(), 320);
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..p.len() {
+            assert!(seen.insert(p.coord(i)), "duplicate coord at id {i}");
+        }
+    }
+
+    #[test]
+    fn snake_adjacent_ids_are_adjacent_tiles() {
+        let arch = ArchConfig::paper_node();
+        let p = Placement::snake(&arch);
+        for i in 1..p.len() {
+            assert_eq!(
+                p.coord(i - 1).hops(&p.coord(i)),
+                1,
+                "ids {} and {} not mesh-adjacent",
+                i - 1,
+                i
+            );
+        }
+    }
+
+    #[test]
+    fn row_major_wraps_with_long_hop() {
+        let arch = ArchConfig::paper_node();
+        let p = Placement::row_major(&arch);
+        // End of row 0 to start of row 1 is 15+1 hops: snake beats row-major.
+        assert_eq!(p.coord(15).hops(&p.coord(16)), 16);
+    }
+
+    #[test]
+    fn hops_is_manhattan() {
+        let a = Coord { x: 0, y: 0 };
+        let b = Coord { x: 3, y: 4 };
+        assert_eq!(a.hops(&b), 7);
+        assert_eq!(b.hops(&a), 7);
+        assert_eq!(a.hops(&a), 0);
+    }
+
+    #[test]
+    fn mean_hops_between_runs() {
+        let arch = ArchConfig::test_node(); // 4x4
+        let p = Placement::snake(&arch);
+        let h = p.mean_hops(&[0], &[1]);
+        assert_eq!(h, 1.0);
+        assert_eq!(p.mean_hops(&[], &[1]), 0.0);
+    }
+
+    #[test]
+    fn node_of_is_consistent() {
+        let arch = ArchConfig::test_node();
+        let p = Placement::snake(&arch);
+        for id in 0..p.len() {
+            let c = p.coord(id);
+            assert_eq!(p.node_of(id), c.y * p.width + c.x);
+        }
+    }
+}

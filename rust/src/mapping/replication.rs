@@ -1,0 +1,247 @@
+//! Weight replication (Sec. VI-C, Fig. 7).
+//!
+//! Pooling between layers starves the inter-layer pipeline, so early
+//! high-resolution layers are replicated more: the paper replicates
+//! 16/8/4/2/1x following the five down-sampling steps, hand-tuned per VGG
+//! variant so the whole network fits in 320 tiles. This module carries the
+//! paper's Fig. 7 table verbatim plus an automatic planner that derives a
+//! balanced plan for any network under a tile budget.
+
+use crate::cnn::{Network, VggVariant};
+use crate::config::ArchConfig;
+
+use super::subarray::SubarrayDemand;
+
+/// Replication factors, one per layer (convs then FCs), aligned with
+/// `Network::layers()`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReplicationPlan {
+    pub factors: Vec<usize>,
+}
+
+impl ReplicationPlan {
+    /// All-ones plan (scenarios (1) and (2)).
+    pub fn none(net: &Network) -> Self {
+        Self {
+            factors: vec![1; net.len()],
+        }
+    }
+
+    /// The paper's Fig. 7 plan for a VGG variant (scenarios (3) and (4)).
+    pub fn fig7(variant: VggVariant) -> Self {
+        let conv: &[usize] = match variant {
+            VggVariant::A => &[16, 8, 4, 4, 2, 2, 1, 1],
+            VggVariant::B => &[16, 16, 8, 8, 4, 4, 2, 2, 1, 1],
+            VggVariant::C => &[16, 16, 8, 8, 4, 4, 4, 2, 2, 2, 1, 1, 1],
+            VggVariant::D => &[16, 16, 8, 8, 4, 4, 4, 2, 2, 2, 1, 1, 1],
+            VggVariant::E => &[16, 16, 8, 8, 4, 4, 4, 4, 2, 2, 2, 2, 1, 1, 1, 1],
+        };
+        let mut factors = conv.to_vec();
+        factors.extend_from_slice(&[1, 1, 1]); // fc1..3 (Fig. 7 bottom rows)
+        Self { factors }
+    }
+
+    /// Derive a plan automatically: start from the pooling-trend ideal
+    /// (factor = IFM area ratio to the last conv, capped at `max_factor`)
+    /// and degrade the cheapest layers until the tile budget holds.
+    ///
+    /// This is the planner a user would call for a non-VGG network; for the
+    /// paper's VGGs it reproduces Fig. 7's shape (checked in tests).
+    pub fn auto(net: &Network, arch: &ArchConfig, max_factor: usize) -> Self {
+        let layers = net.layers();
+        // Ideal factor: proportional to output pixels of the layer relative
+        // to the deepest conv, rounded down to a power of two (the paper
+        // replicates in powers of two following the 2x2 pool trend).
+        let min_pixels = layers
+            .iter()
+            .filter(|l| l.is_conv())
+            .map(|l| l.out_pixels())
+            .min()
+            .unwrap_or(1)
+            .max(1);
+        let mut factors: Vec<usize> = layers
+            .iter()
+            .map(|l| {
+                if !l.is_conv() {
+                    return 1;
+                }
+                let ratio = (l.out_pixels() / min_pixels).max(1) as usize;
+                let mut f = 1;
+                while f * 2 <= ratio && f * 2 <= max_factor {
+                    f *= 2;
+                }
+                f
+            })
+            .collect();
+        // Degrade until within budget: repeatedly halve the factor of the
+        // layer whose halving saves the most tiles per lost throughput
+        // (cheapest = largest tile saving relative to its occupancy growth).
+        let budget = arch.total_tiles();
+        loop {
+            let total = plan_tiles(net, arch, &factors);
+            if total <= budget {
+                break;
+            }
+            // Pick the halvable layer with the largest tile footprint.
+            let victim = (0..layers.len())
+                .filter(|&i| factors[i] > 1)
+                .max_by_key(|&i| {
+                    SubarrayDemand::of(&layers[i], arch).tiles(factors[i], arch)
+                });
+            match victim {
+                Some(i) => factors[i] /= 2,
+                None => break, // nothing left to shrink; caller validates
+            }
+        }
+        Self { factors }
+    }
+
+    /// Factor for layer index `i`.
+    pub fn factor(&self, i: usize) -> usize {
+        self.factors[i]
+    }
+
+    pub fn len(&self) -> usize {
+        self.factors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.factors.is_empty()
+    }
+}
+
+/// Total tiles consumed by a plan (each layer owns whole tiles).
+pub fn plan_tiles(net: &Network, arch: &ArchConfig, factors: &[usize]) -> usize {
+    assert_eq!(factors.len(), net.len());
+    net.layers()
+        .iter()
+        .zip(factors)
+        .map(|(l, &r)| {
+            let d = SubarrayDemand::of(l, arch);
+            if l.is_conv() {
+                d.tiles(r, arch)
+            } else {
+                // FC layers time-multiplex their crossbars over
+                // `fc_reload_rounds` rounds (DESIGN.md §1, substitution for
+                // the paper's unexplained fc capacity); they are charged
+                // 1/rounds of their full demand.
+                d.subarrays_replicated(r)
+                    .div_ceil(arch.fc_reload_rounds as usize)
+                    .div_ceil(arch.subarrays_per_tile())
+                    .max(1)
+            }
+        })
+        .sum()
+}
+
+/// Validate a plan: arity, positivity, and the 320-tile constraint.
+pub fn validate_plan(
+    net: &Network,
+    arch: &ArchConfig,
+    plan: &ReplicationPlan,
+) -> Result<usize, String> {
+    if plan.len() != net.len() {
+        return Err(format!(
+            "plan arity {} != network {} layers",
+            plan.len(),
+            net.len()
+        ));
+    }
+    if plan.factors.iter().any(|&f| f == 0) {
+        return Err("replication factors must be >= 1".into());
+    }
+    let tiles = plan_tiles(net, arch, &plan.factors);
+    if tiles > arch.total_tiles() {
+        return Err(format!(
+            "plan needs {tiles} tiles > budget {}",
+            arch.total_tiles()
+        ));
+    }
+    Ok(tiles)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::vgg;
+
+    #[test]
+    fn fig7_matches_conv_counts() {
+        for v in VggVariant::ALL {
+            let net = vgg::build(v);
+            let plan = ReplicationPlan::fig7(v);
+            assert_eq!(plan.len(), net.len(), "{}", v.name());
+        }
+    }
+
+    #[test]
+    fn fig7_plans_fit_320_tiles() {
+        // Sec. VI-C: "All schemes meet the constraint that there are a
+        // maximum of 320 tiles available."
+        let arch = ArchConfig::paper_node();
+        for v in VggVariant::ALL {
+            let net = vgg::build(v);
+            let plan = ReplicationPlan::fig7(v);
+            let tiles = validate_plan(&net, &arch, &plan)
+                .unwrap_or_else(|e| panic!("{}: {e}", v.name()));
+            assert!(tiles <= 320, "{}: {tiles} tiles", v.name());
+        }
+    }
+
+    #[test]
+    fn fig7_first_layer_is_16x() {
+        for v in VggVariant::ALL {
+            assert_eq!(ReplicationPlan::fig7(v).factor(0), 16);
+        }
+    }
+
+    #[test]
+    fn fig7_decreasing_with_depth() {
+        for v in VggVariant::ALL {
+            let plan = ReplicationPlan::fig7(v);
+            for w in plan.factors.windows(2) {
+                assert!(w[1] <= w[0], "{:?} not non-increasing", plan.factors);
+            }
+        }
+    }
+
+    #[test]
+    fn none_plan_is_all_ones() {
+        let net = vgg::build(VggVariant::A);
+        let plan = ReplicationPlan::none(&net);
+        assert!(plan.factors.iter().all(|&f| f == 1));
+        validate_plan(&net, &ArchConfig::paper_node(), &plan).unwrap();
+    }
+
+    #[test]
+    fn auto_plan_fits_budget_and_tracks_pool_trend() {
+        let arch = ArchConfig::paper_node();
+        for v in VggVariant::ALL {
+            let net = vgg::build(v);
+            let plan = ReplicationPlan::auto(&net, &arch, 16);
+            let tiles = validate_plan(&net, &arch, &plan)
+                .unwrap_or_else(|e| panic!("{}: {e}", v.name()));
+            assert!(tiles <= arch.total_tiles());
+            // First conv is the most replicated.
+            assert!(plan.factor(0) >= *plan.factors.iter().max().unwrap() / 2);
+        }
+    }
+
+    #[test]
+    fn invalid_plans_rejected() {
+        let net = vgg::build(VggVariant::A);
+        let arch = ArchConfig::paper_node();
+        let bad = ReplicationPlan {
+            factors: vec![1; 3],
+        };
+        assert!(validate_plan(&net, &arch, &bad).is_err());
+        let zeros = ReplicationPlan {
+            factors: vec![0; net.len()],
+        };
+        assert!(validate_plan(&net, &arch, &zeros).is_err());
+        let huge = ReplicationPlan {
+            factors: vec![64; net.len()],
+        };
+        assert!(validate_plan(&net, &arch, &huge).is_err());
+    }
+}

@@ -1,0 +1,120 @@
+//! Weight-matrix → subarray packing arithmetic (Sec. III).
+//!
+//! A layer's kernel matrix has `K = c*l*l` rows and `N` output channels;
+//! each 16-bit weight occupies 8 x 2-bit cells across 8 adjacent bit lines,
+//! so the physical column demand is `N * 8`. The matrix tiles over 128x128
+//! subarrays: `ceil(K/128)` row blocks x `ceil(N*8/128)` column blocks.
+
+use crate::cnn::Layer;
+use crate::config::ArchConfig;
+
+/// Resource demand of one replica of one layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SubarrayDemand {
+    /// Row blocks (subarrays stacked over the GEMM reduction dim).
+    pub row_blocks: usize,
+    /// Column blocks (subarrays side by side over output channels).
+    pub col_blocks: usize,
+}
+
+impl SubarrayDemand {
+    /// Demand for one copy of `layer` under `arch`.
+    pub fn of(layer: &Layer, arch: &ArchConfig) -> Self {
+        let k = layer.gemm_k();
+        let phys_cols = layer.gemm_n() * arch.slices_per_weight();
+        Self {
+            row_blocks: k.div_ceil(arch.subarray_rows),
+            col_blocks: phys_cols.div_ceil(arch.subarray_cols),
+        }
+    }
+
+    /// Total subarrays for one copy.
+    pub fn subarrays(&self) -> usize {
+        self.row_blocks * self.col_blocks
+    }
+
+    /// Subarrays for `r` replicas.
+    pub fn subarrays_replicated(&self, r: usize) -> usize {
+        self.subarrays() * r
+    }
+
+    /// Whole tiles needed for `r` replicas (layers do not share tiles: each
+    /// pipeline stage owns its tiles so stages never contend for a bus).
+    pub fn tiles(&self, r: usize, arch: &ArchConfig) -> usize {
+        self.subarrays_replicated(r).div_ceil(arch.subarrays_per_tile()).max(1)
+    }
+
+    /// Does one replica fit in a single tile? Picks the 24/29 vs 26/31-cycle
+    /// intra-layer pipeline variant (Sec. IV-A).
+    pub fn single_tile(&self, r: usize, arch: &ArchConfig) -> bool {
+        self.subarrays_replicated(r) <= arch.subarrays_per_tile()
+    }
+}
+
+/// Cell utilization of a packing: useful cells / allocated cells.
+pub fn utilization(layer: &Layer, arch: &ArchConfig) -> f64 {
+    let d = SubarrayDemand::of(layer, arch);
+    let useful = (layer.gemm_k() * layer.gemm_n() * arch.slices_per_weight()) as f64;
+    let allocated = (d.subarrays() * arch.subarray_rows * arch.subarray_cols) as f64;
+    useful / allocated
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::Layer;
+
+    fn arch() -> ArchConfig {
+        ArchConfig::paper_node()
+    }
+
+    #[test]
+    fn vgg_conv1_demand() {
+        // conv1: K = 27, N = 64 -> phys cols 512 -> 1 x 4 subarrays.
+        let l = Layer::conv("c1", (224, 224), 3, 64, 3, true);
+        let d = SubarrayDemand::of(&l, &arch());
+        assert_eq!(d.row_blocks, 1);
+        assert_eq!(d.col_blocks, 4);
+        assert_eq!(d.subarrays(), 4);
+        assert!(d.single_tile(16, &arch())); // 64 <= 96
+        assert_eq!(d.tiles(16, &arch()), 1);
+    }
+
+    #[test]
+    fn vgg_deep_conv_demand() {
+        // conv on 512 channels: K = 4608 -> 36 row blocks; N*8 = 4096 -> 32.
+        let l = Layer::conv("c", (14, 14), 512, 512, 3, false);
+        let d = SubarrayDemand::of(&l, &arch());
+        assert_eq!(d.row_blocks, 36);
+        assert_eq!(d.col_blocks, 32);
+        assert_eq!(d.subarrays(), 1152);
+        assert_eq!(d.tiles(1, &arch()), 12);
+        assert!(!d.single_tile(1, &arch()));
+    }
+
+    #[test]
+    fn fc1_demand_exceeds_node() {
+        // fc1 is the paper's capacity hole (DESIGN.md §1): 196 x 256 blocks.
+        let l = Layer::fc("fc1", 25088, 4096);
+        let d = SubarrayDemand::of(&l, &arch());
+        assert_eq!(d.row_blocks, 196);
+        assert_eq!(d.col_blocks, 256);
+        assert!(d.subarrays() > arch().total_subarrays());
+    }
+
+    #[test]
+    fn tiles_at_least_one() {
+        let l = Layer::conv("t", (8, 8), 1, 1, 3, false);
+        let d = SubarrayDemand::of(&l, &arch());
+        assert_eq!(d.tiles(1, &arch()), 1);
+    }
+
+    #[test]
+    fn utilization_in_unit_interval() {
+        for (k, n) in [(27, 64), (4608, 512), (100, 7)] {
+            let l = Layer::fc("x", k, n);
+            let u = utilization(&l, &arch());
+            assert!(u > 0.0 && u <= 1.0, "utilization {u} for {k}x{n}");
+        }
+    }
+}

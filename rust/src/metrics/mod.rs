@@ -1,0 +1,168 @@
+//! Metrics & reporting: speedup grids, geomeans, and paper-style tables for
+//! Figs. 5, 6, 8, 9.
+
+use crate::cnn::VggVariant;
+use crate::config::{ArchConfig, NocKind, Scenario};
+use crate::sim::{evaluate, PerfReport};
+use crate::util::stats::geomean;
+use crate::util::table::{fnum, Table};
+
+/// Full 5 x 4 x 3 benchmark grid (Sec. VI-B's 60 benchmarks).
+pub struct Grid {
+    pub reports: Vec<PerfReport>,
+}
+
+impl Grid {
+    /// Run every benchmark. `variants`/`scenarios`/`nocs` allow subsetting
+    /// (the full grid takes a few minutes of simulation).
+    pub fn run(
+        arch: &ArchConfig,
+        variants: &[VggVariant],
+        scenarios: &[Scenario],
+        nocs: &[NocKind],
+    ) -> Self {
+        let mut reports = Vec::new();
+        for &v in variants {
+            for &s in scenarios {
+                for &n in nocs {
+                    reports.push(evaluate(v, s, n, arch));
+                }
+            }
+        }
+        Self { reports }
+    }
+
+    pub fn get(&self, v: VggVariant, s: Scenario, n: NocKind) -> &PerfReport {
+        self.reports
+            .iter()
+            .find(|r| r.variant == v && r.scenario == s && r.noc == n)
+            .expect("benchmark point missing from grid")
+    }
+
+    /// Fig. 5: per-VGG speedup of each scenario over scenario (1), within
+    /// one NoC. Returns (table, per-scenario geomeans for (2),(3),(4)).
+    pub fn fig5_table(&self, noc: NocKind, variants: &[VggVariant]) -> (Table, [f64; 3]) {
+        let mut t = Table::new(
+            format!("Fig. 5 — speedup vs scenario (1), NoC = {}", noc.name()),
+            &["vgg", "(2)/(1)", "(3)/(1)", "(4)/(1)"],
+        );
+        let mut cols: [Vec<f64>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+        for &v in variants {
+            let base = self.get(v, Scenario::Baseline, noc).fps;
+            let s2 = self.get(v, Scenario::BatchOnly, noc).fps / base;
+            let s3 = self.get(v, Scenario::ReplicationOnly, noc).fps / base;
+            let s4 = self.get(v, Scenario::ReplicationBatch, noc).fps / base;
+            cols[0].push(s2);
+            cols[1].push(s3);
+            cols[2].push(s4);
+            t.row(&[
+                v.name().into(),
+                fnum(s2, 4),
+                fnum(s3, 4),
+                fnum(s4, 4),
+            ]);
+        }
+        let geo = [geomean(&cols[0]), geomean(&cols[1]), geomean(&cols[2])];
+        t.row(&[
+            "geomean".into(),
+            fnum(geo[0], 4),
+            fnum(geo[1], 4),
+            fnum(geo[2], 4),
+        ]);
+        (t, geo)
+    }
+
+    /// Fig. 6: per-VGG speedup of SMART and ideal over wormhole, within one
+    /// scenario. Returns (table, [smart geomean, ideal geomean]).
+    pub fn fig6_table(&self, scenario: Scenario, variants: &[VggVariant]) -> (Table, [f64; 2]) {
+        let mut t = Table::new(
+            format!(
+                "Fig. 6 — speedup vs wormhole, scenario {}",
+                scenario.label()
+            ),
+            &["vgg", "smart/wormhole", "ideal/wormhole"],
+        );
+        let mut cols: [Vec<f64>; 2] = [Vec::new(), Vec::new()];
+        for &v in variants {
+            let base = self.get(v, scenario, NocKind::Wormhole).fps;
+            let s = self.get(v, scenario, NocKind::Smart).fps / base;
+            let i = self.get(v, scenario, NocKind::Ideal).fps / base;
+            cols[0].push(s);
+            cols[1].push(i);
+            t.row(&[v.name().into(), fnum(s, 4), fnum(i, 4)]);
+        }
+        let geo = [geomean(&cols[0]), geomean(&cols[1])];
+        t.row(&["geomean".into(), fnum(geo[0], 4), fnum(geo[1], 4)]);
+        (t, geo)
+    }
+
+    /// Fig. 8: VGG-E TOPS (and FPS) for each NoC x scenario.
+    pub fn fig8_table(&self) -> Table {
+        let mut t = Table::new(
+            "Fig. 8 — VGG E throughput: TOPS (FPS)",
+            &["noc", "(1)", "(2)", "(3)", "(4)"],
+        );
+        for noc in NocKind::ALL {
+            let mut cells = vec![noc.name().to_string()];
+            for s in Scenario::ALL {
+                let r = self.get(VggVariant::E, s, noc);
+                cells.push(format!("{} ({} FPS)", fnum(r.tops, 4), fnum(r.fps, 0)));
+            }
+            t.row(&cells);
+        }
+        t
+    }
+
+    /// Fig. 9: energy efficiency per VGG (TOPS/W), best configuration.
+    pub fn fig9_table(&self, variants: &[VggVariant]) -> Table {
+        let mut t = Table::new("Fig. 9 — energy efficiency", &["vgg", "TOPS/W"]);
+        for &v in variants {
+            let r = self.get(v, Scenario::ReplicationBatch, NocKind::Smart);
+            t.row(&[v.name().into(), fnum(r.tops_per_watt, 4)]);
+        }
+        t
+    }
+}
+
+/// Paper-reported reference values, used by tests and EXPERIMENTS.md to
+/// report paper-vs-measured side by side.
+pub mod paper {
+    /// Fig. 5 geomeans: (2)/(1), (3)/(1), (4)/(1).
+    pub const FIG5_GEOMEANS: [f64; 3] = [1.0309, 10.1788, 13.6903];
+    /// Fig. 6 geomean of ideal vs wormhole.
+    pub const FIG6_IDEAL_GEOMEAN: f64 = 1.0809;
+    /// Fig. 8 VGG-E best case: SMART scenario (4).
+    pub const FIG8_BEST_TOPS: f64 = 40.4027;
+    pub const FIG8_BEST_FPS: f64 = 1029.0;
+    /// Fig. 8 wormhole scenario (4).
+    pub const FIG8_WORMHOLE_TOPS: f64 = 36.7904;
+    /// Fig. 9 energy efficiency (A-E).
+    pub const FIG9_TOPS_PER_WATT: [f64; 5] = [2.8841, 2.5538, 2.5846, 3.1271, 3.5914];
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_grid_tables_render() {
+        let arch = ArchConfig::paper_node();
+        let variants = [VggVariant::A];
+        let grid = Grid::run(
+            &arch,
+            &variants,
+            &[Scenario::Baseline, Scenario::ReplicationBatch],
+            &[NocKind::Ideal],
+        );
+        assert_eq!(grid.reports.len(), 2);
+        let r = grid.get(VggVariant::A, Scenario::Baseline, NocKind::Ideal);
+        assert!(r.fps > 0.0);
+    }
+
+    #[test]
+    fn paper_constants_sane() {
+        assert!(paper::FIG5_GEOMEANS[2] > paper::FIG5_GEOMEANS[1]);
+        assert!(paper::FIG8_BEST_TOPS < 41.0);
+        assert_eq!(paper::FIG9_TOPS_PER_WATT.len(), 5);
+    }
+}

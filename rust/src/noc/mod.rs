@@ -1,0 +1,17 @@
+//! Flit-level cycle-accurate NoC simulator (the garnet2.0 substitute,
+//! DESIGN.md §1): 2D mesh, XY routing, wormhole flow control, SMART
+//! single-cycle multi-hop bypass, and an ideal interconnect, plus the six
+//! synthetic traffic patterns of Sec. VII.
+
+pub mod ideal;
+pub mod network;
+pub mod packet;
+pub mod sim;
+pub mod topology;
+pub mod traffic;
+
+pub use ideal::IdealNet;
+pub use network::Network;
+pub use sim::{run_flows, run_synthetic, NocModel, NocStats, SyntheticConfig};
+pub use topology::{Dir, Mesh};
+pub use traffic::{Flow, Pattern};

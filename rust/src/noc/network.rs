@@ -1,0 +1,574 @@
+//! Flit-level cycle-accurate mesh network: wormhole flow control with
+//! optional SMART single-cycle multi-hop bypass (Sec. V).
+//!
+//! One engine implements both: `hpc_max = 1` *is* the wormhole baseline
+//! (every flit buffers at every router and pays the full router pipeline);
+//! `hpc_max > 1` enables SMART: a flit that wins switch allocation traverses
+//! up to `hpc_max` hops along its XY straight run in a single cycle,
+//! bypassing the intermediate router pipelines, with the paper's SSR
+//! priority rule — a *buffered* (local) flit at an intermediate router beats
+//! a bypassing flit, truncating the bypass at that router.
+//!
+//! Wormhole semantics are preserved under bypass: the head flit records the
+//! routers where it actually stopped (the packet's *stop list*) and body
+//! flits replay exactly that segmentation, so flits of a packet can never
+//! reorder. Output ports are locked packet-wise from head to tail, exactly
+//! like single-VC wormhole.
+
+use std::collections::VecDeque;
+
+use super::packet::{Flit, PacketTable};
+use super::topology::{Dir, Mesh};
+
+const PORTS: usize = 5;
+
+/// Cycle-accurate mesh NoC (wormhole / SMART).
+pub struct Network {
+    pub mesh: Mesh,
+    /// Max hops traversed per cycle: 1 = wormhole, >1 = SMART HPC_max.
+    pub hpc_max: usize,
+    /// Router pipeline depth in cycles (buffer write .. switch allocation).
+    pub router_latency: u64,
+    /// Input buffer depth in flits.
+    pub buffer_depth: usize,
+    /// Input buffers: `node * 5 + dir`.
+    buffers: Vec<VecDeque<Flit>>,
+    /// Packet-wise output locks: `node * 5 + dir`.
+    out_lock: Vec<Option<u32>>,
+    /// Round-robin arbitration pointer per output port.
+    rr: Vec<usize>,
+    /// Directed-link usage flags for the current cycle.
+    link_used: Vec<bool>,
+    /// Ejection-port usage flags for the current cycle.
+    eject_used: Vec<bool>,
+    /// Per-node source queues of packet ids awaiting injection.
+    src_q: Vec<VecDeque<u32>>,
+    /// Next flit index to inject for the packet at the front of each queue.
+    src_next_flit: Vec<u16>,
+    /// Cycle-start snapshot: desired output of each ready head flit
+    /// (`Dir::index()`, or `NO_DESIRE`). Rebuilt every cycle; an entry is
+    /// invalidated when its flit moves so a port routes at most once per
+    /// cycle. This is both the hot-path cache and the faithful model of
+    /// SMART's SSRs, which are broadcast a cycle ahead of traversal.
+    desired: Vec<u8>,
+    /// Cycle-start contender mask per node: bit `d` set iff some ready
+    /// buffered flit wants output `d` (the SSR priority input).
+    contenders: Vec<u8>,
+    /// Flits currently buffered (incremental, for O(1) quiescence).
+    buffered: usize,
+    /// Buffered flits per node (lets the snapshot skip idle routers).
+    node_flits: Vec<u16>,
+    /// Packets still (partially) waiting in source queues.
+    src_pkts: usize,
+    pub table: PacketTable,
+    pub now: u64,
+    pub flits_injected: u64,
+    pub flits_ejected: u64,
+}
+
+const NO_DESIRE: u8 = u8::MAX;
+/// Stack bound for one planned segment: body flits replay head segments,
+/// each of which is <= max(HPC_max, straight mesh run). 64 covers meshes up
+/// to 64 nodes per dimension.
+const MAX_SEG: usize = 64;
+
+impl Network {
+    pub fn new(mesh: Mesh, hpc_max: usize, router_latency: u64, buffer_depth: usize) -> Self {
+        assert!(hpc_max >= 1);
+        assert!(buffer_depth >= 1);
+        let n = mesh.nodes();
+        Self {
+            mesh,
+            hpc_max,
+            router_latency,
+            buffer_depth,
+            buffers: vec![VecDeque::new(); n * PORTS],
+            out_lock: vec![None; n * PORTS],
+            rr: vec![0; n * PORTS],
+            link_used: vec![false; mesh.n_links()],
+            eject_used: vec![false; n],
+            src_q: vec![VecDeque::new(); n],
+            src_next_flit: vec![0; n],
+            desired: vec![NO_DESIRE; n * PORTS],
+            contenders: vec![0; n],
+            buffered: 0,
+            node_flits: vec![0; n],
+            src_pkts: 0,
+            table: PacketTable::default(),
+            now: 0,
+            flits_injected: 0,
+            flits_ejected: 0,
+        }
+    }
+
+    /// Queue a packet for injection at `src`. Returns the packet id.
+    pub fn enqueue(&mut self, src: usize, dst: usize, len: u16) -> u32 {
+        debug_assert!(src < self.mesh.nodes() && dst < self.mesh.nodes());
+        debug_assert!(src != dst, "self-addressed packet");
+        debug_assert!(len >= 1);
+        let id = self.table.add(src as u32, dst as u32, len, self.now);
+        self.src_q[src].push_back(id);
+        self.src_pkts += 1;
+        id
+    }
+
+    /// All queues and buffers empty (every injected packet delivered).
+    pub fn quiescent(&self) -> bool {
+        self.src_pkts == 0 && self.buffered == 0
+    }
+
+    /// Flits currently buffered in the network.
+    pub fn in_flight_flits(&self) -> usize {
+        self.buffered
+    }
+
+    fn buf(&self, node: usize, port: Dir) -> &VecDeque<Flit> {
+        &self.buffers[node * PORTS + port.index()]
+    }
+
+    /// Desired output direction at `node` for buffered flit `f`.
+    fn desired_out(&self, node: usize, f: &Flit) -> Dir {
+        let p = self.table.get(f.pkt);
+        if node as u32 == p.dst {
+            return Dir::Local;
+        }
+        if f.is_head() {
+            self.mesh.xy_route(node, p.dst as usize)
+        } else {
+            // Body flits replay the head's stop list.
+            let next = p.stops[f.seg as usize + 1] as usize;
+            self.mesh.xy_route(node, next)
+        }
+    }
+
+    /// Is there a ready buffered flit at `node` that wants output `d`?
+    /// (The SSR priority rule: local flits beat bypassing flits.) Reads the
+    /// cycle-start SSR snapshot.
+    #[inline]
+    fn has_local_contender(&self, node: usize, d: Dir) -> bool {
+        self.contenders[node] & (1 << d.index()) != 0
+    }
+
+    /// Refresh the per-cycle SSR snapshot (desired outputs + contender
+    /// masks). Incremental: a head flit's desire is a pure function of
+    /// (node, flit), so an entry stays valid until that flit moves (moves
+    /// reset it to NO_DESIRE); only invalidated or newly-ready ports are
+    /// recomputed — the dominant saving in saturated meshes where most
+    /// heads are blocked for many cycles.
+    fn snapshot_desires(&mut self) {
+        for node in 0..self.mesh.nodes() {
+            if self.node_flits[node] == 0 {
+                self.contenders[node] = 0;
+                continue;
+            }
+            let mut mask = 0u8;
+            for port in 0..PORTS {
+                let idx = node * PORTS + port;
+                let mut d = self.desired[idx];
+                if d == NO_DESIRE {
+                    if let Some(f) = self.buffers[idx].front() {
+                        if f.ready_at <= self.now {
+                            d = self.desired_out(node, f).index() as u8;
+                            self.desired[idx] = d;
+                        }
+                    }
+                }
+                if d != NO_DESIRE {
+                    mask |= 1 << d;
+                }
+            }
+            self.contenders[node] = mask;
+        }
+    }
+
+    /// Plan the multi-hop segment for a flit leaving `node` in direction
+    /// `d` into the caller's stack buffer (no allocation on the hot path);
+    /// returns the path length (0 = no move possible this cycle).
+    fn plan_segment(&self, node: usize, d: Dir, f: &Flit, path: &mut [usize; MAX_SEG]) -> usize {
+        let p = self.table.get(f.pkt);
+        let dst = p.dst as usize;
+        // Maximum run: wormhole = 1; SMART = up to hpc_max along the
+        // current straight run; body flits go exactly to their next stop.
+        let max_run = if f.is_head() {
+            self.hpc_max.min(self.mesh.straight_run(node, dst)).max(1)
+        } else {
+            let next = p.stops[f.seg as usize + 1] as usize;
+            self.mesh.hops(node, next)
+        };
+        debug_assert!(max_run <= MAX_SEG);
+        let mut len = 0usize;
+        let mut at = node;
+        for hop in 0..max_run {
+            // Link must be free this cycle.
+            if self.link_used[self.mesh.link_id(at, d)] {
+                break;
+            }
+            let next = match self.mesh.neighbor(at, d) {
+                Some(n) => n,
+                None => break, // mesh edge (cannot happen on minimal routes)
+            };
+            // Bypass conditions at the router we'd pass *through* (not the
+            // final stop of this iteration): output must not be locked by
+            // another packet, and no buffered local flit may want it.
+            if hop + 1 < max_run {
+                let lock = self.out_lock[next * PORTS + d.index()];
+                // SSR priority (head flits only): a buffered local flit at
+                // an intermediate router truncates the bypass. Body flits
+                // travel a path their head already reserved (locked), so
+                // they never yield — yielding to a contender that is itself
+                // blocked on this packet's lock would deadlock.
+                let blocked = matches!(lock, Some(owner) if owner != f.pkt)
+                    || (f.is_head() && self.has_local_contender(next, d))
+                    || self.link_used[self.mesh.link_id(next, d)];
+                path[len] = next;
+                len += 1;
+                if blocked {
+                    break;
+                }
+            } else {
+                path[len] = next;
+                len += 1;
+            }
+            at = next;
+        }
+        // Truncate to the furthest router with buffer space (or the dst,
+        // which ejects through its own buffer too). Body flits move their
+        // segment atomically: if they cannot reach their recorded stop they
+        // wait (slightly pessimistic, preserves flit order).
+        if f.is_head() {
+            while len > 0 {
+                let stop = path[len - 1];
+                if self.buf(stop, d.opposite()).len() < self.buffer_depth {
+                    break;
+                }
+                len -= 1;
+            }
+        } else if len > 0 {
+            let stop = path[len - 1];
+            let next = p.stops[f.seg as usize + 1] as usize;
+            if stop != next || self.buf(stop, d.opposite()).len() >= self.buffer_depth {
+                len = 0;
+            }
+        }
+        len
+    }
+
+    /// Advance one cycle.
+    pub fn step(&mut self) {
+        if self.buffered > 0 {
+            self.link_used.iter_mut().for_each(|l| *l = false);
+            self.eject_used.iter_mut().for_each(|e| *e = false);
+            self.snapshot_desires();
+
+            // Switch allocation + traversal, router by router in fixed order.
+            for node in 0..self.mesh.nodes() {
+                // Idle routers (no buffered flits) are skipped outright.
+                if self.contenders[node] != 0 {
+                    self.route_node(node);
+                }
+            }
+        }
+
+        // Injection: one flit per node per cycle from the source queue.
+        if self.src_pkts > 0 {
+            for node in 0..self.mesh.nodes() {
+                self.inject_node(node);
+            }
+        }
+
+        self.now += 1;
+    }
+
+    fn route_node(&mut self, node: usize) {
+        // For each output port, pick one input whose head flit is ready and
+        // wants this output (round-robin over the SSR snapshot), then try
+        // to move it.
+        for out in [Dir::Local, Dir::East, Dir::West, Dir::North, Dir::South] {
+            let oi = out.index() as u8;
+            if self.contenders[node] & (1 << oi) == 0 {
+                continue;
+            }
+            let out_idx = node * PORTS + out.index();
+            let start = self.rr[out_idx];
+            let mut winner: Option<usize> = None;
+            for k in 0..PORTS {
+                let port = (start + k) % PORTS;
+                if self.desired[node * PORTS + port] == oi {
+                    // Wormhole lock: output must be free or ours.
+                    let f = self.buffers[node * PORTS + port].front().unwrap();
+                    let lock = self.out_lock[out_idx];
+                    if matches!(lock, Some(owner) if owner != f.pkt) {
+                        continue;
+                    }
+                    winner = Some(port);
+                    break;
+                }
+            }
+            let Some(port) = winner else { continue };
+            let moved = self.try_move(node, port, out);
+            if moved {
+                self.rr[out_idx] = (port + 1) % PORTS;
+                // The port routed this cycle; its next head waits a cycle.
+                self.desired[node * PORTS + port] = NO_DESIRE;
+            }
+        }
+    }
+
+    /// Attempt to move the head-of-buffer flit at (`node`, `port`) out via
+    /// `out`. Returns true if the flit moved (or ejected).
+    fn try_move(&mut self, node: usize, port: usize, out: Dir) -> bool {
+        let f = *self.buffers[node * PORTS + port].front().unwrap();
+        if out == Dir::Local {
+            // Ejection: one flit per node per cycle.
+            if self.eject_used[node] {
+                return false;
+            }
+            self.eject_used[node] = true;
+            self.buffers[node * PORTS + port].pop_front();
+            self.buffered -= 1;
+            self.node_flits[node] -= 1;
+            self.flits_ejected += 1;
+            let now = self.now;
+            let p = self.table.get_mut(f.pkt);
+            p.delivered += 1;
+            if p.delivered == p.len {
+                p.done_cycle = now;
+            }
+            return true;
+        }
+
+        let mut seg = [0usize; MAX_SEG];
+        let len = self.plan_segment(node, out, &f, &mut seg);
+        if len == 0 {
+            return false;
+        }
+        let path = &seg[..len];
+        let stop = path[len - 1];
+        // Commit: consume links, update locks, move the flit. The whole
+        // traversed segment is locked packet-wise (the SSR reserves the
+        // path): locking only the segment-start output would let another
+        // packet's flits interleave at an intermediate router and deadlock
+        // single-VC wormhole (found by the delivery property test).
+        let is_tail = {
+            let p = self.table.get(f.pkt);
+            f.idx == p.len - 1
+        };
+        let mut at = node;
+        for &next in path {
+            let lid = self.mesh.link_id(at, out);
+            debug_assert!(!self.link_used[lid]);
+            self.link_used[lid] = true;
+            let oidx = at * PORTS + out.index();
+            debug_assert!(self.out_lock[oidx].is_none() || self.out_lock[oidx] == Some(f.pkt));
+            self.out_lock[oidx] = if is_tail { None } else { Some(f.pkt) };
+            at = next;
+        }
+        let mut moved = self.buffers[node * PORTS + port].pop_front().unwrap();
+        if moved.is_head() {
+            let p = self.table.get_mut(moved.pkt);
+            p.stops.push(stop as u32);
+            moved.seg = (p.stops.len() - 1) as u16;
+        } else {
+            moved.seg += 1;
+        }
+        moved.ready_at = self.now + 1 + self.router_latency;
+        self.buffers[stop * PORTS + out.opposite().index()].push_back(moved);
+        self.node_flits[node] -= 1;
+        self.node_flits[stop] += 1;
+        true
+    }
+
+    fn inject_node(&mut self, node: usize) {
+        let Some(&pkt) = self.src_q[node].front() else {
+            return;
+        };
+        let local = node * PORTS + Dir::Local.index();
+        if self.buffers[local].len() >= self.buffer_depth {
+            return;
+        }
+        let idx = self.src_next_flit[node];
+        let (len, first) = {
+            let p = self.table.get_mut(pkt);
+            if p.inject_cycle == u64::MAX {
+                p.inject_cycle = self.now;
+            }
+            (p.len, p.inject_cycle)
+        };
+        let _ = first;
+        self.buffers[local].push_back(Flit {
+            pkt,
+            idx,
+            seg: 0,
+            ready_at: self.now + self.router_latency,
+        });
+        self.buffered += 1;
+        self.node_flits[node] += 1;
+        self.flits_injected += 1;
+        if idx + 1 == len {
+            self.src_q[node].pop_front();
+            self.src_pkts -= 1;
+            self.src_next_flit[node] = 0;
+        } else {
+            self.src_next_flit[node] = idx + 1;
+        }
+    }
+
+    /// Debug aid: print the first `limit` stuck buffer heads and any locks.
+    pub fn debug_dump(&self, limit: usize) {
+        let mut shown = 0;
+        for node in 0..self.mesh.nodes() {
+            for port in 0..PORTS {
+                if let Some(f) = self.buffers[node * PORTS + port].front() {
+                    if shown >= limit {
+                        return;
+                    }
+                    shown += 1;
+                    let p = self.table.get(f.pkt);
+                    let out = self.desired_out(node, f);
+                    let lock = self.out_lock[node * PORTS + out.index()];
+                    println!(
+                        "node {node} port {port}: pkt {} idx {} seg {} ready {} \
+                         dst {} stops {:?} -> out {:?} lock {:?} qlen {}",
+                        f.pkt,
+                        f.idx,
+                        f.seg,
+                        f.ready_at,
+                        p.dst,
+                        p.stops,
+                        out,
+                        lock,
+                        self.buffers[node * PORTS + port].len()
+                    );
+                }
+            }
+        }
+    }
+
+    /// Run until quiescent or `max_cycles` elapse; returns cycles run.
+    pub fn drain(&mut self, max_cycles: u64) -> u64 {
+        let start = self.now;
+        while !self.quiescent() && self.now - start < max_cycles {
+            self.step();
+        }
+        self.now - start
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn net(hpc: usize) -> Network {
+        Network::new(Mesh::new(8, 8), hpc, 1, 4)
+    }
+
+    #[test]
+    fn single_packet_delivers_wormhole() {
+        let mut n = net(1);
+        let id = n.enqueue(0, 63, 5);
+        let cycles = n.drain(10_000);
+        assert!(n.quiescent(), "not drained after {cycles}");
+        let p = n.table.get(id);
+        assert!(p.is_done());
+        assert_eq!(p.delivered, 5);
+        // 14 hops, >= hops + serialization.
+        assert!(p.net_latency() >= 14 + 4, "latency {}", p.net_latency());
+    }
+
+    #[test]
+    fn smart_is_faster_than_wormhole_uncontended() {
+        let run = |hpc| {
+            let mut n = net(hpc);
+            let id = n.enqueue(0, 63, 5);
+            n.drain(10_000);
+            n.table.get(id).net_latency()
+        };
+        let worm = run(1);
+        let smart = run(14);
+        assert!(
+            smart < worm / 2,
+            "smart {smart} should be far below wormhole {worm}"
+        );
+    }
+
+    #[test]
+    fn smart_head_respects_hpc_max() {
+        // A straight 7-hop route with HPC_max 4 needs exactly 2 stops.
+        let mut n = net(4);
+        let id = n.enqueue(0, 7, 1); // nodes 0..7 on row 0
+        n.drain(1_000);
+        let p = n.table.get(id);
+        assert!(p.is_done());
+        // stops = [src, 4 hops, 3 hops] = [0, 4, 7]
+        assert_eq!(p.stops, vec![0, 4, 7]);
+    }
+
+    #[test]
+    fn every_packet_delivered_exactly_once_under_load() {
+        let mut n = net(8);
+        let mut expect = Vec::new();
+        for i in 0..200u32 {
+            let src = (i as usize * 7) % 64;
+            let dst = (i as usize * 13 + 1) % 64;
+            if src != dst {
+                expect.push(n.enqueue(src, dst, 3));
+            }
+            n.step();
+        }
+        n.drain(100_000);
+        assert!(n.quiescent());
+        for id in expect {
+            let p = n.table.get(id);
+            assert!(p.is_done(), "packet {id} not done");
+            assert_eq!(p.delivered, 3, "packet {id} flits {}", p.delivered);
+        }
+    }
+
+    #[test]
+    fn stop_lists_are_monotone_routes() {
+        // All stops must lie on the XY route, strictly progressing.
+        let mut n = net(6);
+        let ids: Vec<u32> = (0..50)
+            .filter_map(|i| {
+                let src = (i * 11) % 64;
+                let dst = (i * 29 + 5) % 64;
+                (src != dst).then(|| n.enqueue(src, dst, 4))
+            })
+            .collect();
+        n.drain(100_000);
+        for id in ids {
+            let p = n.table.get(id);
+            let mut remaining = n.mesh.hops(p.src as usize, p.dst as usize);
+            for w in p.stops.windows(2) {
+                let step = n.mesh.hops(w[0] as usize, w[1] as usize);
+                assert!(step >= 1);
+                let new_rem = n.mesh.hops(w[1] as usize, p.dst as usize);
+                assert_eq!(new_rem + step, remaining, "non-minimal segment");
+                remaining = new_rem;
+            }
+            assert_eq!(*p.stops.last().unwrap(), p.dst);
+        }
+    }
+
+    #[test]
+    fn wormhole_no_flit_interleaving_on_outputs() {
+        // With single-flit packets this is trivial; with 4-flit packets the
+        // lock must hold: drain and verify all done (liveness under locks).
+        let mut n = net(1);
+        for src in 0..32usize {
+            n.enqueue(src, 63 - src, 4);
+        }
+        n.drain(200_000);
+        assert!(n.quiescent(), "wormhole deadlocked");
+    }
+
+    #[test]
+    fn injection_serializes_one_flit_per_cycle() {
+        let mut n = net(1);
+        n.enqueue(0, 1, 4);
+        n.step();
+        assert_eq!(n.flits_injected, 1);
+        n.step();
+        assert_eq!(n.flits_injected, 2);
+    }
+}

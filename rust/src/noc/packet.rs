@@ -1,0 +1,150 @@
+//! Packets and flits.
+//!
+//! The link width is 128 bits == one flit (Sec. V); a packet is `len` flits
+//! (head .. tail). Flits are lightweight ids into a packet table; the
+//! per-packet SMART stop list (the sequence of routers where the head
+//! actually buffered) lives in the table so body flits replay the head's
+//! segmentation exactly — this is what preserves wormhole flit order under
+//! multi-hop bypass.
+
+/// A flit in a buffer. `seg` indexes the packet's stop list: the flit
+/// currently sits at `stops[seg]` (head flits extend the list as they move).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Flit {
+    pub pkt: u32,
+    /// 0 = head; `len-1` = tail.
+    pub idx: u16,
+    /// Index into the packet's stop list of this flit's current router.
+    pub seg: u16,
+    /// Cycle at which this flit has finished the router pipeline and may
+    /// compete for switch allocation.
+    pub ready_at: u64,
+}
+
+impl Flit {
+    pub fn is_head(&self) -> bool {
+        self.idx == 0
+    }
+}
+
+/// Book-keeping for one packet.
+#[derive(Debug, Clone)]
+pub struct PacketState {
+    pub src: u32,
+    pub dst: u32,
+    pub len: u16,
+    /// Cycle the traffic generator created the packet (queueing included).
+    pub gen_cycle: u64,
+    /// Cycle the head flit entered the network (u64::MAX until then).
+    pub inject_cycle: u64,
+    /// Flits ejected at dst so far.
+    pub delivered: u16,
+    /// Cycle the tail flit ejected (u64::MAX until done).
+    pub done_cycle: u64,
+    /// Routers where the head flit stopped (SMART segmentation), in order.
+    /// stops[0] == src. Body flits move stop-to-stop along this list.
+    pub stops: Vec<u32>,
+}
+
+impl PacketState {
+    pub fn new(src: u32, dst: u32, len: u16, gen_cycle: u64) -> Self {
+        Self {
+            src,
+            dst,
+            len,
+            gen_cycle,
+            inject_cycle: u64::MAX,
+            delivered: 0,
+            done_cycle: u64::MAX,
+            stops: vec![src],
+        }
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.done_cycle != u64::MAX
+    }
+
+    /// Network latency: injection of head -> ejection of tail.
+    pub fn net_latency(&self) -> u64 {
+        debug_assert!(self.is_done());
+        self.done_cycle - self.inject_cycle
+    }
+
+    /// Total latency including source queueing.
+    pub fn total_latency(&self) -> u64 {
+        debug_assert!(self.is_done());
+        self.done_cycle - self.gen_cycle
+    }
+}
+
+/// Growable table of packets, indexed by packet id.
+#[derive(Debug, Default)]
+pub struct PacketTable {
+    pub packets: Vec<PacketState>,
+}
+
+impl PacketTable {
+    pub fn add(&mut self, src: u32, dst: u32, len: u16, now: u64) -> u32 {
+        let id = self.packets.len() as u32;
+        self.packets.push(PacketState::new(src, dst, len, now));
+        id
+    }
+
+    pub fn get(&self, id: u32) -> &PacketState {
+        &self.packets[id as usize]
+    }
+
+    pub fn get_mut(&mut self, id: u32) -> &mut PacketState {
+        &mut self.packets[id as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.packets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.packets.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn packet_lifecycle() {
+        let mut t = PacketTable::default();
+        let id = t.add(3, 9, 4, 100);
+        assert_eq!(id, 0);
+        assert!(!t.get(id).is_done());
+        let p = t.get_mut(id);
+        p.inject_cycle = 105;
+        p.done_cycle = 130;
+        p.delivered = 4;
+        assert_eq!(t.get(id).net_latency(), 25);
+        assert_eq!(t.get(id).total_latency(), 30);
+    }
+
+    #[test]
+    fn stops_start_at_src() {
+        let t = {
+            let mut t = PacketTable::default();
+            t.add(7, 1, 2, 0);
+            t
+        };
+        assert_eq!(t.get(0).stops, vec![7]);
+    }
+
+    #[test]
+    fn head_flit_flag() {
+        let f = Flit {
+            pkt: 0,
+            idx: 0,
+            seg: 0,
+            ready_at: 0,
+        };
+        assert!(f.is_head());
+        let b = Flit { idx: 3, ..f };
+        assert!(!b.is_head());
+    }
+}

@@ -1,0 +1,494 @@
+//! NoC simulation drivers: synthetic-traffic sweeps (Sec. VII, Figs. 10-11)
+//! and flow-based runs for mapped CNNs (Sec. VI).
+
+use crate::config::NocKind;
+use crate::util::stats::Accumulator;
+use crate::util::Rng;
+
+use super::ideal::IdealNet;
+use super::network::Network;
+use super::packet::PacketTable;
+use super::topology::Mesh;
+use super::traffic::{Flow, FlowPacer, Pattern};
+
+/// Unified handle over the three interconnects of Sec. VI-B.
+pub enum NocModel {
+    Mesh(Network),
+    Ideal(IdealNet),
+}
+
+impl NocModel {
+    /// Build a model. Wormhole is the same engine with HPC_max = 1.
+    pub fn build(
+        kind: NocKind,
+        mesh: Mesh,
+        hpc_max: usize,
+        router_latency: u64,
+        buffer_depth: usize,
+    ) -> Self {
+        match kind {
+            NocKind::Wormhole => {
+                NocModel::Mesh(Network::new(mesh, 1, router_latency, buffer_depth))
+            }
+            NocKind::Smart => {
+                NocModel::Mesh(Network::new(mesh, hpc_max, router_latency, buffer_depth))
+            }
+            NocKind::Ideal => NocModel::Ideal(IdealNet::new(mesh.nodes())),
+        }
+    }
+
+    pub fn enqueue(&mut self, src: usize, dst: usize, len: u16) -> u32 {
+        match self {
+            NocModel::Mesh(n) => n.enqueue(src, dst, len),
+            NocModel::Ideal(n) => n.enqueue(src, dst, len),
+        }
+    }
+
+    pub fn step(&mut self) {
+        match self {
+            NocModel::Mesh(n) => n.step(),
+            NocModel::Ideal(n) => n.step(),
+        }
+    }
+
+    pub fn now(&self) -> u64 {
+        match self {
+            NocModel::Mesh(n) => n.now,
+            NocModel::Ideal(n) => n.now,
+        }
+    }
+
+    pub fn table(&self) -> &PacketTable {
+        match self {
+            NocModel::Mesh(n) => &n.table,
+            NocModel::Ideal(n) => &n.table,
+        }
+    }
+
+    pub fn flits_ejected(&self) -> u64 {
+        match self {
+            NocModel::Mesh(n) => n.flits_ejected,
+            NocModel::Ideal(n) => n.flits_ejected,
+        }
+    }
+
+    pub fn quiescent(&self) -> bool {
+        match self {
+            NocModel::Mesh(n) => n.quiescent(),
+            NocModel::Ideal(n) => n.quiescent(),
+        }
+    }
+
+    pub fn drain(&mut self, max_cycles: u64) -> u64 {
+        match self {
+            NocModel::Mesh(n) => n.drain(max_cycles),
+            NocModel::Ideal(n) => n.drain(max_cycles),
+        }
+    }
+}
+
+/// Configuration of one synthetic-traffic run (one point of Figs. 10-11).
+#[derive(Debug, Clone)]
+pub struct SyntheticConfig {
+    pub pattern: Pattern,
+    /// Offered load in flits / node / cycle.
+    pub injection_rate: f64,
+    pub packet_len: u16,
+    pub warmup: u64,
+    pub measure: u64,
+    /// Post-measurement drain budget (latency is reported only over packets
+    /// generated inside the measurement window that completed).
+    pub drain: u64,
+    pub seed: u64,
+    /// Wormhole baseline router: (pipeline cycles, buffer depth). The
+    /// garnet2.0 default is a multi-stage router; a flit occupies its
+    /// buffer slot for the whole pipeline, so with shallow buffers the
+    /// per-link service rate is ~ depth / (latency + 2). This is what makes
+    /// the paper's wormhole saturate around 0.05 (Figs. 10-11).
+    pub wormhole_router: (u64, usize),
+    /// SMART router: single-cycle (the premise of SMART [7] is a
+    /// bypass-capable 1-cycle router) with standard 4-flit buffers; bypass
+    /// then skips even that at intermediate hops.
+    pub smart_router: (u64, usize),
+}
+
+impl Default for SyntheticConfig {
+    fn default() -> Self {
+        Self {
+            pattern: Pattern::UniformRandom,
+            injection_rate: 0.1,
+            packet_len: 4,
+            warmup: 2_000,
+            measure: 10_000,
+            drain: 20_000,
+            seed: 0xA5A5,
+            wormhole_router: (4, 1),
+            smart_router: (1, 4),
+        }
+    }
+}
+
+/// Results of one run.
+#[derive(Debug, Clone)]
+pub struct NocStats {
+    /// Offered load (flits/node/cycle).
+    pub offered: f64,
+    /// Average packet *network* latency (injection -> tail ejection).
+    pub avg_net_latency: f64,
+    /// Average *total* latency including source queueing.
+    pub avg_latency: f64,
+    /// Reception rate during the measurement window (flits/node/cycle) —
+    /// the y-axis of Fig. 11.
+    pub reception_rate: f64,
+    /// Packets generated in the window that completed.
+    pub completed: u64,
+    /// Packets generated in the window that never completed (saturation).
+    pub dropped: u64,
+}
+
+impl NocStats {
+    /// Heuristic saturation flag: unbounded queueing shows up as total
+    /// latency far above network latency or unfinished packets.
+    pub fn saturated(&self) -> bool {
+        self.dropped > self.completed / 10
+            || self.avg_latency > 8.0 * self.avg_net_latency.max(1.0)
+    }
+}
+
+/// Run one synthetic-traffic point (Figs. 10-11 are sweeps of this).
+pub fn run_synthetic(kind: NocKind, mesh: Mesh, cfg: &SyntheticConfig, hpc_max: usize) -> NocStats {
+    let (rl, depth) = match kind {
+        NocKind::Smart => cfg.smart_router,
+        _ => cfg.wormhole_router,
+    };
+    let mut net = NocModel::build(kind, mesh, hpc_max, rl, depth);
+    let mut rng = Rng::new(cfg.seed);
+    // Bernoulli packet generation: rate flits/node/cycle -> p per cycle.
+    let p_gen = cfg.injection_rate / cfg.packet_len as f64;
+    let mut window_pkts: Vec<u32> = Vec::new();
+    let mut ejected_at_warmup = 0u64;
+    let mut ejected_at_end = 0u64;
+
+    let total = cfg.warmup + cfg.measure;
+    for cycle in 0..total {
+        if cycle == cfg.warmup {
+            ejected_at_warmup = net.flits_ejected();
+        }
+        for src in 0..mesh.nodes() {
+            if rng.chance(p_gen) {
+                if let Some(dst) = cfg.pattern.dest(&mesh, src, &mut rng) {
+                    let id = net.enqueue(src, dst, cfg.packet_len);
+                    if cycle >= cfg.warmup {
+                        window_pkts.push(id);
+                    }
+                }
+            }
+        }
+        net.step();
+        if cycle + 1 == total {
+            ejected_at_end = net.flits_ejected();
+        }
+    }
+    // Drain (no new traffic) so window packets can finish.
+    net.drain(cfg.drain);
+
+    let mut net_lat = Accumulator::new();
+    let mut tot_lat = Accumulator::new();
+    let mut dropped = 0u64;
+    for &id in &window_pkts {
+        let p = net.table().get(id);
+        if p.is_done() {
+            net_lat.add(p.net_latency() as f64);
+            tot_lat.add(p.total_latency() as f64);
+        } else {
+            dropped += 1;
+        }
+    }
+    NocStats {
+        offered: cfg.injection_rate,
+        avg_net_latency: net_lat.mean(),
+        avg_latency: tot_lat.mean(),
+        reception_rate: (ejected_at_end - ejected_at_warmup) as f64
+            / (mesh.nodes() as f64 * cfg.measure as f64),
+        completed: net_lat.count(),
+        dropped,
+    }
+}
+
+/// Per-flow outcome of [`run_flows_detailed`].
+#[derive(Debug, Clone)]
+pub struct FlowStats {
+    /// Mean network latency of completed window packets (cycles).
+    pub avg_net_latency: f64,
+    /// Mean total latency (incl. source queueing).
+    pub avg_latency: f64,
+    /// Window packets completed / offered — an accepted-rate proxy; < 1
+    /// means the mesh cannot sustain this flow's offered load.
+    pub completion_ratio: f64,
+    /// Packets offered during the measurement window.
+    pub offered_window: u64,
+    /// Packets completed during the measurement window.
+    pub completed_window: u64,
+    pub completed: u64,
+    pub dropped: u64,
+}
+
+/// Like [`run_flows`] but reports per-flow statistics (the CNN coupling
+/// needs per-layer latency and acceptance).
+pub fn run_flows_detailed(
+    kind: NocKind,
+    mesh: Mesh,
+    flows: &[Flow],
+    warmup: u64,
+    measure: u64,
+    drain: u64,
+    hpc_max: usize,
+    router_latency: u64,
+    buffer_depth: usize,
+) -> Vec<FlowStats> {
+    let mut net = NocModel::build(kind, mesh, hpc_max, router_latency, buffer_depth);
+    let mut pacers: Vec<FlowPacer> = flows.iter().map(|&f| FlowPacer::new(f)).collect();
+    // All packets ever generated per flow, plus how many were offered
+    // inside the measurement window.
+    let mut all_pkts: Vec<Vec<u32>> = vec![Vec::new(); flows.len()];
+    let mut offered_window = vec![0u64; flows.len()];
+    let total = warmup + measure;
+    for cycle in 0..total {
+        for (fi, pacer) in pacers.iter_mut().enumerate() {
+            for _ in 0..pacer.tick() {
+                let f = pacer.flow;
+                let id = net.enqueue(f.src, f.dst, f.packet_len);
+                all_pkts[fi].push(id);
+                if cycle >= warmup {
+                    offered_window[fi] += 1;
+                }
+            }
+        }
+        net.step();
+    }
+    net.drain(drain);
+    all_pkts
+        .iter()
+        .enumerate()
+        .map(|(fi, pkts)| {
+            let mut net_lat = Accumulator::new();
+            let mut tot_lat = Accumulator::new();
+            let mut dropped = 0u64;
+            // Steady-state throughput proxy: packets *completed during* the
+            // window over packets *offered during* the window. (Counting
+            // only window-generated packets to completion would conflate
+            // queue backlog with loss.)
+            let mut completed_window = 0u64;
+            for &id in pkts {
+                let p = net.table().get(id);
+                if p.is_done() {
+                    if p.done_cycle >= warmup && p.done_cycle < total {
+                        completed_window += 1;
+                    }
+                    if p.gen_cycle >= warmup {
+                        net_lat.add(p.net_latency() as f64);
+                        tot_lat.add(p.total_latency() as f64);
+                    }
+                } else if p.gen_cycle >= warmup {
+                    dropped += 1;
+                }
+            }
+            // A flow too slow to offer window packets shows no evidence of
+            // saturation: ratio 1.
+            let completion_ratio = if offered_window[fi] == 0 {
+                1.0
+            } else {
+                (completed_window as f64 / offered_window[fi] as f64).min(1.0)
+            };
+            FlowStats {
+                avg_net_latency: net_lat.mean(),
+                avg_latency: tot_lat.mean(),
+                completion_ratio,
+                offered_window: offered_window[fi],
+                completed_window,
+                completed: net_lat.count(),
+                dropped,
+            }
+        })
+        .collect()
+}
+
+/// Run a set of deterministic point-to-point flows (mapped-CNN traffic).
+/// Returns aggregate stats over the measurement window.
+pub fn run_flows(
+    kind: NocKind,
+    mesh: Mesh,
+    flows: &[Flow],
+    warmup: u64,
+    measure: u64,
+    drain: u64,
+    hpc_max: usize,
+    router_latency: u64,
+    buffer_depth: usize,
+) -> NocStats {
+    let mut net = NocModel::build(kind, mesh, hpc_max, router_latency, buffer_depth);
+    let mut pacers: Vec<FlowPacer> = flows.iter().map(|&f| FlowPacer::new(f)).collect();
+    let mut window_pkts: Vec<u32> = Vec::new();
+    let mut ejected_at_warmup = 0u64;
+    let mut ejected_at_end = 0u64;
+    let offered: f64 = flows
+        .iter()
+        .map(|f| f.packets_per_cycle * f.packet_len as f64)
+        .sum::<f64>()
+        / mesh.nodes() as f64;
+
+    let total = warmup + measure;
+    for cycle in 0..total {
+        if cycle == warmup {
+            ejected_at_warmup = net.flits_ejected();
+        }
+        for pacer in &mut pacers {
+            for _ in 0..pacer.tick() {
+                let f = pacer.flow;
+                let id = net.enqueue(f.src, f.dst, f.packet_len);
+                if cycle >= warmup {
+                    window_pkts.push(id);
+                }
+            }
+        }
+        net.step();
+        if cycle + 1 == total {
+            ejected_at_end = net.flits_ejected();
+        }
+    }
+    net.drain(drain);
+
+    let mut net_lat = Accumulator::new();
+    let mut tot_lat = Accumulator::new();
+    let mut dropped = 0u64;
+    for &id in &window_pkts {
+        let p = net.table().get(id);
+        if p.is_done() {
+            net_lat.add(p.net_latency() as f64);
+            tot_lat.add(p.total_latency() as f64);
+        } else {
+            dropped += 1;
+        }
+    }
+    NocStats {
+        offered,
+        avg_net_latency: net_lat.mean(),
+        avg_latency: tot_lat.mean(),
+        reception_rate: (ejected_at_end - ejected_at_warmup) as f64
+            / (mesh.nodes() as f64 * measure as f64),
+        completed: net_lat.count(),
+        dropped,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick(kind: NocKind, rate: f64, pattern: Pattern) -> NocStats {
+        let cfg = SyntheticConfig {
+            pattern,
+            injection_rate: rate,
+            packet_len: 4,
+            warmup: 500,
+            measure: 2_000,
+            drain: 8_000,
+            seed: 7,
+            ..Default::default()
+        };
+        run_synthetic(kind, Mesh::new(8, 8), &cfg, 14)
+    }
+
+    #[test]
+    fn low_load_everything_completes() {
+        for kind in [NocKind::Wormhole, NocKind::Smart, NocKind::Ideal] {
+            let s = quick(kind, 0.02, Pattern::UniformRandom);
+            assert!(s.completed > 0, "{kind:?}");
+            assert_eq!(s.dropped, 0, "{kind:?} dropped {}", s.dropped);
+            assert!(!s.saturated(), "{kind:?} saturated at 0.02");
+        }
+    }
+
+    #[test]
+    fn latency_order_ideal_smart_wormhole() {
+        // Fig. 10's zero-load ordering: ideal < smart < wormhole.
+        let w = quick(NocKind::Wormhole, 0.02, Pattern::UniformRandom);
+        let s = quick(NocKind::Smart, 0.02, Pattern::UniformRandom);
+        let i = quick(NocKind::Ideal, 0.02, Pattern::UniformRandom);
+        assert!(
+            i.avg_net_latency < s.avg_net_latency,
+            "ideal {} !< smart {}",
+            i.avg_net_latency,
+            s.avg_net_latency
+        );
+        assert!(
+            s.avg_net_latency < w.avg_net_latency,
+            "smart {} !< wormhole {}",
+            s.avg_net_latency,
+            w.avg_net_latency
+        );
+    }
+
+    #[test]
+    fn wormhole_saturates_before_smart() {
+        // Fig. 10: wormhole saturates around 0.05, SMART around 0.25 for
+        // uniform random. At 0.15 wormhole must be saturated, SMART not.
+        let w = quick(NocKind::Wormhole, 0.15, Pattern::UniformRandom);
+        let s = quick(NocKind::Smart, 0.15, Pattern::UniformRandom);
+        assert!(
+            w.saturated() || w.avg_latency > 4.0 * s.avg_latency,
+            "wormhole lat {} vs smart {}",
+            w.avg_latency,
+            s.avg_latency
+        );
+        assert!(!s.saturated(), "smart saturated at 0.15: {s:?}");
+    }
+
+    #[test]
+    fn neighbor_tolerates_high_load() {
+        // Fig. 10: neighbor traffic saturates much later (SMART ~0.8).
+        let s = quick(NocKind::Smart, 0.5, Pattern::Neighbor);
+        assert!(!s.saturated(), "{s:?}");
+    }
+
+    #[test]
+    fn reception_tracks_offered_below_saturation() {
+        let s = quick(NocKind::Smart, 0.1, Pattern::Transpose);
+        assert!(
+            (s.reception_rate - 0.1 * 7.0 / 8.0).abs() < 0.04,
+            "reception {} (transpose diagonal idles 8/64 nodes)",
+            s.reception_rate
+        );
+    }
+
+    #[test]
+    fn flow_run_delivers() {
+        let flows = vec![
+            Flow {
+                src: 0,
+                dst: 10,
+                packets_per_cycle: 0.05,
+                packet_len: 4,
+            },
+            Flow {
+                src: 63,
+                dst: 3,
+                packets_per_cycle: 0.05,
+                packet_len: 4,
+            },
+        ];
+        let s = run_flows(
+            NocKind::Smart,
+            Mesh::new(8, 8),
+            &flows,
+            200,
+            1_000,
+            5_000,
+            14,
+            1,
+            4,
+        );
+        assert!(s.completed > 80, "{s:?}");
+        assert_eq!(s.dropped, 0);
+    }
+}

@@ -1,0 +1,198 @@
+//! 2D mesh topology (Sec. V: "the NoC is a 16x20 2D mesh"; the synthetic
+//! traffic study uses 8x8).
+
+/// Output/input port directions of a mesh router. `Local` is the
+/// injection/ejection port to the tile.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dir {
+    East,
+    West,
+    North,
+    South,
+    Local,
+}
+
+impl Dir {
+    pub const SIDES: [Dir; 4] = [Dir::East, Dir::West, Dir::North, Dir::South];
+
+    pub fn index(self) -> usize {
+        match self {
+            Dir::East => 0,
+            Dir::West => 1,
+            Dir::North => 2,
+            Dir::South => 3,
+            Dir::Local => 4,
+        }
+    }
+
+    pub fn opposite(self) -> Dir {
+        match self {
+            Dir::East => Dir::West,
+            Dir::West => Dir::East,
+            Dir::North => Dir::South,
+            Dir::South => Dir::North,
+            Dir::Local => Dir::Local,
+        }
+    }
+}
+
+/// A `w x h` mesh; node id = `y * w + x`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Mesh {
+    pub w: usize,
+    pub h: usize,
+}
+
+impl Mesh {
+    pub fn new(w: usize, h: usize) -> Self {
+        assert!(w > 0 && h > 0);
+        Self { w, h }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.w * self.h
+    }
+
+    pub fn xy(&self, node: usize) -> (usize, usize) {
+        (node % self.w, node / self.w)
+    }
+
+    pub fn id(&self, x: usize, y: usize) -> usize {
+        debug_assert!(x < self.w && y < self.h);
+        y * self.w + x
+    }
+
+    /// Neighbor in direction `d`, or `None` at the mesh edge.
+    pub fn neighbor(&self, node: usize, d: Dir) -> Option<usize> {
+        let (x, y) = self.xy(node);
+        match d {
+            Dir::East if x + 1 < self.w => Some(self.id(x + 1, y)),
+            Dir::West if x > 0 => Some(self.id(x - 1, y)),
+            Dir::South if y + 1 < self.h => Some(self.id(x, y + 1)),
+            Dir::North if y > 0 => Some(self.id(x, y - 1)),
+            _ => None,
+        }
+    }
+
+    /// XY dimension-ordered routing: next direction from `node` toward
+    /// `dst` (X first, then Y). `Local` when already there.
+    pub fn xy_route(&self, node: usize, dst: usize) -> Dir {
+        let (x, y) = self.xy(node);
+        let (dx, dy) = self.xy(dst);
+        if x < dx {
+            Dir::East
+        } else if x > dx {
+            Dir::West
+        } else if y < dy {
+            Dir::South
+        } else if y > dy {
+            Dir::North
+        } else {
+            Dir::Local
+        }
+    }
+
+    /// Minimal hop count under XY routing (Manhattan distance).
+    pub fn hops(&self, a: usize, b: usize) -> usize {
+        let (ax, ay) = self.xy(a);
+        let (bx, by) = self.xy(b);
+        ax.abs_diff(bx) + ay.abs_diff(by)
+    }
+
+    /// Straight-run length from `node` toward `dst` along the current XY
+    /// routing dimension (how far a SMART bypass could go before a turn or
+    /// the destination).
+    pub fn straight_run(&self, node: usize, dst: usize) -> usize {
+        let (x, y) = self.xy(node);
+        let (dx, dy) = self.xy(dst);
+        if x != dx {
+            x.abs_diff(dx)
+        } else {
+            y.abs_diff(dy)
+        }
+    }
+
+    /// Directed link id for `node` -> neighbor in `d` (d must be a side).
+    pub fn link_id(&self, node: usize, d: Dir) -> usize {
+        node * 4 + d.index()
+    }
+
+    pub fn n_links(&self) -> usize {
+        self.nodes() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn neighbors_respect_edges() {
+        let m = Mesh::new(4, 3);
+        assert_eq!(m.neighbor(0, Dir::West), None);
+        assert_eq!(m.neighbor(0, Dir::North), None);
+        assert_eq!(m.neighbor(0, Dir::East), Some(1));
+        assert_eq!(m.neighbor(0, Dir::South), Some(4));
+        assert_eq!(m.neighbor(11, Dir::East), None);
+        assert_eq!(m.neighbor(11, Dir::South), None);
+    }
+
+    #[test]
+    fn xy_route_goes_x_first() {
+        let m = Mesh::new(8, 8);
+        let src = m.id(1, 1);
+        let dst = m.id(5, 6);
+        assert_eq!(m.xy_route(src, dst), Dir::East);
+        let aligned = m.id(5, 1);
+        assert_eq!(m.xy_route(aligned, dst), Dir::South);
+        assert_eq!(m.xy_route(dst, dst), Dir::Local);
+    }
+
+    #[test]
+    fn xy_route_reaches_destination() {
+        // Property: following xy_route always terminates at dst in exactly
+        // `hops` steps.
+        let m = Mesh::new(6, 5);
+        for src in 0..m.nodes() {
+            for dst in 0..m.nodes() {
+                let mut at = src;
+                let mut steps = 0;
+                while at != dst {
+                    let d = m.xy_route(at, dst);
+                    at = m.neighbor(at, d).expect("route must stay in mesh");
+                    steps += 1;
+                    assert!(steps <= m.hops(src, dst), "non-minimal route");
+                }
+                assert_eq!(steps, m.hops(src, dst));
+            }
+        }
+    }
+
+    #[test]
+    fn straight_run_lengths() {
+        let m = Mesh::new(8, 8);
+        assert_eq!(m.straight_run(m.id(0, 0), m.id(5, 3)), 5); // X first
+        assert_eq!(m.straight_run(m.id(5, 0), m.id(5, 3)), 3); // then Y
+        assert_eq!(m.straight_run(m.id(5, 3), m.id(5, 3)), 0);
+    }
+
+    #[test]
+    fn link_ids_unique() {
+        let m = Mesh::new(4, 4);
+        let mut seen = std::collections::HashSet::new();
+        for n in 0..m.nodes() {
+            for d in Dir::SIDES {
+                assert!(seen.insert(m.link_id(n, d)));
+            }
+        }
+        assert_eq!(seen.len(), m.n_links());
+    }
+
+    #[test]
+    fn opposite_involutive() {
+        for d in Dir::SIDES {
+            assert_eq!(d.opposite().opposite(), d);
+            assert_ne!(d.opposite(), d);
+        }
+    }
+}

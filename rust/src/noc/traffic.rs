@@ -1,0 +1,226 @@
+//! Traffic generation: the six synthetic patterns of Sec. VII plus
+//! flow-based traffic extracted from a mapped CNN (Sec. VI).
+
+use crate::util::Rng;
+
+use super::topology::Mesh;
+
+/// Synthetic traffic patterns (garnet2.0's standard set, Sec. VII-A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Pattern {
+    UniformRandom,
+    Transpose,
+    Tornado,
+    Shuffle,
+    Neighbor,
+    BitComplement,
+}
+
+impl Pattern {
+    pub const ALL: [Pattern; 6] = [
+        Pattern::UniformRandom,
+        Pattern::Transpose,
+        Pattern::Tornado,
+        Pattern::Shuffle,
+        Pattern::Neighbor,
+        Pattern::BitComplement,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Pattern::UniformRandom => "uniform_random",
+            Pattern::Transpose => "transpose",
+            Pattern::Tornado => "tornado",
+            Pattern::Shuffle => "shuffle",
+            Pattern::Neighbor => "neighbor",
+            Pattern::BitComplement => "bit_complement",
+        }
+    }
+
+    /// Destination for a packet from `src`. `None` if the pattern maps the
+    /// node to itself (no traffic from this node).
+    pub fn dest(&self, mesh: &Mesh, src: usize, rng: &mut Rng) -> Option<usize> {
+        let (x, y) = mesh.xy(src);
+        let (w, h) = (mesh.w, mesh.h);
+        let dst = match self {
+            Pattern::UniformRandom => {
+                // Uniform over all nodes except src.
+                let d = rng.below_usize(mesh.nodes() - 1);
+                if d >= src {
+                    d + 1
+                } else {
+                    d
+                }
+            }
+            Pattern::Transpose => {
+                // (x, y) -> (y, x); needs a square mesh to be total.
+                let (tx, ty) = (y % w, x % h);
+                mesh.id(tx, ty)
+            }
+            Pattern::Tornado => {
+                // Half-way around the X ring.
+                let tx = (x + w.div_ceil(2) - 1) % w;
+                mesh.id(tx, y)
+            }
+            Pattern::Shuffle => {
+                // Rotate the node-id bits left by one (power-of-two sizes).
+                let n = mesh.nodes();
+                debug_assert!(n.is_power_of_two());
+                let bits = n.trailing_zeros();
+                let id = src;
+                ((id << 1) | (id >> (bits - 1))) & (n - 1)
+            }
+            Pattern::Neighbor => mesh.id((x + 1) % w, y),
+            Pattern::BitComplement => mesh.id(w - 1 - x, h - 1 - y),
+        };
+        (dst != src).then_some(dst)
+    }
+}
+
+impl std::str::FromStr for Pattern {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Pattern::ALL
+            .iter()
+            .find(|p| p.name() == s)
+            .copied()
+            .ok_or_else(|| {
+                format!(
+                    "unknown pattern {s:?} (one of {:?})",
+                    Pattern::ALL.map(|p| p.name())
+                )
+            })
+    }
+}
+
+/// A point-to-point flow with a deterministic injection rate, used to model
+/// inter-layer OFM traffic of a mapped CNN.
+#[derive(Debug, Clone, Copy)]
+pub struct Flow {
+    pub src: usize,
+    pub dst: usize,
+    /// Offered load in packets per cycle (may exceed 1 only via multiple
+    /// flows; a single flow saturates at its source's injection port).
+    pub packets_per_cycle: f64,
+    pub packet_len: u16,
+}
+
+/// Deterministic fractional-rate pacing: injects `rate` packets/cycle on
+/// average using an error accumulator (no RNG, so flow experiments are
+/// exactly reproducible).
+#[derive(Debug, Clone)]
+pub struct FlowPacer {
+    pub flow: Flow,
+    credit: f64,
+}
+
+impl FlowPacer {
+    pub fn new(flow: Flow) -> Self {
+        Self { flow, credit: 0.0 }
+    }
+
+    /// Packets to inject this cycle.
+    pub fn tick(&mut self) -> usize {
+        self.credit += self.flow.packets_per_cycle;
+        let n = self.credit.floor() as usize;
+        self.credit -= n as f64;
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mesh() -> Mesh {
+        Mesh::new(8, 8)
+    }
+
+    #[test]
+    fn bit_complement_is_involution() {
+        let m = mesh();
+        let mut rng = Rng::new(1);
+        for src in 0..m.nodes() {
+            if let Some(d) = Pattern::BitComplement.dest(&m, src, &mut rng) {
+                let back = Pattern::BitComplement.dest(&m, d, &mut rng).unwrap();
+                assert_eq!(back, src);
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_swaps_coordinates() {
+        let m = mesh();
+        let mut rng = Rng::new(1);
+        let src = m.id(2, 5);
+        assert_eq!(
+            Pattern::Transpose.dest(&m, src, &mut rng),
+            Some(m.id(5, 2))
+        );
+        // Diagonal maps to itself -> no packet.
+        assert_eq!(Pattern::Transpose.dest(&m, m.id(3, 3), &mut rng), None);
+    }
+
+    #[test]
+    fn tornado_is_half_ring() {
+        let m = mesh();
+        let mut rng = Rng::new(1);
+        let src = m.id(0, 2);
+        assert_eq!(Pattern::Tornado.dest(&m, src, &mut rng), Some(m.id(3, 2)));
+    }
+
+    #[test]
+    fn neighbor_wraps() {
+        let m = mesh();
+        let mut rng = Rng::new(1);
+        assert_eq!(
+            Pattern::Neighbor.dest(&m, m.id(7, 0), &mut rng),
+            Some(m.id(0, 0))
+        );
+    }
+
+    #[test]
+    fn shuffle_rotates_bits() {
+        let m = mesh();
+        let mut rng = Rng::new(1);
+        // 64 nodes = 6 bits; 0b000001 -> 0b000010.
+        assert_eq!(Pattern::Shuffle.dest(&m, 1, &mut rng), Some(2));
+        // 0b100000 -> 0b000001.
+        assert_eq!(Pattern::Shuffle.dest(&m, 32, &mut rng), Some(1));
+        assert_eq!(Pattern::Shuffle.dest(&m, 0, &mut rng), None);
+    }
+
+    #[test]
+    fn uniform_random_never_self() {
+        let m = mesh();
+        let mut rng = Rng::new(42);
+        for _ in 0..5_000 {
+            let src = rng.below_usize(m.nodes());
+            let d = Pattern::UniformRandom.dest(&m, src, &mut rng).unwrap();
+            assert_ne!(d, src);
+            assert!(d < m.nodes());
+        }
+    }
+
+    #[test]
+    fn parse_names() {
+        for p in Pattern::ALL {
+            assert_eq!(p.name().parse::<Pattern>().unwrap(), p);
+        }
+        assert!("diagonal".parse::<Pattern>().is_err());
+    }
+
+    #[test]
+    fn pacer_hits_rate() {
+        let mut p = FlowPacer::new(Flow {
+            src: 0,
+            dst: 1,
+            packets_per_cycle: 0.3,
+            packet_len: 4,
+        });
+        let total: usize = (0..1000).map(|_| p.tick()).sum();
+        // floating-point credit accumulation may lose one ulp-packet
+        assert!((299..=300).contains(&total), "total {total}");
+    }
+}

@@ -1,0 +1,182 @@
+//! Inter-layer pipelining (Sec. IV-B, Eqs. (1)-(2)).
+//!
+//! Layer i+1 starts as soon as enough of layer i's OFM exists to cover its
+//! first kernel window: with a row-major stride,
+//!
+//!   valuesWait = (w x (l-1) + l) x n        (1)
+//!   cyclesWait =  w x (l-1) + l             (2)
+//!
+//! Pooling between the layers stretches the wait (Sec. VI-C): the consumer's
+//! first pooled row needs *two* producer rows, and every consumed pixel
+//! needs four produced pixels. We capture both with a linear input-demand
+//! model: producing the consumer's output pixel `p` requires
+//!
+//!   A(p) = pool_factor x (w*(l-1) + l + p) + pool_head
+//!
+//! producer pixels, where `pool_factor` is 1 (no pool) or 4 (2x2 pool) and
+//! `pool_head` adds the extra leading row. FC layers need the whole IFM
+//! (`A(p) = everything`).
+
+use crate::cnn::{Layer, LayerKind};
+
+/// Linear input-demand: producer pixels needed before the consumer can emit
+/// its p-th output pixel (0-based): `head + slope * p`, saturated at the
+/// producer's total output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InputDemand {
+    pub head: u64,
+    pub slope: u64,
+    /// If true the consumer needs the producer's entire OFM first (FC).
+    pub needs_all: bool,
+}
+
+impl InputDemand {
+    /// Producer pixels required to emit output pixel index `p` (0-based),
+    /// clamped to `producer_total`.
+    pub fn required(&self, p: u64, producer_total: u64) -> u64 {
+        if self.needs_all {
+            return producer_total;
+        }
+        (self.head + self.slope * p).min(producer_total)
+    }
+
+    /// Largest output pixel count emittable given `avail` producer pixels
+    /// (and the producer's total); respects `out_total`.
+    pub fn emittable(&self, avail: u64, producer_total: u64, out_total: u64) -> u64 {
+        if self.needs_all {
+            return if avail >= producer_total { out_total } else { 0 };
+        }
+        if avail >= producer_total {
+            return out_total;
+        }
+        if avail < self.head {
+            return 0;
+        }
+        (((avail - self.head) / self.slope) + 1).min(out_total)
+    }
+}
+
+/// Eq. (2): cycles of producer output the consumer waits for (no pooling,
+/// unit replication).
+pub fn cycles_wait(consumer_ifm_w: usize, consumer_ksize: usize) -> u64 {
+    (consumer_ifm_w * (consumer_ksize - 1) + consumer_ksize) as u64
+}
+
+/// Eq. (1): values (pixels x kernels) the consumer waits for.
+pub fn values_wait(consumer_ifm_w: usize, consumer_ksize: usize, producer_kernels: usize) -> u64 {
+    cycles_wait(consumer_ifm_w, consumer_ksize) * producer_kernels as u64
+}
+
+/// Build the input-demand model for `consumer` fed by `producer`.
+pub fn demand(producer: &Layer, consumer: &Layer) -> InputDemand {
+    match consumer.kind {
+        LayerKind::Fc { .. } => InputDemand {
+            head: 0,
+            slope: 1,
+            needs_all: true,
+        },
+        LayerKind::Conv { ksize, .. } => {
+            let base = cycles_wait(consumer.in_w, ksize);
+            if producer.has_pool() {
+                // 2x2 pool: 4 producer pixels per consumer IFM pixel plus
+                // one extra leading producer row.
+                InputDemand {
+                    head: 4 * base + producer.conv_out_hw().1 as u64,
+                    slope: 4,
+                    needs_all: false,
+                }
+            } else {
+                InputDemand {
+                    head: base,
+                    slope: 1,
+                    needs_all: false,
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::Layer;
+
+    #[test]
+    fn eq2_matches_paper_formula() {
+        // w = 224, l = 3: 224*2 + 3 = 451 cycles.
+        assert_eq!(cycles_wait(224, 3), 451);
+        // 1x1 conv: l = 1 -> wait 1 value.
+        assert_eq!(cycles_wait(56, 1), 1);
+    }
+
+    #[test]
+    fn eq1_scales_by_kernels() {
+        assert_eq!(values_wait(224, 3, 64), 451 * 64);
+    }
+
+    #[test]
+    fn demand_no_pool_is_linear_slope_one() {
+        let p = Layer::conv("p", (224, 224), 3, 64, 3, false);
+        let c = Layer::conv("c", (224, 224), 64, 64, 3, false);
+        let d = demand(&p, &c);
+        assert_eq!(d.slope, 1);
+        assert_eq!(d.head, 451);
+        assert!(!d.needs_all);
+        assert_eq!(d.required(0, 50176), 451);
+        assert_eq!(d.required(49_999, 50176), 50176); // clamped
+    }
+
+    #[test]
+    fn demand_after_pool_quadruples() {
+        let p = Layer::conv("p", (224, 224), 3, 64, 3, true); // pools to 112
+        let c = Layer::conv("c", (112, 112), 64, 128, 3, true);
+        let d = demand(&p, &c);
+        assert_eq!(d.slope, 4);
+        // head = 4*(112*2+3) + 224 = 908 + 224
+        assert_eq!(d.head, 4 * 227 + 224);
+    }
+
+    #[test]
+    fn fc_needs_everything() {
+        let p = Layer::conv("p", (14, 14), 512, 512, 3, true);
+        let c = Layer::fc("fc", 25088, 4096);
+        let d = demand(&p, &c);
+        assert!(d.needs_all);
+        assert_eq!(d.emittable(195, 196, 8), 0);
+        assert_eq!(d.emittable(196, 196, 8), 8);
+    }
+
+    #[test]
+    fn emittable_inverts_required() {
+        let d = InputDemand {
+            head: 451,
+            slope: 1,
+            needs_all: false,
+        };
+        // With exactly required(p) pixels available we can emit p+1 outputs.
+        for p in [0u64, 1, 100, 5000] {
+            let avail = d.required(p, u64::MAX);
+            assert_eq!(d.emittable(avail, u64::MAX, u64::MAX), p + 1);
+            assert_eq!(d.emittable(avail - 1, u64::MAX, u64::MAX), p);
+        }
+        let d4 = InputDemand {
+            head: 1132,
+            slope: 4,
+            needs_all: false,
+        };
+        for p in [0u64, 1, 77] {
+            let avail = d4.required(p, u64::MAX);
+            assert_eq!(d4.emittable(avail, u64::MAX, u64::MAX), p + 1);
+        }
+    }
+
+    #[test]
+    fn emittable_caps_at_out_total() {
+        let d = InputDemand {
+            head: 5,
+            slope: 1,
+            needs_all: false,
+        };
+        assert_eq!(d.emittable(1_000_000, 1_000_000, 42), 42);
+    }
+}

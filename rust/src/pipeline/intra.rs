@@ -1,0 +1,49 @@
+//! Intra-layer pipelining (Sec. IV-A).
+//!
+//! One intra-layer pipeline processes one OFM pixel position (all channels)
+//! per logical cycle: IR read → DAC → crossbar → S&H → ADC → shift&add →
+//! (inter-tile merge) → sigmoid → (maxpool) → OR write. The paper gives four
+//! pipeline depths depending on whether the layer maps to a single tile and
+//! whether it fuses a pooling step:
+//!
+//! | mapping      | no pool | pool |
+//! |--------------|---------|------|
+//! | single tile  | 24      | 29   |
+//! | multi tile   | 26      | 31   |
+
+use crate::mapping::LayerMapping;
+
+/// Pipeline depth in logical cycles for a single-tile layer without pooling.
+pub const DEPTH_SINGLE: u64 = 24;
+/// Additional stages when the layer's replicas span multiple tiles (the
+/// partial sums cross the tile boundary through MEM + tile S&A).
+pub const MULTI_TILE_EXTRA: u64 = 2;
+/// Additional stages for the fused 2x2 max-pool (the MP unit must gather
+/// pooled operands from the OR).
+pub const POOL_EXTRA: u64 = 5;
+
+/// Intra-layer pipeline depth for a mapped layer (Sec. IV-A's four cases).
+pub fn depth(single_tile: bool, pool: bool) -> u64 {
+    DEPTH_SINGLE
+        + if single_tile { 0 } else { MULTI_TILE_EXTRA }
+        + if pool { POOL_EXTRA } else { 0 }
+}
+
+/// Depth from a resolved mapping entry.
+pub fn depth_of(lm: &LayerMapping, pool: bool) -> u64 {
+    depth(lm.single_tile, pool)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_four_cases() {
+        // Sec. IV-A: 24 / 29 / 26 / 31 cycles.
+        assert_eq!(depth(true, false), 24);
+        assert_eq!(depth(true, true), 29);
+        assert_eq!(depth(false, false), 26);
+        assert_eq!(depth(false, true), 31);
+    }
+}

@@ -1,0 +1,11 @@
+//! The paper's three pipelining schemes (Sec. IV): intra-layer pipeline
+//! depths, inter-layer start conditions (Eqs. 1-2), and the static stage
+//! plans consumed by the cycle-accurate engine. Batch pipelining is a
+//! property of the engine's injection policy (`crate::sim::engine`).
+
+pub mod inter;
+pub mod intra;
+pub mod schedule;
+
+pub use inter::InputDemand;
+pub use schedule::{build_plans, max_occupancy, StagePlan};

@@ -1,0 +1,133 @@
+//! Static per-layer pipeline parameters ("stage plans") assembled from the
+//! network, its mapping, and the architecture — the input to the
+//! cycle-accurate engine in [`crate::sim::engine`].
+
+use crate::cnn::Network;
+use crate::config::ArchConfig;
+use crate::mapping::NetworkMapping;
+
+use super::inter::{demand, InputDemand};
+use super::intra;
+
+/// Everything the engine needs to simulate one layer.
+#[derive(Debug, Clone)]
+pub struct StagePlan {
+    pub name: String,
+    /// Output units the stage emits per image. Conv: pre-pool OFM pixel
+    /// positions. FC: its reload rounds (weight-serial crossbar loads).
+    pub p_total: u64,
+    /// Peak emission rate in units per logical cycle (the replication
+    /// factor; FC emits one unit per cycle).
+    pub rate: u64,
+    /// Intra-layer pipeline depth (Sec. IV-A) in logical cycles.
+    pub depth: u64,
+    /// Input demand on the previous stage (Sec. IV-B); `stage 0` is fed by
+    /// the host and its demand is ignored by the engine.
+    pub demand: InputDemand,
+}
+
+/// Build stage plans for a mapped network.
+pub fn build_plans(net: &Network, mapping: &NetworkMapping, arch: &ArchConfig) -> Vec<StagePlan> {
+    let layers = net.layers();
+    let mut plans = Vec::with_capacity(layers.len());
+    for (i, layer) in layers.iter().enumerate() {
+        let lm = &mapping.layers[i];
+        let (p_total, rate) = if layer.is_conv() {
+            (layer.out_pixels(), lm.replication as u64)
+        } else {
+            (arch.fc_reload_rounds.max(1), 1)
+        };
+        let dem = if i == 0 {
+            // Fed by the host: the whole image is present at injection.
+            InputDemand {
+                head: 0,
+                slope: 1,
+                needs_all: false,
+            }
+        } else {
+            demand(&layers[i - 1], layer)
+        };
+        plans.push(StagePlan {
+            name: layer.name.clone(),
+            p_total,
+            rate,
+            depth: intra::depth_of(lm, layer.has_pool()),
+            demand: dem,
+        });
+    }
+    plans
+}
+
+/// The injection interval lower bound: the busiest stage's occupancy
+/// (`ceil(p_total / rate)`) — what batch pipelining converges to when the
+/// NoC is not the bottleneck.
+pub fn max_occupancy(plans: &[StagePlan]) -> u64 {
+    plans
+        .iter()
+        .map(|p| p.p_total.div_ceil(p.rate))
+        .max()
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::{vgg, VggVariant};
+    use crate::mapping::ReplicationPlan;
+
+    fn plans(v: VggVariant, repl: bool) -> Vec<StagePlan> {
+        let arch = ArchConfig::paper_node();
+        let net = vgg::build(v);
+        let plan = if repl {
+            ReplicationPlan::fig7(v)
+        } else {
+            ReplicationPlan::none(&net)
+        };
+        let m = NetworkMapping::build(&net, &arch, &plan).unwrap();
+        build_plans(&net, &m, &arch)
+    }
+
+    #[test]
+    fn vgg_e_fig7_interval_is_3136() {
+        // conv1: 224*224 / 16 = 3136 — the paper's best-case beat
+        // (DESIGN.md §5 calibration anchor).
+        let p = plans(VggVariant::E, true);
+        assert_eq!(max_occupancy(&p), 3136);
+        assert_eq!(p[0].p_total, 224 * 224);
+        assert_eq!(p[0].rate, 16);
+    }
+
+    #[test]
+    fn no_replication_interval_is_50176() {
+        let p = plans(VggVariant::E, false);
+        assert_eq!(max_occupancy(&p), 50176);
+    }
+
+    #[test]
+    fn depths_match_mapping() {
+        let p = plans(VggVariant::E, true);
+        // VGG-E conv1 (no pool) is single-tile under Fig. 7 -> 24 cycles.
+        assert_eq!(p[0].depth, 24);
+        // conv2 pools and spans multiple tiles at r=16 -> 31 cycles.
+        assert_eq!(p[1].depth, 31, "{}", p[1].name);
+        // deep 512-channel convs are multi-tile, no pool -> 26.
+        let c13 = &p[12];
+        assert_eq!(c13.depth, 26, "{}", c13.name);
+    }
+
+    #[test]
+    fn fc_stages_use_reload_rounds() {
+        let arch = ArchConfig::paper_node();
+        let p = plans(VggVariant::A, false);
+        let fc = &p[p.len() - 3];
+        assert_eq!(fc.p_total, arch.fc_reload_rounds);
+        assert!(fc.demand.needs_all);
+    }
+
+    #[test]
+    fn stage0_demand_trivial() {
+        let p = plans(VggVariant::A, false);
+        assert_eq!(p[0].demand.head, 0);
+        assert!(!p[0].demand.needs_all);
+    }
+}

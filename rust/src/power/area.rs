@@ -1,0 +1,47 @@
+//! Area accounting (Fig. 4, area column).
+
+use super::components::aggregates as agg;
+use crate::config::ArchConfig;
+
+/// Node area breakdown in mm^2.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AreaBreakdown {
+    pub tiles_mm2: f64,
+    pub routers_mm2: f64,
+}
+
+impl AreaBreakdown {
+    /// The paper's node: 320 tiles + routers = 124.848 mm^2.
+    pub fn node(arch: &ArchConfig) -> Self {
+        let n = arch.total_tiles() as f64;
+        Self {
+            tiles_mm2: agg::TILE_AREA_MM2 * n,
+            routers_mm2: agg::ROUTERS_AREA_MM2 * n / 320.0,
+        }
+    }
+
+    pub fn total_mm2(&self) -> f64 {
+        self.tiles_mm2 + self.routers_mm2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_node_area() {
+        let a = AreaBreakdown::node(&ArchConfig::paper_node());
+        assert!((a.total_mm2() - 124.848).abs() < 0.01, "{}", a.total_mm2());
+    }
+
+    #[test]
+    fn scales_with_tile_count() {
+        let half = ArchConfig {
+            tiles_y: 10,
+            ..ArchConfig::paper_node()
+        };
+        let a = AreaBreakdown::node(&half);
+        assert!((a.total_mm2() - 124.848 / 2.0).abs() < 0.01);
+    }
+}

@@ -1,0 +1,227 @@
+//! Energy accounting (Fig. 9): per-image energy by summing the consumed
+//! energy of each pipeline stage, as the paper does (Sec. III / VI-D).
+//!
+//! Model: a layer's replicas collectively process its `out_pixels` positions,
+//! one position per core-group logical cycle, so the layer's crossbar work is
+//! `out_pixels x cores_per_copy` core-cycles *independent of replication* —
+//! which is exactly why the paper observes that replication and batch
+//! pipelining barely move TOPS/W.
+
+use crate::cnn::Network;
+use crate::config::ArchConfig;
+use crate::mapping::NetworkMapping;
+
+use super::components::aggregates as agg;
+
+/// Per-image energy breakdown in millijoules.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EnergyBreakdown {
+    /// Crossbar core energy (subarrays + DACs + ADCs + core S&A + IR/OR).
+    pub core_mj: f64,
+    /// Tile peripheral energy (eDRAM, bus, sigmoid, pool, tile S&A/OR).
+    pub tile_mj: f64,
+    /// NoC router/link energy.
+    pub noc_mj: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_mj(&self) -> f64 {
+        self.core_mj + self.tile_mj + self.noc_mj
+    }
+}
+
+/// Energy model over a mapped network.
+#[derive(Debug, Clone)]
+pub struct EnergyModel<'a> {
+    arch: &'a ArchConfig,
+    /// Energy per flit-hop in pJ (router power / clock, Fig. 4 router row).
+    pub flit_hop_pj: f64,
+}
+
+impl<'a> EnergyModel<'a> {
+    pub fn new(arch: &'a ArchConfig) -> Self {
+        // 10.5 mW per router at the NoC clock -> pJ per cycle of traversal.
+        let flit_hop_pj = agg::ROUTER_POWER_MW * arch.noc_cycle_ns;
+        Self { arch, flit_hop_pj }
+    }
+
+    /// Active crossbar core-cycles for one image (replication-invariant).
+    pub fn core_cycles(&self, net: &Network, mapping: &NetworkMapping) -> u64 {
+        net.layers()
+            .iter()
+            .zip(&mapping.layers)
+            .map(|(l, lm)| {
+                let cores_per_copy = lm
+                    .demand
+                    .subarrays()
+                    .div_ceil(self.arch.subarrays_per_core)
+                    as u64;
+                l.out_pixels() * cores_per_copy * lm.reload_rounds
+            })
+            .sum()
+    }
+
+    /// Tile-cycles: each layer's tiles are powered while the layer streams.
+    pub fn tile_cycles(&self, net: &Network, mapping: &NetworkMapping) -> u64 {
+        net.layers()
+            .iter()
+            .zip(&mapping.layers)
+            .map(|(l, lm)| {
+                let occupancy = l.out_pixels().div_ceil(lm.replication as u64)
+                    * lm.reload_rounds;
+                occupancy * lm.tile_ids.len() as u64
+            })
+            .sum()
+    }
+
+    /// Total flit-hops for one image: every OFM value moves from its
+    /// producer tile to the consumer layer's tiles over the mesh.
+    pub fn flit_hops(&self, net: &Network, _mapping: &NetworkMapping, mean_hops: &[f64]) -> f64 {
+        let vals_per_flit = self.arch.values_per_flit() as f64;
+        net.layers()
+            .iter()
+            .zip(mean_hops)
+            .map(|(l, &hops)| {
+                let values = (l.out_pixels() * l.out_ch() as u64) as f64
+                    / if l.has_pool() { 4.0 } else { 1.0 };
+                (values / vals_per_flit).ceil() * hops.max(1.0)
+            })
+            .sum()
+    }
+
+    /// Per-image energy. `mean_hops[i]` is the average hop count from layer
+    /// i's tiles to layer i+1's tiles (last entry: to the output port).
+    pub fn image_energy(
+        &self,
+        net: &Network,
+        mapping: &NetworkMapping,
+        mean_hops: &[f64],
+    ) -> EnergyBreakdown {
+        let t_log_s = self.arch.logical_cycle_ns * 1e-9;
+        let core_mj = self.core_cycles(net, mapping) as f64
+            * agg::CORE_POWER_MW
+            * t_log_s; // mW * s = mJ? mW*s = mJ yes (1e-3 J)
+        let tile_mj = self.tile_cycles(net, mapping) as f64
+            * agg::TILE_PERIPHERAL_POWER_MW
+            * t_log_s;
+        let noc_mj = self.flit_hops(net, mapping, mean_hops) * self.flit_hop_pj * 1e-9;
+        EnergyBreakdown {
+            core_mj,
+            tile_mj,
+            noc_mj,
+        }
+    }
+
+    /// Tera-operations per second per watt given per-image energy.
+    pub fn tops_per_watt(&self, net: &Network, energy: &EnergyBreakdown) -> f64 {
+        // ops / (energy in J) = ops/J = ops/s per W; scale to tera.
+        net.ops() as f64 / (energy.total_mj() * 1e-3) / 1e12
+    }
+
+    /// Average power draw (W) at a given throughput, and its fraction of
+    /// the node's 108.27 W peak (Fig. 4's "every component functioning"
+    /// bound): energy/image x images/second.
+    pub fn avg_power_w(&self, energy: &EnergyBreakdown, fps: f64) -> f64 {
+        energy.total_mj() * 1e-3 * fps
+    }
+
+    /// Fraction of the Fig. 4 peak-power envelope actually used.
+    pub fn peak_utilization(&self, energy: &EnergyBreakdown, fps: f64) -> f64 {
+        self.avg_power_w(energy, fps) / (agg::NODE_POWER_MW / 1000.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::{vgg, VggVariant};
+    use crate::mapping::ReplicationPlan;
+
+    fn setup(v: VggVariant, repl: bool) -> (Network, NetworkMapping, ArchConfig) {
+        let arch = ArchConfig::paper_node();
+        let net = vgg::build(v);
+        let plan = if repl {
+            ReplicationPlan::fig7(v)
+        } else {
+            ReplicationPlan::none(&net)
+        };
+        let m = NetworkMapping::build(&net, &arch, &plan).unwrap();
+        (net, m, arch)
+    }
+
+    #[test]
+    fn vgg_e_efficiency_in_paper_band() {
+        // Fig. 9: VGG-E at 3.5914 TOPS/W; our principled model must land in
+        // the same band (2.5 - 4.5 TOPS/W).
+        let (net, m, arch) = setup(VggVariant::E, true);
+        let em = EnergyModel::new(&arch);
+        let hops = vec![2.0; net.len()];
+        let e = em.image_energy(&net, &m, &hops);
+        let tpw = em.tops_per_watt(&net, &e);
+        assert!((2.0..5.0).contains(&tpw), "VGG-E TOPS/W = {tpw}");
+    }
+
+    #[test]
+    fn replication_barely_moves_efficiency() {
+        // Sec. VI-D: replication/batch don't affect energy efficiency much.
+        let (net, m0, arch) = setup(VggVariant::D, false);
+        let (_, m1, _) = setup(VggVariant::D, true);
+        let em = EnergyModel::new(&arch);
+        let hops = vec![2.0; net.len()];
+        let e0 = em.image_energy(&net, &m0, &hops);
+        let e1 = em.image_energy(&net, &m1, &hops);
+        let (t0, t1) = (
+            em.tops_per_watt(&net, &e0),
+            em.tops_per_watt(&net, &e1),
+        );
+        let ratio = t1 / t0;
+        assert!((0.8..1.25).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn core_cycles_replication_invariant() {
+        let (net, m0, arch) = setup(VggVariant::B, false);
+        let (_, m1, _) = setup(VggVariant::B, true);
+        let em = EnergyModel::new(&arch);
+        assert_eq!(em.core_cycles(&net, &m0), em.core_cycles(&net, &m1));
+    }
+
+    #[test]
+    fn breakdown_is_core_dominated() {
+        // The crossbars, not the NoC, dominate energy (paper Sec. VIII).
+        let (net, m, arch) = setup(VggVariant::E, true);
+        let em = EnergyModel::new(&arch);
+        let hops = vec![3.0; net.len()];
+        let e = em.image_energy(&net, &m, &hops);
+        assert!(e.core_mj > e.noc_mj, "core {} vs noc {}", e.core_mj, e.noc_mj);
+        assert!(e.core_mj > e.tile_mj);
+        assert!(e.total_mj() > 0.0);
+    }
+
+    #[test]
+    fn peak_utilization_below_one() {
+        // Even at the paper's best throughput the node must stay inside its
+        // own peak envelope (not every unit fires every cycle).
+        let (net, m, arch) = setup(VggVariant::E, true);
+        let em = EnergyModel::new(&arch);
+        let hops = vec![2.0; net.len()];
+        let e = em.image_energy(&net, &m, &hops);
+        let util = em.peak_utilization(&e, 1042.0);
+        assert!(util > 0.02, "util {util} implausibly low");
+        assert!(util < 1.0, "util {util} exceeds peak envelope");
+        assert!((em.avg_power_w(&e, 1042.0) - e.total_mj() * 1.042).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deeper_vgg_more_efficient() {
+        // Fig. 9 trend: E > D > A/B/C (more ops per pixel moved).
+        let em_of = |v| {
+            let (net, m, arch) = setup(v, true);
+            let em = EnergyModel::new(&arch);
+            let hops = vec![2.0; net.len()];
+            let e = em.image_energy(&net, &m, &hops);
+            em.tops_per_watt(&net, &e)
+        };
+        assert!(em_of(VggVariant::E) > em_of(VggVariant::A));
+    }
+}

@@ -1,0 +1,9 @@
+//! Power, energy and area models — the Fig. 4 component table and the
+//! per-stage energy accounting behind Fig. 9's TOPS/W.
+
+pub mod area;
+pub mod components;
+pub mod energy;
+
+pub use area::AreaBreakdown;
+pub use energy::{EnergyBreakdown, EnergyModel};

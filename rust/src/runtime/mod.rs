@@ -1,0 +1,12 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `make artifacts` (python/compile/aot.py) and executes them on the CPU
+//! PJRT client. This is the only compute path at serving time — Python is
+//! build-time only.
+
+pub mod engine;
+pub mod vgg_tiny;
+pub mod weights;
+
+pub use engine::{literal_f32, literal_i32, Executable, Runtime};
+pub use vgg_tiny::VggTiny;
+pub use weights::{Tensor, WeightsFile};

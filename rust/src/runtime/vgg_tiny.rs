@@ -1,0 +1,118 @@
+//! Typed wrapper for the tiny-VGG inference artifacts: the quantized CNN
+//! whose every GEMM runs through the bit-serial crossbar Pallas kernel
+//! (python/compile/model.py), AOT-lowered at batch sizes 1 and 4.
+
+use anyhow::{bail, Context, Result};
+
+use super::engine::{literal_f32, literal_i32, Executable, Runtime};
+use super::weights::WeightsFile;
+
+/// Input image geometry fixed by the artifact.
+pub const IMAGE_HW: usize = 32;
+pub const IMAGE_CH: usize = 3;
+pub const IMAGE_LEN: usize = IMAGE_HW * IMAGE_HW * IMAGE_CH;
+pub const CLASSES: usize = 10;
+
+/// The tiny-VGG model: compiled executables for batch 1 and 4 plus the
+/// weight literals (shared across calls).
+pub struct VggTiny {
+    exe_b1: Executable,
+    exe_b4: Executable,
+    weights: WeightsFile,
+}
+
+impl VggTiny {
+    /// Supported batch sizes, largest first (the batcher prefers the
+    /// largest executable it can fill).
+    pub const BATCH_SIZES: [usize; 2] = [4, 1];
+
+    pub fn load(rt: &Runtime) -> Result<Self> {
+        let exe_b1 = rt.load("vgg_tiny_b1")?;
+        let exe_b4 = rt.load("vgg_tiny_b4")?;
+        let weights = rt.load_weights("weights_vgg_tiny.bin")?;
+        if weights.tensors.len() != 5 {
+            bail!("expected 5 weight tensors, got {}", weights.tensors.len());
+        }
+        Ok(Self {
+            exe_b1,
+            exe_b4,
+            weights,
+        })
+    }
+
+    /// Run inference on a batch of images (flattened `B x 32 x 32 x 3`,
+    /// values in [0,1]). `images.len()` must be `B * IMAGE_LEN` with B in
+    /// {1, 4}. Returns `B x CLASSES` logits.
+    pub fn infer(&self, images: &[f32]) -> Result<Vec<f32>> {
+        let b = images.len() / IMAGE_LEN;
+        if b * IMAGE_LEN != images.len() {
+            bail!("input length {} not a whole batch", images.len());
+        }
+        let exe = match b {
+            1 => &self.exe_b1,
+            4 => &self.exe_b4,
+            _ => bail!("unsupported batch size {b} (artifacts exist for 1 and 4)"),
+        };
+        let mut inputs = Vec::with_capacity(1 + self.weights.tensors.len());
+        inputs.push(literal_f32(
+            images,
+            &[b as i64, IMAGE_HW as i64, IMAGE_HW as i64, IMAGE_CH as i64],
+        )?);
+        for t in &self.weights.tensors {
+            let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
+            inputs.push(literal_i32(&t.data, &dims)?);
+        }
+        let out = exe.run_f32(&inputs).context("tiny-VGG inference")?;
+        if out.len() != b * CLASSES {
+            bail!("expected {} logits, got {}", b * CLASSES, out.len());
+        }
+        Ok(out)
+    }
+
+    /// Argmax per image.
+    pub fn classify(&self, images: &[f32]) -> Result<Vec<usize>> {
+        let logits = self.infer(images)?;
+        Ok(logits
+            .chunks_exact(CLASSES)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0
+            })
+            .collect())
+    }
+}
+
+/// Read the `test_image_b{B}.txt` / `expected_logits_b{B}.txt` golden pair
+/// written by aot.py (one whitespace-separated row per image).
+pub fn load_golden(rt: &Runtime, batch: usize) -> Result<(Vec<f32>, Vec<f32>)> {
+    let img_path = rt
+        .artifacts_dir()
+        .join(format!("test_image_b{batch}.txt"));
+    let logit_path = rt
+        .artifacts_dir()
+        .join(format!("expected_logits_b{batch}.txt"));
+    let parse = |path: &std::path::Path| -> Result<Vec<f32>> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        text.split_whitespace()
+            .map(|t| t.parse::<f32>().map_err(|e| anyhow::anyhow!("{t:?}: {e}")))
+            .collect()
+    };
+    Ok((parse(&img_path)?, parse(&logit_path)?))
+}
+
+#[cfg(test)]
+mod tests {
+    // Artifact-dependent round trips live in
+    // rust/tests/integration_runtime.rs. Pure-shape checks only here.
+    use super::*;
+
+    #[test]
+    fn constants_consistent() {
+        assert_eq!(IMAGE_LEN, 3072);
+        assert_eq!(VggTiny::BATCH_SIZES, [4, 1]);
+    }
+}

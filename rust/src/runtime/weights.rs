@@ -1,0 +1,156 @@
+//! Loader for `artifacts/weights_*.bin` — the tensor container written by
+//! `python/compile/aot.py` (`write_weights_bin`).
+//!
+//! Format (little-endian): magic `u32` = 0x534D5057 ("SMPW"), tensor count
+//! `u32`, then per tensor: name length `u32`, name bytes, ndim `u32`, dims
+//! `u32 x ndim`, row-major `i32` data.
+
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+pub const WEIGHTS_MAGIC: u32 = 0x534D_5057;
+
+/// One int32 tensor.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl Tensor {
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// All tensors of a weights file, in file order.
+#[derive(Debug, Clone)]
+pub struct WeightsFile {
+    pub tensors: Vec<Tensor>,
+}
+
+impl WeightsFile {
+    pub fn load(path: &Path) -> Result<Self> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading weights file {}", path.display()))?;
+        Self::parse(&bytes).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn parse(mut bytes: &[u8]) -> Result<Self> {
+        let magic = read_u32(&mut bytes)?;
+        if magic != WEIGHTS_MAGIC {
+            bail!("bad magic {magic:#x} (expected {WEIGHTS_MAGIC:#x})");
+        }
+        let count = read_u32(&mut bytes)? as usize;
+        if count > 10_000 {
+            bail!("implausible tensor count {count}");
+        }
+        let mut tensors = Vec::with_capacity(count);
+        for i in 0..count {
+            let name_len = read_u32(&mut bytes)? as usize;
+            if name_len > 4096 {
+                bail!("tensor {i}: name length {name_len} too large");
+            }
+            let mut name_bytes = vec![0u8; name_len];
+            bytes.read_exact(&mut name_bytes)?;
+            let name = String::from_utf8(name_bytes).context("tensor name not UTF-8")?;
+            let ndim = read_u32(&mut bytes)? as usize;
+            if ndim > 8 {
+                bail!("tensor {name}: ndim {ndim} too large");
+            }
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(read_u32(&mut bytes)? as usize);
+            }
+            let n: usize = dims.iter().product();
+            if n > 512 * 1024 * 1024 / 4 {
+                bail!("tensor {name}: {n} elements too large");
+            }
+            let mut data = vec![0i32; n];
+            let mut raw = vec![0u8; n * 4];
+            bytes.read_exact(&mut raw).context("tensor data truncated")?;
+            for (j, chunk) in raw.chunks_exact(4).enumerate() {
+                data[j] = i32::from_le_bytes(chunk.try_into().unwrap());
+            }
+            tensors.push(Tensor { name, dims, data });
+        }
+        Ok(Self { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.tensors.iter().find(|t| t.name == name)
+    }
+}
+
+fn read_u32(bytes: &mut &[u8]) -> Result<u32> {
+    let mut b = [0u8; 4];
+    bytes.read_exact(&mut b).context("unexpected EOF")?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_bytes() -> Vec<u8> {
+        let mut v = Vec::new();
+        v.extend_from_slice(&WEIGHTS_MAGIC.to_le_bytes());
+        v.extend_from_slice(&2u32.to_le_bytes());
+        // tensor "w0": 2x3
+        v.extend_from_slice(&2u32.to_le_bytes());
+        v.extend_from_slice(b"w0");
+        v.extend_from_slice(&2u32.to_le_bytes());
+        v.extend_from_slice(&2u32.to_le_bytes());
+        v.extend_from_slice(&3u32.to_le_bytes());
+        for x in [1i32, -2, 3, -4, 5, -6] {
+            v.extend_from_slice(&x.to_le_bytes());
+        }
+        // tensor "w1": scalar-ish 1-dim
+        v.extend_from_slice(&2u32.to_le_bytes());
+        v.extend_from_slice(b"w1");
+        v.extend_from_slice(&1u32.to_le_bytes());
+        v.extend_from_slice(&1u32.to_le_bytes());
+        v.extend_from_slice(&42i32.to_le_bytes());
+        v
+    }
+
+    #[test]
+    fn parses_round_trip() {
+        let w = WeightsFile::parse(&sample_bytes()).unwrap();
+        assert_eq!(w.tensors.len(), 2);
+        let t = w.get("w0").unwrap();
+        assert_eq!(t.dims, vec![2, 3]);
+        assert_eq!(t.data, vec![1, -2, 3, -4, 5, -6]);
+        assert_eq!(w.get("w1").unwrap().data, vec![42]);
+        assert!(w.get("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut b = sample_bytes();
+        b[0] ^= 0xFF;
+        assert!(WeightsFile::parse(&b).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let b = sample_bytes();
+        assert!(WeightsFile::parse(&b[..b.len() - 2]).is_err());
+    }
+
+    #[test]
+    fn real_artifact_loads_if_present() {
+        let path = Path::new("artifacts/weights_vgg_tiny.bin");
+        if !path.exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let w = WeightsFile::load(path).unwrap();
+        assert_eq!(w.tensors.len(), 5);
+        assert_eq!(w.tensors[0].dims, vec![27, 16]);
+        assert_eq!(w.tensors[4].dims, vec![64, 10]);
+    }
+}

@@ -1,0 +1,432 @@
+//! Cycle-accurate processing-side simulator — the Rust counterpart of the
+//! paper's from-scratch C++ simulator (Sec. VI-A).
+//!
+//! Each stage (layer) processes at most one image per logical cycle (the
+//! paper's structural-hazard rule, Sec. IV-C) and emits up to `rate` output
+//! units per cycle once its input demand (Sec. IV-B) is met. Emissions
+//! become visible to the next stage `depth` cycles later (the intra-layer
+//! pipeline, Sec. IV-A). Batch pipelining is the injection policy: with it,
+//! image k+1 enters stage 0 as soon as stage 0 finished emitting image k;
+//! without it, image k+1 waits for image k to leave the whole network.
+
+use std::collections::VecDeque;
+
+use crate::pipeline::StagePlan;
+
+/// Ring size for delayed-visibility snapshots; must exceed every stage
+/// depth (max 31 + NoC extension).
+const RING: usize = 256;
+
+/// Per-layer knobs from the NoC coupling (identity when the NoC is ideal).
+#[derive(Debug, Clone)]
+pub struct NocAdjust {
+    /// Extra logical cycles added to each stage's visibility delay
+    /// (inter-layer transfer latency over the mesh).
+    pub extra_depth: Vec<u64>,
+    /// Emission-rate multiplier in (0, 1]: a saturated mesh throttles the
+    /// producer's effective streaming rate.
+    pub rate_scale: Vec<f64>,
+}
+
+impl NocAdjust {
+    pub fn identity(n: usize) -> Self {
+        Self {
+            extra_depth: vec![0; n],
+            rate_scale: vec![1.0; n],
+        }
+    }
+}
+
+/// Simulation outcome over a stream of images.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Completion cycle of each image (tail of last stage, incl. depth).
+    pub completions: Vec<u64>,
+    /// Injection cycle of each image.
+    pub injections: Vec<u64>,
+    /// Total cycles simulated.
+    pub cycles: u64,
+}
+
+impl SimResult {
+    /// Per-image latency (injection -> completion).
+    pub fn latencies(&self) -> Vec<u64> {
+        self.completions
+            .iter()
+            .zip(&self.injections)
+            .map(|(c, i)| c - i)
+            .collect()
+    }
+
+    /// Steady-state injection interval: mean gap between the completions of
+    /// the last half of the image stream (cycle-exact for a periodic
+    /// pipeline).
+    pub fn steady_interval(&self) -> f64 {
+        let n = self.completions.len();
+        assert!(n >= 2, "need at least two images for an interval");
+        let half = n / 2;
+        let span = self.completions[n - 1] - self.completions[half - 1];
+        span as f64 / (n - half) as f64
+    }
+}
+
+struct Stage {
+    plan: StagePlan,
+    /// Visibility delay: plan.depth + NoC extra.
+    depth: u64,
+    /// Fractional-rate credit (NoC-throttled rates).
+    rate: f64,
+    /// `Some(rate)` when the rate is an unthrottled integer — the common
+    /// (ideal-NoC) case takes a credit-free fast path.
+    rate_int: Option<u64>,
+    credit: f64,
+    /// Images waiting / in progress (front = active).
+    queue: VecDeque<u64>,
+    /// Emitted units of the active image.
+    emitted: u64,
+    /// finish_emit[img] = cycle the stage emitted the last unit (u64::MAX
+    /// while unfinished).
+    finish_emit: Vec<u64>,
+    /// Ring of (image, emitted) snapshots, indexed by cycle % RING.
+    ring: Vec<(u64, u64)>,
+}
+
+impl Stage {
+    fn new(plan: StagePlan, extra_depth: u64, rate_scale: f64, images: usize) -> Self {
+        let rate = (plan.rate as f64 * rate_scale).max(1e-9);
+        let rate_int = (rate.fract() == 0.0 && rate >= 1.0).then_some(rate as u64);
+        Self {
+            depth: plan.depth + extra_depth,
+            rate,
+            rate_int,
+            credit: 0.0,
+            plan,
+            queue: VecDeque::new(),
+            emitted: 0,
+            finish_emit: vec![u64::MAX; images],
+            ring: vec![(u64::MAX, 0); RING],
+        }
+    }
+
+    /// Emitted units of image `img` as of cycle `vt` (engine guarantees
+    /// `now - vt < RING`).
+    fn emitted_at(&self, img: u64, vt: u64) -> u64 {
+        if self.finish_emit[img as usize] != u64::MAX && self.finish_emit[img as usize] <= vt {
+            return self.plan.p_total;
+        }
+        let (ring_img, ring_emitted) = self.ring[(vt % RING as u64) as usize];
+        if ring_img == img {
+            ring_emitted
+        } else if ring_img != u64::MAX && ring_img > img {
+            // The stage had moved past `img` by vt (finished earlier).
+            self.plan.p_total
+        } else {
+            0 // not started yet at vt
+        }
+    }
+}
+
+/// The engine.
+pub struct Engine {
+    stages: Vec<Stage>,
+    batch: bool,
+    images: u64,
+    injected: u64,
+    now: u64,
+    injections: Vec<u64>,
+    completions: Vec<u64>,
+    /// Images complete in order; only this index needs checking per cycle.
+    next_done: u64,
+}
+
+impl Engine {
+    /// `plans` from [`crate::pipeline::build_plans`]; `adjust` from the NoC
+    /// coupling; `batch` selects batch pipelining; `images` is the stream
+    /// length to simulate.
+    pub fn new(plans: &[StagePlan], adjust: &NocAdjust, batch: bool, images: u64) -> Self {
+        assert_eq!(adjust.extra_depth.len(), plans.len());
+        assert_eq!(adjust.rate_scale.len(), plans.len());
+        let stages = plans
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let s = Stage::new(
+                    p.clone(),
+                    adjust.extra_depth[i],
+                    adjust.rate_scale[i],
+                    images as usize,
+                );
+                assert!(s.depth < RING as u64, "stage depth exceeds ring");
+                s
+            })
+            .collect();
+        Self {
+            stages,
+            batch,
+            images,
+            injected: 0,
+            now: 0,
+            injections: vec![u64::MAX; images as usize],
+            completions: vec![u64::MAX; images as usize],
+            next_done: 0,
+        }
+    }
+
+    /// Run to completion of all images (or the safety cap) and return the
+    /// schedule.
+    pub fn run(mut self) -> SimResult {
+        // Generous cap: serial execution of everything at the *effective*
+        // (NoC-throttled) rates, times 4.
+        let serial: u64 = self
+            .stages
+            .iter()
+            .map(|s| (s.plan.p_total as f64 / s.rate).ceil() as u64 + s.depth)
+            .sum::<u64>()
+            .saturating_mul(self.images.max(1))
+            .saturating_mul(4)
+            .max(10_000);
+        while self.done_count() < self.images {
+            self.step();
+            assert!(
+                self.now < serial,
+                "engine exceeded safety cap {serial} (deadlock?)"
+            );
+        }
+        SimResult {
+            completions: self.completions,
+            injections: self.injections,
+            cycles: self.now,
+        }
+    }
+
+    /// Debug run: print per-stage progress every `every` cycles.
+    pub fn run_debug(mut self, max_cycles: u64, every: u64) -> SimResult {
+        while self.done_count() < self.images && self.now < max_cycles {
+            if self.now % every == 0 {
+                let prog: Vec<String> = self
+                    .stages
+                    .iter()
+                    .map(|s| {
+                        format!(
+                            "{}:{}/{}q{}",
+                            s.plan.name,
+                            s.emitted,
+                            s.plan.p_total,
+                            s.queue.len()
+                        )
+                    })
+                    .collect();
+                eprintln!("t={} {}", self.now, prog.join(" "));
+            }
+            self.step();
+        }
+        SimResult {
+            completions: self.completions,
+            injections: self.injections,
+            cycles: self.now,
+        }
+    }
+
+    fn done_count(&self) -> u64 {
+        self.next_done
+    }
+
+    fn step(&mut self) {
+        let now = self.now;
+        // Injection policy (evaluated at cycle start).
+        if self.injected < self.images {
+            let ready = if self.batch {
+                // stage 0 has finished (or never had) its previous image.
+                self.stages[0].queue.is_empty()
+            } else {
+                // whole network drained of the previous image.
+                self.injected == 0
+                    || self.completions[self.injected as usize - 1] != u64::MAX
+            };
+            if ready {
+                let img = self.injected;
+                for s in &mut self.stages {
+                    s.queue.push_back(img);
+                }
+                self.injections[img as usize] = now;
+                self.injected += 1;
+            }
+        }
+
+        // Stage updates. Stage i reads stage i-1's ring at (now - depth_i),
+        // which this cycle's writes never touch (depth >= 1), so in-order
+        // iteration is race-free.
+        for i in 0..self.stages.len() {
+            let (avail, prod_total) = if i == 0 {
+                (u64::MAX, u64::MAX)
+            } else {
+                let img = match self.stages[i].queue.front() {
+                    Some(&img) => img,
+                    None => {
+                        self.write_ring(i);
+                        continue;
+                    }
+                };
+                let delay = self.stages[i].depth;
+                let prod = &self.stages[i - 1];
+                let vt = now.saturating_sub(delay);
+                (prod.emitted_at(img, vt), prod.plan.p_total)
+            };
+            let s = &mut self.stages[i];
+            if let Some(&img) = s.queue.front() {
+                let can = s
+                    .plan
+                    .demand
+                    .emittable(avail, prod_total, s.plan.p_total);
+                if can > s.emitted {
+                    if let Some(r) = s.rate_int {
+                        // Fast path: unthrottled integer rate (no credit).
+                        s.emitted += r.min(can - s.emitted);
+                    } else {
+                        s.credit += s.rate;
+                        let burst = s.credit.floor() as u64;
+                        let emit = burst.min(can - s.emitted);
+                        s.credit -= emit as f64;
+                        // Cap credit so idle periods don't bank an
+                        // unbounded burst.
+                        s.credit = s.credit.min(s.rate.max(1.0));
+                        s.emitted += emit;
+                    }
+                }
+                if s.emitted >= s.plan.p_total {
+                    s.finish_emit[img as usize] = now;
+                    s.queue.pop_front();
+                    s.emitted = 0;
+                    s.credit = 0.0;
+                }
+            }
+            self.write_ring(i);
+        }
+        // Image completes when the last stage's tail drains its pipe.
+        // Stages process images in order, so completions fill in order.
+        let last = self.stages.last().unwrap();
+        while self.next_done < self.images {
+            let f = last.finish_emit[self.next_done as usize];
+            if f == u64::MAX || f + last.depth > now {
+                break;
+            }
+            self.completions[self.next_done as usize] = f + last.depth;
+            self.next_done += 1;
+        }
+        self.now += 1;
+    }
+
+    fn write_ring(&mut self, i: usize) {
+        let s = &mut self.stages[i];
+        let entry = match s.queue.front() {
+            Some(&img) => (img, s.emitted),
+            None => (u64::MAX, 0),
+        };
+        s.ring[(self.now % RING as u64) as usize] = entry;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::{vgg, VggVariant};
+    use crate::config::ArchConfig;
+    use crate::mapping::{NetworkMapping, ReplicationPlan};
+    use crate::pipeline::build_plans;
+
+    fn vgg_plans(v: VggVariant, repl: bool) -> Vec<StagePlan> {
+        let arch = ArchConfig::paper_node();
+        let net = vgg::build(v);
+        let plan = if repl {
+            ReplicationPlan::fig7(v)
+        } else {
+            ReplicationPlan::none(&net)
+        };
+        let m = NetworkMapping::build(&net, &arch, &plan).unwrap();
+        build_plans(&net, &m, &arch)
+    }
+
+    fn run(v: VggVariant, repl: bool, batch: bool, images: u64) -> SimResult {
+        let plans = vgg_plans(v, repl);
+        let adj = NocAdjust::identity(plans.len());
+        Engine::new(&plans, &adj, batch, images).run()
+    }
+
+    #[test]
+    fn single_image_latency_exceeds_conv1_stream() {
+        let r = run(VggVariant::A, false, false, 1);
+        let lat = r.latencies()[0];
+        // conv1 streams 50176 cycles; the rest overlaps behind it.
+        assert!(lat >= 50176, "latency {lat}");
+        assert!(lat < 3 * 50176, "latency {lat} suspiciously large");
+    }
+
+    #[test]
+    fn batch_interval_converges_to_max_occupancy() {
+        let r = run(VggVariant::E, true, true, 10);
+        let interval = r.steady_interval();
+        // Fig. 7 VGG-E: busiest stage 3136 cycles/image.
+        assert!(
+            (interval - 3136.0).abs() <= 64.0,
+            "interval {interval} != ~3136"
+        );
+    }
+
+    #[test]
+    fn batch_pipelining_speedup_is_modest_without_replication() {
+        // Fig. 5: geomean (2) vs (1) = 1.0309x.
+        let no_batch = run(VggVariant::D, false, false, 8);
+        let batch = run(VggVariant::D, false, true, 8);
+        let s = no_batch.steady_interval() / batch.steady_interval();
+        assert!((1.0..1.35).contains(&s), "speedup {s}");
+    }
+
+    #[test]
+    fn replication_speedup_is_order_ten() {
+        // Fig. 5: geomean (3) vs (1) = 10.1788x.
+        let base = run(VggVariant::E, false, false, 4);
+        let repl = run(VggVariant::E, true, false, 4);
+        let s = base.steady_interval() / repl.steady_interval();
+        assert!((5.0..20.0).contains(&s), "speedup {s}");
+    }
+
+    #[test]
+    fn full_pipelining_speedup_near_sixteen() {
+        // Paper: "for the best pipelining setup in scenario (4), it achieves
+        // a speedup close to 16x".
+        let base = run(VggVariant::E, false, false, 4);
+        let both = run(VggVariant::E, true, true, 10);
+        let s = base.steady_interval() / both.steady_interval();
+        assert!((10.0..20.0).contains(&s), "speedup {s}");
+    }
+
+    #[test]
+    fn completions_monotone_and_dependencies_hold() {
+        let r = run(VggVariant::B, true, true, 6);
+        for w in r.completions.windows(2) {
+            assert!(w[0] < w[1], "completions not monotone: {:?}", w);
+        }
+        for (inj, comp) in r.injections.iter().zip(&r.completions) {
+            assert!(inj < comp);
+        }
+    }
+
+    #[test]
+    fn rate_throttle_slows_pipeline() {
+        let plans = vgg_plans(VggVariant::A, true);
+        let n = plans.len();
+        let id = NocAdjust::identity(n);
+        let fast = Engine::new(&plans, &id, true, 6).run();
+        let throttled = NocAdjust {
+            extra_depth: vec![2; n],
+            rate_scale: vec![0.5; n],
+        };
+        let slow = Engine::new(&plans, &throttled, true, 6).run();
+        assert!(
+            slow.steady_interval() > 1.5 * fast.steady_interval(),
+            "throttle had no effect: {} vs {}",
+            slow.steady_interval(),
+            fast.steady_interval()
+        );
+    }
+}

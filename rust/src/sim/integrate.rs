@@ -1,0 +1,264 @@
+//! Processing ↔ interconnect co-simulation (Sec. VI): run the mapped CNN's
+//! flow set through the flit-level NoC, convert measured latency and
+//! acceptance into per-stage adjustments, and evaluate the full benchmark
+//! grid (VGG x scenario x NoC) — the machinery behind Figs. 5, 6, 8, 9.
+
+use crate::cnn::{vgg, Network, VggVariant};
+use crate::config::{ArchConfig, NocKind, Scenario};
+use crate::mapping::{NetworkMapping, Placement, ReplicationPlan};
+use crate::noc::sim::run_flows_detailed;
+use crate::noc::Mesh;
+use crate::pipeline::{build_plans, StagePlan};
+use crate::power::{EnergyBreakdown, EnergyModel};
+
+use super::engine::{Engine, NocAdjust, SimResult};
+use super::traffic::{extract_flows, flatten, LayerFlows};
+
+/// Router parameters used for the CNN mesh. The paper ran two separate
+/// garnet experiments with their own configs: the synthetic study (Sec. VII,
+/// 8x8 mesh — see `SyntheticConfig`) and this full-system co-simulation
+/// (Sec. VI, 16x20). Here the wormhole baseline keeps the node's multi-stage
+/// router with standard 4-flit buffers (per-port service ~ depth/(latency+2)
+/// ≈ 0.66 flits/cycle — putting the replicated conv1/conv2 hotspot a few
+/// percent past stability, which is what places wormhole behind SMART in
+/// Figs. 6/8); SMART routers are single-cycle with bypass.
+pub fn router_params(kind: NocKind) -> (u64, usize) {
+    match kind {
+        NocKind::Smart => (1, 4),
+        _ => (4, 4),
+    }
+}
+
+/// NoC measurement window (NoC cycles).
+const NOC_WARMUP: u64 = 3_000;
+const NOC_MEASURE: u64 = 12_000;
+const NOC_DRAIN: u64 = 30_000;
+
+/// Assess the NoC's impact on a mapped pipeline.
+pub fn assess_noc(
+    kind: NocKind,
+    net: &Network,
+    mapping: &NetworkMapping,
+    placement: &Placement,
+    plans: &[StagePlan],
+    arch: &ArchConfig,
+) -> (NocAdjust, Vec<LayerFlows>) {
+    let layer_flows = extract_flows(net, mapping, placement, plans, arch);
+    let n = plans.len();
+    let mut adjust = NocAdjust::identity(n);
+    if matches!(kind, NocKind::Ideal) {
+        // One-cycle fabric: a logical cycle always covers the hop.
+        return (adjust, layer_flows);
+    }
+    let (flows, owner) = flatten(&layer_flows);
+    if flows.is_empty() {
+        return (adjust, layer_flows);
+    }
+    let (rl, depth) = router_params(kind);
+    let mesh = Mesh::new(arch.tiles_x, arch.tiles_y);
+    let stats = run_flows_detailed(
+        kind,
+        mesh,
+        &flows,
+        NOC_WARMUP,
+        NOC_MEASURE,
+        NOC_DRAIN,
+        arch.hpc_max,
+        rl,
+        depth,
+    );
+    let phi = arch.noc_cycles_per_logical();
+    // Aggregate per layer, weighted by offered packets: the stage's
+    // effective acceptance is total completed / total offered across its
+    // flows (a min over flows would amplify sampling noise on the many
+    // near-zero-rate flows), and its transfer latency is the
+    // offered-weighted mean.
+    let mut lat_sum = vec![0.0f64; n];
+    let mut lat_w = vec![0.0f64; n];
+    let mut offered = vec![0u64; n];
+    let mut completed = vec![0u64; n];
+    for (fi, s) in stats.iter().enumerate() {
+        let li = owner[fi];
+        if s.completed > 0 {
+            lat_sum[li] += s.avg_latency * s.offered_window as f64;
+            lat_w[li] += s.offered_window as f64;
+        }
+        offered[li] += s.offered_window;
+        completed[li] += s.completed_window;
+    }
+    for li in 0..n {
+        if lat_w[li] > 0.0 {
+            let mean_lat = lat_sum[li] / lat_w[li];
+            // Transfer latency delays when the *next* stage sees the data.
+            let extra = (mean_lat / phi).ceil() as u64;
+            if li + 1 < n {
+                adjust.extra_depth[li + 1] += extra;
+            }
+        }
+        // A saturated mesh throttles the producer's streaming rate.
+        adjust.rate_scale[li] = if offered[li] == 0 {
+            1.0
+        } else {
+            (completed[li] as f64 / offered[li] as f64).clamp(0.05, 1.0)
+        };
+    }
+    (adjust, layer_flows)
+}
+
+/// One benchmark point's results (a cell of Fig. 8 / a bar of Figs. 5-6).
+#[derive(Debug, Clone)]
+pub struct PerfReport {
+    pub variant: VggVariant,
+    pub scenario: Scenario,
+    pub noc: NocKind,
+    /// Steady-state injection interval (logical cycles).
+    pub interval_cycles: f64,
+    /// Per-image latency (logical cycles, steady state).
+    pub latency_cycles: f64,
+    /// Frames per second at the calibrated logical clock.
+    pub fps: f64,
+    /// Tera-operations per second (1 MAC = 2 ops).
+    pub tops: f64,
+    /// Per-image energy breakdown.
+    pub energy: EnergyBreakdown,
+    /// Energy efficiency.
+    pub tops_per_watt: f64,
+    /// Raw schedule (completions/injections) for deeper analysis.
+    pub sim: SimResult,
+}
+
+/// Number of images simulated per benchmark point (enough for a stable
+/// steady-state interval; the pipeline is periodic after the first image).
+pub fn default_images(scenario: Scenario) -> u64 {
+    if scenario.batch() {
+        10
+    } else {
+        4
+    }
+}
+
+/// Evaluate one (VGG, scenario, NoC) benchmark — the paper's unit of
+/// evaluation (60 in total).
+pub fn evaluate(variant: VggVariant, scenario: Scenario, noc: NocKind, arch: &ArchConfig) -> PerfReport {
+    let net = vgg::build(variant);
+    let plan = if scenario.replication() {
+        ReplicationPlan::fig7(variant)
+    } else {
+        ReplicationPlan::none(&net)
+    };
+    let mapping = NetworkMapping::build(&net, arch, &plan).expect("mapping must fit");
+    let placement = Placement::snake(arch);
+    let plans = build_plans(&net, &mapping, arch);
+    let (adjust, layer_flows) = assess_noc(noc, &net, &mapping, &placement, &plans, arch);
+    let images = default_images(scenario);
+    let sim = Engine::new(&plans, &adjust, scenario.batch(), images).run();
+
+    let interval = sim.steady_interval();
+    let lats = sim.latencies();
+    let latency = lats[lats.len() / 2..]
+        .iter()
+        .map(|&l| l as f64)
+        .sum::<f64>()
+        / (lats.len() - lats.len() / 2) as f64;
+    let t_log_s = arch.logical_cycle_ns * 1e-9;
+    let fps = 1.0 / (interval * t_log_s);
+    let ops = net.ops() as f64;
+    let tops = fps * ops / 1e12;
+
+    let em = EnergyModel::new(arch);
+    let mean_hops: Vec<f64> = layer_flows.iter().map(|l| l.mean_hops).collect();
+    let energy = em.image_energy(&net, &mapping, &mean_hops);
+    let tops_per_watt = em.tops_per_watt(&net, &energy);
+
+    PerfReport {
+        variant,
+        scenario,
+        noc,
+        interval_cycles: interval,
+        latency_cycles: latency,
+        fps,
+        tops,
+        energy,
+        tops_per_watt,
+        sim,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arch() -> ArchConfig {
+        ArchConfig::paper_node()
+    }
+
+    #[test]
+    fn ideal_assess_is_identity() {
+        let a = arch();
+        let net = vgg::build(VggVariant::A);
+        let plan = ReplicationPlan::fig7(VggVariant::A);
+        let m = NetworkMapping::build(&net, &a, &plan).unwrap();
+        let p = Placement::snake(&a);
+        let plans = build_plans(&net, &m, &a);
+        let (adj, _) = assess_noc(NocKind::Ideal, &net, &m, &p, &plans, &a);
+        assert!(adj.extra_depth.iter().all(|&d| d == 0));
+        assert!(adj.rate_scale.iter().all(|&s| s == 1.0));
+    }
+
+    #[test]
+    fn vgg_e_best_case_near_paper() {
+        // Fig. 8 ideal scenario (4): 40.9131 TOPS / 1042 FPS. Our interval
+        // is calibrated to 3136 cycles; fps = 1/(3136 * 306ns) = 1042.
+        let r = evaluate(
+            VggVariant::E,
+            Scenario::ReplicationBatch,
+            NocKind::Ideal,
+            &arch(),
+        );
+        assert!((r.fps - 1042.0).abs() < 40.0, "fps {}", r.fps);
+        assert!((r.tops - 40.9).abs() < 2.0, "tops {}", r.tops);
+    }
+
+    #[test]
+    fn scenario_ordering_holds() {
+        // (4) >= (3) >= (1) and (4) >= (2) >= (1) in throughput.
+        let a = arch();
+        let f = |s| {
+            evaluate(VggVariant::A, s, NocKind::Ideal, &a).fps
+        };
+        let f1 = f(Scenario::Baseline);
+        let f2 = f(Scenario::BatchOnly);
+        let f3 = f(Scenario::ReplicationOnly);
+        let f4 = f(Scenario::ReplicationBatch);
+        assert!(f2 >= f1 * 0.999, "batch {f2} < baseline {f1}");
+        assert!(f3 > 5.0 * f1, "repl {f3} vs baseline {f1}");
+        assert!(f4 >= f3 * 0.999, "both {f4} < repl {f3}");
+    }
+
+    #[test]
+    fn smart_between_wormhole_and_ideal() {
+        // Fig. 6/8: wormhole <= smart <= ideal in throughput.
+        let a = arch();
+        let f = |k| evaluate(VggVariant::E, Scenario::ReplicationBatch, k, &a).fps;
+        let w = f(NocKind::Wormhole);
+        let s = f(NocKind::Smart);
+        let i = f(NocKind::Ideal);
+        assert!(w <= s * 1.001, "wormhole {w} > smart {s}");
+        assert!(s <= i * 1.001, "smart {s} > ideal {i}");
+    }
+
+    #[test]
+    fn energy_efficiency_in_band() {
+        // Fig. 9 band: 2.5 - 3.6 TOPS/W across the VGGs.
+        let a = arch();
+        for v in VggVariant::ALL {
+            let r = evaluate(v, Scenario::ReplicationBatch, NocKind::Ideal, &a);
+            assert!(
+                (1.5..6.0).contains(&r.tops_per_watt),
+                "{}: {} TOPS/W",
+                v.name(),
+                r.tops_per_watt
+            );
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Cycle-accurate system simulation: the streaming pipeline engine, CNN
+//! traffic extraction, and the processing/NoC co-evaluation that produces
+//! the paper's benchmark grid.
+
+pub mod engine;
+pub mod integrate;
+pub mod trace;
+pub mod traffic;
+
+pub use engine::{Engine, NocAdjust, SimResult};
+pub use integrate::{assess_noc, evaluate, PerfReport};
+pub use trace::{gantt, windows, Window};
+pub use traffic::{extract_flows, LayerFlows};

@@ -1,0 +1,176 @@
+//! Inter-layer NoC traffic extraction: turn a mapped, placed network plus a
+//! pipeline schedule into the point-to-point flow set the mesh must carry
+//! while the pipeline streams (Sec. VI's processing/interconnect co-model).
+
+use crate::cnn::Network;
+use crate::config::ArchConfig;
+use crate::mapping::{NetworkMapping, Placement};
+use crate::noc::Flow;
+use crate::pipeline::StagePlan;
+
+/// Flows of one producer layer (layer i -> layer i+1), with bookkeeping to
+/// map NoC results back to stages.
+#[derive(Debug, Clone)]
+pub struct LayerFlows {
+    pub layer_idx: usize,
+    pub flows: Vec<Flow>,
+    /// Mean XY hop count across the flow set (for Eq. (3)-style reporting
+    /// and the energy model).
+    pub mean_hops: f64,
+}
+
+/// Extract flows. `noc_cycles_per_logical` converts the pipeline's
+/// per-logical-cycle emission rates into NoC-clock packet rates.
+pub fn extract_flows(
+    net: &Network,
+    mapping: &NetworkMapping,
+    placement: &Placement,
+    plans: &[StagePlan],
+    arch: &ArchConfig,
+) -> Vec<LayerFlows> {
+    let phi = arch.noc_cycles_per_logical();
+    let layers = net.layers();
+    let mut out = Vec::new();
+    for i in 0..layers.len() {
+        let producer = &layers[i];
+        let src_tiles = &mapping.layers[i].tile_ids;
+        // The last layer streams its logits off-chip through tile 0's
+        // router; intermediate layers feed the next layer's tiles.
+        let dst_tiles: Vec<usize> = if i + 1 < layers.len() {
+            mapping.layers[i + 1].tile_ids.clone()
+        } else {
+            vec![0]
+        };
+        // Values leaving layer i per image: pooled OFM (the MP unit runs
+        // before the OR/tile boundary).
+        let (oh, ow) = producer.out_hw();
+        let values = (oh * ow * producer.out_ch()) as f64;
+        let flits_per_image = values / arch.values_per_flit() as f64;
+        // The layer streams its image over `occupancy` logical cycles.
+        let occupancy = plans[i].p_total.div_ceil(plans[i].rate).max(1) as f64;
+        let flits_per_noc_cycle = flits_per_image / (occupancy * phi);
+        // Packetize: one packet carries one destination-bound pixel group,
+        // capped at 8 flits (64 values) to keep worms bounded.
+        let packet_len = ((producer.out_ch() / arch.values_per_flit()).clamp(1, 8)) as u16;
+        let n_flows = (src_tiles.len() * dst_tiles.len()) as f64;
+        let pkts_per_cycle_per_flow =
+            flits_per_noc_cycle / packet_len as f64 / n_flows;
+        let mut flows = Vec::with_capacity(src_tiles.len() * dst_tiles.len());
+        let mut hop_sum = 0.0;
+        for &s in src_tiles {
+            for &d in dst_tiles.iter() {
+                let src = placement.node_of(s);
+                let dst = placement.node_of(d);
+                if src == dst {
+                    continue; // same router: the tile bus handles it
+                }
+                hop_sum += placement.coord(s).hops(&placement.coord(d)) as f64;
+                flows.push(Flow {
+                    src,
+                    dst,
+                    packets_per_cycle: pkts_per_cycle_per_flow,
+                    packet_len,
+                });
+            }
+        }
+        let mean_hops = if flows.is_empty() {
+            0.0
+        } else {
+            hop_sum / flows.len() as f64
+        };
+        out.push(LayerFlows {
+            layer_idx: i,
+            flows,
+            mean_hops,
+        });
+    }
+    out
+}
+
+/// Flatten for the NoC driver, remembering which flow belongs to which
+/// layer.
+pub fn flatten(layer_flows: &[LayerFlows]) -> (Vec<Flow>, Vec<usize>) {
+    let mut flows = Vec::new();
+    let mut owner = Vec::new();
+    for lf in layer_flows {
+        for &f in &lf.flows {
+            flows.push(f);
+            owner.push(lf.layer_idx);
+        }
+    }
+    (flows, owner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::{vgg, VggVariant};
+    use crate::mapping::ReplicationPlan;
+    use crate::pipeline::build_plans;
+
+    fn setup() -> (Network, NetworkMapping, Placement, Vec<StagePlan>, ArchConfig) {
+        let arch = ArchConfig::paper_node();
+        let net = vgg::build(VggVariant::E);
+        let plan = ReplicationPlan::fig7(VggVariant::E);
+        let m = NetworkMapping::build(&net, &arch, &plan).unwrap();
+        let p = Placement::snake(&arch);
+        let plans = build_plans(&net, &m, &arch);
+        (net, m, p, plans, arch)
+    }
+
+    #[test]
+    fn flows_cover_every_layer() {
+        let (net, m, p, plans, arch) = setup();
+        let lf = extract_flows(&net, &m, &p, &plans, &arch);
+        assert_eq!(lf.len(), net.len());
+        // Multi-tile adjacent layers must produce traffic.
+        assert!(lf.iter().any(|l| !l.flows.is_empty()));
+    }
+
+    #[test]
+    fn rates_are_positive_and_bounded() {
+        let (net, m, p, plans, arch) = setup();
+        let lf = extract_flows(&net, &m, &p, &plans, &arch);
+        for l in &lf {
+            for f in &l.flows {
+                assert!(f.packets_per_cycle > 0.0, "layer {}", l.layer_idx);
+                assert!(
+                    f.packets_per_cycle < 1.0,
+                    "layer {} flow rate {} (> 1 pkt/cycle/flow is unschedulable)",
+                    l.layer_idx,
+                    f.packets_per_cycle
+                );
+                assert!((1..=8).contains(&f.packet_len));
+            }
+        }
+    }
+
+    #[test]
+    fn snake_placement_keeps_hops_low() {
+        let (net, m, p, plans, arch) = setup();
+        let lf = extract_flows(&net, &m, &p, &plans, &arch);
+        // Exclude the final layer: its logits leave through tile 0's router,
+        // which is legitimately far from the last FC tiles.
+        let worst = lf[..lf.len() - 1]
+            .iter()
+            .filter(|l| !l.flows.is_empty())
+            .map(|l| l.mean_hops)
+            .fold(0.0f64, f64::max);
+        // Adjacent layers sit in adjacent snake runs; mean hops should stay
+        // far below the mesh diameter (34).
+        assert!(worst < 12.0, "worst mean hops {worst}");
+        let _ = net;
+    }
+
+    #[test]
+    fn flatten_preserves_ownership() {
+        let (net, m, p, plans, arch) = setup();
+        let lf = extract_flows(&net, &m, &p, &plans, &arch);
+        let (flows, owner) = flatten(&lf);
+        assert_eq!(flows.len(), owner.len());
+        let total: usize = lf.iter().map(|l| l.flows.len()).sum();
+        assert_eq!(flows.len(), total);
+        assert!(owner.windows(2).all(|w| w[0] <= w[1]));
+        let _ = net;
+    }
+}

@@ -1,0 +1,159 @@
+//! Micro/macro benchmark harness (the vendored crate set has no criterion).
+//!
+//! Provides warmup, a target measurement time, outlier-robust statistics and
+//! a criterion-like one-line report. Each `rust/benches/*.rs` binary builds
+//! on this: `cargo bench` runs them all.
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+/// Result of one benchmark: per-iteration wall times in seconds.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> f64 {
+        stats::mean(&self.samples)
+    }
+
+    pub fn median(&self) -> f64 {
+        stats::percentile(&self.samples, 50.0)
+    }
+
+    pub fn stddev(&self) -> f64 {
+        stats::stddev(&self.samples)
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} time: [{} {} {}]  ({} samples)",
+            self.name,
+            fmt_duration(stats::percentile(&self.samples, 5.0)),
+            fmt_duration(self.median()),
+            fmt_duration(stats::percentile(&self.samples, 95.0)),
+            self.samples.len(),
+        )
+    }
+}
+
+/// Format seconds with an auto-scaled unit, criterion style.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{:.3} s", secs)
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} us", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// Benchmark runner with warmup and a measurement budget.
+pub struct Bencher {
+    warmup: Duration,
+    measure: Duration,
+    max_samples: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new(Duration::from_millis(300), Duration::from_secs(2), 200)
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: Duration, measure: Duration, max_samples: usize) -> Self {
+        Self {
+            warmup,
+            measure,
+            max_samples,
+            results: Vec::new(),
+        }
+    }
+
+    /// Quick harness for long-running macro benches: fewer, longer samples.
+    pub fn macro_bench() -> Self {
+        Self::new(Duration::ZERO, Duration::from_secs(1), 10)
+    }
+
+    /// Run `f` repeatedly; `f` returns a value that is black-boxed to stop
+    /// the optimizer eliding the work.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            black_box(f());
+        }
+        // Measure.
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.measure && samples.len() < self.max_samples {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        if samples.is_empty() {
+            // Guarantee at least one sample for pathological cases.
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            samples,
+        };
+        println!("{}", res.report());
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Opaque value sink (stable-Rust `black_box` substitute usable pre-1.66 and
+/// guaranteed side-effectful via `read_volatile`).
+pub fn black_box<T>(x: T) -> T {
+    unsafe {
+        let ret = std::ptr::read_volatile(&x);
+        std::mem::forget(x);
+        ret
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let mut b = Bencher::new(Duration::ZERO, Duration::from_millis(50), 20);
+        let r = b.bench("noop", || 1 + 1);
+        assert!(!r.samples.is_empty());
+        assert!(r.samples.len() <= 20);
+    }
+
+    #[test]
+    fn fmt_duration_scales() {
+        assert!(fmt_duration(2.0).ends_with(" s"));
+        assert!(fmt_duration(2e-3).ends_with(" ms"));
+        assert!(fmt_duration(2e-6).ends_with(" us"));
+        assert!(fmt_duration(2e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn report_contains_name() {
+        let r = BenchResult {
+            name: "abc".into(),
+            samples: vec![0.001, 0.002, 0.0015],
+        };
+        assert!(r.report().contains("abc"));
+    }
+}

@@ -1,0 +1,143 @@
+//! Minimal CLI argument parsing (the vendored crate set has no `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional arguments,
+//! which covers every binary in this repository. Unknown flags are an error
+//! so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// `--key value` / `--key=value` options.
+    opts: BTreeMap<String, String>,
+    /// bare `--flag` switches.
+    flags: Vec<String>,
+    /// positional arguments in order.
+    pos: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    ///
+    /// `known_flags` lists switches that take no value; everything else that
+    /// starts with `--` is treated as a key expecting a value.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        argv: I,
+        known_flags: &[&str],
+    ) -> Result<Self, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| format!("--{body} expects a value"))?;
+                    out.opts.insert(body.to_string(), v);
+                }
+            } else {
+                out.pos.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env(known_flags: &[&str]) -> Result<Self, String> {
+        Self::parse(std::env::args().skip(1), known_flags)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| format!("--{name} {s:?}: {e}")),
+        }
+    }
+
+    pub fn get_parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.get_parse(name)?.unwrap_or(default))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.pos
+    }
+
+    /// Reject any option not in `allowed` (flags were validated at parse).
+    pub fn check_known(&self, allowed: &[&str]) -> Result<(), String> {
+        for k in self.opts.keys() {
+            if !allowed.contains(&k.as_str()) {
+                return Err(format!("unknown option --{k} (allowed: {allowed:?})"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str], flags: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string()), flags).unwrap()
+    }
+
+    #[test]
+    fn parses_key_value_forms() {
+        let a = parse(&["--seed", "42", "--mesh=8x8", "run"], &[]);
+        assert_eq!(a.get("seed"), Some("42"));
+        assert_eq!(a.get("mesh"), Some("8x8"));
+        assert_eq!(a.positional(), &["run".to_string()]);
+    }
+
+    #[test]
+    fn parses_flags() {
+        let a = parse(&["--verbose", "--n", "3"], &["verbose"]);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.get_parse_or::<u32>("n", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let r = Args::parse(["--seed".to_string()], &[]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn bad_parse_is_error() {
+        let a = parse(&["--n", "abc"], &[]);
+        assert!(a.get_parse::<u32>("n").is_err());
+    }
+
+    #[test]
+    fn check_known_rejects_typos() {
+        let a = parse(&["--sed", "42"], &[]);
+        assert!(a.check_known(&["seed"]).is_err());
+        let a = parse(&["--seed", "42"], &[]);
+        assert!(a.check_known(&["seed"]).is_ok());
+    }
+}

@@ -1,0 +1,16 @@
+//! Self-contained utility substrate: PRNG, statistics, tables, CLI parsing,
+//! bench harness and a property-testing micro-framework.
+//!
+//! These exist because the build environment is fully offline: the vendored
+//! crate set has no `rand`, `clap`, `criterion` or `proptest`
+//! (DESIGN.md §1, substitution 4).
+
+pub mod bench;
+pub mod cli;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+pub use rng::Rng;
+pub use table::Table;

@@ -1,0 +1,160 @@
+//! Property-testing micro-framework (the vendored crate set has no
+//! `proptest`), used by `rust/tests/prop_*.rs`.
+//!
+//! Philosophy: a property is a function `Fn(&mut Rng) -> Result<(), String>`
+//! that draws its own random case and checks an invariant. The runner
+//! executes many seeded cases; on failure it retries the failing seed with
+//! progressively "smaller" size hints (a lightweight stand-in for proptest
+//! shrinking — generators take the size from [`Gen::size`]) and reports the
+//! seed so the failure replays deterministically.
+
+use super::rng::Rng;
+
+/// Generation context: a seeded RNG plus a size hint in `[0, 100]`.
+pub struct Gen {
+    pub rng: Rng,
+    size: u32,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: u32) -> Self {
+        Self {
+            rng: Rng::new(seed),
+            size,
+        }
+    }
+
+    /// Size hint; generators should scale collection lengths / magnitudes by
+    /// this so shrink passes produce smaller counterexamples.
+    pub fn size(&self) -> u32 {
+        self.size
+    }
+
+    /// An integer in `[1, max]` scaled by the size hint (at least 1).
+    pub fn scaled(&mut self, max: usize) -> usize {
+        let eff = ((max as u64 * self.size as u64) / 100).max(1);
+        1 + self.rng.below(eff) as usize
+    }
+
+    /// A vector with scaled length, elements from `f`.
+    pub fn vec_of<T>(&mut self, max_len: usize, mut f: impl FnMut(&mut Rng) -> T) -> Vec<T> {
+        let len = self.scaled(max_len);
+        (0..len).map(|_| f(&mut self.rng)).collect()
+    }
+}
+
+/// Configuration for a property run.
+pub struct Config {
+    pub cases: u32,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // SMART_PIM_PROP_CASES / SMART_PIM_PROP_SEED override for deep runs
+        // and failure replay.
+        let cases = std::env::var("SMART_PIM_PROP_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(64);
+        let seed = std::env::var("SMART_PIM_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0x5EED_CAFE);
+        Self { cases, seed }
+    }
+}
+
+/// Run `prop` for `cfg.cases` random cases. Panics with the failing seed and
+/// the smallest size at which the failure reproduces.
+pub fn check(name: &str, cfg: &Config, mut prop: impl FnMut(&mut Gen) -> Result<(), String>) {
+    let mut meta = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let case_seed = meta.next_u64();
+        let mut g = Gen::new(case_seed, 100);
+        if let Err(msg) = prop(&mut g) {
+            // "Shrink": find the smallest size hint that still fails.
+            let mut best = (100u32, msg);
+            for size in [50, 25, 12, 6, 3, 1] {
+                let mut g = Gen::new(case_seed, size);
+                if let Err(m) = prop(&mut g) {
+                    best = (size, m);
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {case_seed:#x}, \
+                 min failing size {}): {}\nreplay: SMART_PIM_PROP_SEED={} cargo test",
+                best.0, best.1, cfg.seed
+            );
+        }
+    }
+}
+
+/// Assert-like helper returning `Err` for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+/// Equality helper with value dump.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {} ({:?} vs {:?})",
+                stringify!($a),
+                stringify!($b),
+                a,
+                b
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        let cfg = Config {
+            cases: 32,
+            seed: 1,
+        };
+        check("reverse-involutive", &cfg, |g| {
+            let v = g.vec_of(64, |r| r.next_u64());
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            prop_assert_eq!(v, w);
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_reports_seed() {
+        let cfg = Config { cases: 4, seed: 2 };
+        check("always-fails", &cfg, |_g| Err("nope".into()));
+    }
+
+    #[test]
+    fn scaled_respects_size() {
+        let mut g = Gen::new(3, 1);
+        for _ in 0..100 {
+            assert!(g.scaled(100) <= 2);
+        }
+        let mut g = Gen::new(3, 100);
+        let mut saw_big = false;
+        for _ in 0..100 {
+            saw_big |= g.scaled(100) > 50;
+        }
+        assert!(saw_big);
+    }
+}

@@ -1,0 +1,87 @@
+//! End-to-end: the serving coordinator (batcher + worker thread + PJRT
+//! executable) under a synthetic request stream — the full L3 request path.
+//! Skips when artifacts are absent.
+
+use std::path::Path;
+
+use smart_pim::coordinator::{BatchPolicy, Server};
+use smart_pim::runtime::vgg_tiny::IMAGE_LEN;
+use smart_pim::runtime::{Runtime, VggTiny};
+use smart_pim::util::Rng;
+
+fn have_artifacts() -> bool {
+    let ok = Path::new("artifacts/vgg_tiny_b4.hlo.txt").exists();
+    if !ok {
+        eprintln!("skipping: artifacts missing — run `make artifacts`");
+    }
+    ok
+}
+
+fn image(rng: &mut Rng) -> Vec<f32> {
+    (0..IMAGE_LEN).map(|_| rng.next_f64() as f32).collect()
+}
+
+#[test]
+fn serve_burst_all_respond() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut server = Server::start("artifacts".into(), BatchPolicy::default()).unwrap();
+    let mut rng = Rng::new(11);
+    let n = 8;
+    let pending: Vec<_> = (0..n).map(|_| server.submit(image(&mut rng))).collect();
+    let mut ids = Vec::new();
+    for rx in pending {
+        let resp = rx.recv().expect("worker alive").expect("inference ok");
+        assert_eq!(resp.logits.len(), 10);
+        assert!(resp.class < 10);
+        ids.push(resp.id);
+    }
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), n, "duplicate or missing responses");
+    let stats = server.shutdown();
+    assert_eq!(stats.served, n as u64);
+    // A burst of 8 must have used large batches, not 8 singles.
+    assert!(stats.batches <= 4, "batches {}", stats.batches);
+}
+
+#[test]
+fn serve_results_match_direct_inference() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = Runtime::new("artifacts").unwrap();
+    let direct = VggTiny::load(&rt).unwrap();
+    let mut rng = Rng::new(23);
+    let img = image(&mut rng);
+    let want = direct.infer(&img).unwrap();
+
+    let mut server = Server::start("artifacts".into(), BatchPolicy::default()).unwrap();
+    let resp = server.infer(img).unwrap();
+    for (g, w) in resp.logits.iter().zip(&want) {
+        assert!((g - w).abs() < 1e-4, "served {g} vs direct {w}");
+    }
+    server.shutdown();
+}
+
+#[test]
+fn serve_rejects_malformed_image() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut server = Server::start("artifacts".into(), BatchPolicy::default()).unwrap();
+    let err = server.infer(vec![0.0; 17]).unwrap_err();
+    assert!(err.to_string().contains("floats"), "{err}");
+    // The server must keep serving after a bad request.
+    let mut rng = Rng::new(3);
+    let ok = server.infer(image(&mut rng)).unwrap();
+    assert_eq!(ok.logits.len(), 10);
+    server.shutdown();
+}
+
+#[test]
+fn missing_artifacts_fail_fast() {
+    let err = Server::start("/definitely/not/a/dir".into(), BatchPolicy::default());
+    assert!(err.is_err());
+}

@@ -1,0 +1,149 @@
+//! Integration: the NoC simulator end-to-end — the Fig. 10/11 saturation
+//! shapes and cross-flow-control comparisons on the 8x8 synthetic mesh.
+
+use smart_pim::config::NocKind;
+use smart_pim::noc::{run_flows, run_synthetic, Flow, Mesh, Pattern, SyntheticConfig};
+
+fn cfg(pattern: Pattern, rate: f64) -> SyntheticConfig {
+    SyntheticConfig {
+        pattern,
+        injection_rate: rate,
+        packet_len: 4,
+        warmup: 800,
+        measure: 3_000,
+        drain: 10_000,
+        seed: 0xBEEF,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn fig10_wormhole_saturates_near_paper_point() {
+    // Paper: wormhole saturates ~0.05 on uniform random.
+    let mesh = Mesh::new(8, 8);
+    let low = run_synthetic(NocKind::Wormhole, mesh, &cfg(Pattern::UniformRandom, 0.02), 14);
+    let high = run_synthetic(NocKind::Wormhole, mesh, &cfg(Pattern::UniformRandom, 0.12), 14);
+    assert!(!low.saturated(), "{low:?}");
+    assert!(high.saturated(), "{high:?}");
+}
+
+#[test]
+fn fig10_smart_saturates_much_later() {
+    // Paper: SMART saturates ~0.25 on uniform random.
+    let mesh = Mesh::new(8, 8);
+    let mid = run_synthetic(NocKind::Smart, mesh, &cfg(Pattern::UniformRandom, 0.2), 14);
+    let high = run_synthetic(NocKind::Smart, mesh, &cfg(Pattern::UniformRandom, 0.45), 14);
+    assert!(!mid.saturated(), "{mid:?}");
+    assert!(high.saturated(), "{high:?}");
+}
+
+#[test]
+fn fig10_neighbor_is_the_easy_pattern() {
+    // Paper: neighbor saturates at 0.2 (wormhole) / 0.8 (SMART).
+    let mesh = Mesh::new(8, 8);
+    let w = run_synthetic(NocKind::Wormhole, mesh, &cfg(Pattern::Neighbor, 0.12), 14);
+    assert!(!w.saturated(), "{w:?}");
+    let s = run_synthetic(NocKind::Smart, mesh, &cfg(Pattern::Neighbor, 0.7), 14);
+    assert!(!s.saturated(), "{s:?}");
+}
+
+#[test]
+fn fig11_reception_saturates_with_pattern_ordering() {
+    // Paper Fig. 11: saturated reception — neighbor >> uniform > bit_compl.
+    let mesh = Mesh::new(8, 8);
+    let at = |p: Pattern| {
+        run_synthetic(NocKind::Smart, mesh, &cfg(p, 0.9), 14).reception_rate
+    };
+    let n = at(Pattern::Neighbor);
+    let u = at(Pattern::UniformRandom);
+    let b = at(Pattern::BitComplement);
+    assert!(n > u, "neighbor {n} !> uniform {u}");
+    assert!(u > b, "uniform {u} !> bit_complement {b}");
+}
+
+#[test]
+fn all_patterns_all_kinds_deliver_at_low_load() {
+    let mesh = Mesh::new(8, 8);
+    for pattern in Pattern::ALL {
+        for kind in [NocKind::Wormhole, NocKind::Smart, NocKind::Ideal] {
+            let s = run_synthetic(kind, mesh, &cfg(pattern, 0.01), 14);
+            assert_eq!(
+                s.dropped,
+                0,
+                "{kind:?}/{} dropped {}",
+                pattern.name(),
+                s.dropped
+            );
+            assert!(s.completed > 0, "{kind:?}/{}", pattern.name());
+        }
+    }
+}
+
+#[test]
+fn hpc_max_monotone_latency() {
+    // Longer bypass runs can only help zero-load latency.
+    let mesh = Mesh::new(8, 8);
+    let lat = |hpc| {
+        run_synthetic(NocKind::Smart, mesh, &cfg(Pattern::BitComplement, 0.02), hpc)
+            .avg_net_latency
+    };
+    let l1 = lat(1);
+    let l4 = lat(4);
+    let l14 = lat(14);
+    assert!(l4 < l1, "hpc4 {l4} !< hpc1 {l1}");
+    assert!(l14 <= l4 + 1.0, "hpc14 {l14} > hpc4 {l4}");
+}
+
+#[test]
+fn smart_with_hpc1_matches_wormhole_engine() {
+    // SMART degenerates to wormhole when HPC_max = 1 and the router
+    // pipeline matches.
+    let mesh = Mesh::new(8, 8);
+    let mut c = cfg(Pattern::Transpose, 0.05);
+    c.smart_router = c.wormhole_router;
+    let s = run_synthetic(NocKind::Smart, mesh, &c, 1);
+    let w = run_synthetic(NocKind::Wormhole, mesh, &c, 1);
+    assert!(
+        (s.avg_net_latency - w.avg_net_latency).abs() < 1e-9,
+        "smart@hpc1 {} != wormhole {}",
+        s.avg_net_latency,
+        w.avg_net_latency
+    );
+}
+
+#[test]
+fn flow_traffic_latency_reflects_distance() {
+    let mesh = Mesh::new(8, 8);
+    let near = vec![Flow {
+        src: 0,
+        dst: 1,
+        packets_per_cycle: 0.02,
+        packet_len: 4,
+    }];
+    let far = vec![Flow {
+        src: 0,
+        dst: 63,
+        packets_per_cycle: 0.02,
+        packet_len: 4,
+    }];
+    let a = run_flows(NocKind::Wormhole, mesh, &near, 200, 2_000, 5_000, 14, 4, 1);
+    let b = run_flows(NocKind::Wormhole, mesh, &far, 200, 2_000, 5_000, 14, 4, 1);
+    assert!(
+        b.avg_net_latency > a.avg_net_latency + 10.0,
+        "far {} !>> near {}",
+        b.avg_net_latency,
+        a.avg_net_latency
+    );
+}
+
+#[test]
+fn ideal_latency_is_serialization_only() {
+    let mesh = Mesh::new(8, 8);
+    let s = run_synthetic(NocKind::Ideal, mesh, &cfg(Pattern::UniformRandom, 0.05), 14);
+    // One hop + 4-flit serialization: ~4-6 cycles at low load.
+    assert!(
+        (4.0..8.0).contains(&s.avg_net_latency),
+        "ideal latency {}",
+        s.avg_net_latency
+    );
+}

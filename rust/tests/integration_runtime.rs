@@ -1,0 +1,142 @@
+//! Integration: the PJRT runtime against the real AOT artifacts.
+//!
+//! These tests need `make artifacts` to have run; they skip (with a
+//! message) when the artifacts are absent so `cargo test` works on a fresh
+//! checkout.
+
+use std::path::Path;
+
+use smart_pim::runtime::vgg_tiny::{load_golden, CLASSES, IMAGE_LEN};
+use smart_pim::runtime::{literal_i32, Runtime, VggTiny};
+
+fn artifacts() -> Option<Runtime> {
+    if !Path::new("artifacts/vgg_tiny_b1.hlo.txt").exists() {
+        eprintln!("skipping: artifacts missing — run `make artifacts`");
+        return None;
+    }
+    Some(Runtime::new("artifacts").expect("PJRT CPU client"))
+}
+
+#[test]
+fn crossbar_gemm_artifact_matches_cpu_reference() {
+    let Some(rt) = artifacts() else { return };
+    let exe = rt.load("crossbar_gemm_128").unwrap();
+    // Deterministic integer inputs; compute the expected signed GEMM in
+    // rust (the kernel is lossless at the default 10-bit ADC).
+    let x: Vec<i32> = (0..128 * 128).map(|i| (i * 31 + 7) % 65536).map(|v| v as i32).collect();
+    let w: Vec<i32> = (0..128 * 128)
+        .map(|i| ((i * 97 + 13) % 65536) as i32 - 32768)
+        .collect();
+    let xl = literal_i32(&x, &[128, 128]).unwrap();
+    let wl = literal_i32(&w, &[128, 128]).unwrap();
+    let got = exe.run_i32(&[xl, wl]).unwrap();
+    // Reference: i64 GEMM wrapped to the kernel's int32 accumulator
+    // semantics (full-range 16-bit inputs overflow 32 bits by design).
+    for m in [0usize, 1, 63, 127] {
+        for n in [0usize, 17, 127] {
+            let mut acc: i64 = 0;
+            for k in 0..128 {
+                acc += x[m * 128 + k] as i64 * w[k * 128 + n] as i64;
+            }
+            assert_eq!(
+                got[m * 128 + n],
+                acc as i32, // wrapping cast == int32 accumulator
+                "mismatch at ({m},{n})"
+            );
+        }
+    }
+}
+
+#[test]
+fn vgg_tiny_b1_matches_golden_logits() {
+    let Some(rt) = artifacts() else { return };
+    let model = VggTiny::load(&rt).unwrap();
+    let (img, want) = load_golden(&rt, 1).unwrap();
+    assert_eq!(img.len(), IMAGE_LEN);
+    assert_eq!(want.len(), CLASSES);
+    let got = model.infer(&img).unwrap();
+    for (g, w) in got.iter().zip(&want) {
+        assert!(
+            (g - w).abs() < 1e-3,
+            "logit mismatch: rust {g} vs python {w}"
+        );
+    }
+}
+
+#[test]
+fn vgg_tiny_b4_matches_golden_logits() {
+    let Some(rt) = artifacts() else { return };
+    let model = VggTiny::load(&rt).unwrap();
+    let (img, want) = load_golden(&rt, 4).unwrap();
+    assert_eq!(img.len(), 4 * IMAGE_LEN);
+    let got = model.infer(&img).unwrap();
+    assert_eq!(got.len(), 4 * CLASSES);
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert!((g - w).abs() < 1e-3, "logit {i}: rust {g} vs python {w}");
+    }
+}
+
+#[test]
+fn batch_consistency_b4_vs_b1() {
+    // The same image served through the b1 and b4 executables must agree:
+    // the batcher's padding path depends on this.
+    let Some(rt) = artifacts() else { return };
+    let model = VggTiny::load(&rt).unwrap();
+    let (img, _) = load_golden(&rt, 1).unwrap();
+    let single = model.infer(&img).unwrap();
+    let mut four = Vec::new();
+    for _ in 0..4 {
+        four.extend_from_slice(&img);
+    }
+    let batched = model.infer(&four).unwrap();
+    for b in 0..4 {
+        for c in 0..CLASSES {
+            let d = (batched[b * CLASSES + c] - single[c]).abs();
+            assert!(d < 1e-4, "batch row {b} class {c} differs by {d}");
+        }
+    }
+}
+
+#[test]
+fn classify_is_argmax() {
+    let Some(rt) = artifacts() else { return };
+    let model = VggTiny::load(&rt).unwrap();
+    let (img, want) = load_golden(&rt, 1).unwrap();
+    let class = model.classify(&img).unwrap()[0];
+    let want_class = want
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0;
+    assert_eq!(class, want_class);
+}
+
+#[test]
+fn wrong_batch_size_rejected() {
+    let Some(rt) = artifacts() else { return };
+    let model = VggTiny::load(&rt).unwrap();
+    let err = model.infer(&vec![0.0; 2 * IMAGE_LEN]).unwrap_err();
+    assert!(err.to_string().contains("unsupported batch"), "{err}");
+    let err = model.infer(&vec![0.0; 100]).unwrap_err();
+    assert!(err.to_string().contains("whole batch"), "{err}");
+}
+
+#[test]
+fn weights_file_contents_sane() {
+    let Some(rt) = artifacts() else { return };
+    let w = rt.load_weights("weights_vgg_tiny.bin").unwrap();
+    assert_eq!(w.tensors.len(), 5);
+    // Q3.12 signed 16-bit range.
+    for t in &w.tensors {
+        let max = t.data.iter().map(|v| v.abs()).max().unwrap();
+        assert!(max < 1 << 15, "{}: weight {max} out of int16", t.name);
+        assert!(t.elements() > 0);
+    }
+    // Layer shapes chain: conv K = in_ch * 9.
+    assert_eq!(w.tensors[0].dims, vec![27, 16]);
+    assert_eq!(w.tensors[1].dims, vec![144, 32]);
+    assert_eq!(w.tensors[2].dims, vec![288, 32]);
+    assert_eq!(w.tensors[3].dims, vec![512, 64]);
+    assert_eq!(w.tensors[4].dims, vec![64, 10]);
+}

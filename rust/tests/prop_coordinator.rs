@@ -1,0 +1,193 @@
+//! Property tests over coordinator invariants: the batcher never loses,
+//! duplicates or reorders requests; the dispatcher never violates the
+//! paper's structural-hazard and fixed-offset rules (Sec. IV-C); the
+//! engine's schedule respects dependencies for every image.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use smart_pim::cnn::{vgg, VggVariant};
+use smart_pim::config::ArchConfig;
+use smart_pim::coordinator::batcher::BatchPolicy;
+use smart_pim::coordinator::dispatch::{Dispatcher, PipelineShape};
+use smart_pim::coordinator::request::Request;
+use smart_pim::mapping::{NetworkMapping, ReplicationPlan};
+use smart_pim::pipeline::build_plans;
+use smart_pim::sim::engine::{Engine, NocAdjust};
+use smart_pim::util::prop::{check, Config, Gen};
+use smart_pim::{prop_assert, prop_assert_eq};
+
+fn random_queue(g: &mut Gen, now: Instant) -> VecDeque<Request> {
+    let n = g.scaled(40);
+    (0..n as u64)
+        .map(|id| Request {
+            id,
+            image: vec![0.0; 4],
+            submitted: now - Duration::from_micros(g.rng.below(20_000)),
+        })
+        .collect()
+}
+
+fn random_policy(g: &mut Gen) -> BatchPolicy {
+    BatchPolicy {
+        sizes: vec![4, 1],
+        max_wait: Duration::from_micros(1 + g.rng.below(10_000)),
+        min_fill: 0.25 + g.rng.next_f64() * 0.5,
+    }
+}
+
+#[test]
+fn batcher_never_loses_duplicates_or_reorders() {
+    check("batcher-conservation", &Config::default(), |g| {
+        let now = Instant::now();
+        let mut q = random_queue(g, now);
+        let total = q.len();
+        let policy = random_policy(g);
+        let mut seen = Vec::new();
+        let mut guard = 0;
+        while !q.is_empty() {
+            guard += 1;
+            prop_assert!(guard < 10_000, "batcher stalled");
+            // Advance time far enough that timeouts always fire eventually.
+            let t = now + Duration::from_secs(guard);
+            if let Some(b) = policy.form(&mut q, t) {
+                prop_assert!(b.size() <= 4, "batch size {}", b.size());
+                prop_assert!(!b.requests.is_empty(), "empty batch");
+                seen.extend(b.requests.iter().map(|r| r.id));
+            }
+        }
+        prop_assert_eq!(seen.len(), total);
+        // FIFO: ids must come out in submission order.
+        for w in seen.windows(2) {
+            prop_assert!(w[0] < w[1], "reordered: {:?}", w);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn batcher_padding_bounded_by_min_fill() {
+    check("batcher-padding", &Config::default(), |g| {
+        let now = Instant::now();
+        let mut q = random_queue(g, now);
+        let policy = random_policy(g);
+        let t = now + Duration::from_secs(1);
+        while let Some(b) = policy.form(&mut q, t) {
+            if b.padding > 0 {
+                let fill = b.requests.len() as f64 / b.size() as f64;
+                prop_assert!(
+                    fill >= policy.min_fill - 1e-9,
+                    "padded batch fill {fill} < min {}",
+                    policy.min_fill
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+fn random_shape(g: &mut Gen) -> PipelineShape {
+    let n = 2 + g.scaled(10);
+    let mut offsets = Vec::with_capacity(n);
+    let mut occupancy = Vec::with_capacity(n);
+    let mut off = 0u64;
+    for _ in 0..n {
+        offsets.push(off);
+        occupancy.push(1 + g.rng.below(500));
+        off += 1 + g.rng.below(300);
+    }
+    PipelineShape { offsets, occupancy }
+}
+
+#[test]
+fn dispatcher_no_structural_hazard_for_any_arrival_pattern() {
+    check("dispatch-hazard", &Config::default(), |g| {
+        let shape = random_shape(g);
+        let mut d = Dispatcher::new(shape);
+        let n = g.scaled(60);
+        let mut now = 0u64;
+        for _ in 0..n {
+            now += g.rng.below(400);
+            d.admit(now);
+        }
+        d.verify_no_hazard()?;
+        d.verify_fixed_offsets()?;
+        Ok(())
+    });
+}
+
+#[test]
+fn dispatcher_work_conserving() {
+    check("dispatch-work-conserving", &Config::default(), |g| {
+        let shape = random_shape(g);
+        let interval = shape.min_interval();
+        let mut d = Dispatcher::new(shape);
+        // Saturating arrivals: every admission must be exactly `interval`
+        // after the previous (no idle gaps inserted).
+        let n = g.scaled(50);
+        for _ in 0..n {
+            d.admit(0);
+        }
+        let inj = d.injections();
+        for w in inj.windows(2) {
+            prop_assert_eq!(w[1] - w[0], interval);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn engine_schedule_respects_dependencies_and_hazards() {
+    // The cycle-accurate engine itself: random VGG + replication plan; the
+    // resulting schedule must keep images ordered and respect injection.
+    let cfg = Config {
+        cases: 12, // engine runs are heavier than the pure checks
+        ..Config::default()
+    };
+    check("engine-dependencies", &cfg, |g| {
+        let arch = ArchConfig::paper_node();
+        let variants = VggVariant::ALL;
+        let v = variants[g.rng.below_usize(variants.len())];
+        let net = vgg::build(v);
+        let plan = if g.rng.chance(0.5) {
+            ReplicationPlan::fig7(v)
+        } else {
+            ReplicationPlan::none(&net)
+        };
+        let m = NetworkMapping::build(&net, &arch, &plan).map_err(|e| e.to_string())?;
+        let plans = build_plans(&net, &m, &arch);
+        let adj = NocAdjust::identity(plans.len());
+        let batch = g.rng.chance(0.5);
+        let images = 2 + g.rng.below(4);
+        let sim = Engine::new(&plans, &adj, batch, images).run();
+        // Completions strictly increase, injections non-decreasing, and
+        // every latency is at least the total pipeline depth.
+        let min_depth: u64 = plans.iter().map(|p| p.depth).sum();
+        for w in sim.completions.windows(2) {
+            prop_assert!(w[0] < w[1], "completions not monotone");
+        }
+        for w in sim.injections.windows(2) {
+            prop_assert!(w[0] <= w[1], "injections not monotone");
+        }
+        for (inj, comp) in sim.injections.iter().zip(&sim.completions) {
+            prop_assert!(
+                comp - inj >= min_depth,
+                "latency {} below pipeline depth {min_depth}",
+                comp - inj
+            );
+        }
+        if !batch {
+            // Without batch pipelining, image k injects only after k-1
+            // completes.
+            for i in 1..sim.injections.len() {
+                prop_assert!(
+                    sim.injections[i] >= sim.completions[i - 1],
+                    "no-batch violated: inject {} < completion {}",
+                    sim.injections[i],
+                    sim.completions[i - 1]
+                );
+            }
+        }
+        Ok(())
+    });
+}

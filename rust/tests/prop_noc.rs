@@ -1,0 +1,139 @@
+//! Property tests over the NoC simulator (hand-rolled harness in
+//! `util::prop` — the vendored crate set has no proptest).
+
+use smart_pim::noc::{Mesh, Network};
+use smart_pim::util::prop::{check, Config, Gen};
+use smart_pim::{prop_assert, prop_assert_eq};
+
+fn random_net(g: &mut Gen) -> (Network, Mesh) {
+    let w = 2 + g.rng.below_usize(7); // 2..8
+    let h = 2 + g.rng.below_usize(7);
+    let mesh = Mesh::new(w, h);
+    let hpc = 1 + g.rng.below_usize(14);
+    let rl = 1 + g.rng.below(4);
+    let depth = 1 + g.rng.below_usize(4);
+    (Network::new(mesh, hpc, rl, depth), mesh)
+}
+
+fn random_packets(g: &mut Gen, net: &mut Network, mesh: Mesh) -> Vec<u32> {
+    let n_pkts = g.scaled(120);
+    let mut ids = Vec::new();
+    for _ in 0..n_pkts {
+        let src = g.rng.below_usize(mesh.nodes());
+        let dst = g.rng.below_usize(mesh.nodes());
+        if src == dst {
+            continue;
+        }
+        let len = 1 + g.rng.below(6) as u16;
+        ids.push(net.enqueue(src, dst, len));
+        // Interleave injection with stepping to vary occupancy.
+        if g.rng.chance(0.5) {
+            net.step();
+        }
+    }
+    ids
+}
+
+#[test]
+fn every_packet_delivered_exactly_once() {
+    check("noc-delivery", &Config::default(), |g| {
+        let (mut net, mesh) = random_net(g);
+        let ids = random_packets(g, &mut net, mesh);
+        let cycles = net.drain(2_000_000);
+        prop_assert!(
+            net.quiescent(),
+            "network not quiescent after {cycles} cycles ({} flits stuck)",
+            net.in_flight_flits()
+        );
+        for id in ids {
+            let p = net.table.get(id);
+            prop_assert!(p.is_done(), "packet {id} undelivered");
+            prop_assert_eq!(p.delivered, p.len);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn stop_lists_are_minimal_xy_routes() {
+    check("noc-minimal-routes", &Config::default(), |g| {
+        let (mut net, mesh) = random_net(g);
+        let ids = random_packets(g, &mut net, mesh);
+        net.drain(2_000_000);
+        for id in ids {
+            let p = net.table.get(id);
+            if !p.is_done() {
+                continue;
+            }
+            prop_assert_eq!(p.stops[0], p.src);
+            prop_assert_eq!(*p.stops.last().unwrap(), p.dst);
+            let mut remaining = mesh.hops(p.src as usize, p.dst as usize);
+            for w in p.stops.windows(2) {
+                let step = mesh.hops(w[0] as usize, w[1] as usize);
+                prop_assert!(step >= 1, "zero-length segment in {:?}", p.stops);
+                let after = mesh.hops(w[1] as usize, p.dst as usize);
+                prop_assert_eq!(after + step, remaining);
+                remaining = after;
+            }
+            prop_assert_eq!(remaining, 0usize);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn segments_respect_hpc_max() {
+    check("noc-hpc-bound", &Config::default(), |g| {
+        let hpc = 1 + g.rng.below_usize(6);
+        let mesh = Mesh::new(8, 8);
+        let mut net = Network::new(mesh, hpc, 1, 4);
+        let ids = random_packets(g, &mut net, mesh);
+        net.drain(2_000_000);
+        for id in ids {
+            let p = net.table.get(id);
+            for w in p.stops.windows(2) {
+                let step = mesh.hops(w[0] as usize, w[1] as usize);
+                prop_assert!(
+                    step <= hpc,
+                    "segment of {step} hops exceeds HPC_max {hpc}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn latency_at_least_distance_plus_serialization() {
+    check("noc-latency-bound", &Config::default(), |g| {
+        let (mut net, mesh) = random_net(g);
+        let ids = random_packets(g, &mut net, mesh);
+        net.drain(2_000_000);
+        for id in ids {
+            let p = net.table.get(id);
+            if !p.is_done() {
+                continue;
+            }
+            // Tail must at minimum traverse the stops and serialize.
+            let min = (p.stops.len() - 1) as u64 + (p.len - 1) as u64;
+            prop_assert!(
+                p.net_latency() >= min,
+                "packet {id}: latency {} < floor {min}",
+                p.net_latency()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn conservation_flits_in_equals_out() {
+    check("noc-conservation", &Config::default(), |g| {
+        let (mut net, mesh) = random_net(g);
+        random_packets(g, &mut net, mesh);
+        net.drain(2_000_000);
+        prop_assert!(net.quiescent(), "not quiescent");
+        prop_assert_eq!(net.flits_injected, net.flits_ejected);
+        Ok(())
+    });
+}
