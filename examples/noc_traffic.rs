@@ -1,6 +1,7 @@
 //! NoC deep-dive: sweep a synthetic traffic pattern across injection rates
 //! on the 8x8 mesh and print the Fig. 10/11 curves for wormhole vs SMART
 //! vs ideal, plus an HPC_max ablation (how far the bypass reaches matters).
+//! The rate sweep fans out across cores through the unified sweep engine.
 //!
 //! ```bash
 //! cargo run --release --example noc_traffic [pattern]
@@ -8,6 +9,7 @@
 
 use smart_pim::config::NocKind;
 use smart_pim::noc::{run_synthetic, Mesh, Pattern, SyntheticConfig};
+use smart_pim::sweep::{SweepRunner, SyntheticSweep};
 use smart_pim::util::table::{fnum, Table};
 
 fn main() {
@@ -21,30 +23,32 @@ fn main() {
         });
     let mesh = Mesh::new(8, 8);
 
+    // One parallel sweep over rates x {wormhole, smart, ideal}.
+    let mut sweep = SyntheticSweep::new(mesh, 14);
+    sweep.patterns = vec![pattern];
+    sweep.rates = vec![0.02, 0.05, 0.1, 0.15, 0.2, 0.3, 0.5, 0.8];
+    sweep.kinds = vec![NocKind::Wormhole, NocKind::Smart, NocKind::Ideal];
+    sweep.per_point_seeds = false;
+    let outcomes = sweep.run(&SweepRunner::new());
+
     let mut t = Table::new(
         format!("{} — latency (reception) vs injection rate", pattern.name()),
         &["rate", "wormhole", "smart", "ideal"],
     );
-    for rate in [0.02, 0.05, 0.1, 0.15, 0.2, 0.3, 0.5, 0.8] {
-        let cfg = SyntheticConfig {
-            pattern,
-            injection_rate: rate,
-            ..Default::default()
-        };
-        let cell = |kind| {
-            let s = run_synthetic(kind, mesh, &cfg, 14);
+    for triple in sweep.rows_for(&outcomes, pattern).chunks(3) {
+        let cell = |o: &smart_pim::sweep::SyntheticOutcome| {
             format!(
                 "{} ({}){}",
-                fnum(s.avg_latency, 1),
-                fnum(s.reception_rate, 3),
-                if s.saturated() { " SAT" } else { "" }
+                fnum(o.stats.avg_latency, 1),
+                fnum(o.stats.reception_rate, 3),
+                if o.stats.saturated() { " SAT" } else { "" }
             )
         };
         t.row(&[
-            format!("{rate}"),
-            cell(NocKind::Wormhole),
-            cell(NocKind::Smart),
-            cell(NocKind::Ideal),
+            format!("{}", triple[0].rate),
+            cell(triple[0]),
+            cell(triple[1]),
+            cell(triple[2]),
         ]);
     }
     t.print();

@@ -12,6 +12,7 @@ use smart_pim::config::ArchConfig;
 use smart_pim::mapping::{plan_tiles, NetworkMapping, ReplicationPlan};
 use smart_pim::pipeline::build_plans;
 use smart_pim::sim::engine::{Engine, NocAdjust};
+use smart_pim::sweep::SweepRunner;
 use smart_pim::util::table::{fnum, Table};
 
 fn throughput_fps(arch: &ArchConfig, v: VggVariant, plan: &ReplicationPlan) -> (f64, usize) {
@@ -21,27 +22,44 @@ fn throughput_fps(arch: &ArchConfig, v: VggVariant, plan: &ReplicationPlan) -> (
     let plans = build_plans(&net, &m, arch);
     let adj = NocAdjust::identity(plans.len());
     let sim = Engine::new(&plans, &adj, true, 8).run();
-    let fps = 1.0 / (sim.steady_interval() * arch.logical_cycle_ns * 1e-9);
+    let interval = sim.steady_interval().expect("8 images give an interval");
+    let fps = 1.0 / (interval * arch.logical_cycle_ns * 1e-9);
     (fps, tiles)
 }
 
 fn main() {
     let arch = ArchConfig::paper_node();
 
+    // The whole design space is one parallel sweep: every (VGG, budget)
+    // point is independent, so fan them out across cores.
+    let max_rs = [1usize, 2, 4, 8, 16];
+    let mut points: Vec<(VggVariant, Option<usize>)> = Vec::new();
+    for v in VggVariant::ALL {
+        for r in max_rs {
+            points.push((v, Some(r))); // auto-planner with budget r
+        }
+        points.push((v, None)); // the paper's hand-tuned Fig. 7 plan
+    }
+    let runner = SweepRunner::new();
+    let results = runner.run(&points, |_, &(v, max_r)| {
+        let net = vgg::build(v);
+        let plan = match max_r {
+            Some(r) => ReplicationPlan::auto(&net, &arch, r),
+            None => ReplicationPlan::fig7(v),
+        };
+        throughput_fps(&arch, v, &plan)
+    });
+
     let mut t = Table::new(
         "auto-planner sweep: FPS (tiles used) by max replication factor",
         &["vgg", "r<=1", "r<=2", "r<=4", "r<=8", "r<=16", "fig7 hand plan"],
     );
-    for v in VggVariant::ALL {
-        let net = vgg::build(v);
+    let per_vgg = max_rs.len() + 1;
+    for (vi, v) in VggVariant::ALL.iter().enumerate() {
         let mut row = vec![v.name().to_string()];
-        for max_r in [1usize, 2, 4, 8, 16] {
-            let plan = ReplicationPlan::auto(&net, &arch, max_r);
-            let (fps, tiles) = throughput_fps(&arch, v, &plan);
-            row.push(format!("{} ({tiles})", fnum(fps, 0)));
+        for (fps, tiles) in &results[vi * per_vgg..(vi + 1) * per_vgg] {
+            row.push(format!("{} ({tiles})", fnum(*fps, 0)));
         }
-        let (fps, tiles) = throughput_fps(&arch, v, &ReplicationPlan::fig7(v));
-        row.push(format!("{} ({tiles})", fnum(fps, 0)));
         t.row(&row);
     }
     t.print();
@@ -60,7 +78,7 @@ fn main() {
         let plans = build_plans(&net, &m, &arch);
         let adj = NocAdjust::identity(plans.len());
         let sim = Engine::new(&plans, &adj, true, 8).run();
-        let interval = sim.steady_interval();
+        let interval = sim.steady_interval().expect("8 images give an interval");
         t.row(&[
             format!("{r1}"),
             fnum(interval, 0),

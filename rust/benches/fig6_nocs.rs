@@ -4,13 +4,19 @@
 use smart_pim::cnn::VggVariant;
 use smart_pim::config::{ArchConfig, NocKind, Scenario};
 use smart_pim::metrics::{paper, Grid};
+use smart_pim::sweep::SweepRunner;
 use smart_pim::util::bench::Bencher;
 use smart_pim::util::stats::geomean;
 
 fn main() {
     let arch = ArchConfig::paper_node();
-    println!("== regenerating Fig. 6 (all scenarios) ==");
-    let grid = Grid::run(&arch, &VggVariant::ALL, &Scenario::ALL, &NocKind::ALL);
+    let runner = SweepRunner::new();
+    println!(
+        "== regenerating Fig. 6 (all scenarios) — {} benchmark points on {} threads ==",
+        VggVariant::ALL.len() * Scenario::ALL.len() * NocKind::ALL.len(),
+        runner.threads()
+    );
+    let grid = Grid::run_with(&runner, &arch, &VggVariant::ALL, &Scenario::ALL, &NocKind::ALL);
     let mut smart_all = Vec::new();
     let mut ideal_all = Vec::new();
     for scenario in Scenario::ALL {

@@ -1,13 +1,16 @@
 //! Serving coordinator (L3 request path): dynamic batcher, pipeline-slot
-//! dispatcher, and the worker loop that executes the AOT-compiled quantized
-//! CNN via PJRT. Python never runs here.
+//! dispatcher, the mesh-ingress latency model (drained through the
+//! [`crate::noc::NocBackend`] trait), and the worker loop that executes the
+//! AOT-compiled quantized CNN via PJRT. Python never runs here.
 
 pub mod batcher;
 pub mod dispatch;
+pub mod ingress;
 pub mod request;
 pub mod server;
 
 pub use batcher::{BatchPolicy, FormedBatch};
 pub use dispatch::{Dispatcher, PipelineShape};
+pub use ingress::{assess_ingress, IngressReport};
 pub use request::{Request, Response, ServeStats};
 pub use server::Server;

@@ -9,7 +9,8 @@ use std::sync::mpsc::{self, Receiver, Sender};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use anyhow::Result;
+use crate::format_err;
+use crate::util::error::Result;
 
 use crate::runtime::vgg_tiny::{CLASSES, IMAGE_LEN};
 use crate::runtime::{Runtime, VggTiny};
@@ -40,8 +41,8 @@ impl Server {
             .spawn(move || worker_loop(artifacts_dir, policy, rx, ready_tx))?;
         ready_rx
             .recv()
-            .map_err(|_| anyhow::anyhow!("worker died during startup"))?
-            .map_err(|e| anyhow::anyhow!("worker startup failed: {e}"))?;
+            .map_err(|_| format_err!("worker died during startup"))?
+            .map_err(|e| format_err!("worker startup failed: {e}"))?;
         Ok(Self {
             tx,
             worker: Some(worker),
@@ -67,8 +68,8 @@ impl Server {
     pub fn infer(&mut self, image: Vec<f32>) -> Result<Response> {
         self.submit(image)
             .recv()
-            .map_err(|_| anyhow::anyhow!("worker dropped the request"))?
-            .map_err(|e| anyhow::anyhow!(e))
+            .map_err(|_| format_err!("worker dropped the request"))?
+            .map_err(|e| format_err!("{e}"))
     }
 
     /// Stop the worker and collect statistics.

@@ -8,9 +8,11 @@
 //! stack (see DESIGN.md).
 //!
 //! - **Layer 3 (this crate)** — cycle-accurate processing-side simulator,
-//!   flit-level NoC simulator (wormhole / SMART / ideal), power/energy
-//!   model, and a serving coordinator that executes real quantized CNN
-//!   inference through AOT-compiled XLA artifacts (PJRT).
+//!   event-driven flit-level NoC simulator behind the [`noc::NocBackend`]
+//!   trait (wormhole / SMART / ideal), a unified parallel scenario-sweep
+//!   engine ([`sweep`]), power/energy model, and a serving coordinator
+//!   that executes real quantized CNN inference through AOT-compiled XLA
+//!   artifacts (PJRT, feature-gated).
 //! - **Layer 2 (python/compile/model.py)** — the quantized CNN forward
 //!   graph in JAX, lowered once to HLO text at build time.
 //! - **Layer 1 (python/compile/kernels/crossbar.py)** — the bit-serial
@@ -26,4 +28,5 @@ pub mod pipeline;
 pub mod power;
 pub mod runtime;
 pub mod sim;
+pub mod sweep;
 pub mod util;

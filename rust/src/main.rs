@@ -24,13 +24,16 @@
 
 use smart_pim::cnn::{vgg, VggVariant};
 use smart_pim::config::{ArchConfig, NocKind, Scenario};
-use smart_pim::coordinator::{BatchPolicy, Server};
+use smart_pim::coordinator::{assess_ingress, BatchPolicy, Server};
 use smart_pim::mapping::{plan_tiles, ReplicationPlan};
 use smart_pim::metrics::{paper, Grid};
-use smart_pim::noc::{run_synthetic, Mesh, Pattern, SyntheticConfig};
+use smart_pim::noc::{
+    build_backend, run_synthetic_with, Mesh, Pattern, StepMode, SyntheticConfig,
+};
 use smart_pim::power::components::{aggregates, CORE_ROWS, TILE_ROWS};
 use smart_pim::power::AreaBreakdown;
 use smart_pim::sim::evaluate;
+use smart_pim::sweep::{SweepRunner, SyntheticSweep};
 use smart_pim::util::cli::Args;
 use smart_pim::util::table::{fnum, Table};
 use smart_pim::util::Rng;
@@ -78,7 +81,7 @@ fn main() {
     }
 }
 
-static ACTIVE_ARCH: once_cell::sync::OnceCell<ArchConfig> = once_cell::sync::OnceCell::new();
+static ACTIVE_ARCH: std::sync::OnceLock<ArchConfig> = std::sync::OnceLock::new();
 
 /// Resolve `--config FILE` once; all commands read the active config.
 fn init_arch(args: &Args) -> Result<(), String> {
@@ -253,7 +256,9 @@ fn fig9() -> Result<(), String> {
 }
 
 fn fig10_11(args: &Args, latency: bool) -> Result<(), String> {
-    args.check_known(&["rates", "measure", "seed", "scenario", "noc", "config"])?;
+    args.check_known(&[
+        "rates", "measure", "seed", "scenario", "noc", "config", "threads",
+    ])?;
     let rates: Vec<f64> = args
         .get_or("rates", "0.02,0.05,0.08,0.12,0.2,0.3,0.5,0.8")
         .split(',')
@@ -261,7 +266,22 @@ fn fig10_11(args: &Args, latency: bool) -> Result<(), String> {
         .collect::<Result<_, _>>()?;
     let measure = args.get_parse_or("measure", 6_000u64)?;
     let seed = args.get_parse_or("seed", 0xA5A5u64)?;
-    let mesh = Mesh::new(8, 8);
+    let runner = match args.get("threads") {
+        Some(t) => SweepRunner::with_threads(t.parse().map_err(|e| format!("--threads: {e}"))?),
+        None => SweepRunner::new(),
+    };
+    // The whole figure is one parallel sweep over the grid.
+    let mut sweep = SyntheticSweep::new(Mesh::new(8, 8), arch().hpc_max);
+    sweep.rates = rates;
+    sweep.base = SyntheticConfig {
+        measure,
+        warmup: measure / 4,
+        drain: measure * 2,
+        seed,
+        ..Default::default()
+    };
+    sweep.per_point_seeds = false; // match the seed CLI's one-seed output
+    let outcomes = sweep.run(&runner);
     let which = if latency {
         "latency (cycles)"
     } else {
@@ -277,31 +297,24 @@ fn fig10_11(args: &Args, latency: bool) -> Result<(), String> {
             ),
             &["rate", "wormhole", "smart"],
         );
-        for &rate in &rates {
-            let cfg = SyntheticConfig {
-                pattern,
-                injection_rate: rate,
-                measure,
-                warmup: measure / 4,
-                drain: measure * 2,
-                seed,
-                ..Default::default()
+        let cell = |x: &smart_pim::noc::NocStats| {
+            let v = if latency {
+                x.avg_latency
+            } else {
+                x.reception_rate
             };
-            let w = run_synthetic(NocKind::Wormhole, mesh, &cfg, arch().hpc_max);
-            let s = run_synthetic(NocKind::Smart, mesh, &cfg, arch().hpc_max);
-            let cell = |x: &smart_pim::noc::NocStats| {
-                let v = if latency {
-                    x.avg_latency
-                } else {
-                    x.reception_rate
-                };
-                format!(
-                    "{}{}",
-                    fnum(v, if latency { 1 } else { 4 }),
-                    if x.saturated() { " SAT" } else { "" }
-                )
-            };
-            t.row(&[format!("{rate}"), cell(&w), cell(&s)]);
+            format!(
+                "{}{}",
+                fnum(v, if latency { 1 } else { 4 }),
+                if x.saturated() { " SAT" } else { "" }
+            )
+        };
+        // Grid order is pattern-major, then rate, then kind (wormhole,
+        // smart): consecutive outcome pairs are one table row.
+        for pair in sweep.rows_for(&outcomes, pattern).chunks(2) {
+            let (w, s) = (pair[0], pair[1]);
+            debug_assert_eq!(w.rate, s.rate);
+            t.row(&[format!("{}", w.rate), cell(&w.stats), cell(&s.stats)]);
         }
         t.print();
     }
@@ -371,10 +384,15 @@ fn simulate(args: &Args) -> Result<(), String> {
 }
 
 fn noc_cmd(args: &Args) -> Result<(), String> {
-    args.check_known(&["pattern", "rate", "noc", "mesh", "measure", "seed", "config"])?;
+    args.check_known(&[
+        "pattern", "rate", "noc", "mesh", "measure", "seed", "config", "mode",
+    ])?;
     let pattern: Pattern = args.get_or("pattern", "uniform_random").parse()?;
     let rate: f64 = args.get_parse_or("rate", 0.1)?;
     let kind: NocKind = args.get_or("noc", "smart").parse()?;
+    // --mode reference replays the seed cycle-stepped engine (golden
+    // parity; must print the exact same stats as the event-driven default).
+    let mode: StepMode = args.get_or("mode", "event").parse()?;
     let mesh_s = args.get_or("mesh", "8x8");
     let (w, h) = mesh_s
         .split_once('x')
@@ -390,7 +408,7 @@ fn noc_cmd(args: &Args) -> Result<(), String> {
         seed: args.get_parse_or("seed", 0xA5A5u64)?,
         ..Default::default()
     };
-    let s = run_synthetic(kind, mesh, &cfg, arch().hpc_max);
+    let s = run_synthetic_with(kind, mesh, &cfg, arch().hpc_max, mode);
     println!(
         "{} {} rate {}: net latency {}, total latency {}, reception {}, completed {}, dropped {}{}",
         kind.name(),
@@ -442,6 +460,20 @@ fn serve(args: &Args) -> Result<(), String> {
         fnum(stats.latency_percentile_ms(99.0), 2)
     );
     println!("class histogram: {classes:?}");
+    // Simulated mesh-crossing cost of the request path, through the same
+    // NocBackend trait the sweeps use (the coordinator's ingress model).
+    let a = arch();
+    let mesh = Mesh::new(a.tiles_x, a.tiles_y);
+    let mut noc = build_backend(NocKind::Smart, mesh, a.hpc_max, 1, a.buffer_depth);
+    let ing = assess_ingress(noc.as_mut(), 0, mesh.nodes() / 2, n as u64, 4, 4);
+    println!(
+        "simulated ingress (I/O tile -> entry tile over SMART mesh): \
+         mean {} NoC cycles, max {} ({}/{} delivered)",
+        fnum(ing.mean_latency_cycles, 1),
+        fnum(ing.max_latency_cycles, 0),
+        ing.delivered,
+        ing.offered
+    );
     Ok(())
 }
 

@@ -4,6 +4,7 @@
 use crate::cnn::VggVariant;
 use crate::config::{ArchConfig, NocKind, Scenario};
 use crate::sim::{evaluate, PerfReport};
+use crate::sweep::SweepRunner;
 use crate::util::stats::geomean;
 use crate::util::table::{fnum, Table};
 
@@ -13,22 +14,36 @@ pub struct Grid {
 }
 
 impl Grid {
-    /// Run every benchmark. `variants`/`scenarios`/`nocs` allow subsetting
-    /// (the full grid takes a few minutes of simulation).
+    /// Run every benchmark on a machine-sized [`SweepRunner`].
+    /// `variants`/`scenarios`/`nocs` allow subsetting.
     pub fn run(
         arch: &ArchConfig,
         variants: &[VggVariant],
         scenarios: &[Scenario],
         nocs: &[NocKind],
     ) -> Self {
-        let mut reports = Vec::new();
+        Self::run_with(&SweepRunner::new(), arch, variants, scenarios, nocs)
+    }
+
+    /// Run every benchmark point of the grid through the sweep engine.
+    /// Each (VGG, scenario, NoC) point is independent, so the 60-benchmark
+    /// grid fans out across cores; results keep grid order.
+    pub fn run_with(
+        runner: &SweepRunner,
+        arch: &ArchConfig,
+        variants: &[VggVariant],
+        scenarios: &[Scenario],
+        nocs: &[NocKind],
+    ) -> Self {
+        let mut points = Vec::with_capacity(variants.len() * scenarios.len() * nocs.len());
         for &v in variants {
             for &s in scenarios {
                 for &n in nocs {
-                    reports.push(evaluate(v, s, n, arch));
+                    points.push((v, s, n));
                 }
             }
         }
+        let reports = runner.run(&points, |_, &(v, s, n)| evaluate(v, s, n, arch));
         Self { reports }
     }
 
@@ -157,6 +172,26 @@ mod tests {
         assert_eq!(grid.reports.len(), 2);
         let r = grid.get(VggVariant::A, Scenario::Baseline, NocKind::Ideal);
         assert!(r.fps > 0.0);
+    }
+
+    #[test]
+    fn parallel_grid_matches_serial() {
+        use crate::sweep::SweepRunner;
+        let arch = ArchConfig::paper_node();
+        let variants = [VggVariant::A];
+        let scenarios = [Scenario::Baseline, Scenario::ReplicationBatch];
+        let nocs = [NocKind::Ideal];
+        let serial =
+            Grid::run_with(&SweepRunner::with_threads(1), &arch, &variants, &scenarios, &nocs);
+        let parallel =
+            Grid::run_with(&SweepRunner::with_threads(4), &arch, &variants, &scenarios, &nocs);
+        assert_eq!(serial.reports.len(), parallel.reports.len());
+        for (a, b) in serial.reports.iter().zip(&parallel.reports) {
+            assert_eq!(a.variant, b.variant);
+            assert_eq!(a.scenario, b.scenario);
+            assert_eq!(a.noc, b.noc);
+            assert_eq!(a.fps, b.fps, "{:?} {:?}", a.variant, a.scenario);
+        }
     }
 
     #[test]

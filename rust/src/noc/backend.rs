@@ -1,0 +1,203 @@
+//! The interconnect abstraction (DESIGN.md §1): every NoC model — the
+//! flit-level mesh ([`super::Network`], wormhole or SMART depending on
+//! `hpc_max`) and the analytic [`super::IdealNet`] — implements
+//! [`NocBackend`], so drivers (synthetic sweeps, CNN flow co-simulation,
+//! the coordinator's ingress model) are written once against the trait and
+//! work with any backend, including future ones (tori, buses, analytic
+//! queueing models).
+//!
+//! The trait replaces the seed's closed `NocModel` enum: adding a backend
+//! no longer means editing every driver match.
+
+use crate::config::NocKind;
+
+use super::ideal::IdealNet;
+use super::network::Network;
+use super::packet::PacketTable;
+use super::topology::Mesh;
+
+/// A cycle-addressable interconnect with packet bookkeeping.
+///
+/// All implementations are event-driven where it matters: [`drain`] skips
+/// provably-idle cycle spans, and [`next_event`] exposes the wakeup
+/// calendar so callers can schedule around the network.
+///
+/// [`drain`]: NocBackend::drain
+/// [`next_event`]: NocBackend::next_event
+pub trait NocBackend {
+    /// Queue a packet of `len` flits for injection at `src`; returns its id.
+    fn enqueue(&mut self, src: usize, dst: usize, len: u16) -> u32;
+
+    /// Advance exactly one cycle.
+    fn step(&mut self);
+
+    /// Current cycle.
+    fn now(&self) -> u64;
+
+    /// Per-packet bookkeeping (latencies, stop lists, delivery state).
+    fn table(&self) -> &PacketTable;
+
+    /// Total flits that entered the fabric.
+    fn flits_injected(&self) -> u64;
+
+    /// Total flits ejected at their destination.
+    fn flits_ejected(&self) -> u64;
+
+    /// True when every queued packet has been fully delivered.
+    fn quiescent(&self) -> bool;
+
+    /// Earliest future cycle at which the network can change state
+    /// (`Some(now)` = work pending this cycle; `None` = quiescent).
+    fn next_event(&mut self) -> Option<u64>;
+
+    /// Run until quiescent or `max_cycles` elapse; returns cycles run.
+    /// Implementations jump over idle spans rather than stepping them.
+    fn drain(&mut self, max_cycles: u64) -> u64;
+}
+
+impl NocBackend for Network {
+    fn enqueue(&mut self, src: usize, dst: usize, len: u16) -> u32 {
+        Network::enqueue(self, src, dst, len)
+    }
+
+    fn step(&mut self) {
+        Network::step(self);
+    }
+
+    fn now(&self) -> u64 {
+        self.now
+    }
+
+    fn table(&self) -> &PacketTable {
+        &self.table
+    }
+
+    fn flits_injected(&self) -> u64 {
+        self.flits_injected
+    }
+
+    fn flits_ejected(&self) -> u64 {
+        self.flits_ejected
+    }
+
+    fn quiescent(&self) -> bool {
+        Network::quiescent(self)
+    }
+
+    fn next_event(&mut self) -> Option<u64> {
+        Network::next_event(self)
+    }
+
+    fn drain(&mut self, max_cycles: u64) -> u64 {
+        Network::drain(self, max_cycles)
+    }
+}
+
+impl NocBackend for IdealNet {
+    fn enqueue(&mut self, src: usize, dst: usize, len: u16) -> u32 {
+        IdealNet::enqueue(self, src, dst, len)
+    }
+
+    fn step(&mut self) {
+        IdealNet::step(self);
+    }
+
+    fn now(&self) -> u64 {
+        self.now
+    }
+
+    fn table(&self) -> &PacketTable {
+        &self.table
+    }
+
+    fn flits_injected(&self) -> u64 {
+        self.flits_injected
+    }
+
+    fn flits_ejected(&self) -> u64 {
+        self.flits_ejected
+    }
+
+    fn quiescent(&self) -> bool {
+        IdealNet::quiescent(self)
+    }
+
+    fn next_event(&mut self) -> Option<u64> {
+        IdealNet::next_event(self)
+    }
+
+    fn drain(&mut self, max_cycles: u64) -> u64 {
+        IdealNet::drain(self, max_cycles)
+    }
+}
+
+/// Build a backend for a [`NocKind`]. Wormhole is the mesh engine with
+/// `HPC_max = 1`; SMART is the same engine with the configured reach.
+pub fn build_backend(
+    kind: NocKind,
+    mesh: Mesh,
+    hpc_max: usize,
+    router_latency: u64,
+    buffer_depth: usize,
+) -> Box<dyn NocBackend> {
+    match kind {
+        NocKind::Wormhole => Box::new(Network::new(mesh, 1, router_latency, buffer_depth)),
+        NocKind::Smart => Box::new(Network::new(mesh, hpc_max, router_latency, buffer_depth)),
+        NocKind::Ideal => Box::new(IdealNet::new(mesh.nodes())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn deliver_all(net: &mut dyn NocBackend) {
+        net.enqueue(0, 5, 3);
+        net.enqueue(7, 2, 2);
+        net.step();
+        net.enqueue(3, 12, 4);
+        let ran = net.drain(100_000);
+        assert!(net.quiescent(), "not quiescent after {ran} cycles");
+        assert_eq!(net.flits_injected(), net.flits_ejected());
+        for id in 0..net.table().len() as u32 {
+            assert!(net.table().get(id).is_done(), "packet {id}");
+        }
+    }
+
+    #[test]
+    fn all_kinds_deliver_through_the_trait() {
+        let mesh = Mesh::new(4, 4);
+        for kind in NocKind::ALL {
+            let mut net = build_backend(kind, mesh, 6, 1, 4);
+            deliver_all(net.as_mut());
+        }
+    }
+
+    #[test]
+    fn wormhole_is_mesh_with_hpc_one() {
+        // Through the trait, wormhole and SMART must differ only via the
+        // bypass: single-packet latency strictly improves under SMART.
+        let mesh = Mesh::new(8, 8);
+        let lat = |kind| {
+            let mut net = build_backend(kind, mesh, 14, 1, 4);
+            let id = net.enqueue(0, 63, 4);
+            net.drain(100_000);
+            net.table().get(id).net_latency()
+        };
+        assert!(lat(NocKind::Smart) < lat(NocKind::Wormhole));
+        assert!(lat(NocKind::Ideal) < lat(NocKind::Smart));
+    }
+
+    #[test]
+    fn next_event_reports_pending_work() {
+        let mesh = Mesh::new(4, 4);
+        for kind in NocKind::ALL {
+            let mut net = build_backend(kind, mesh, 6, 1, 4);
+            assert!(net.next_event().is_none(), "{kind:?} idle at start");
+            net.enqueue(0, 3, 2);
+            assert!(net.next_event().is_some(), "{kind:?} has work");
+            net.drain(100_000);
+            assert!(net.next_event().is_none(), "{kind:?} drained");
+        }
+    }
+}

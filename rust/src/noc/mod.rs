@@ -2,7 +2,12 @@
 //! DESIGN.md §1): 2D mesh, XY routing, wormhole flow control, SMART
 //! single-cycle multi-hop bypass, and an ideal interconnect, plus the six
 //! synthetic traffic patterns of Sec. VII.
+//!
+//! Every interconnect implements the [`NocBackend`] trait; the mesh engine
+//! is event-driven (a wakeup calendar skips idle routers) with the seed
+//! cycle-stepped engine retained as a golden reference (DESIGN.md §1).
 
+pub mod backend;
 pub mod ideal;
 pub mod network;
 pub mod packet;
@@ -10,8 +15,11 @@ pub mod sim;
 pub mod topology;
 pub mod traffic;
 
+pub use backend::{build_backend, NocBackend};
 pub use ideal::IdealNet;
 pub use network::Network;
-pub use sim::{run_flows, run_synthetic, NocModel, NocStats, SyntheticConfig};
+pub use sim::{
+    run_flows, run_synthetic, run_synthetic_with, NocStats, StepMode, SyntheticConfig,
+};
 pub use topology::{Dir, Mesh};
 pub use traffic::{Flow, Pattern};

@@ -14,8 +14,27 @@
 //! flits replay exactly that segmentation, so flits of a packet can never
 //! reorder. Output ports are locked packet-wise from head to tail, exactly
 //! like single-VC wormhole.
+//!
+//! ## Two stepping engines, one state (DESIGN.md §1)
+//!
+//! [`Network::step`] is *event-driven*: a binary-heap calendar of router
+//! wakeups means only routers that can possibly act this cycle are touched,
+//! and idle routers cost nothing. [`Network::step_reference`] is the seed
+//! cycle-stepped engine (full snapshot of every router every cycle), kept
+//! as the golden reference: `rust/tests/golden_noc_parity.rs` proves the
+//! two produce bit-identical [`super::sim::NocStats`]. A given `Network`
+//! instance must be driven exclusively through one of the two engines —
+//! the reference path does not maintain the wakeup calendar.
+//!
+//! The event-driven argument, in brief: a router is *routable* at cycle `t`
+//! only if some input port's head flit has `ready_at <= t`. Every state
+//! change that can create that condition (a flit landing, a head advancing
+//! in its buffer, a ready head losing arbitration or being blocked) pushes
+//! a wakeup, so a router with no pending wakeup is provably inert and the
+//! cycle-stepped scan over it is a no-op that can be skipped wholesale.
 
-use std::collections::VecDeque;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
 
 use super::packet::{Flit, PacketTable};
 use super::topology::{Dir, Mesh};
@@ -37,22 +56,26 @@ pub struct Network {
     out_lock: Vec<Option<u32>>,
     /// Round-robin arbitration pointer per output port.
     rr: Vec<usize>,
-    /// Directed-link usage flags for the current cycle.
-    link_used: Vec<bool>,
-    /// Ejection-port usage flags for the current cycle.
-    eject_used: Vec<bool>,
+    /// Cycle stamp of the last use of each directed link (`== now` means
+    /// used this cycle; replaces the seed engine's per-cycle clear of a
+    /// bool vector, which cost O(links) even on idle cycles).
+    link_stamp: Vec<u64>,
+    /// Cycle stamp of the last use of each ejection port.
+    eject_stamp: Vec<u64>,
     /// Per-node source queues of packet ids awaiting injection.
     src_q: Vec<VecDeque<u32>>,
     /// Next flit index to inject for the packet at the front of each queue.
     src_next_flit: Vec<u16>,
     /// Cycle-start snapshot: desired output of each ready head flit
-    /// (`Dir::index()`, or `NO_DESIRE`). Rebuilt every cycle; an entry is
-    /// invalidated when its flit moves so a port routes at most once per
-    /// cycle. This is both the hot-path cache and the faithful model of
-    /// SMART's SSRs, which are broadcast a cycle ahead of traversal.
+    /// (`Dir::index()`, or `NO_DESIRE`). An entry is invalidated when its
+    /// flit moves so a port routes at most once per cycle. This is both the
+    /// hot-path cache and the faithful model of SMART's SSRs, which are
+    /// broadcast a cycle ahead of traversal.
     desired: Vec<u8>,
-    /// Cycle-start contender mask per node: bit `d` set iff some ready
-    /// buffered flit wants output `d` (the SSR priority input).
+    /// Contender mask per node: bit `d` set iff some ready buffered flit
+    /// wants output `d` (the SSR priority input). Maintained so that it
+    /// always equals what the cycle-stepped engine would have computed at
+    /// the current cycle start (see `reschedule_node`).
     contenders: Vec<u8>,
     /// Flits currently buffered (incremental, for O(1) quiescence).
     buffered: usize,
@@ -60,6 +83,17 @@ pub struct Network {
     node_flits: Vec<u16>,
     /// Packets still (partially) waiting in source queues.
     src_pkts: usize,
+    /// Event calendar: (cycle, node) router wakeups, min-first.
+    wake: BinaryHeap<Reverse<(u64, u32)>>,
+    /// Earliest pending wakeup per node (`u64::MAX` = none); dedups heap
+    /// entries and lets stale ones be discarded on pop.
+    wake_at: Vec<u64>,
+    /// Scratch list of routers woken this cycle (kept sorted ascending so
+    /// switch allocation visits nodes in exactly the seed engine's order).
+    woken: Vec<u32>,
+    /// Nodes with a non-empty source queue (event-driven injection scan).
+    active_src: Vec<u32>,
+    src_active: Vec<bool>,
     pub table: PacketTable,
     pub now: u64,
     pub flits_injected: u64,
@@ -85,8 +119,8 @@ impl Network {
             buffers: vec![VecDeque::new(); n * PORTS],
             out_lock: vec![None; n * PORTS],
             rr: vec![0; n * PORTS],
-            link_used: vec![false; mesh.n_links()],
-            eject_used: vec![false; n],
+            link_stamp: vec![u64::MAX; mesh.n_links()],
+            eject_stamp: vec![u64::MAX; n],
             src_q: vec![VecDeque::new(); n],
             src_next_flit: vec![0; n],
             desired: vec![NO_DESIRE; n * PORTS],
@@ -94,6 +128,11 @@ impl Network {
             buffered: 0,
             node_flits: vec![0; n],
             src_pkts: 0,
+            wake: BinaryHeap::new(),
+            wake_at: vec![u64::MAX; n],
+            woken: Vec::new(),
+            active_src: Vec::new(),
+            src_active: vec![false; n],
             table: PacketTable::default(),
             now: 0,
             flits_injected: 0,
@@ -109,6 +148,10 @@ impl Network {
         let id = self.table.add(src as u32, dst as u32, len, self.now);
         self.src_q[src].push_back(id);
         self.src_pkts += 1;
+        if !self.src_active[src] {
+            self.src_active[src] = true;
+            self.active_src.push(src as u32);
+        }
         id
     }
 
@@ -149,35 +192,93 @@ impl Network {
         self.contenders[node] & (1 << d.index()) != 0
     }
 
+    /// Schedule a router wakeup at cycle `t` (deduplicated: only pushed if
+    /// earlier than the node's current earliest pending wakeup).
+    #[inline]
+    fn schedule_wake(&mut self, node: usize, t: u64) {
+        if t < self.wake_at[node] {
+            self.wake_at[node] = t;
+            self.wake.push(Reverse((t, node as u32)));
+        }
+    }
+
+    /// Earliest pending (non-stale) wakeup, pruning stale heap entries.
+    fn next_wake(&mut self) -> Option<u64> {
+        while let Some(&Reverse((t, node))) = self.wake.peek() {
+            if self.wake_at[node as usize] == t {
+                return Some(t);
+            }
+            self.wake.pop();
+        }
+        None
+    }
+
     /// Refresh the per-cycle SSR snapshot (desired outputs + contender
-    /// masks). Incremental: a head flit's desire is a pure function of
-    /// (node, flit), so an entry stays valid until that flit moves (moves
-    /// reset it to NO_DESIRE); only invalidated or newly-ready ports are
-    /// recomputed — the dominant saving in saturated meshes where most
-    /// heads are blocked for many cycles.
+    /// masks) for every node — the seed engine's full scan. Incremental: a
+    /// head flit's desire is a pure function of (node, flit), so an entry
+    /// stays valid until that flit moves (moves reset it to NO_DESIRE);
+    /// only invalidated or newly-ready ports are recomputed.
     fn snapshot_desires(&mut self) {
         for node in 0..self.mesh.nodes() {
             if self.node_flits[node] == 0 {
                 self.contenders[node] = 0;
                 continue;
             }
-            let mut mask = 0u8;
-            for port in 0..PORTS {
-                let idx = node * PORTS + port;
-                let mut d = self.desired[idx];
-                if d == NO_DESIRE {
-                    if let Some(f) = self.buffers[idx].front() {
-                        if f.ready_at <= self.now {
-                            d = self.desired_out(node, f).index() as u8;
-                            self.desired[idx] = d;
-                        }
+            self.refresh_node(node);
+        }
+    }
+
+    /// Per-node SSR snapshot refresh (shared by both engines): set desires
+    /// for ready head flits and recompute the node's contender mask.
+    fn refresh_node(&mut self, node: usize) {
+        if self.node_flits[node] == 0 {
+            self.contenders[node] = 0;
+            return;
+        }
+        let mut mask = 0u8;
+        for port in 0..PORTS {
+            let idx = node * PORTS + port;
+            let mut d = self.desired[idx];
+            if d == NO_DESIRE {
+                if let Some(f) = self.buffers[idx].front() {
+                    if f.ready_at <= self.now {
+                        d = self.desired_out(node, f).index() as u8;
+                        self.desired[idx] = d;
                     }
                 }
-                if d != NO_DESIRE {
-                    mask |= 1 << d;
-                }
             }
-            self.contenders[node] = mask;
+            if d != NO_DESIRE {
+                mask |= 1 << d;
+            }
+        }
+        self.contenders[node] = mask;
+    }
+
+    /// Post-routing bookkeeping for a woken node: bring its contender mask
+    /// back in line with the cycle-stepped engine's next snapshot (set
+    /// desires are always ready flits, so the mask is their OR) and push
+    /// the node's next wakeup — `now + 1` if any head is already ready,
+    /// else the earliest head `ready_at`.
+    fn reschedule_node(&mut self, node: usize) {
+        if self.node_flits[node] == 0 {
+            self.contenders[node] = 0;
+            return;
+        }
+        let mut mask = 0u8;
+        let mut next = u64::MAX;
+        for port in 0..PORTS {
+            let idx = node * PORTS + port;
+            let d = self.desired[idx];
+            if d != NO_DESIRE {
+                mask |= 1 << d;
+            }
+            if let Some(f) = self.buffers[idx].front() {
+                next = next.min(f.ready_at.max(self.now + 1));
+            }
+        }
+        self.contenders[node] = mask;
+        if next != u64::MAX {
+            self.schedule_wake(node, next);
         }
     }
 
@@ -200,7 +301,7 @@ impl Network {
         let mut at = node;
         for hop in 0..max_run {
             // Link must be free this cycle.
-            if self.link_used[self.mesh.link_id(at, d)] {
+            if self.link_stamp[self.mesh.link_id(at, d)] == self.now {
                 break;
             }
             let next = match self.mesh.neighbor(at, d) {
@@ -219,7 +320,7 @@ impl Network {
                 // blocked on this packet's lock would deadlock.
                 let blocked = matches!(lock, Some(owner) if owner != f.pkt)
                     || (f.is_head() && self.has_local_contender(next, d))
-                    || self.link_used[self.mesh.link_id(next, d)];
+                    || self.link_stamp[self.mesh.link_id(next, d)] == self.now;
                 path[len] = next;
                 len += 1;
                 if blocked {
@@ -253,13 +354,63 @@ impl Network {
         len
     }
 
-    /// Advance one cycle.
+    /// Advance one cycle, event-driven: only routers with a due wakeup and
+    /// sources with queued packets are touched. Observable behavior is
+    /// identical to [`Self::step_reference`] (golden parity test).
     pub fn step(&mut self) {
         if self.buffered > 0 {
-            self.link_used.iter_mut().for_each(|l| *l = false);
-            self.eject_used.iter_mut().for_each(|e| *e = false);
-            self.snapshot_desires();
+            // Pass 0: collect due wakeups, ascending node order (the seed
+            // engine allocates links/locks scanning nodes 0..n in order, so
+            // the woken subset must be visited in that same order). The
+            // scratch vector is moved out of `self` for the duration so the
+            // borrow checker allows &mut self calls while iterating it.
+            let mut woken = std::mem::take(&mut self.woken);
+            woken.clear();
+            while let Some(&Reverse((t, node))) = self.wake.peek() {
+                if t > self.now {
+                    break;
+                }
+                self.wake.pop();
+                if self.wake_at[node as usize] == t {
+                    self.wake_at[node as usize] = u64::MAX;
+                    woken.push(node);
+                }
+            }
+            woken.sort_unstable();
+            // Pass 1: SSR snapshot (broadcast a cycle ahead of traversal —
+            // all desires are computed before any flit moves).
+            for &node in &woken {
+                self.refresh_node(node as usize);
+            }
+            // Pass 2: switch allocation + traversal in fixed node order.
+            for &node in &woken {
+                if self.contenders[node as usize] != 0 {
+                    self.route_node(node as usize);
+                }
+            }
+            // Pass 3: restore mask invariants and schedule next wakeups.
+            for &node in &woken {
+                self.reschedule_node(node as usize);
+            }
+            self.woken = woken;
+        }
 
+        // Injection: one flit per node per cycle from each non-empty
+        // source queue.
+        if self.src_pkts > 0 {
+            self.inject_active();
+        }
+
+        self.now += 1;
+    }
+
+    /// Advance one cycle with the seed cycle-stepped engine: snapshot and
+    /// scan every router. Kept as the golden reference for parity tests;
+    /// do not mix with [`Self::step`] on the same instance (this path does
+    /// not maintain the wakeup calendar).
+    pub fn step_reference(&mut self) {
+        if self.buffered > 0 {
+            self.snapshot_desires();
             // Switch allocation + traversal, router by router in fixed order.
             for node in 0..self.mesh.nodes() {
                 // Idle routers (no buffered flits) are skipped outright.
@@ -268,14 +419,11 @@ impl Network {
                 }
             }
         }
-
-        // Injection: one flit per node per cycle from the source queue.
         if self.src_pkts > 0 {
             for node in 0..self.mesh.nodes() {
                 self.inject_node(node);
             }
         }
-
         self.now += 1;
     }
 
@@ -320,10 +468,10 @@ impl Network {
         let f = *self.buffers[node * PORTS + port].front().unwrap();
         if out == Dir::Local {
             // Ejection: one flit per node per cycle.
-            if self.eject_used[node] {
+            if self.eject_stamp[node] == self.now {
                 return false;
             }
-            self.eject_used[node] = true;
+            self.eject_stamp[node] = self.now;
             self.buffers[node * PORTS + port].pop_front();
             self.buffered -= 1;
             self.node_flits[node] -= 1;
@@ -356,8 +504,8 @@ impl Network {
         let mut at = node;
         for &next in path {
             let lid = self.mesh.link_id(at, out);
-            debug_assert!(!self.link_used[lid]);
-            self.link_used[lid] = true;
+            debug_assert!(self.link_stamp[lid] != self.now);
+            self.link_stamp[lid] = self.now;
             let oidx = at * PORTS + out.index();
             debug_assert!(self.out_lock[oidx].is_none() || self.out_lock[oidx] == Some(f.pkt));
             self.out_lock[oidx] = if is_tail { None } else { Some(f.pkt) };
@@ -372,10 +520,28 @@ impl Network {
             moved.seg += 1;
         }
         moved.ready_at = self.now + 1 + self.router_latency;
+        let wake_t = moved.ready_at.max(self.now + 1);
         self.buffers[stop * PORTS + out.opposite().index()].push_back(moved);
         self.node_flits[node] -= 1;
         self.node_flits[stop] += 1;
+        self.schedule_wake(stop, wake_t);
         true
+    }
+
+    /// Inject from every node with a non-empty source queue, retiring
+    /// nodes whose queue drains (event-driven injection scan).
+    fn inject_active(&mut self) {
+        let mut i = 0;
+        while i < self.active_src.len() {
+            let node = self.active_src[i] as usize;
+            self.inject_node(node);
+            if self.src_q[node].is_empty() {
+                self.src_active[node] = false;
+                self.active_src.swap_remove(i);
+            } else {
+                i += 1;
+            }
+        }
     }
 
     fn inject_node(&mut self, node: usize) {
@@ -387,23 +553,24 @@ impl Network {
             return;
         }
         let idx = self.src_next_flit[node];
-        let (len, first) = {
+        let len = {
             let p = self.table.get_mut(pkt);
             if p.inject_cycle == u64::MAX {
                 p.inject_cycle = self.now;
             }
-            (p.len, p.inject_cycle)
+            p.len
         };
-        let _ = first;
+        let ready_at = self.now + self.router_latency;
         self.buffers[local].push_back(Flit {
             pkt,
             idx,
             seg: 0,
-            ready_at: self.now + self.router_latency,
+            ready_at,
         });
         self.buffered += 1;
         self.node_flits[node] += 1;
         self.flits_injected += 1;
+        self.schedule_wake(node, ready_at.max(self.now + 1));
         if idx + 1 == len {
             self.src_q[node].pop_front();
             self.src_pkts -= 1;
@@ -445,12 +612,60 @@ impl Network {
     }
 
     /// Run until quiescent or `max_cycles` elapse; returns cycles run.
+    /// Event-driven: spans with no due wakeup and no pending injections are
+    /// skipped in one jump (each skipped cycle is provably a no-op).
     pub fn drain(&mut self, max_cycles: u64) -> u64 {
         let start = self.now;
         while !self.quiescent() && self.now - start < max_cycles {
+            if self.src_pkts == 0 {
+                match self.next_wake() {
+                    Some(t) if t > self.now => {
+                        self.now = t.min(start + max_cycles);
+                        if self.now - start >= max_cycles {
+                            break;
+                        }
+                    }
+                    Some(_) => {}
+                    // Buffered flits with an empty wakeup calendar violates
+                    // the engine invariant (every landing schedules one):
+                    // loud in debug builds so the parity suite catches it,
+                    // bounded (not spinning) in release.
+                    None => {
+                        debug_assert!(
+                            false,
+                            "event engine: {} buffered flits but no pending wakeup",
+                            self.buffered
+                        );
+                        break;
+                    }
+                }
+            }
             self.step();
         }
         self.now - start
+    }
+
+    /// Seed-engine drain: cycle-stepped, no event skipping. Pairs with
+    /// [`Self::step_reference`] for the golden parity tests.
+    pub fn drain_reference(&mut self, max_cycles: u64) -> u64 {
+        let start = self.now;
+        while !self.quiescent() && self.now - start < max_cycles {
+            self.step_reference();
+        }
+        self.now - start
+    }
+
+    /// Earliest future cycle at which the network can change state, or
+    /// `None` when quiescent. `Some(now)` means there is work this cycle.
+    pub fn next_event(&mut self) -> Option<u64> {
+        if self.src_pkts > 0 {
+            return Some(self.now);
+        }
+        if self.buffered == 0 {
+            return None;
+        }
+        let now = self.now;
+        self.next_wake().map(|t| t.max(now))
     }
 }
 
@@ -570,5 +785,62 @@ mod tests {
         assert_eq!(n.flits_injected, 1);
         n.step();
         assert_eq!(n.flits_injected, 2);
+    }
+
+    #[test]
+    fn event_and_reference_steps_agree_cycle_by_cycle() {
+        // Drive two identical networks through the same injection schedule,
+        // one per engine; every packet's full trajectory must match.
+        let mut ev = net(8);
+        let mut re = net(8);
+        for i in 0..150u32 {
+            let src = (i as usize * 11 + 3) % 64;
+            let dst = (i as usize * 23 + 40) % 64;
+            if src != dst {
+                ev.enqueue(src, dst, 1 + (i % 5) as u16);
+                re.enqueue(src, dst, 1 + (i % 5) as u16);
+            }
+            ev.step();
+            re.step_reference();
+            assert_eq!(ev.flits_ejected, re.flits_ejected, "cycle {i}");
+        }
+        ev.drain(100_000);
+        re.drain_reference(100_000);
+        assert!(ev.quiescent() && re.quiescent());
+        assert_eq!(ev.table.len(), re.table.len());
+        for id in 0..ev.table.len() as u32 {
+            let (a, b) = (ev.table.get(id), re.table.get(id));
+            assert_eq!(a.inject_cycle, b.inject_cycle, "pkt {id}");
+            assert_eq!(a.done_cycle, b.done_cycle, "pkt {id}");
+            assert_eq!(a.stops, b.stops, "pkt {id}");
+        }
+    }
+
+    #[test]
+    fn drain_event_skip_matches_reference_drain() {
+        // One long-haul packet with a deep router pipeline: the event drain
+        // must jump the pipeline bubbles yet finish at the same cycle.
+        let mut ev = Network::new(Mesh::new(8, 8), 1, 6, 2);
+        let mut re = Network::new(Mesh::new(8, 8), 1, 6, 2);
+        let a = ev.enqueue(0, 63, 3);
+        let b = re.enqueue(0, 63, 3);
+        ev.drain(50_000);
+        re.drain_reference(50_000);
+        assert_eq!(
+            ev.table.get(a).done_cycle,
+            re.table.get(b).done_cycle,
+            "event-skip drain diverged"
+        );
+    }
+
+    #[test]
+    fn next_event_none_when_quiescent() {
+        let mut n = net(4);
+        assert_eq!(n.next_event(), None);
+        n.enqueue(0, 5, 2);
+        assert_eq!(n.next_event(), Some(n.now));
+        n.drain(10_000);
+        assert!(n.quiescent());
+        assert_eq!(n.next_event(), None);
     }
 }

@@ -1,88 +1,111 @@
 //! NoC simulation drivers: synthetic-traffic sweeps (Sec. VII, Figs. 10-11)
 //! and flow-based runs for mapped CNNs (Sec. VI).
+//!
+//! Drivers are written against the [`NocBackend`] trait (DESIGN.md §1), so
+//! one loop serves every interconnect. [`StepMode`] selects between the
+//! event-driven engine (default) and the seed cycle-stepped engine, which
+//! is kept solely as the golden reference: both must report bit-identical
+//! [`NocStats`] (`rust/tests/golden_noc_parity.rs`).
 
 use crate::config::NocKind;
 use crate::util::stats::Accumulator;
 use crate::util::Rng;
 
-use super::ideal::IdealNet;
+use super::backend::{build_backend, NocBackend};
 use super::network::Network;
 use super::packet::PacketTable;
 use super::topology::Mesh;
 use super::traffic::{Flow, FlowPacer, Pattern};
 
-/// Unified handle over the three interconnects of Sec. VI-B.
-pub enum NocModel {
-    Mesh(Network),
-    Ideal(IdealNet),
+/// Which stepping engine drives the run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepMode {
+    /// Event-driven scheduler (calendar of router wakeups); the default.
+    EventDriven,
+    /// The seed engine: touch every router every cycle. Golden reference
+    /// for parity tests and `--mode reference` CLI runs.
+    CycleStepped,
 }
 
-impl NocModel {
-    /// Build a model. Wormhole is the same engine with HPC_max = 1.
-    pub fn build(
+impl std::str::FromStr for StepMode {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "event" | "event-driven" => Ok(StepMode::EventDriven),
+            "reference" | "cycle" | "cycle-stepped" => Ok(StepMode::CycleStepped),
+            other => Err(format!("unknown step mode {other:?} (event|reference)")),
+        }
+    }
+}
+
+/// Internal driver handle: either any backend through the trait (event
+/// path) or the mesh engine pinned to its reference stepping functions.
+/// The ideal NoC has a single engine, so the reference mode only differs
+/// for the mesh kinds.
+enum DriverNet {
+    Backend(Box<dyn NocBackend>),
+    Reference(Network),
+}
+
+impl DriverNet {
+    fn build(
         kind: NocKind,
         mesh: Mesh,
         hpc_max: usize,
         router_latency: u64,
         buffer_depth: usize,
+        mode: StepMode,
     ) -> Self {
-        match kind {
-            NocKind::Wormhole => {
-                NocModel::Mesh(Network::new(mesh, 1, router_latency, buffer_depth))
+        match (mode, kind) {
+            (StepMode::CycleStepped, NocKind::Wormhole) => {
+                DriverNet::Reference(Network::new(mesh, 1, router_latency, buffer_depth))
             }
-            NocKind::Smart => {
-                NocModel::Mesh(Network::new(mesh, hpc_max, router_latency, buffer_depth))
+            (StepMode::CycleStepped, NocKind::Smart) => {
+                DriverNet::Reference(Network::new(mesh, hpc_max, router_latency, buffer_depth))
             }
-            NocKind::Ideal => NocModel::Ideal(IdealNet::new(mesh.nodes())),
+            _ => DriverNet::Backend(build_backend(
+                kind,
+                mesh,
+                hpc_max,
+                router_latency,
+                buffer_depth,
+            )),
         }
     }
 
-    pub fn enqueue(&mut self, src: usize, dst: usize, len: u16) -> u32 {
+    fn enqueue(&mut self, src: usize, dst: usize, len: u16) -> u32 {
         match self {
-            NocModel::Mesh(n) => n.enqueue(src, dst, len),
-            NocModel::Ideal(n) => n.enqueue(src, dst, len),
+            DriverNet::Backend(n) => n.enqueue(src, dst, len),
+            DriverNet::Reference(n) => n.enqueue(src, dst, len),
         }
     }
 
-    pub fn step(&mut self) {
+    fn step(&mut self) {
         match self {
-            NocModel::Mesh(n) => n.step(),
-            NocModel::Ideal(n) => n.step(),
+            DriverNet::Backend(n) => n.step(),
+            DriverNet::Reference(n) => n.step_reference(),
         }
     }
 
-    pub fn now(&self) -> u64 {
+    fn drain(&mut self, max_cycles: u64) -> u64 {
         match self {
-            NocModel::Mesh(n) => n.now,
-            NocModel::Ideal(n) => n.now,
+            DriverNet::Backend(n) => n.drain(max_cycles),
+            DriverNet::Reference(n) => n.drain_reference(max_cycles),
         }
     }
 
-    pub fn table(&self) -> &PacketTable {
+    fn table(&self) -> &PacketTable {
         match self {
-            NocModel::Mesh(n) => &n.table,
-            NocModel::Ideal(n) => &n.table,
+            DriverNet::Backend(n) => n.table(),
+            DriverNet::Reference(n) => &n.table,
         }
     }
 
-    pub fn flits_ejected(&self) -> u64 {
+    fn flits_ejected(&self) -> u64 {
         match self {
-            NocModel::Mesh(n) => n.flits_ejected,
-            NocModel::Ideal(n) => n.flits_ejected,
-        }
-    }
-
-    pub fn quiescent(&self) -> bool {
-        match self {
-            NocModel::Mesh(n) => n.quiescent(),
-            NocModel::Ideal(n) => n.quiescent(),
-        }
-    }
-
-    pub fn drain(&mut self, max_cycles: u64) -> u64 {
-        match self {
-            NocModel::Mesh(n) => n.drain(max_cycles),
-            NocModel::Ideal(n) => n.drain(max_cycles),
+            DriverNet::Backend(n) => n.flits_ejected(),
+            DriverNet::Reference(n) => n.flits_ejected,
         }
     }
 }
@@ -128,8 +151,18 @@ impl Default for SyntheticConfig {
     }
 }
 
+impl SyntheticConfig {
+    /// Router (pipeline, buffer depth) for the given flow control.
+    pub fn router_for(&self, kind: NocKind) -> (u64, usize) {
+        match kind {
+            NocKind::Smart => self.smart_router,
+            _ => self.wormhole_router,
+        }
+    }
+}
+
 /// Results of one run.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct NocStats {
     /// Offered load (flits/node/cycle).
     pub offered: f64,
@@ -155,13 +188,25 @@ impl NocStats {
     }
 }
 
-/// Run one synthetic-traffic point (Figs. 10-11 are sweeps of this).
+/// Run one synthetic-traffic point (Figs. 10-11 are sweeps of this) with
+/// the event-driven engine.
 pub fn run_synthetic(kind: NocKind, mesh: Mesh, cfg: &SyntheticConfig, hpc_max: usize) -> NocStats {
-    let (rl, depth) = match kind {
-        NocKind::Smart => cfg.smart_router,
-        _ => cfg.wormhole_router,
-    };
-    let mut net = NocModel::build(kind, mesh, hpc_max, rl, depth);
+    run_synthetic_with(kind, mesh, cfg, hpc_max, StepMode::EventDriven)
+}
+
+/// Run one synthetic-traffic point with an explicit stepping engine. The
+/// traffic generator draws the RNG identically in both modes, so the two
+/// engines are fed bit-identical packet streams and must report
+/// bit-identical stats.
+pub fn run_synthetic_with(
+    kind: NocKind,
+    mesh: Mesh,
+    cfg: &SyntheticConfig,
+    hpc_max: usize,
+    mode: StepMode,
+) -> NocStats {
+    let (rl, depth) = cfg.router_for(kind);
+    let mut net = DriverNet::build(kind, mesh, hpc_max, rl, depth, mode);
     let mut rng = Rng::new(cfg.seed);
     // Bernoulli packet generation: rate flits/node/cycle -> p per cycle.
     let p_gen = cfg.injection_rate / cfg.packet_len as f64;
@@ -235,6 +280,7 @@ pub struct FlowStats {
 
 /// Like [`run_flows`] but reports per-flow statistics (the CNN coupling
 /// needs per-layer latency and acceptance).
+#[allow(clippy::too_many_arguments)]
 pub fn run_flows_detailed(
     kind: NocKind,
     mesh: Mesh,
@@ -246,7 +292,7 @@ pub fn run_flows_detailed(
     router_latency: u64,
     buffer_depth: usize,
 ) -> Vec<FlowStats> {
-    let mut net = NocModel::build(kind, mesh, hpc_max, router_latency, buffer_depth);
+    let mut net = build_backend(kind, mesh, hpc_max, router_latency, buffer_depth);
     let mut pacers: Vec<FlowPacer> = flows.iter().map(|&f| FlowPacer::new(f)).collect();
     // All packets ever generated per flow, plus how many were offered
     // inside the measurement window.
@@ -315,6 +361,7 @@ pub fn run_flows_detailed(
 
 /// Run a set of deterministic point-to-point flows (mapped-CNN traffic).
 /// Returns aggregate stats over the measurement window.
+#[allow(clippy::too_many_arguments)]
 pub fn run_flows(
     kind: NocKind,
     mesh: Mesh,
@@ -326,7 +373,7 @@ pub fn run_flows(
     router_latency: u64,
     buffer_depth: usize,
 ) -> NocStats {
-    let mut net = NocModel::build(kind, mesh, hpc_max, router_latency, buffer_depth);
+    let mut net = build_backend(kind, mesh, hpc_max, router_latency, buffer_depth);
     let mut pacers: Vec<FlowPacer> = flows.iter().map(|&f| FlowPacer::new(f)).collect();
     let mut window_pkts: Vec<u32> = Vec::new();
     let mut ejected_at_warmup = 0u64;
@@ -490,5 +537,35 @@ mod tests {
         );
         assert!(s.completed > 80, "{s:?}");
         assert_eq!(s.dropped, 0);
+    }
+
+    #[test]
+    fn step_modes_report_identical_stats() {
+        // A quick in-crate parity smoke test; the exhaustive grid lives in
+        // rust/tests/golden_noc_parity.rs.
+        let cfg = SyntheticConfig {
+            pattern: Pattern::Transpose,
+            injection_rate: 0.06,
+            warmup: 300,
+            measure: 1_200,
+            drain: 5_000,
+            seed: 0x51EE7,
+            ..Default::default()
+        };
+        for kind in [NocKind::Wormhole, NocKind::Smart] {
+            let ev = run_synthetic_with(kind, Mesh::new(8, 8), &cfg, 14, StepMode::EventDriven);
+            let re = run_synthetic_with(kind, Mesh::new(8, 8), &cfg, 14, StepMode::CycleStepped);
+            assert_eq!(ev, re, "{kind:?} engines diverged");
+        }
+    }
+
+    #[test]
+    fn step_mode_parses() {
+        assert_eq!("event".parse::<StepMode>().unwrap(), StepMode::EventDriven);
+        assert_eq!(
+            "reference".parse::<StepMode>().unwrap(),
+            StepMode::CycleStepped
+        );
+        assert!("warp".parse::<StepMode>().is_err());
     }
 }

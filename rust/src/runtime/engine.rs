@@ -1,25 +1,46 @@
 //! PJRT execution engine: load AOT-compiled HLO-text artifacts and run them
 //! on the CPU PJRT client — the request-path compute of the serving
 //! coordinator. Python never runs here (DESIGN.md §2).
+//!
+//! The PJRT path needs the `xla` crate (xla-rs + a local `xla_extension`
+//! install), which the offline build environment does not ship. It is
+//! therefore gated behind the `pjrt` cargo feature (DESIGN.md §2): without
+//! it this module compiles to API-identical stubs whose constructors
+//! return a clear error, so the coordinator, CLI and tests build and run
+//! everywhere and degrade gracefully where PJRT is absent.
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+#[cfg(feature = "pjrt")]
+use crate::util::error::Context;
+use crate::util::error::Result;
 
 use super::weights::WeightsFile;
 
+// ---------------------------------------------------------------------------
+// Real PJRT-backed implementation (`--features pjrt`).
+// ---------------------------------------------------------------------------
+
+/// Literal tensor handed to an executable.
+#[cfg(feature = "pjrt")]
+pub type Literal = xla::Literal;
+
 /// A compiled executable plus its metadata.
+#[cfg(feature = "pjrt")]
 pub struct Executable {
     pub name: String,
     exe: xla::PjRtLoadedExecutable,
 }
 
 /// The PJRT runtime: one CPU client, many compiled artifacts.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
     artifacts_dir: PathBuf,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Create a CPU PJRT client rooted at an artifacts directory.
     pub fn new(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
@@ -72,48 +93,160 @@ impl Runtime {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl Executable {
     /// Execute with literal inputs; returns the flattened f32 output (the
     /// AOT graphs are lowered with `return_tuple=True`, so the single
     /// result is unwrapped from a 1-tuple).
-    pub fn run_f32(&self, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
+    pub fn run_f32(&self, inputs: &[Literal]) -> Result<Vec<f32>> {
         let result = self
             .exe
-            .execute::<xla::Literal>(inputs)
+            .execute::<Literal>(inputs)
             .with_context(|| format!("executing {}", self.name))?[0][0]
-            .to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
+            .to_literal_sync()
+            .context("device-to-host transfer")?;
+        let out = result.to_tuple1().context("unwrapping 1-tuple")?;
+        out.to_vec::<f32>().context("reading f32 output")
     }
 
     /// Execute and return the flattened i32 output.
-    pub fn run_i32(&self, inputs: &[xla::Literal]) -> Result<Vec<i32>> {
+    pub fn run_i32(&self, inputs: &[Literal]) -> Result<Vec<i32>> {
         let result = self
             .exe
-            .execute::<xla::Literal>(inputs)
+            .execute::<Literal>(inputs)
             .with_context(|| format!("executing {}", self.name))?[0][0]
-            .to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<i32>()?)
+            .to_literal_sync()
+            .context("device-to-host transfer")?;
+        let out = result.to_tuple1().context("unwrapping 1-tuple")?;
+        out.to_vec::<i32>().context("reading i32 output")
     }
 }
 
 /// Build an f32 literal of the given shape from a flat slice.
-pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+#[cfg(feature = "pjrt")]
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
     let n: i64 = dims.iter().product();
     if n as usize != data.len() {
         bail!("literal shape {:?} != {} elements", dims, data.len());
     }
-    Ok(xla::Literal::vec1(data).reshape(dims)?)
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .context("reshaping f32 literal")
 }
 
 /// Build an i32 literal of the given shape from a flat slice.
-pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+#[cfg(feature = "pjrt")]
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<Literal> {
     let n: i64 = dims.iter().product();
     if n as usize != data.len() {
         bail!("literal shape {:?} != {} elements", dims, data.len());
     }
-    Ok(xla::Literal::vec1(data).reshape(dims)?)
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .context("reshaping i32 literal")
+}
+
+// ---------------------------------------------------------------------------
+// Stub implementation (default build): same API, clear runtime errors.
+// ---------------------------------------------------------------------------
+
+#[cfg(not(feature = "pjrt"))]
+const NO_PJRT: &str =
+    "smart_pim was built without the `pjrt` feature — PJRT execution is unavailable \
+     (enable the feature and provide the `xla` crate; see DESIGN.md §2)";
+
+/// Literal tensor handed to an executable (stub: shape bookkeeping only).
+#[cfg(not(feature = "pjrt"))]
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Literal {
+    /// Mirror of `xla::Literal::reshape` so callers type-check unchanged.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let old: i64 = self.dims.iter().product();
+        let new: i64 = dims.iter().product();
+        if old != new {
+            bail!("cannot reshape {:?} to {:?}", self.dims, dims);
+        }
+        Ok(Literal {
+            dims: dims.to_vec(),
+        })
+    }
+}
+
+/// A compiled executable plus its metadata (stub).
+#[cfg(not(feature = "pjrt"))]
+pub struct Executable {
+    pub name: String,
+}
+
+/// The PJRT runtime (stub: construction always fails with a clear error).
+#[cfg(not(feature = "pjrt"))]
+pub struct Runtime {
+    artifacts_dir: PathBuf,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    pub fn new(_artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
+        bail!("{NO_PJRT}");
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable (no pjrt feature)".to_string()
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts_dir
+    }
+
+    pub fn load(&self, _name: &str) -> Result<Executable> {
+        bail!("{NO_PJRT}");
+    }
+
+    /// Load the weights container for a model (pure Rust: works without
+    /// PJRT, but unreachable here since construction fails).
+    pub fn load_weights(&self, file: &str) -> Result<WeightsFile> {
+        WeightsFile::load(&self.artifacts_dir.join(file))
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Executable {
+    pub fn run_f32(&self, _inputs: &[Literal]) -> Result<Vec<f32>> {
+        bail!("{NO_PJRT}");
+    }
+
+    pub fn run_i32(&self, _inputs: &[Literal]) -> Result<Vec<i32>> {
+        bail!("{NO_PJRT}");
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat slice.
+#[cfg(not(feature = "pjrt"))]
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        bail!("literal shape {:?} != {} elements", dims, data.len());
+    }
+    Ok(Literal {
+        dims: dims.to_vec(),
+    })
+}
+
+/// Build an i32 literal of the given shape from a flat slice.
+#[cfg(not(feature = "pjrt"))]
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        bail!("literal shape {:?} != {} elements", dims, data.len());
+    }
+    Ok(Literal {
+        dims: dims.to_vec(),
+    })
 }
 
 #[cfg(test)]
@@ -136,12 +269,27 @@ mod tests {
     fn missing_artifact_is_clean_error() {
         let rt = match Runtime::new("/nonexistent-dir") {
             Ok(rt) => rt,
-            Err(_) => return, // no PJRT in this environment; covered elsewhere
+            Err(_) => return, // no PJRT in this build/environment
         };
         let err = match rt.load("nope") {
             Ok(_) => panic!("load of missing artifact succeeded"),
             Err(e) => e.to_string(),
         };
         assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_reports_missing_feature() {
+        let err = Runtime::new("artifacts").err().expect("stub must fail");
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_literal_reshape_checks_element_count() {
+        let l = literal_i32(&[1, 2, 3, 4], &[4]).unwrap();
+        assert!(l.reshape(&[2, 2]).is_ok());
+        assert!(l.reshape(&[3, 2]).is_err());
     }
 }

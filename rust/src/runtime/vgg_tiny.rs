@@ -2,7 +2,8 @@
 //! whose every GEMM runs through the bit-serial crossbar Pallas kernel
 //! (python/compile/model.py), AOT-lowered at batch sizes 1 and 4.
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{Context, Result};
+use crate::{bail, format_err};
 
 use super::engine::{literal_f32, literal_i32, Executable, Runtime};
 use super::weights::WeightsFile;
@@ -98,7 +99,7 @@ pub fn load_golden(rt: &Runtime, batch: usize) -> Result<(Vec<f32>, Vec<f32>)> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;
         text.split_whitespace()
-            .map(|t| t.parse::<f32>().map_err(|e| anyhow::anyhow!("{t:?}: {e}")))
+            .map(|t| t.parse::<f32>().map_err(|e| format_err!("{t:?}: {e}")))
             .collect()
     };
     Ok((parse(&img_path)?, parse(&logit_path)?))

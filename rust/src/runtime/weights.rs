@@ -8,7 +8,8 @@
 use std::io::Read;
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result};
 
 pub const WEIGHTS_MAGIC: u32 = 0x534D_5057;
 

@@ -60,13 +60,17 @@ impl SimResult {
 
     /// Steady-state injection interval: mean gap between the completions of
     /// the last half of the image stream (cycle-exact for a periodic
-    /// pipeline).
-    pub fn steady_interval(&self) -> f64 {
+    /// pipeline). `None` when fewer than two images completed — a
+    /// single-image run has no interval to measure (callers used to panic
+    /// here; they now choose their own fallback).
+    pub fn steady_interval(&self) -> Option<f64> {
         let n = self.completions.len();
-        assert!(n >= 2, "need at least two images for an interval");
+        if n < 2 {
+            return None;
+        }
         let half = n / 2;
         let span = self.completions[n - 1] - self.completions[half - 1];
-        span as f64 / (n - half) as f64
+        Some(span as f64 / (n - half) as f64)
     }
 }
 
@@ -362,9 +366,17 @@ mod tests {
     }
 
     #[test]
+    fn steady_interval_none_for_single_image() {
+        let one = run(VggVariant::A, false, false, 1);
+        assert!(one.steady_interval().is_none(), "1 image has no interval");
+        let two = run(VggVariant::A, false, false, 2);
+        assert!(two.steady_interval().is_some());
+    }
+
+    #[test]
     fn batch_interval_converges_to_max_occupancy() {
         let r = run(VggVariant::E, true, true, 10);
-        let interval = r.steady_interval();
+        let interval = r.steady_interval().expect("10 images");
         // Fig. 7 VGG-E: busiest stage 3136 cycles/image.
         assert!(
             (interval - 3136.0).abs() <= 64.0,
@@ -377,7 +389,7 @@ mod tests {
         // Fig. 5: geomean (2) vs (1) = 1.0309x.
         let no_batch = run(VggVariant::D, false, false, 8);
         let batch = run(VggVariant::D, false, true, 8);
-        let s = no_batch.steady_interval() / batch.steady_interval();
+        let s = no_batch.steady_interval().unwrap() / batch.steady_interval().unwrap();
         assert!((1.0..1.35).contains(&s), "speedup {s}");
     }
 
@@ -386,7 +398,7 @@ mod tests {
         // Fig. 5: geomean (3) vs (1) = 10.1788x.
         let base = run(VggVariant::E, false, false, 4);
         let repl = run(VggVariant::E, true, false, 4);
-        let s = base.steady_interval() / repl.steady_interval();
+        let s = base.steady_interval().unwrap() / repl.steady_interval().unwrap();
         assert!((5.0..20.0).contains(&s), "speedup {s}");
     }
 
@@ -396,7 +408,7 @@ mod tests {
         // a speedup close to 16x".
         let base = run(VggVariant::E, false, false, 4);
         let both = run(VggVariant::E, true, true, 10);
-        let s = base.steady_interval() / both.steady_interval();
+        let s = base.steady_interval().unwrap() / both.steady_interval().unwrap();
         assert!((10.0..20.0).contains(&s), "speedup {s}");
     }
 
@@ -423,10 +435,10 @@ mod tests {
         };
         let slow = Engine::new(&plans, &throttled, true, 6).run();
         assert!(
-            slow.steady_interval() > 1.5 * fast.steady_interval(),
+            slow.steady_interval().unwrap() > 1.5 * fast.steady_interval().unwrap(),
             "throttle had no effect: {} vs {}",
-            slow.steady_interval(),
-            fast.steady_interval()
+            slow.steady_interval().unwrap(),
+            fast.steady_interval().unwrap()
         );
     }
 }

@@ -153,7 +153,9 @@ pub fn evaluate(variant: VggVariant, scenario: Scenario, noc: NocKind, arch: &Ar
     let images = default_images(scenario);
     let sim = Engine::new(&plans, &adjust, scenario.batch(), images).run();
 
-    let interval = sim.steady_interval();
+    // Single-image runs have no steady interval; fall back to the whole
+    // run (serving one image every full pass).
+    let interval = sim.steady_interval().unwrap_or(sim.cycles as f64);
     let lats = sim.latencies();
     let latency = lats[lats.len() / 2..]
         .iter()

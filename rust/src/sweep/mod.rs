@@ -1,0 +1,56 @@
+//! Unified parallel scenario-sweep engine (DESIGN.md §1).
+//!
+//! The paper's headline results are all sweeps: NoC kinds x traffic
+//! patterns x injection rates (Figs. 10-11), VGG variants x scenarios x
+//! NoCs (Figs. 5, 6, 8, 9), replication budgets (Fig. 7 ablations). This
+//! module owns the one executor every bench / example / CLI subcommand
+//! uses instead of hand-rolled serial loops:
+//!
+//! - [`SweepRunner`] — work-stealing parallel map over a point grid
+//!   (std threads; input-order results; deterministic).
+//! - [`SyntheticSweep`] — the Figs. 10-11 grid over the [`crate::noc`]
+//!   backends, with per-point deterministic seeds.
+//! - [`point_seed`] — decorrelated per-point RNG seeding so any point can
+//!   be re-run in isolation and reproduce exactly.
+//!
+//! The CNN grid (Figs. 5/6/8/9) plugs in through
+//! [`crate::metrics::Grid::run_with`].
+
+pub mod runner;
+pub mod synthetic;
+
+pub use runner::SweepRunner;
+pub use synthetic::{SyntheticOutcome, SyntheticPoint, SyntheticSweep};
+
+use crate::util::rng::SplitMix64;
+
+/// Derive a deterministic, decorrelated seed for one grid point from a base
+/// seed and the point's coordinates. Stable across runs, platforms and
+/// thread counts; distinct coordinates give (overwhelmingly) distinct
+/// streams via SplitMix64 mixing.
+pub fn point_seed(base: u64, coords: &[u64]) -> u64 {
+    let mut h = SplitMix64::new(base ^ 0x5EED_0F_5CE_A12E).next_u64();
+    for &c in coords {
+        h = SplitMix64::new(h ^ c.wrapping_mul(0x9E37_79B9_7F4A_7C15)).next_u64();
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn point_seed_is_stable_and_sensitive() {
+        let a = point_seed(7, &[1, 2, 3]);
+        assert_eq!(a, point_seed(7, &[1, 2, 3]));
+        assert_ne!(a, point_seed(7, &[1, 2, 4]));
+        assert_ne!(a, point_seed(7, &[3, 2, 1]));
+        assert_ne!(a, point_seed(8, &[1, 2, 3]));
+    }
+
+    #[test]
+    fn point_seed_empty_coords_depends_on_base() {
+        assert_ne!(point_seed(1, &[]), point_seed(2, &[]));
+    }
+}

@@ -1,0 +1,166 @@
+//! The parallel scenario-sweep executor.
+//!
+//! Every figure of the paper is a sweep — NoC kinds x traffic patterns x
+//! injection rates x VGG variants x scenarios — and the seed code-base
+//! hand-rolled a serial loop per caller. [`SweepRunner`] is the one
+//! executor: it fans a grid of points out across OS threads with
+//! work-stealing (an atomic cursor over the point list; `std::thread::scope`
+//! because the offline vendored crate set has no `rayon` — DESIGN.md §1,
+//! substitution 4) and returns results in input order, so output is
+//! deterministic regardless of scheduling.
+//!
+//! Determinism contract: the point function must derive all randomness from
+//! the point itself (see [`super::point_seed`]), never from shared state.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Parallel map over a sweep grid.
+#[derive(Debug, Clone)]
+pub struct SweepRunner {
+    threads: usize,
+}
+
+impl Default for SweepRunner {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SweepRunner {
+    /// A runner sized to the machine (`SMART_PIM_SWEEP_THREADS` overrides).
+    pub fn new() -> Self {
+        Self {
+            threads: default_threads(),
+        }
+    }
+
+    /// A runner with an explicit worker count (1 = serial, useful for
+    /// baseline timing and debugging).
+    pub fn with_threads(threads: usize) -> Self {
+        Self {
+            threads: threads.max(1),
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Evaluate `f(index, point)` for every point, in parallel, returning
+    /// results in input order. `f` runs on worker threads: it must not
+    /// touch thread-local or global mutable state.
+    pub fn run<P, R, F>(&self, points: &[P], f: F) -> Vec<R>
+    where
+        P: Sync,
+        R: Send,
+        F: Fn(usize, &P) -> R + Sync,
+    {
+        let n = points.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let workers = self.threads.min(n);
+        if workers <= 1 {
+            return points.iter().enumerate().map(|(i, p)| f(i, p)).collect();
+        }
+        // Work stealing: a shared cursor; each worker grabs the next
+        // unclaimed index. Long points therefore never gate short ones the
+        // way a static block partition would.
+        let cursor = AtomicUsize::new(0);
+        let collected: Mutex<Vec<(usize, R)>> = Mutex::new(Vec::with_capacity(n));
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| {
+                    let mut local: Vec<(usize, R)> = Vec::new();
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        local.push((i, f(i, &points[i])));
+                    }
+                    if !local.is_empty() {
+                        collected.lock().unwrap().extend(local);
+                    }
+                });
+            }
+        });
+        let mut pairs = collected.into_inner().unwrap();
+        debug_assert_eq!(pairs.len(), n);
+        pairs.sort_by_key(|&(i, _)| i);
+        pairs.into_iter().map(|(_, r)| r).collect()
+    }
+}
+
+fn default_threads() -> usize {
+    if let Some(n) = std::env::var("SMART_PIM_SWEEP_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+    {
+        return n.max(1);
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_preserve_input_order() {
+        let points: Vec<u64> = (0..257).collect();
+        let runner = SweepRunner::with_threads(8);
+        let out = runner.run(&points, |i, &p| {
+            assert_eq!(i as u64, p);
+            p * p
+        });
+        let want: Vec<u64> = points.iter().map(|p| p * p).collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn serial_and_parallel_agree() {
+        let points: Vec<u64> = (0..64).collect();
+        let f = |_: usize, &p: &u64| p.wrapping_mul(0x9E37_79B9).rotate_left(13);
+        let serial = SweepRunner::with_threads(1).run(&points, f);
+        let parallel = SweepRunner::with_threads(7).run(&points, f);
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn empty_grid_is_fine() {
+        let runner = SweepRunner::new();
+        let out: Vec<u32> = runner.run(&[] as &[u8], |_, _| 1u32);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn uneven_work_is_stolen() {
+        // One huge point among many tiny ones: all results still arrive,
+        // in order, from a pool smaller than the grid.
+        let points: Vec<u64> = (0..40).collect();
+        let runner = SweepRunner::with_threads(4);
+        let out = runner.run(&points, |_, &p| {
+            if p == 0 {
+                // Busy work: a deterministic pseudo-load.
+                let mut x = 1u64;
+                for i in 0..200_000u64 {
+                    x = x.wrapping_mul(6364136223846793005).wrapping_add(i);
+                }
+                (x & 1) + p
+            } else {
+                p
+            }
+        });
+        assert_eq!(out.len(), 40);
+        assert_eq!(&out[1..], &points[1..]);
+    }
+
+    #[test]
+    fn threads_clamped_to_one() {
+        assert_eq!(SweepRunner::with_threads(0).threads(), 1);
+    }
+}

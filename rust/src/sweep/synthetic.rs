@@ -1,0 +1,178 @@
+//! Synthetic-traffic sweep grids (Figs. 10-11 and their descendants): the
+//! cartesian product of patterns x injection rates x flow controls, run
+//! through the [`SweepRunner`] with per-point deterministic seeding.
+
+use std::time::Instant;
+
+use crate::config::NocKind;
+use crate::noc::{run_synthetic_with, Mesh, NocStats, Pattern, StepMode, SyntheticConfig};
+
+use super::runner::SweepRunner;
+use super::point_seed;
+
+/// One point of a synthetic sweep grid, fully self-contained (the runner
+/// hands points to worker threads; everything a worker needs is here).
+#[derive(Debug, Clone)]
+pub struct SyntheticPoint {
+    pub pattern: Pattern,
+    pub rate: f64,
+    pub kind: NocKind,
+    pub cfg: SyntheticConfig,
+    pub mesh: Mesh,
+    pub hpc_max: usize,
+}
+
+/// Result of one point: the stats plus the wall-clock the point cost
+/// (recorded so benches can track the perf trajectory in BENCH_noc.json).
+#[derive(Debug, Clone)]
+pub struct SyntheticOutcome {
+    pub pattern: Pattern,
+    pub rate: f64,
+    pub kind: NocKind,
+    pub stats: NocStats,
+    pub wall_secs: f64,
+}
+
+/// A sweep grid: patterns x rates x kinds over one mesh.
+#[derive(Debug, Clone)]
+pub struct SyntheticSweep {
+    pub mesh: Mesh,
+    pub hpc_max: usize,
+    pub patterns: Vec<Pattern>,
+    pub rates: Vec<f64>,
+    pub kinds: Vec<NocKind>,
+    /// Template for every point (pattern / rate / seed overridden per point).
+    pub base: SyntheticConfig,
+    /// Derive a decorrelated deterministic seed per point from `base.seed`
+    /// (recommended); `false` reuses `base.seed` everywhere, which is what
+    /// the seed CLI did.
+    pub per_point_seeds: bool,
+}
+
+impl SyntheticSweep {
+    pub fn new(mesh: Mesh, hpc_max: usize) -> Self {
+        Self {
+            mesh,
+            hpc_max,
+            patterns: Pattern::ALL.to_vec(),
+            rates: vec![0.02, 0.05, 0.08, 0.12, 0.2, 0.3, 0.5, 0.8],
+            kinds: vec![NocKind::Wormhole, NocKind::Smart],
+            base: SyntheticConfig::default(),
+            per_point_seeds: true,
+        }
+    }
+
+    /// Materialize the grid, pattern-major then rate then kind (the order
+    /// every consumer prints in).
+    pub fn points(&self) -> Vec<SyntheticPoint> {
+        let mut pts = Vec::with_capacity(self.patterns.len() * self.rates.len() * self.kinds.len());
+        for (pi, &pattern) in self.patterns.iter().enumerate() {
+            for (ri, &rate) in self.rates.iter().enumerate() {
+                for (ki, &kind) in self.kinds.iter().enumerate() {
+                    let mut cfg = self.base.clone();
+                    cfg.pattern = pattern;
+                    cfg.injection_rate = rate;
+                    if self.per_point_seeds {
+                        cfg.seed =
+                            point_seed(self.base.seed, &[pi as u64, ri as u64, ki as u64]);
+                    }
+                    pts.push(SyntheticPoint {
+                        pattern,
+                        rate,
+                        kind,
+                        cfg,
+                        mesh: self.mesh,
+                        hpc_max: self.hpc_max,
+                    });
+                }
+            }
+        }
+        pts
+    }
+
+    /// Run the whole grid in parallel with the event-driven engine.
+    pub fn run(&self, runner: &SweepRunner) -> Vec<SyntheticOutcome> {
+        self.run_with_mode(runner, StepMode::EventDriven)
+    }
+
+    /// Run the whole grid with an explicit stepping engine (the benches
+    /// time the seed cycle-stepped engine against the event-driven one).
+    pub fn run_with_mode(&self, runner: &SweepRunner, mode: StepMode) -> Vec<SyntheticOutcome> {
+        let points = self.points();
+        runner.run(&points, move |_, p| {
+            let t0 = Instant::now();
+            let stats = run_synthetic_with(p.kind, p.mesh, &p.cfg, p.hpc_max, mode);
+            SyntheticOutcome {
+                pattern: p.pattern,
+                rate: p.rate,
+                kind: p.kind,
+                stats,
+                wall_secs: t0.elapsed().as_secs_f64(),
+            }
+        })
+    }
+
+    /// Outcomes for one pattern, in rate-major order (a Fig. 10/11 table).
+    pub fn rows_for<'a>(
+        &self,
+        outcomes: &'a [SyntheticOutcome],
+        pattern: Pattern,
+    ) -> Vec<&'a SyntheticOutcome> {
+        outcomes.iter().filter(|o| o.pattern == pattern).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> SyntheticSweep {
+        let mut s = SyntheticSweep::new(Mesh::new(4, 4), 6);
+        s.patterns = vec![Pattern::UniformRandom, Pattern::Transpose];
+        s.rates = vec![0.02, 0.05];
+        s.kinds = vec![NocKind::Wormhole, NocKind::Smart, NocKind::Ideal];
+        s.base.warmup = 100;
+        s.base.measure = 400;
+        s.base.drain = 2_000;
+        s
+    }
+
+    #[test]
+    fn grid_has_full_product() {
+        let s = tiny();
+        assert_eq!(s.points().len(), 2 * 2 * 3);
+    }
+
+    #[test]
+    fn per_point_seeds_are_distinct_and_stable() {
+        let s = tiny();
+        let a = s.points();
+        let b = s.points();
+        let seeds: Vec<u64> = a.iter().map(|p| p.cfg.seed).collect();
+        assert_eq!(seeds, b.iter().map(|p| p.cfg.seed).collect::<Vec<_>>());
+        let mut uniq = seeds.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), seeds.len(), "seed collision in {seeds:?}");
+    }
+
+    #[test]
+    fn parallel_sweep_is_deterministic() {
+        let s = tiny();
+        let a = s.run(&SweepRunner::with_threads(1));
+        let b = s.run(&SweepRunner::with_threads(4));
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.stats, y.stats, "{:?}/{}", x.kind, x.pattern.name());
+        }
+    }
+
+    #[test]
+    fn rows_filter_by_pattern() {
+        let s = tiny();
+        let out = s.run(&SweepRunner::with_threads(2));
+        let rows = s.rows_for(&out, Pattern::Transpose);
+        assert_eq!(rows.len(), 2 * 3);
+        assert!(rows.iter().all(|o| o.pattern == Pattern::Transpose));
+    }
+}

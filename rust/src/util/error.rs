@@ -1,0 +1,159 @@
+//! Minimal `anyhow`-style error handling (the offline vendored crate set
+//! has no `anyhow` — DESIGN.md §1, substitution 4).
+//!
+//! Provides the subset the code-base uses: a string-backed [`Error`], a
+//! [`Result`] alias with a defaulted error type, the [`Context`] extension
+//! trait (`.context(..)` / `.with_context(..)` on `Result` and `Option`),
+//! and the [`crate::bail!`] / [`crate::format_err!`] macros. Context is
+//! flattened into the message eagerly (`outer: inner`), which keeps the
+//! type `Send + Sync + 'static` and one word wide.
+
+use std::fmt;
+
+/// A flattened error: the full context chain rendered into one message.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Self { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::msg(e)
+    }
+}
+
+impl From<std::string::FromUtf8Error> for Error {
+    fn from(e: std::string::FromUtf8Error) -> Self {
+        Error::msg(e)
+    }
+}
+
+impl From<String> for Error {
+    fn from(m: String) -> Self {
+        Error { msg: m }
+    }
+}
+
+impl From<&str> for Error {
+    fn from(m: &str) -> Self {
+        Error { msg: m.to_string() }
+    }
+}
+
+/// `Result` with [`Error`] as the default error type (anyhow-style).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to an error as it propagates.
+pub trait Context<T> {
+    /// Wrap the error as `"{msg}: {inner}"`.
+    fn context(self, msg: impl fmt::Display) -> Result<T>;
+
+    /// Like [`Context::context`] but lazily built.
+    fn with_context<D: fmt::Display>(self, f: impl FnOnce() -> D) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{msg}: {e}")))
+    }
+
+    fn with_context<D: fmt::Display>(self, f: impl FnOnce() -> D) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg.to_string()))
+    }
+
+    fn with_context<D: fmt::Display>(self, f: impl FnOnce() -> D) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Build an [`Error`](crate::util::error::Error) from a format string
+/// (`anyhow::anyhow!` substitute).
+#[macro_export]
+macro_rules! format_err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return an `Err` built from a format string (`anyhow::bail!`
+/// substitute).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::format_err!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("boom {}", 42);
+    }
+
+    #[test]
+    fn bail_formats() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "boom 42");
+    }
+
+    #[test]
+    fn context_chains_messages() {
+        let r: std::result::Result<(), &str> = Err("inner");
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+        let e = Err::<(), _>("deep").with_context(|| format!("at {}", 7)).unwrap_err();
+        assert_eq!(e.to_string(), "at 7: deep");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        assert_eq!(v.context("missing").unwrap_err().to_string(), "missing");
+        assert_eq!(Some(3u8).context("missing").unwrap(), 3);
+    }
+
+    #[test]
+    fn io_error_converts() {
+        fn read() -> Result<Vec<u8>> {
+            let b = std::fs::read("/definitely/not/a/file")?;
+            Ok(b)
+        }
+        assert!(read().is_err());
+    }
+
+    #[test]
+    fn alternate_display_is_stable() {
+        // Callers print `{e:#}` (anyhow chain form); our flattened message
+        // must render identically either way.
+        let e = format_err!("a: {}", "b");
+        assert_eq!(format!("{e}"), format!("{e:#}"));
+    }
+}

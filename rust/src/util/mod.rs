@@ -1,16 +1,20 @@
 //! Self-contained utility substrate: PRNG, statistics, tables, CLI parsing,
-//! bench harness and a property-testing micro-framework.
+//! bench harness, error handling, JSON emission and a property-testing
+//! micro-framework.
 //!
 //! These exist because the build environment is fully offline: the vendored
-//! crate set has no `rand`, `clap`, `criterion` or `proptest`
-//! (DESIGN.md §1, substitution 4).
+//! crate set has no `rand`, `clap`, `criterion`, `proptest`, `anyhow` or
+//! `serde` (DESIGN.md §1, substitution 4).
 
 pub mod bench;
 pub mod cli;
+pub mod error;
+pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod stats;
 pub mod table;
 
+pub use json::Json;
 pub use rng::Rng;
 pub use table::Table;

@@ -69,7 +69,7 @@ fn batch_interval_equals_busiest_stage_for_all_vggs() {
         let adj = NocAdjust::identity(plans.len());
         let sim = Engine::new(&plans, &adj, true, 8).run();
         let want = max_occupancy(&plans) as f64;
-        let got = sim.steady_interval();
+        let got = sim.steady_interval().expect("8 images give an interval");
         assert!(
             (got - want).abs() <= want * 0.05 + 32.0,
             "{}: interval {got} vs occupancy {want}",
