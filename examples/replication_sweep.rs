@@ -1,7 +1,9 @@
 //! Design-space exploration: how does the weight-replication budget shape
-//! throughput? Sweeps the auto-planner's max replication factor for each
-//! VGG and compares against the paper's hand-tuned Fig. 7 plans — the
-//! ablation behind the paper's "balanced pipeline design" claim (Sec. VI-C).
+//! throughput? Sweeps the heuristic auto-planner's max replication factor
+//! for each VGG and compares against both the paper's hand-tuned Fig. 7
+//! plans and the searched planner (`smart_pim::planner`) — the ablation
+//! behind the paper's "balanced pipeline design" claim (Sec. VI-C), plus
+//! the evidence that a searched mapping beats the hand-derived one.
 //!
 //! ```bash
 //! cargo run --release --example replication_sweep
@@ -15,6 +17,17 @@ use smart_pim::sim::engine::{Engine, NocAdjust};
 use smart_pim::sweep::SweepRunner;
 use smart_pim::util::table::{fnum, Table};
 
+/// Which plan a sweep point evaluates.
+#[derive(Clone, Copy)]
+enum PlanKind {
+    /// Heuristic pooling-trend planner capped at this factor.
+    Auto(usize),
+    /// The paper's hand-tuned Fig. 7 plan.
+    Fig7,
+    /// The searched planner at the full 320-tile budget.
+    Searched,
+}
+
 fn throughput_fps(arch: &ArchConfig, v: VggVariant, plan: &ReplicationPlan) -> (f64, usize) {
     let net = vgg::build(v);
     let tiles = plan_tiles(&net, arch, &plan.factors);
@@ -22,7 +35,8 @@ fn throughput_fps(arch: &ArchConfig, v: VggVariant, plan: &ReplicationPlan) -> (
     let plans = build_plans(&net, &m, arch);
     let adj = NocAdjust::identity(plans.len());
     let sim = Engine::new(&plans, &adj, true, 8).run();
-    let interval = sim.steady_interval().expect("8 images give an interval");
+    // 8-image runs always have a steady interval, but stay panic-free.
+    let interval = sim.interval_or_makespan();
     let fps = 1.0 / (interval * arch.logical_cycle_ns * 1e-9);
     (fps, tiles)
 }
@@ -30,31 +44,38 @@ fn throughput_fps(arch: &ArchConfig, v: VggVariant, plan: &ReplicationPlan) -> (
 fn main() {
     let arch = ArchConfig::paper_node();
 
-    // The whole design space is one parallel sweep: every (VGG, budget)
+    // The whole design space is one parallel sweep: every (VGG, plan)
     // point is independent, so fan them out across cores.
     let max_rs = [1usize, 2, 4, 8, 16];
-    let mut points: Vec<(VggVariant, Option<usize>)> = Vec::new();
+    let mut points: Vec<(VggVariant, PlanKind)> = Vec::new();
     for v in VggVariant::ALL {
         for r in max_rs {
-            points.push((v, Some(r))); // auto-planner with budget r
+            points.push((v, PlanKind::Auto(r)));
         }
-        points.push((v, None)); // the paper's hand-tuned Fig. 7 plan
+        points.push((v, PlanKind::Fig7));
+        points.push((v, PlanKind::Searched));
     }
     let runner = SweepRunner::new();
-    let results = runner.run(&points, |_, &(v, max_r)| {
+    let results = runner.run(&points, |_, &(v, kind)| {
         let net = vgg::build(v);
-        let plan = match max_r {
-            Some(r) => ReplicationPlan::auto(&net, &arch, r),
-            None => ReplicationPlan::fig7(v),
+        let plan = match kind {
+            PlanKind::Auto(r) => ReplicationPlan::auto(&net, &arch, r),
+            PlanKind::Fig7 => ReplicationPlan::fig7(v),
+            PlanKind::Searched => {
+                ReplicationPlan::searched(&net, &arch, arch.total_tiles())
+                    .expect("VGGs fit the paper node")
+            }
         };
         throughput_fps(&arch, v, &plan)
     });
 
     let mut t = Table::new(
-        "auto-planner sweep: FPS (tiles used) by max replication factor",
-        &["vgg", "r<=1", "r<=2", "r<=4", "r<=8", "r<=16", "fig7 hand plan"],
+        "planner sweep: FPS (tiles used) by plan",
+        &[
+            "vgg", "r<=1", "r<=2", "r<=4", "r<=8", "r<=16", "fig7 hand plan", "searched",
+        ],
     );
-    let per_vgg = max_rs.len() + 1;
+    let per_vgg = max_rs.len() + 2;
     for (vi, v) in VggVariant::ALL.iter().enumerate() {
         let mut row = vec![v.name().to_string()];
         for (fps, tiles) in &results[vi * per_vgg..(vi + 1) * per_vgg] {
@@ -78,7 +99,7 @@ fn main() {
         let plans = build_plans(&net, &m, &arch);
         let adj = NocAdjust::identity(plans.len());
         let sim = Engine::new(&plans, &adj, true, 8).run();
-        let interval = sim.steady_interval().expect("8 images give an interval");
+        let interval = sim.interval_or_makespan();
         t.row(&[
             format!("{r1}"),
             fnum(interval, 0),

@@ -1,16 +1,20 @@
 //! Serving coordinator (L3 request path): dynamic batcher, pipeline-slot
 //! dispatcher, the mesh-ingress latency model (drained through the
-//! [`crate::noc::NocBackend`] trait), and the worker loop that executes the
-//! AOT-compiled quantized CNN via PJRT. Python never runs here.
+//! [`crate::noc::NocBackend`] trait), startup replication planning driven
+//! by the live [`BatchPolicy`] (see [`startup`]), and the worker loop that
+//! executes the AOT-compiled quantized CNN via PJRT. Python never runs
+//! here.
 
 pub mod batcher;
 pub mod dispatch;
 pub mod ingress;
 pub mod request;
 pub mod server;
+pub mod startup;
 
 pub use batcher::{BatchPolicy, FormedBatch};
 pub use dispatch::{Dispatcher, PipelineShape};
 pub use ingress::{assess_ingress, IngressReport};
 pub use request::{Request, Response, ServeStats};
 pub use server::Server;
+pub use startup::{policy_batch_depth, startup_plan, StartupPlan};

@@ -1,0 +1,123 @@
+//! Startup planning: pick the replication plan the PIM node should carry
+//! *before* serving starts, from the live batching configuration.
+//!
+//! The batcher's executable sizes determine the batch depth the pipeline
+//! will actually see (a policy of `[4, 1]` steadily forms 4-deep batches
+//! under load), and the searched planner is batch-depth aware: deep
+//! batches favor the lowest steady-state interval, shallow ones favor
+//! pipeline fill. This module closes that loop — `smart-pim serve` calls
+//! [`startup_plan`] at boot and runs the dispatcher on the resulting
+//! shape, so the served plan is derived, not hard-coded from Fig. 7.
+
+use crate::cnn::{vgg, VggVariant};
+use crate::config::ArchConfig;
+use crate::mapping::NetworkMapping;
+use crate::pipeline::build_plans;
+use crate::planner::{evaluate_candidates, PlanCandidate, Planner, PlannerConfig};
+use crate::sweep::SweepRunner;
+
+use super::batcher::BatchPolicy;
+use super::dispatch::PipelineShape;
+
+/// The coordinator's startup decision.
+#[derive(Debug, Clone)]
+pub struct StartupPlan {
+    pub variant: VggVariant,
+    /// Batch depth the plan was optimized for (largest executable size).
+    pub batch_depth: u64,
+    /// Tile budget the search ran under.
+    pub tile_budget: usize,
+    /// The chosen plan, engine-confirmed (`measured_interval` is set).
+    pub candidate: PlanCandidate,
+    /// Stage offsets/occupancy for the dispatcher.
+    pub shape: PipelineShape,
+}
+
+impl StartupPlan {
+    /// Minimum injection interval the dispatcher must enforce.
+    pub fn min_interval(&self) -> u64 {
+        self.shape.min_interval()
+    }
+}
+
+/// Batch depth implied by a policy: its largest executable batch size.
+pub fn policy_batch_depth(policy: &BatchPolicy) -> u64 {
+    policy.sizes.iter().copied().max().unwrap_or(1) as u64
+}
+
+/// Search a plan for `variant` on `arch` sized to the policy's batching,
+/// confirm it through the engine, and derive the dispatcher shape.
+pub fn startup_plan(
+    variant: VggVariant,
+    arch: &ArchConfig,
+    policy: &BatchPolicy,
+    tile_budget: usize,
+) -> Result<StartupPlan, String> {
+    let net = vgg::build(variant);
+    let batch_depth = policy_batch_depth(policy);
+    let planner = Planner::new(
+        &net,
+        arch,
+        PlannerConfig {
+            tile_budget,
+            batch_depth,
+            ..PlannerConfig::default()
+        },
+    );
+    let result = planner.search()?;
+    let mut chosen = vec![result.best];
+    // Confirm through the engine with the policy's own batch depth.
+    evaluate_candidates(
+        &net,
+        arch,
+        &SweepRunner::new(),
+        &mut chosen,
+        batch_depth.max(4),
+    );
+    let candidate = chosen.pop().expect("one candidate in, one out");
+    let mapping = NetworkMapping::build(&net, arch, &candidate.plan)?;
+    let shape = PipelineShape::from_plans(&build_plans(&net, &mapping, arch));
+    Ok(StartupPlan {
+        variant,
+        batch_depth,
+        tile_budget: result.tile_budget,
+        candidate,
+        shape,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::ReplicationPlan;
+    use crate::planner::CostModel;
+
+    #[test]
+    fn startup_plan_beats_fig7_under_default_policy() {
+        let arch = ArchConfig::paper_node();
+        let sp = startup_plan(VggVariant::E, &arch, &BatchPolicy::default(), 320).unwrap();
+        assert_eq!(sp.batch_depth, 4, "default policy sizes are [4, 1]");
+        let net = vgg::build(VggVariant::E);
+        let fig7 = CostModel::new(&net, &arch)
+            .assess(&ReplicationPlan::fig7(VggVariant::E))
+            .unwrap();
+        assert!(
+            sp.candidate.assessment.interval <= fig7.interval,
+            "startup plan interval {} > fig7 {}",
+            sp.candidate.assessment.interval,
+            fig7.interval
+        );
+        assert!(sp.candidate.measured_interval.is_some(), "engine confirmed");
+        assert!(sp.min_interval() >= 1);
+        assert_eq!(sp.shape.n_layers(), net.len());
+    }
+
+    #[test]
+    fn policy_depth_defaults_to_one_when_empty() {
+        let p = BatchPolicy {
+            sizes: vec![],
+            ..BatchPolicy::default()
+        };
+        assert_eq!(policy_batch_depth(&p), 1);
+    }
+}

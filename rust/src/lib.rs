@@ -25,6 +25,7 @@ pub mod mapping;
 pub mod metrics;
 pub mod noc;
 pub mod pipeline;
+pub mod planner;
 pub mod power;
 pub mod runtime;
 pub mod sim;

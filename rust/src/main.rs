@@ -12,6 +12,7 @@
 //! smart-pim fig8                      # VGG-E throughput grid
 //! smart-pim fig9                      # energy efficiency
 //! smart-pim fig10 | fig11             # synthetic-traffic sweeps
+//! smart-pim plan --variant E --tiles 320 [--depth 8] [--compare] [--frontier]
 //! smart-pim simulate --vgg E --scenario 4 --noc smart [--gantt]
 //! smart-pim noc --pattern tornado --rate 0.1 [--noc smart]
 //! smart-pim serve --requests 64 [--artifacts artifacts]
@@ -24,9 +25,10 @@
 
 use smart_pim::cnn::{vgg, VggVariant};
 use smart_pim::config::{ArchConfig, NocKind, Scenario};
-use smart_pim::coordinator::{assess_ingress, BatchPolicy, Server};
+use smart_pim::coordinator::{assess_ingress, startup_plan, BatchPolicy, Server};
 use smart_pim::mapping::{plan_tiles, ReplicationPlan};
-use smart_pim::metrics::{paper, Grid};
+use smart_pim::metrics::{paper, planner_table, Grid};
+use smart_pim::planner::{evaluate_candidates, Planner, PlannerConfig};
 use smart_pim::noc::{
     build_backend, run_synthetic_with, Mesh, Pattern, StepMode, SyntheticConfig,
 };
@@ -41,11 +43,13 @@ use smart_pim::util::Rng;
 fn main() {
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() {
-        eprintln!("usage: smart-pim <fig4..fig11|simulate|noc|serve|report-all> [options]");
+        eprintln!(
+            "usage: smart-pim <fig4..fig11|plan|simulate|noc|serve|report-all> [options]"
+        );
         std::process::exit(2);
     }
     let cmd = argv.remove(0);
-    let args = match Args::parse(argv, &["batch", "no-batch", "gantt"]) {
+    let args = match Args::parse(argv, &["batch", "no-batch", "gantt", "compare", "frontier"]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}");
@@ -65,6 +69,7 @@ fn main() {
         "fig9" => fig9(),
         "fig10" => fig10_11(&args, true),
         "fig11" => fig10_11(&args, false),
+        "plan" => plan_cmd(&args),
         "simulate" => simulate(&args),
         "noc" => noc_cmd(&args),
         "serve" => serve(&args),
@@ -321,6 +326,136 @@ fn fig10_11(args: &Args, latency: bool) -> Result<(), String> {
     Ok(())
 }
 
+/// `smart-pim plan`: search a replication plan for any variant x tile
+/// budget x batch depth, confirm it through the cycle-accurate engine, and
+/// report it against the paper's hand-tuned Fig. 7 plan.
+fn plan_cmd(args: &Args) -> Result<(), String> {
+    args.check_known(&[
+        "variant", "tiles", "depth", "beam", "max-factor", "images", "config", "threads",
+    ])?;
+    let v: VggVariant = args.get_or("variant", "E").parse()?;
+    let a = arch();
+    let tiles: usize = args.get_parse_or("tiles", a.total_tiles())?;
+    let depth: u64 = args.get_parse_or("depth", 8u64)?;
+    let beam: usize = args.get_parse_or("beam", 4usize)?;
+    let max_factor: usize = args.get_parse_or("max-factor", 1024usize)?;
+    let images: u64 = args.get_parse_or("images", 10u64)?;
+    let runner = match args.get("threads") {
+        Some(t) => SweepRunner::with_threads(t.parse().map_err(|e| format!("--threads: {e}"))?),
+        None => SweepRunner::new(),
+    };
+
+    let net = vgg::build(v);
+    let planner = Planner::new(
+        &net,
+        &a,
+        PlannerConfig {
+            tile_budget: tiles,
+            batch_depth: depth,
+            max_factor,
+            beam_width: beam,
+        },
+    );
+    let mut result = planner.search()?;
+    evaluate_candidates(&net, &a, &runner, std::slice::from_mut(&mut result.best), images);
+
+    let best = &result.best;
+    let mut t = Table::new(
+        format!(
+            "searched plan — {} @ {} tiles, batch depth {depth} \
+             ({} states explored)",
+            v.name(),
+            result.tile_budget,
+            result.explored
+        ),
+        &["layer", "replicate", "occupancy (cycles)"],
+    );
+    for (i, layer) in net.layers().iter().enumerate() {
+        t.row(&[
+            layer.name.clone(),
+            best.plan.factor(i).to_string(),
+            best.assessment.occupancy[i].to_string(),
+        ]);
+    }
+    t.print();
+
+    let mut s = Table::new("plan summary", &["metric", "searched", "fig7 hand plan"]);
+    let cm = smart_pim::planner::CostModel::new(&net, &a);
+    let fig7 = cm.assess(&ReplicationPlan::fig7(v))?;
+    s.row(&[
+        "tiles used".into(),
+        best.assessment.tiles.to_string(),
+        fig7.tiles.to_string(),
+    ]);
+    s.row(&[
+        "modeled interval (cycles)".into(),
+        best.assessment.interval.to_string(),
+        fig7.interval.to_string(),
+    ]);
+    s.row(&[
+        "engine interval (cycles)".into(),
+        best.measured_interval
+            .map(|m| fnum(m, 1))
+            .unwrap_or_else(|| "-".into()),
+        "-".into(),
+    ]);
+    s.row(&[
+        "pipeline fill (cycles)".into(),
+        best.assessment.fill_cycles.to_string(),
+        fig7.fill_cycles.to_string(),
+    ]);
+    s.row(&[
+        "padding waste".into(),
+        format!("{:.1} %", 100.0 * best.assessment.padding_waste),
+        format!("{:.1} %", 100.0 * fig7.padding_waste),
+    ]);
+    s.row(&[
+        format!("modeled cycles/image @ B={depth}"),
+        fnum(best.assessment.batch_cost(depth), 1),
+        fnum(fig7.batch_cost(depth), 1),
+    ]);
+    s.print();
+    println!(
+        "speedup vs Fig. 7 (modeled steady-state): {}x",
+        fnum(fig7.interval as f64 / best.assessment.interval as f64, 2)
+    );
+
+    if args.flag("frontier") {
+        // Frontier members are trade-off points a user may pick over
+        // `best`, so they get the same engine confirmation.
+        evaluate_candidates(&net, &a, &runner, &mut result.frontier, images);
+        let mut f = Table::new(
+            "Pareto frontier (interval vs tiles vs padding waste, engine-confirmed)",
+            &["interval", "engine", "tiles", "waste", "conv factors"],
+        );
+        for c in &result.frontier {
+            let convs: Vec<String> = net
+                .layers()
+                .iter()
+                .zip(&c.plan.factors)
+                .filter(|(l, _)| l.is_conv())
+                .map(|(_, r)| r.to_string())
+                .collect();
+            f.row(&[
+                c.assessment.interval.to_string(),
+                c.measured_interval
+                    .map(|m| fnum(m, 0))
+                    .unwrap_or_else(|| "-".into()),
+                c.assessment.tiles.to_string(),
+                format!("{:.1} %", 100.0 * c.assessment.padding_waste),
+                convs.join(","),
+            ]);
+        }
+        f.print();
+    }
+
+    if args.flag("compare") {
+        println!();
+        planner_table(&a, &VggVariant::ALL, tiles, depth, &runner)?.print();
+    }
+    Ok(())
+}
+
 fn simulate(args: &Args) -> Result<(), String> {
     args.check_known(&["vgg", "scenario", "noc", "config"])?;
     let v: VggVariant = args.get_or("vgg", "E").parse()?;
@@ -425,11 +560,54 @@ fn noc_cmd(args: &Args) -> Result<(), String> {
 }
 
 fn serve(args: &Args) -> Result<(), String> {
-    args.check_known(&["requests", "artifacts", "seed", "config"])?;
+    args.check_known(&["requests", "artifacts", "seed", "config", "plan-variant", "tiles"])?;
     let n: usize = args.get_parse_or("requests", 32usize)?;
     let dir = args.get_or("artifacts", "artifacts").to_string();
     let seed: u64 = args.get_parse_or("seed", 7u64)?;
-    let mut server = Server::start(dir, BatchPolicy::default()).map_err(|e| format!("{e:#}"))?;
+    let policy = BatchPolicy::default();
+
+    // Startup planning: derive the PIM node's replication plan from the
+    // live batching configuration (largest executable batch = the batch
+    // depth the pipeline will see), instead of replaying Fig. 7.
+    let a = arch();
+    let plan_variant: VggVariant = args.get_or("plan-variant", "E").parse()?;
+    let budget: usize = args.get_parse_or("tiles", a.total_tiles())?;
+    // Planning is advisory for the serve path (the PJRT model is the
+    // tiny-VGG, the plan describes the simulated full-scale node), so a
+    // node too small for the planned variant must not stop serving.
+    match startup_plan(plan_variant, &a, &policy, budget) {
+        Ok(sp) => {
+            println!(
+                "startup plan: {} on {} tiles (budget {}), batch depth {} -> \
+                 interval {} cycles modeled / {} measured, fill {} cycles",
+                sp.variant.name(),
+                sp.candidate.assessment.tiles,
+                sp.tile_budget,
+                sp.batch_depth,
+                sp.candidate.assessment.interval,
+                sp.candidate
+                    .measured_interval
+                    .map(|m| fnum(m, 0))
+                    .unwrap_or_else(|| "-".into()),
+                sp.candidate.assessment.fill_cycles,
+            );
+            // The dispatcher enforces the plan's hazard-free injection beat.
+            use smart_pim::coordinator::Dispatcher;
+            let mut d = Dispatcher::new(sp.shape.clone());
+            for i in 0..n as u64 {
+                d.admit(i);
+            }
+            d.verify_no_hazard()?;
+            println!(
+                "dispatcher: {} admissions at min interval {} cycles, hazard-free",
+                n,
+                sp.min_interval()
+            );
+        }
+        Err(e) => println!("startup plan unavailable ({e}); serving without one"),
+    }
+
+    let mut server = Server::start(dir, policy).map_err(|e| format!("{e:#}"))?;
     let mut rng = Rng::new(seed);
     println!("serving {n} synthetic images through the PJRT-compiled tiny-VGG ...");
     let mut pending = Vec::new();
@@ -462,7 +640,6 @@ fn serve(args: &Args) -> Result<(), String> {
     println!("class histogram: {classes:?}");
     // Simulated mesh-crossing cost of the request path, through the same
     // NocBackend trait the sweeps use (the coordinator's ingress model).
-    let a = arch();
     let mesh = Mesh::new(a.tiles_x, a.tiles_y);
     let mut noc = build_backend(NocKind::Smart, mesh, a.hpc_max, 1, a.buffer_depth);
     let ing = assess_ingress(noc.as_mut(), 0, mesh.nodes() / 2, n as u64, 4, 4);
@@ -481,6 +658,9 @@ fn report_all(args: &Args) -> Result<(), String> {
     fig4()?;
     println!();
     fig7()?;
+    println!();
+    let a = arch();
+    planner_table(&a, &VggVariant::ALL, a.total_tiles(), 8, &SweepRunner::new())?.print();
     println!();
     fig5(args)?;
     println!();

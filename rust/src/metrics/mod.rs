@@ -1,8 +1,10 @@
-//! Metrics & reporting: speedup grids, geomeans, and paper-style tables for
-//! Figs. 5, 6, 8, 9.
+//! Metrics & reporting: speedup grids, geomeans, paper-style tables for
+//! Figs. 5, 6, 8, 9, and the searched-vs-Fig.7 planner comparison.
 
-use crate::cnn::VggVariant;
+use crate::cnn::{vgg, VggVariant};
 use crate::config::{ArchConfig, NocKind, Scenario};
+use crate::mapping::ReplicationPlan;
+use crate::planner::{evaluate_candidates, CostModel, PlanCandidate, Planner, PlannerConfig};
 use crate::sim::{evaluate, PerfReport};
 use crate::sweep::SweepRunner;
 use crate::util::stats::geomean;
@@ -139,6 +141,106 @@ impl Grid {
     }
 }
 
+/// Searched-planner comparison: for each variant, the no-replication
+/// baseline, the paper's hand-tuned Fig. 7 plan, and the searched plan
+/// under the same tile budget — modeled and engine-measured steady-state
+/// intervals side by side. The table behind `smart-pim plan --compare`.
+/// Variants are independent, so the whole comparison (search + engine
+/// replays) fans out across the sweep runner, one point per variant.
+pub fn planner_table(
+    arch: &ArchConfig,
+    variants: &[VggVariant],
+    tile_budget: usize,
+    batch_depth: u64,
+    runner: &SweepRunner,
+) -> Result<Table, String> {
+    struct RowData {
+        v: VggVariant,
+        none_interval: u64,
+        fig7: crate::planner::PlanAssessment,
+        fig7_measured: Option<f64>,
+        best: PlanCandidate,
+    }
+    let rows: Vec<Result<RowData, String>> = runner.run(variants, |_, &v| {
+        let net = vgg::build(v);
+        let cm = CostModel::new(&net, arch);
+        let none = cm.assess(&ReplicationPlan::none(&net))?;
+        let fig7 = cm.assess(&ReplicationPlan::fig7(v))?;
+        let searched = Planner::new(
+            &net,
+            arch,
+            PlannerConfig {
+                tile_budget,
+                batch_depth,
+                ..PlannerConfig::default()
+            },
+        )
+        .search()?;
+        // Engine confirmation for both contenders (serial here: the
+        // variants themselves are already fanned out by the runner).
+        let mut pair: Vec<PlanCandidate> = vec![
+            PlanCandidate {
+                plan: ReplicationPlan::fig7(v),
+                assessment: fig7.clone(),
+                measured_interval: None,
+            },
+            searched.best,
+        ];
+        evaluate_candidates(
+            &net,
+            arch,
+            &SweepRunner::with_threads(1),
+            &mut pair,
+            batch_depth.max(8),
+        );
+        let best = pair.pop().expect("two in, two out");
+        let fig7_measured = pair[0].measured_interval;
+        Ok(RowData {
+            v,
+            none_interval: none.interval,
+            fig7,
+            fig7_measured,
+            best,
+        })
+    });
+
+    let mut t = Table::new(
+        format!(
+            "searched vs Fig. 7 vs no replication — interval in logical \
+             cycles (budget {tile_budget} tiles, batch depth {batch_depth})"
+        ),
+        &[
+            "vgg",
+            "none",
+            "fig7 model (tiles)",
+            "fig7 engine",
+            "searched model (tiles)",
+            "searched engine",
+            "speedup vs fig7",
+        ],
+    );
+    let fmt_measured = |m: Option<f64>| m.map(|x| fnum(x, 0)).unwrap_or_else(|| "-".into());
+    for row in rows {
+        let r = row?;
+        t.row(&[
+            r.v.name().into(),
+            format!("{}", r.none_interval),
+            format!("{} ({})", r.fig7.interval, r.fig7.tiles),
+            fmt_measured(r.fig7_measured),
+            format!(
+                "{} ({})",
+                r.best.assessment.interval, r.best.assessment.tiles
+            ),
+            fmt_measured(r.best.measured_interval),
+            fnum(
+                r.fig7.interval as f64 / r.best.assessment.interval as f64,
+                2,
+            ),
+        ]);
+    }
+    Ok(t)
+}
+
 /// Paper-reported reference values, used by tests and EXPERIMENTS.md to
 /// report paper-vs-measured side by side.
 pub mod paper {
@@ -192,6 +294,25 @@ mod tests {
             assert_eq!(a.noc, b.noc);
             assert_eq!(a.fps, b.fps, "{:?} {:?}", a.variant, a.scenario);
         }
+    }
+
+    #[test]
+    fn planner_table_renders() {
+        // Rendering only — the searched-dominates-Fig.7 property is gated
+        // by rust/tests/golden_planner.rs, not this test.
+        let arch = ArchConfig::paper_node();
+        let t = planner_table(
+            &arch,
+            &[VggVariant::A],
+            320,
+            8,
+            &SweepRunner::with_threads(2),
+        )
+        .unwrap();
+        assert_eq!(t.n_rows(), 1);
+        let out = t.render();
+        assert!(out.contains("vggA"), "{out}");
+        assert!(out.contains("searched"), "{out}");
     }
 
     #[test]

@@ -1,0 +1,164 @@
+//! The planner's cost model.
+//!
+//! A candidate replication plan is priced with the *same* arithmetic the
+//! simulator uses — `mapping::NetworkMapping` for tile packing and
+//! `pipeline::build_plans` / `pipeline::max_occupancy` for the steady-state
+//! injection interval — so a plan that models well is a plan the
+//! cycle-accurate engine will confirm (the golden test pins this). On top
+//! of the interval the model adds:
+//!
+//! - **fill cycles** — the first-image latency skeleton (stage start
+//!   offsets + the last stage's occupancy, via
+//!   [`crate::coordinator::PipelineShape`]), which is what a shallow batch
+//!   actually pays;
+//! - **batch-aware cost per image** — `(fill + (B-1) * interval) / B` for a
+//!   batch depth `B`: at `B = 1` the planner optimizes single-image
+//!   latency, at large `B` it optimizes the steady-state interval;
+//! - **padding waste** — the fraction of allocated subarrays that hold no
+//!   weights (whole-tile allocation rounds up), the third Pareto axis.
+
+use crate::cnn::Network;
+use crate::config::ArchConfig;
+use crate::coordinator::PipelineShape;
+use crate::mapping::{plan_tiles, NetworkMapping, ReplicationPlan};
+use crate::pipeline::{build_plans, max_occupancy};
+
+/// Everything the search needs to know about one candidate plan.
+#[derive(Debug, Clone)]
+pub struct PlanAssessment {
+    /// Tiles the plan occupies (whole-tile packing).
+    pub tiles: usize,
+    /// Modeled steady-state injection interval (logical cycles): the
+    /// busiest stage's occupancy, exactly `pipeline::max_occupancy`.
+    pub interval: u64,
+    /// First-image latency skeleton (logical cycles).
+    pub fill_cycles: u64,
+    /// Fraction of allocated subarrays that hold no weights.
+    pub padding_waste: f64,
+    /// Per-stage occupancy `ceil(p_total / rate)` (the search lifts the
+    /// argmax entries).
+    pub occupancy: Vec<u64>,
+}
+
+impl PlanAssessment {
+    /// Modeled cycles per image at batch depth `b` (>= 1): amortizes the
+    /// pipeline fill over the batch.
+    pub fn batch_cost(&self, b: u64) -> f64 {
+        let b = b.max(1);
+        (self.fill_cycles + (b - 1) * self.interval) as f64 / b as f64
+    }
+}
+
+/// Cost model bound to one network + architecture.
+pub struct CostModel<'a> {
+    pub net: &'a Network,
+    pub arch: &'a ArchConfig,
+}
+
+impl<'a> CostModel<'a> {
+    pub fn new(net: &'a Network, arch: &'a ArchConfig) -> Self {
+        Self { net, arch }
+    }
+
+    /// Price a plan. Fails when the plan does not map (arity mismatch or
+    /// over the architecture's physical tile count) — the search only calls
+    /// this for plans it already knows fit its budget.
+    pub fn assess(&self, plan: &ReplicationPlan) -> Result<PlanAssessment, String> {
+        let mapping = NetworkMapping::build(self.net, self.arch, plan)?;
+        let plans = build_plans(self.net, &mapping, self.arch);
+        let occupancy: Vec<u64> = plans
+            .iter()
+            .map(|p| p.p_total.div_ceil(p.rate))
+            .collect();
+        let interval = max_occupancy(&plans);
+        let shape = PipelineShape::from_plans(&plans);
+        let last = shape.n_layers() - 1;
+        let fill_cycles = shape.offsets[last] + shape.occupancy[last];
+        Ok(PlanAssessment {
+            tiles: mapping.total_tiles,
+            interval,
+            fill_cycles,
+            padding_waste: self.padding_waste(&mapping),
+            occupancy,
+        })
+    }
+
+    /// Tiles a plan needs, without building the full mapping (the search's
+    /// cheap budget pre-check).
+    pub fn tiles_of(&self, factors: &[usize]) -> usize {
+        plan_tiles(self.net, self.arch, factors)
+    }
+
+    /// Allocated-but-empty subarray fraction. Derived from the resolved
+    /// mapping so the FC reload-rounds charging rule stays in one place
+    /// (`mapping::layout` sets `reload_rounds`; conv layers carry 1):
+    /// a layer keeps `subarrays / reload_rounds` resident at a time.
+    fn padding_waste(&self, mapping: &NetworkMapping) -> f64 {
+        let allocated = (mapping.total_tiles * self.arch.subarrays_per_tile()) as f64;
+        let used: usize = mapping
+            .layers
+            .iter()
+            .map(|lm| {
+                lm.demand
+                    .subarrays_replicated(lm.replication)
+                    .div_ceil(lm.reload_rounds as usize)
+            })
+            .sum();
+        (1.0 - used as f64 / allocated).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::{vgg, VggVariant};
+
+    #[test]
+    fn fig7_assessment_matches_calibration_anchor() {
+        let arch = ArchConfig::paper_node();
+        let net = vgg::build(VggVariant::E);
+        let cm = CostModel::new(&net, &arch);
+        let a = cm.assess(&ReplicationPlan::fig7(VggVariant::E)).unwrap();
+        assert_eq!(a.interval, 3136, "Fig. 7 VGG-E beat");
+        assert!(a.tiles <= 320);
+        // Fill spans every stage: at least the summed pipeline depths (19
+        // stages x >= 24 cycles), and batch cost at B=1 *is* the fill.
+        assert!(a.fill_cycles >= 19 * 24, "fill {}", a.fill_cycles);
+        assert_eq!(a.batch_cost(1), a.fill_cycles as f64);
+        assert!((0.0..1.0).contains(&a.padding_waste));
+    }
+
+    #[test]
+    fn batch_cost_interpolates_fill_and_interval() {
+        let a = PlanAssessment {
+            tiles: 1,
+            interval: 100,
+            fill_cycles: 1000,
+            padding_waste: 0.0,
+            occupancy: vec![100],
+        };
+        assert_eq!(a.batch_cost(1), 1000.0);
+        let big = a.batch_cost(1000);
+        assert!((100.0..110.0).contains(&big), "b->inf tends to interval, got {big}");
+        assert!(a.batch_cost(4) < a.batch_cost(2));
+    }
+
+    #[test]
+    fn none_plan_interval_is_conv1_stream() {
+        let arch = ArchConfig::paper_node();
+        let net = vgg::build(VggVariant::A);
+        let cm = CostModel::new(&net, &arch);
+        let a = cm.assess(&ReplicationPlan::none(&net)).unwrap();
+        assert_eq!(a.interval, 50176);
+        assert_eq!(a.occupancy[0], 50176);
+    }
+
+    #[test]
+    fn bad_arity_rejected() {
+        let arch = ArchConfig::paper_node();
+        let net = vgg::build(VggVariant::A);
+        let cm = CostModel::new(&net, &arch);
+        let bad = ReplicationPlan { factors: vec![1; 2] };
+        assert!(cm.assess(&bad).is_err());
+    }
+}

@@ -1,0 +1,30 @@
+//! Automatic replication/batch planning — the searched replacement for the
+//! paper's hand-tuned Fig. 7 table.
+//!
+//! The paper derives its per-VGG replication factors by hand for exactly
+//! one node (320 tiles). This module derives them: a greedy
+//! bottleneck-lifting search with a small beam ([`search::Planner`]) walks
+//! power-of-two replication lifts, priced by the same occupancy math the
+//! simulator uses ([`cost::CostModel`], batch-depth aware), and returns
+//! both a single best plan and the Pareto frontier over throughput vs
+//! tiles vs padding waste ([`pareto::pareto_frontier`]). Candidates are
+//! confirmed against the cycle-accurate engine via the parallel sweep
+//! runner ([`pareto::evaluate_candidates`]).
+//!
+//! Entry points:
+//! - [`ReplicationPlan::searched`](crate::mapping::ReplicationPlan::searched)
+//!   — drop-in next to `fig7` / `none` / `auto`;
+//! - [`plan_for`] — full search result (best + frontier) for a network and
+//!   tile budget;
+//! - `smart-pim plan` — the CLI view (factors, modeled vs measured
+//!   interval, frontier, comparison against Fig. 7);
+//! - [`crate::coordinator::startup_plan`] — the serving coordinator's
+//!   startup choice, driven by the live `BatchPolicy` sizes.
+
+pub mod cost;
+pub mod pareto;
+pub mod search;
+
+pub use cost::{CostModel, PlanAssessment};
+pub use pareto::{evaluate_candidates, pareto_frontier};
+pub use search::{plan_for, PlanCandidate, Planner, PlannerConfig, PlanSearchResult};

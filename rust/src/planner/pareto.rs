@@ -1,0 +1,172 @@
+//! Pareto frontier over candidate plans, and candidate evaluation through
+//! the cycle-accurate engine.
+//!
+//! The search scores plans with the occupancy model; before a plan is
+//! trusted (golden tests, the `plan` CLI, the coordinator's startup
+//! choice) the frontier is replayed through [`crate::sim::Engine`] — each
+//! candidate is an independent point, so the replay fans out across cores
+//! via [`crate::sweep::SweepRunner`] exactly like every other sweep in the
+//! repository.
+
+use crate::cnn::Network;
+use crate::config::ArchConfig;
+use crate::mapping::NetworkMapping;
+use crate::pipeline::build_plans;
+use crate::sim::{Engine, NocAdjust};
+use crate::sweep::SweepRunner;
+
+use super::search::PlanCandidate;
+
+/// Keep the non-dominated candidates over (modeled interval, tiles, padding
+/// waste) — all minimized — sorted by interval ascending, tiles ascending.
+pub fn pareto_frontier(mut cands: Vec<PlanCandidate>) -> Vec<PlanCandidate> {
+    cands.sort_by(|a, b| {
+        a.assessment
+            .interval
+            .cmp(&b.assessment.interval)
+            .then(a.assessment.tiles.cmp(&b.assessment.tiles))
+            .then(a.assessment.padding_waste.total_cmp(&b.assessment.padding_waste))
+    });
+    let mut out: Vec<PlanCandidate> = Vec::new();
+    for c in cands {
+        let dominated = out.iter().any(|o| {
+            o.assessment.interval <= c.assessment.interval
+                && o.assessment.tiles <= c.assessment.tiles
+                && o.assessment.padding_waste <= c.assessment.padding_waste
+                && (o.assessment.interval < c.assessment.interval
+                    || o.assessment.tiles < c.assessment.tiles
+                    || o.assessment.padding_waste < c.assessment.padding_waste)
+        });
+        let duplicate = out.iter().any(|o| o.plan == c.plan);
+        if !dominated && !duplicate {
+            out.push(c);
+        }
+    }
+    out
+}
+
+/// Replay candidates through the event-driven pipeline engine (ideal NoC,
+/// batch pipelining on, `images` per run), filling
+/// [`PlanCandidate::measured_interval`]. Candidates whose mapping fails
+/// keep `None`. Runs in parallel over the sweep runner.
+pub fn evaluate_candidates(
+    net: &Network,
+    arch: &ArchConfig,
+    runner: &SweepRunner,
+    cands: &mut [PlanCandidate],
+    images: u64,
+) {
+    let images = images.max(2); // one image has no steady interval
+    let plans: Vec<&PlanCandidate> = cands.iter().collect();
+    let measured: Vec<Option<f64>> = runner.run(&plans, |_, c| {
+        let mapping = NetworkMapping::build(net, arch, &c.plan).ok()?;
+        let stage_plans = build_plans(net, &mapping, arch);
+        let adj = NocAdjust::identity(stage_plans.len());
+        let sim = Engine::new(&stage_plans, &adj, true, images).run();
+        Some(sim.interval_or_makespan())
+    });
+    for (c, m) in cands.iter_mut().zip(measured) {
+        c.measured_interval = m;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::{vgg, VggVariant};
+    use crate::mapping::ReplicationPlan;
+    use crate::planner::cost::CostModel;
+
+    fn candidate(net: &Network, arch: &ArchConfig, plan: ReplicationPlan) -> PlanCandidate {
+        let assessment = CostModel::new(net, arch).assess(&plan).unwrap();
+        PlanCandidate {
+            plan,
+            assessment,
+            measured_interval: None,
+        }
+    }
+
+    fn synthetic(tag: usize, interval: u64, tiles: usize, waste: f64) -> PlanCandidate {
+        PlanCandidate {
+            plan: ReplicationPlan {
+                factors: vec![tag; 3],
+            },
+            assessment: crate::planner::cost::PlanAssessment {
+                tiles,
+                interval,
+                fill_cycles: interval * 2,
+                padding_waste: waste,
+                occupancy: vec![interval; 3],
+            },
+            measured_interval: None,
+        }
+    }
+
+    #[test]
+    fn frontier_drops_dominated_plans_and_duplicates() {
+        let a = synthetic(1, 100, 10, 0.10); // best interval
+        let b = synthetic(2, 100, 12, 0.20); // dominated by a on all axes
+        let c = synthetic(3, 500, 4, 0.30); // survives: fewest tiles
+        let d = synthetic(4, 500, 5, 0.05); // survives: least waste
+        let dup = synthetic(1, 100, 10, 0.10); // duplicate of a
+        let f = pareto_frontier(vec![c.clone(), b.clone(), a.clone(), d.clone(), dup]);
+        let plans: Vec<_> = f.iter().map(|x| x.plan.factors[0]).collect();
+        assert!(plans.contains(&1), "best-interval plan survives: {plans:?}");
+        assert!(plans.contains(&3), "fewest-tiles plan survives: {plans:?}");
+        assert!(plans.contains(&4), "least-waste plan survives: {plans:?}");
+        assert!(!plans.contains(&2), "dominated plan dropped: {plans:?}");
+        assert_eq!(f.len(), 3, "duplicate dropped: {plans:?}");
+        for w in f.windows(2) {
+            assert!(w[0].assessment.interval <= w[1].assessment.interval);
+        }
+    }
+
+    #[test]
+    fn frontier_of_real_search_is_sane() {
+        let arch = ArchConfig::paper_node();
+        let net = vgg::build(VggVariant::A);
+        let result = crate::planner::plan_for(&net, &arch, 320).unwrap();
+        assert!(!result.frontier.is_empty());
+        // The head of the frontier carries the smallest interval visited,
+        // so it can be no worse than the chosen best plan's.
+        assert!(
+            result.frontier[0].assessment.interval <= result.best.assessment.interval,
+            "frontier head {} vs best {}",
+            result.frontier[0].assessment.interval,
+            result.best.assessment.interval
+        );
+        // No frontier member dominates another (pairwise check).
+        for (i, x) in result.frontier.iter().enumerate() {
+            for (j, y) in result.frontier.iter().enumerate() {
+                if i == j {
+                    continue;
+                }
+                let dominates = x.assessment.interval <= y.assessment.interval
+                    && x.assessment.tiles <= y.assessment.tiles
+                    && x.assessment.padding_waste <= y.assessment.padding_waste
+                    && (x.assessment.interval < y.assessment.interval
+                        || x.assessment.tiles < y.assessment.tiles
+                        || x.assessment.padding_waste < y.assessment.padding_waste);
+                assert!(!dominates, "frontier member {i} dominates {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn engine_confirms_modeled_interval() {
+        let arch = ArchConfig::paper_node();
+        let net = vgg::build(VggVariant::E);
+        let mut cands = vec![candidate(
+            &net,
+            &arch,
+            ReplicationPlan::fig7(VggVariant::E),
+        )];
+        evaluate_candidates(&net, &arch, &SweepRunner::with_threads(1), &mut cands, 8);
+        let measured = cands[0].measured_interval.expect("engine ran");
+        let modeled = cands[0].assessment.interval as f64;
+        assert!(
+            (measured - modeled).abs() <= modeled * 0.05 + 32.0,
+            "measured {measured} vs modeled {modeled}"
+        );
+    }
+}

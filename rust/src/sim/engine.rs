@@ -72,6 +72,14 @@ impl SimResult {
         let span = self.completions[n - 1] - self.completions[half - 1];
         Some(span as f64 / (n - half) as f64)
     }
+
+    /// Steady-state interval, falling back to the whole-run makespan when
+    /// fewer than two images completed (a sub-2-image run effectively
+    /// serves one image per full pass). This is the panic-free form every
+    /// caller that cannot guarantee its image count should use.
+    pub fn interval_or_makespan(&self) -> f64 {
+        self.steady_interval().unwrap_or(self.cycles as f64)
+    }
 }
 
 struct Stage {

@@ -155,7 +155,7 @@ pub fn evaluate(variant: VggVariant, scenario: Scenario, noc: NocKind, arch: &Ar
 
     // Single-image runs have no steady interval; fall back to the whole
     // run (serving one image every full pass).
-    let interval = sim.steady_interval().unwrap_or(sim.cycles as f64);
+    let interval = sim.interval_or_makespan();
     let lats = sim.latencies();
     let latency = lats[lats.len() / 2..]
         .iter()

@@ -1,0 +1,179 @@
+//! Golden + property tests for the searched replication/batch planner.
+//!
+//! Golden: at the paper's own 320-tile budget the searched plan must
+//! reproduce or dominate (by modeled steady-state interval) the hand-tuned
+//! Fig. 7 plan for every VGG variant, and the cycle-accurate engine must
+//! confirm the modeled interval. Property: searched plans never exceed
+//! their tile budget, for any variant x budget x batch depth.
+
+use smart_pim::cnn::{vgg, VggVariant};
+use smart_pim::config::ArchConfig;
+use smart_pim::mapping::{validate_plan, ReplicationPlan};
+use smart_pim::planner::{
+    evaluate_candidates, plan_for, CostModel, Planner, PlannerConfig,
+};
+use smart_pim::sweep::SweepRunner;
+use smart_pim::util::prop::{check, Config};
+use smart_pim::{prop_assert, prop_assert_eq};
+
+const PAPER_BUDGET: usize = 320;
+
+#[test]
+fn golden_searched_dominates_fig7_for_all_vggs() {
+    // Sec. VI-C hand-tunes Fig. 7 so every VGG fits 320 tiles at a 3136-
+    // cycle beat; the search must never do worse under the same budget.
+    let arch = ArchConfig::paper_node();
+    for v in VggVariant::ALL {
+        let net = vgg::build(v);
+        let cm = CostModel::new(&net, &arch);
+        let fig7 = cm.assess(&ReplicationPlan::fig7(v)).unwrap();
+        let result = plan_for(&net, &arch, PAPER_BUDGET)
+            .unwrap_or_else(|e| panic!("{}: {e}", v.name()));
+        let best = &result.best.assessment;
+        assert!(
+            best.interval <= fig7.interval,
+            "{}: searched interval {} > fig7 {}",
+            v.name(),
+            best.interval,
+            fig7.interval
+        );
+        assert!(
+            best.tiles <= PAPER_BUDGET,
+            "{}: {} tiles over budget",
+            v.name(),
+            best.tiles
+        );
+        let tiles = validate_plan(&net, &arch, &result.best.plan)
+            .unwrap_or_else(|e| panic!("{}: {e}", v.name()));
+        assert_eq!(tiles, best.tiles, "{}", v.name());
+    }
+}
+
+#[test]
+fn golden_engine_confirms_searched_beats_fig7() {
+    // Modeled domination must survive contact with the cycle-accurate
+    // engine: measured steady-state interval of the searched plan <= the
+    // Fig. 7 plan's, for the extreme variants (A smallest, E largest).
+    let arch = ArchConfig::paper_node();
+    let runner = SweepRunner::new();
+    for v in [VggVariant::A, VggVariant::E] {
+        let net = vgg::build(v);
+        let cm = CostModel::new(&net, &arch);
+        let mut pair = vec![
+            smart_pim::planner::PlanCandidate {
+                plan: ReplicationPlan::fig7(v),
+                assessment: cm.assess(&ReplicationPlan::fig7(v)).unwrap(),
+                measured_interval: None,
+            },
+            plan_for(&net, &arch, PAPER_BUDGET).unwrap().best,
+        ];
+        evaluate_candidates(&net, &arch, &runner, &mut pair, 10);
+        let fig7 = pair[0].measured_interval.expect("fig7 engine run");
+        let searched = pair[1].measured_interval.expect("searched engine run");
+        assert!(
+            searched <= fig7 * 1.01 + 32.0,
+            "{}: engine says searched {searched} > fig7 {fig7}",
+            v.name()
+        );
+        // And the engine agrees with the model for the searched plan.
+        let modeled = pair[1].assessment.interval as f64;
+        assert!(
+            (searched - modeled).abs() <= modeled * 0.10 + 64.0,
+            "{}: engine {searched} far from model {modeled}",
+            v.name()
+        );
+    }
+}
+
+#[test]
+fn golden_fig7_interval_is_the_3136_beat() {
+    // The anchor the searched plans are compared against (DESIGN.md §5):
+    // every Fig. 7 plan's modeled interval is conv1's 224*224/16 beat.
+    let arch = ArchConfig::paper_node();
+    for v in VggVariant::ALL {
+        let net = vgg::build(v);
+        let a = CostModel::new(&net, &arch)
+            .assess(&ReplicationPlan::fig7(v))
+            .unwrap();
+        assert_eq!(a.interval, 3136, "{}", v.name());
+    }
+}
+
+#[test]
+fn prop_searched_plans_respect_any_budget() {
+    check("planner-budget", &Config::default(), |g| {
+        let arch = ArchConfig::paper_node();
+        let v = VggVariant::ALL[g.rng.below_usize(VggVariant::ALL.len())];
+        let net = vgg::build(v);
+        // Smallest feasible budget: the unreplicated plan's footprint.
+        let floor = smart_pim::mapping::plan_tiles(
+            &net,
+            &arch,
+            &ReplicationPlan::none(&net).factors,
+        );
+        let budget = floor + g.rng.below_usize(arch.total_tiles() - floor + 1);
+        let batch_depth = 1 + g.rng.below(16);
+        let beam_width = 1 + g.rng.below_usize(4);
+        let planner = Planner::new(
+            &net,
+            &arch,
+            PlannerConfig {
+                tile_budget: budget,
+                batch_depth,
+                beam_width,
+                ..PlannerConfig::default()
+            },
+        );
+        let result = planner.search().map_err(|e| e.to_string())?;
+        prop_assert!(
+            result.best.assessment.tiles <= budget,
+            "{}: {} tiles > budget {budget}",
+            v.name(),
+            result.best.assessment.tiles
+        );
+        // Never worse than not replicating at all.
+        let none = CostModel::new(&net, &arch)
+            .assess(&ReplicationPlan::none(&net))
+            .map_err(|e| e.to_string())?;
+        prop_assert!(
+            result.best.assessment.interval <= none.interval,
+            "{}: searched {} > unreplicated {}",
+            v.name(),
+            result.best.assessment.interval,
+            none.interval
+        );
+        // Every frontier member fits too, and the frontier is non-empty.
+        prop_assert!(!result.frontier.is_empty(), "empty frontier");
+        for c in &result.frontier {
+            prop_assert!(c.assessment.tiles <= budget, "frontier over budget");
+            validate_plan(&net, &arch, &c.plan).map_err(|e| e.to_string())?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_search_is_deterministic() {
+    check("planner-determinism", &Config::default(), |g| {
+        let arch = ArchConfig::paper_node();
+        let v = VggVariant::ALL[g.rng.below_usize(VggVariant::ALL.len())];
+        let net = vgg::build(v);
+        let budget = 200 + g.rng.below_usize(121); // 200..=320
+        let a = plan_for(&net, &arch, budget).map_err(|e| e.to_string())?;
+        let b = plan_for(&net, &arch, budget).map_err(|e| e.to_string())?;
+        prop_assert_eq!(&a.best.plan.factors, &b.best.plan.factors);
+        prop_assert_eq!(a.explored, b.explored);
+        Ok(())
+    });
+}
+
+#[test]
+fn searched_via_replication_api_round_trips() {
+    // The mapping-layer convenience constructor must agree with the full
+    // planner result.
+    let arch = ArchConfig::paper_node();
+    let net = vgg::build(VggVariant::D);
+    let via_mapping = ReplicationPlan::searched(&net, &arch, PAPER_BUDGET).unwrap();
+    let via_planner = plan_for(&net, &arch, PAPER_BUDGET).unwrap().best.plan;
+    assert_eq!(via_mapping, via_planner);
+}
