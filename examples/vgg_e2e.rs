@@ -17,9 +17,10 @@
 use smart_pim::cnn::VggVariant;
 use smart_pim::config::{ArchConfig, NocKind, Scenario};
 use smart_pim::coordinator::{BatchPolicy, Server};
+use smart_pim::mapping::ReplicationPlan;
 use smart_pim::runtime::vgg_tiny::{load_golden, IMAGE_LEN};
 use smart_pim::runtime::Runtime;
-use smart_pim::sim::evaluate;
+use smart_pim::sim::{evaluate, evaluate_network};
 use smart_pim::util::Rng;
 
 fn main() {
@@ -101,4 +102,24 @@ fn main() {
         );
     }
     println!("  paper best case      :    1029 FPS   40.4027 TOPS   3.5914 TOPS/W");
+
+    // ---- beyond the paper: a branching workload through the layer DAG ----
+    println!();
+    println!("layer-DAG projection (ResNet-18 @ 224x224, SMART NoC, batch pipelining):");
+    let net = smart_pim::cnn::workload("resnet18").expect("resnet18 builds");
+    let plans = [
+        ("none", ReplicationPlan::none(&net)),
+        (
+            "searched",
+            ReplicationPlan::searched(&net, &arch, 0).expect("searched plan fits the node"),
+        ),
+    ];
+    for (label, plan) in plans {
+        let r = evaluate_network(&net, &plan, true, NocKind::Smart, &arch, 8)
+            .expect("resnet mapping fits");
+        println!(
+            "  plan {label:<9}: {:>7.0} FPS  {:>8.4} TOPS  {:>7.4} TOPS/W",
+            r.fps, r.tops, r.tops_per_watt
+        );
+    }
 }

@@ -6,7 +6,9 @@
 /// One layer of a CNN, with its input feature-map geometry resolved.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Layer {
+    /// Layer name (unique within a network).
     pub name: String,
+    /// Layer type and type-specific parameters.
     pub kind: LayerKind,
     /// IFM height.
     pub in_h: usize,
@@ -19,14 +21,22 @@ pub struct Layer {
 /// Layer type. Pooling is attached to the preceding conv layer (`pool_after`)
 /// because the paper treats "conv + pool" as one pipelined stage with its own
 /// intra-layer pipeline variant (Sec. IV-A).
+///
+/// Besides the crossbar-mapped kinds (`Conv`, `Fc`) there are three
+/// *dataflow* kinds that carry no weights: `Add` and `Concat` are the merge
+/// nodes of a layer DAG (residual connections and channel concatenation),
+/// and `GlobalAvgPool` is the spatial reduction in front of a ResNet-style
+/// classifier head. They execute in the tile's shift-and-add / output
+/// register path, not in crossbars.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum LayerKind {
+    /// Convolution mapped onto crossbars (the paper's main workload unit).
     Conv {
         /// Kernel count `n` (output channels).
         out_ch: usize,
         /// Kernel spatial size `l` (VGG: 3, or 1 for the C-variant 1x1s).
         ksize: usize,
-        /// Stride (VGG: always 1).
+        /// Stride (VGG: always 1; ResNet downsamples with 2).
         stride: usize,
         /// SAME padding (VGG: ksize/2).
         pad: usize,
@@ -35,9 +45,16 @@ pub enum LayerKind {
     },
     /// Fully connected: `out` neurons over the flattened input.
     Fc { out: usize },
+    /// Element-wise sum of two or more equal-shape inputs (residual merge).
+    Add,
+    /// Channel-wise concatenation of two or more same-resolution inputs.
+    Concat,
+    /// Global average pool: reduces `h x w x c` to `1 x 1 x c`.
+    GlobalAvgPool,
 }
 
 impl Layer {
+    /// A stride-1 SAME-padded convolution (the VGG default).
     pub fn conv(
         name: impl Into<String>,
         in_hw: (usize, usize),
@@ -61,6 +78,35 @@ impl Layer {
         }
     }
 
+    /// A convolution with explicit stride and padding (ResNet's 7x7/2 stem
+    /// and 1x1/2 downsample paths; [`Layer::conv`] keeps the VGG defaults).
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv_s(
+        name: impl Into<String>,
+        in_hw: (usize, usize),
+        in_ch: usize,
+        out_ch: usize,
+        ksize: usize,
+        stride: usize,
+        pad: usize,
+        pool_after: bool,
+    ) -> Self {
+        Self {
+            name: name.into(),
+            kind: LayerKind::Conv {
+                out_ch,
+                ksize,
+                stride,
+                pad,
+                pool_after,
+            },
+            in_h: in_hw.0,
+            in_w: in_hw.1,
+            in_ch,
+        }
+    }
+
+    /// A fully-connected layer over a flattened `in_dim` input.
     pub fn fc(name: impl Into<String>, in_dim: usize, out: usize) -> Self {
         Self {
             name: name.into(),
@@ -71,10 +117,62 @@ impl Layer {
         }
     }
 
+    /// A residual merge: element-wise sum of equal-shape `h x w x ch` inputs.
+    pub fn add(name: impl Into<String>, in_hw: (usize, usize), in_ch: usize) -> Self {
+        Self {
+            name: name.into(),
+            kind: LayerKind::Add,
+            in_h: in_hw.0,
+            in_w: in_hw.1,
+            in_ch,
+        }
+    }
+
+    /// A channel concatenation; `total_ch` is the summed channel count of
+    /// all inputs.
+    pub fn concat(name: impl Into<String>, in_hw: (usize, usize), total_ch: usize) -> Self {
+        Self {
+            name: name.into(),
+            kind: LayerKind::Concat,
+            in_h: in_hw.0,
+            in_w: in_hw.1,
+            in_ch: total_ch,
+        }
+    }
+
+    /// A global average pool over an `h x w x ch` feature map.
+    pub fn global_avg_pool(name: impl Into<String>, in_hw: (usize, usize), in_ch: usize) -> Self {
+        Self {
+            name: name.into(),
+            kind: LayerKind::GlobalAvgPool,
+            in_h: in_hw.0,
+            in_w: in_hw.1,
+            in_ch,
+        }
+    }
+
+    /// Is this a crossbar-mapped convolution?
     pub fn is_conv(&self) -> bool {
         matches!(self.kind, LayerKind::Conv { .. })
     }
 
+    /// Is this a fully-connected layer?
+    pub fn is_fc(&self) -> bool {
+        matches!(self.kind, LayerKind::Fc { .. })
+    }
+
+    /// Is this a DAG merge node (`Add` or `Concat`)?
+    pub fn is_merge(&self) -> bool {
+        matches!(self.kind, LayerKind::Add | LayerKind::Concat)
+    }
+
+    /// Does this layer hold weights in crossbars (conv or FC)? Dataflow
+    /// kinds (merge nodes, global pooling) occupy no subarrays.
+    pub fn is_crossbar(&self) -> bool {
+        matches!(self.kind, LayerKind::Conv { .. } | LayerKind::Fc { .. })
+    }
+
+    /// Does this conv fuse a 2x2/2 max-pool after it?
     pub fn has_pool(&self) -> bool {
         matches!(
             self.kind,
@@ -85,10 +183,11 @@ impl Layer {
         )
     }
 
+    /// Kernel spatial size (1 for every non-conv kind).
     pub fn ksize(&self) -> usize {
         match self.kind {
             LayerKind::Conv { ksize, .. } => ksize,
-            LayerKind::Fc { .. } => 1,
+            _ => 1,
         }
     }
 
@@ -102,7 +201,8 @@ impl Layer {
                 let ow = (self.in_w + 2 * pad - ksize) / stride + 1;
                 (oh, ow)
             }
-            LayerKind::Fc { .. } => (1, 1),
+            LayerKind::Fc { .. } | LayerKind::GlobalAvgPool => (1, 1),
+            LayerKind::Add | LayerKind::Concat => (self.in_h, self.in_w),
         }
     }
 
@@ -121,6 +221,9 @@ impl Layer {
         match self.kind {
             LayerKind::Conv { out_ch, .. } => out_ch,
             LayerKind::Fc { out } => out,
+            // Merges and pooling pass channels through (Concat's `in_ch` is
+            // already the summed channel count of its inputs).
+            LayerKind::Add | LayerKind::Concat | LayerKind::GlobalAvgPool => self.in_ch,
         }
     }
 
@@ -138,15 +241,22 @@ impl Layer {
     }
 
     /// GEMM view: the kernel matrix is `gemm_k()` rows x `gemm_n()` columns.
+    /// Dataflow kinds hold no weight matrix (both dims are 0).
     pub fn gemm_k(&self) -> usize {
         match self.kind {
             LayerKind::Conv { ksize, .. } => self.in_ch * ksize * ksize,
             LayerKind::Fc { .. } => self.in_ch,
+            LayerKind::Add | LayerKind::Concat | LayerKind::GlobalAvgPool => 0,
         }
     }
 
+    /// GEMM output columns (0 for weight-less dataflow kinds).
     pub fn gemm_n(&self) -> usize {
-        self.out_ch()
+        if self.is_crossbar() {
+            self.out_ch()
+        } else {
+            0
+        }
     }
 
     /// Multiply-accumulate operations for one inference of this layer.
@@ -204,5 +314,46 @@ mod tests {
         assert_eq!(l.macs(), 25088 * 4096);
         assert_eq!(l.out_dim(), 4096);
         assert!(!l.is_conv());
+        assert!(l.is_fc() && l.is_crossbar());
+    }
+
+    #[test]
+    fn strided_conv_shapes_resnet_stem() {
+        // ResNet conv1: 224x224x3, 7x7/2 pad 3 -> 112x112x64; fused pool
+        // halves again to 56.
+        let l = Layer::conv_s("conv1", (224, 224), 3, 64, 7, 2, 3, true);
+        assert_eq!(l.conv_out_hw(), (112, 112));
+        assert_eq!(l.out_hw(), (56, 56));
+        assert_eq!(l.gemm_k(), 3 * 49);
+        assert_eq!(l.macs(), 112 * 112 * 147 * 64);
+    }
+
+    #[test]
+    fn add_passes_shape_through_with_no_weights() {
+        let l = Layer::add("res1", (56, 56), 64);
+        assert_eq!(l.out_hw(), (56, 56));
+        assert_eq!(l.out_ch(), 64);
+        assert_eq!(l.out_pixels(), 56 * 56);
+        assert_eq!(l.macs(), 0);
+        assert_eq!(l.weights(), 0);
+        assert!(l.is_merge() && !l.is_crossbar() && !l.is_conv());
+    }
+
+    #[test]
+    fn concat_sums_channels() {
+        let l = Layer::concat("cat", (28, 28), 64 + 128);
+        assert_eq!(l.out_ch(), 192);
+        assert_eq!(l.out_dim(), 28 * 28 * 192);
+        assert_eq!(l.weights(), 0);
+    }
+
+    #[test]
+    fn global_avg_pool_reduces_to_channels() {
+        let l = Layer::global_avg_pool("gap", (7, 7), 512);
+        assert_eq!(l.out_hw(), (1, 1));
+        assert_eq!(l.out_dim(), 512);
+        assert_eq!(l.out_pixels(), 1);
+        assert_eq!(l.macs(), 0);
+        assert!(!l.is_merge() && !l.is_crossbar());
     }
 }

@@ -1,10 +1,59 @@
-//! CNN workload descriptors: layers, networks, and the VGG A-E zoo the
-//! paper evaluates (Sec. VI-B).
+//! CNN workload descriptors: layers, layer-DAG networks, the VGG A-E zoo
+//! the paper evaluates (Sec. VI-B), and the ResNet-18/34 branching
+//! workloads that exercise the DAG machinery.
 
 pub mod layer;
 pub mod network;
+pub mod resnet;
 pub mod vgg;
 
 pub use layer::{Layer, LayerKind};
 pub use network::Network;
+pub use resnet::ResNetVariant;
 pub use vgg::VggVariant;
+
+/// Build any named workload: the VGG variants by letter or alias
+/// (`A`/`vgg11`/`vggA`, ... `E`/`vgg19`) and the ResNets
+/// (`resnet18`/`r18`/`18`, `resnet34`). This is the single name resolver
+/// behind `--network` CLI options.
+pub fn workload(name: &str) -> Result<Network, String> {
+    if let Ok(v) = name.parse::<VggVariant>() {
+        return Ok(vgg::build(v));
+    }
+    if let Ok(r) = name.parse::<ResNetVariant>() {
+        return Ok(resnet::build(r));
+    }
+    Err(format!(
+        "unknown network {name:?} (VGG: A..E/vgg11/vgg13/vgg16/vgg19; \
+         ResNet: resnet18/resnet34)"
+    ))
+}
+
+/// Every named workload the repository ships, in reporting order.
+pub fn workload_names() -> Vec<&'static str> {
+    let mut names: Vec<&'static str> = VggVariant::ALL.iter().map(|v| v.name()).collect();
+    names.extend(ResNetVariant::ALL.iter().map(|r| r.name()));
+    names
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_resolves_all_names() {
+        for name in workload_names() {
+            let net = workload(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(net.len() > 10, "{name}");
+        }
+        assert!(workload("alexnet").is_err());
+    }
+
+    #[test]
+    fn workload_vgg_matches_builder() {
+        let a = workload("vggE").unwrap();
+        let b = vgg::build(VggVariant::E);
+        assert_eq!(a.macs(), b.macs());
+        assert_eq!(a.len(), b.len());
+    }
+}

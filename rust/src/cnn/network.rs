@@ -1,27 +1,174 @@
-//! Network container: an ordered list of layers with validated shape chain.
+//! Network container: a validated layer **DAG**.
+//!
+//! A [`Network`] is a list of layers in topological order plus an explicit
+//! edge set. The linear chain the paper evaluates (VGG A-E) is the trivial
+//! DAG — [`Network::new`] builds it from a plain layer list, exactly as the
+//! seed code did — while [`Network::from_graph`] accepts arbitrary
+//! branching topologies (ResNet residual blocks, Inception-style concats)
+//! with merge nodes ([`LayerKind::Add`] / [`LayerKind::Concat`]) and shape
+//! checking along **every** edge.
+//!
+//! Validation rules:
+//! - the layer order given must be topological, and the edge set acyclic;
+//! - layer 0 is the only source (host-fed), the last layer the only sink;
+//! - `Conv` / `Fc` / `GlobalAvgPool` take exactly one input edge; `Add`
+//!   needs >= 2 equal-shape inputs; `Concat` >= 2 same-resolution inputs
+//!   whose channels sum to its `in_ch`.
 
 use super::layer::{Layer, LayerKind};
 
-/// A validated feed-forward CNN.
+/// A validated feed-forward CNN over an explicit layer DAG.
 #[derive(Debug, Clone)]
 pub struct Network {
+    /// Workload name (`vggE`, `resnet18`, ...).
     pub name: String,
     layers: Vec<Layer>,
+    /// Predecessor indices per layer (edge sources), each sorted ascending.
+    preds: Vec<Vec<usize>>,
+    /// Successor indices per layer (edge targets), each sorted ascending.
+    succs: Vec<Vec<usize>>,
 }
 
 impl Network {
-    /// Build and validate: each layer's input must match its predecessor's
-    /// output (spatial dims and channels for conv; flattened dim for FC).
+    /// Build and validate a **linear** network: layer `i` feeds layer
+    /// `i+1`. This is the seed API, kept verbatim — every VGG constant and
+    /// golden test goes through here, and a linear network is simply the
+    /// trivial DAG (`preds[i] == [i-1]`).
     pub fn new(name: impl Into<String>, layers: Vec<Layer>) -> Result<Self, String> {
+        let edges: Vec<(usize, usize)> = (1..layers.len()).map(|i| (i - 1, i)).collect();
+        Self::from_graph(name, layers, edges)
+    }
+
+    /// Build and validate a layer DAG from an explicit edge list
+    /// (`(producer, consumer)` index pairs into `layers`).
+    ///
+    /// # Example
+    ///
+    /// A minimal residual cell — `c1` feeds both `c2` and the merge:
+    ///
+    /// ```
+    /// use smart_pim::cnn::{Layer, Network};
+    ///
+    /// let net = Network::from_graph(
+    ///     "tiny-res",
+    ///     vec![
+    ///         Layer::conv("c1", (8, 8), 3, 4, 3, false),
+    ///         Layer::conv("c2", (8, 8), 4, 4, 3, false),
+    ///         Layer::add("sum", (8, 8), 4),
+    ///         Layer::fc("fc", 8 * 8 * 4, 10),
+    ///     ],
+    ///     vec![(0, 1), (1, 2), (0, 2), (2, 3)],
+    /// )
+    /// .unwrap();
+    /// assert!(!net.is_linear());
+    /// assert_eq!(net.preds(2), &[0, 1]); // the merge waits on both paths
+    /// ```
+    pub fn from_graph(
+        name: impl Into<String>,
+        layers: Vec<Layer>,
+        edges: Vec<(usize, usize)>,
+    ) -> Result<Self, String> {
         let name = name.into();
-        if layers.is_empty() {
+        let n = layers.len();
+        if n == 0 {
             return Err(format!("network {name}: no layers"));
         }
-        for i in 1..layers.len() {
-            let prev = &layers[i - 1];
-            let cur = &layers[i];
+        let mut preds: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for &(a, b) in &edges {
+            if a >= n || b >= n {
+                return Err(format!(
+                    "network {name}: edge ({a}, {b}) out of range for {n} layers"
+                ));
+            }
+            if succs[a].contains(&b) {
+                return Err(format!("network {name}: duplicate edge ({a}, {b})"));
+            }
+            succs[a].push(b);
+            preds[b].push(a);
+        }
+        // Order check: the given layer order must be topological. A forward
+        // violation is either a cycle (the edge set admits no topological
+        // order at all) or a mis-ordered acyclic graph; Kahn's algorithm
+        // distinguishes the two for a precise error.
+        if edges.iter().any(|&(a, b)| a >= b) {
+            let mut indeg: Vec<usize> = preds.iter().map(Vec::len).collect();
+            let mut ready: Vec<usize> =
+                (0..n).filter(|&i| indeg[i] == 0).collect();
+            let mut emitted = 0usize;
+            while let Some(v) = ready.pop() {
+                emitted += 1;
+                for &s in &succs[v] {
+                    indeg[s] -= 1;
+                    if indeg[s] == 0 {
+                        ready.push(s);
+                    }
+                }
+            }
+            if emitted < n {
+                return Err(format!("network {name}: edge set contains a cycle"));
+            }
+            return Err(format!(
+                "network {name}: layers must be listed in topological order \
+                 (some edge points backwards)"
+            ));
+        }
+        for p in preds.iter_mut() {
+            p.sort_unstable();
+        }
+        for s in succs.iter_mut() {
+            s.sort_unstable();
+        }
+        // The source must be a real compute layer: merges need >= 2 inputs
+        // and a host-fed pool has nothing to reduce.
+        if !layers[0].is_crossbar() {
+            return Err(format!(
+                "network {name}: layer 0 ({}) must be a conv or FC layer",
+                layers[0].name
+            ));
+        }
+        // Connectivity: one source (layer 0), one sink (the last layer).
+        for (i, p) in preds.iter().enumerate() {
+            if i == 0 && !p.is_empty() {
+                return Err(format!(
+                    "network {name}: layer 0 ({}) must be the host-fed source",
+                    layers[0].name
+                ));
+            }
+            if i > 0 && p.is_empty() {
+                return Err(format!(
+                    "network {name}: layer {} ({}) has no input edge",
+                    i, layers[i].name
+                ));
+            }
+        }
+        for (i, s) in succs.iter().enumerate() {
+            if i + 1 == n && !s.is_empty() {
+                return Err(format!(
+                    "network {name}: last layer ({}) must be the sink",
+                    layers[n - 1].name
+                ));
+            }
+            if i + 1 < n && s.is_empty() {
+                return Err(format!(
+                    "network {name}: layer {} ({}) has a dangling output",
+                    i, layers[i].name
+                ));
+            }
+        }
+        // Shape check along every edge.
+        for (i, cur) in layers.iter().enumerate().skip(1) {
+            let ins = &preds[i];
             match cur.kind {
-                LayerKind::Conv { .. } => {
+                LayerKind::Conv { .. } | LayerKind::GlobalAvgPool => {
+                    if ins.len() != 1 {
+                        return Err(format!(
+                            "network {name}: {} takes one input, got {}",
+                            cur.name,
+                            ins.len()
+                        ));
+                    }
+                    let prev = &layers[ins[0]];
                     let (h, w) = prev.out_hw();
                     if (cur.in_h, cur.in_w) != (h, w) || cur.in_ch != prev.out_ch() {
                         return Err(format!(
@@ -38,6 +185,14 @@ impl Network {
                     }
                 }
                 LayerKind::Fc { .. } => {
+                    if ins.len() != 1 {
+                        return Err(format!(
+                            "network {name}: {} takes one input, got {}",
+                            cur.name,
+                            ins.len()
+                        ));
+                    }
+                    let prev = &layers[ins[0]];
                     if cur.in_ch != prev.out_dim() {
                         return Err(format!(
                             "network {name}: {} flat out {} != {} in {}",
@@ -48,33 +203,129 @@ impl Network {
                         ));
                     }
                 }
+                LayerKind::Add => {
+                    if ins.len() < 2 {
+                        return Err(format!(
+                            "network {name}: merge {} needs >= 2 inputs, got {}",
+                            cur.name,
+                            ins.len()
+                        ));
+                    }
+                    for &p in ins {
+                        let prev = &layers[p];
+                        let (h, w) = prev.out_hw();
+                        if (h, w) != (cur.in_h, cur.in_w) || prev.out_ch() != cur.in_ch {
+                            return Err(format!(
+                                "network {name}: merge {} expects {}x{}x{}, input {} \
+                                 produces {}x{}x{}",
+                                cur.name,
+                                cur.in_h,
+                                cur.in_w,
+                                cur.in_ch,
+                                prev.name,
+                                h,
+                                w,
+                                prev.out_ch()
+                            ));
+                        }
+                    }
+                }
+                LayerKind::Concat => {
+                    if ins.len() < 2 {
+                        return Err(format!(
+                            "network {name}: merge {} needs >= 2 inputs, got {}",
+                            cur.name,
+                            ins.len()
+                        ));
+                    }
+                    let mut ch_sum = 0usize;
+                    for &p in ins {
+                        let prev = &layers[p];
+                        let (h, w) = prev.out_hw();
+                        if (h, w) != (cur.in_h, cur.in_w) {
+                            return Err(format!(
+                                "network {name}: merge {} expects {}x{}, input {} \
+                                 produces {}x{}",
+                                cur.name, cur.in_h, cur.in_w, prev.name, h, w
+                            ));
+                        }
+                        ch_sum += prev.out_ch();
+                    }
+                    if ch_sum != cur.in_ch {
+                        return Err(format!(
+                            "network {name}: merge {} declares {} channels, inputs \
+                             sum to {ch_sum}",
+                            cur.name, cur.in_ch
+                        ));
+                    }
+                }
             }
         }
-        Ok(Self { name, layers })
+        Ok(Self {
+            name,
+            layers,
+            preds,
+            succs,
+        })
     }
 
+    /// The layers in topological order.
     pub fn layers(&self) -> &[Layer] {
         &self.layers
     }
 
+    /// Predecessor layer indices of layer `i` (empty for the source).
+    pub fn preds(&self, i: usize) -> &[usize] {
+        &self.preds[i]
+    }
+
+    /// Successor layer indices of layer `i` (empty for the sink).
+    pub fn succs(&self, i: usize) -> &[usize] {
+        &self.succs[i]
+    }
+
+    /// True when the DAG is the trivial chain (`preds[i] == [i-1]`), i.e.
+    /// exactly what the seed's `Vec<Layer>` representation expressed.
+    pub fn is_linear(&self) -> bool {
+        self.preds
+            .iter()
+            .enumerate()
+            .all(|(i, p)| if i == 0 { p.is_empty() } else { p == &[i - 1] })
+    }
+
+    /// Total edge count.
+    pub fn n_edges(&self) -> usize {
+        self.preds.iter().map(Vec::len).sum()
+    }
+
+    /// Layer count.
     pub fn len(&self) -> usize {
         self.layers.len()
     }
 
+    /// True when the network has no layers (never, post-validation).
     pub fn is_empty(&self) -> bool {
         self.layers.is_empty()
     }
 
+    /// The crossbar-mapped convolution layers.
     pub fn conv_layers(&self) -> impl Iterator<Item = &Layer> {
         self.layers.iter().filter(|l| l.is_conv())
     }
 
+    /// Number of convolution layers.
     pub fn n_conv(&self) -> usize {
         self.conv_layers().count()
     }
 
+    /// Number of fully-connected layers (merge/pool nodes are neither).
     pub fn n_fc(&self) -> usize {
-        self.layers.iter().filter(|l| !l.is_conv()).count()
+        self.layers.iter().filter(|l| l.is_fc()).count()
+    }
+
+    /// Number of dataflow merge nodes (`Add` / `Concat`).
+    pub fn n_merge(&self) -> usize {
+        self.layers.iter().filter(|l| l.is_merge()).count()
     }
 
     /// Total MACs for one inference.
@@ -112,6 +363,10 @@ mod tests {
         assert_eq!(net.len(), 3);
         assert_eq!(net.n_conv(), 2);
         assert_eq!(net.n_fc(), 1);
+        assert!(net.is_linear());
+        assert_eq!(net.n_edges(), 2);
+        assert_eq!(net.preds(2), &[1]);
+        assert_eq!(net.succs(0), &[1]);
     }
 
     #[test]
@@ -143,5 +398,155 @@ mod tests {
     #[test]
     fn empty_network_rejected() {
         assert!(Network::new("empty", vec![]).is_err());
+    }
+
+    /// A minimal residual cell: c1 feeds both c2 and the merge; the merge
+    /// sums c2's output with c1's (equal shapes).
+    fn residual_layers() -> Vec<Layer> {
+        vec![
+            Layer::conv("c1", (8, 8), 3, 4, 3, false),
+            Layer::conv("c2", (8, 8), 4, 4, 3, false),
+            Layer::add("sum", (8, 8), 4),
+            Layer::fc("fc", 8 * 8 * 4, 10),
+        ]
+    }
+
+    #[test]
+    fn residual_dag_builds() {
+        let net = Network::from_graph(
+            "res",
+            residual_layers(),
+            vec![(0, 1), (1, 2), (0, 2), (2, 3)],
+        )
+        .unwrap();
+        assert!(!net.is_linear());
+        assert_eq!(net.n_merge(), 1);
+        assert_eq!(net.preds(2), &[0, 1]);
+        assert_eq!(net.succs(0), &[1, 2]);
+        assert_eq!(net.n_edges(), 4);
+    }
+
+    #[test]
+    fn merge_shape_mismatch_rejected() {
+        // The merge declares 8 channels but both inputs produce 4.
+        let mut layers = residual_layers();
+        layers[2] = Layer::add("sum", (8, 8), 8);
+        layers[3] = Layer::fc("fc", 8 * 8 * 8, 10);
+        let err = Network::from_graph("res", layers, vec![(0, 1), (1, 2), (0, 2), (2, 3)])
+            .unwrap_err();
+        assert!(err.contains("merge"), "{err}");
+    }
+
+    #[test]
+    fn merge_with_one_input_rejected() {
+        let layers = residual_layers();
+        let err = Network::from_graph("res", layers, vec![(0, 1), (1, 2), (2, 3)]).unwrap_err();
+        assert!(err.contains(">= 2"), "{err}");
+    }
+
+    #[test]
+    fn cycle_rejected() {
+        let err = Network::from_graph(
+            "loopy",
+            vec![
+                Layer::conv("c1", (8, 8), 3, 4, 3, false),
+                Layer::conv("c2", (8, 8), 4, 4, 3, false),
+                Layer::conv("c3", (8, 8), 4, 4, 3, false),
+            ],
+            vec![(0, 1), (1, 2), (2, 1)],
+        )
+        .unwrap_err();
+        assert!(err.contains("cycle"), "{err}");
+    }
+
+    #[test]
+    fn non_topological_order_rejected() {
+        // Acyclic, but the consumer is listed before its producer.
+        let err = Network::from_graph(
+            "misordered",
+            vec![
+                Layer::conv("c1", (8, 8), 3, 4, 3, false),
+                Layer::conv("c3", (8, 8), 4, 4, 3, false),
+                Layer::conv("c2", (8, 8), 4, 4, 3, false),
+            ],
+            vec![(0, 2), (2, 1)],
+        )
+        .unwrap_err();
+        assert!(err.contains("topological"), "{err}");
+    }
+
+    #[test]
+    fn dangling_and_unreachable_rejected() {
+        // c2 has no consumer (dangling output).
+        let err = Network::from_graph(
+            "dangling",
+            residual_layers(),
+            vec![(0, 1), (0, 2), (1, 2), (1, 3)],
+        )
+        .unwrap_err();
+        assert!(err.contains("dangling"), "{err}");
+        // fc has no input edge.
+        let err = Network::from_graph(
+            "orphan",
+            vec![
+                Layer::conv("c1", (8, 8), 3, 4, 3, false),
+                Layer::fc("fc", 8 * 8 * 4, 10),
+            ],
+            vec![],
+        )
+        .unwrap_err();
+        assert!(err.contains("no input"), "{err}");
+    }
+
+    #[test]
+    fn duplicate_edge_rejected() {
+        let err = Network::from_graph(
+            "dup",
+            vec![
+                Layer::conv("c1", (8, 8), 3, 4, 3, false),
+                Layer::conv("c2", (8, 8), 4, 4, 3, false),
+            ],
+            vec![(0, 1), (0, 1)],
+        )
+        .unwrap_err();
+        assert!(err.contains("duplicate"), "{err}");
+    }
+
+    #[test]
+    fn concat_channel_sum_checked() {
+        let layers = vec![
+            Layer::conv("c1", (8, 8), 3, 4, 3, false),
+            Layer::conv("c2", (8, 8), 4, 6, 3, false),
+            Layer::concat("cat", (8, 8), 10), // 4 + 6
+            Layer::fc("fc", 8 * 8 * 10, 10),
+        ];
+        let net =
+            Network::from_graph("cat", layers.clone(), vec![(0, 1), (0, 2), (1, 2), (2, 3)])
+                .unwrap();
+        assert_eq!(net.layers()[2].out_ch(), 10);
+        // Wrong declared sum.
+        let mut bad = layers;
+        bad[2] = Layer::concat("cat", (8, 8), 11);
+        bad[3] = Layer::fc("fc", 8 * 8 * 11, 10);
+        let err = Network::from_graph("cat", bad, vec![(0, 1), (0, 2), (1, 2), (2, 3)])
+            .unwrap_err();
+        assert!(err.contains("sum"), "{err}");
+    }
+
+    #[test]
+    fn linear_via_from_graph_equals_new() {
+        let layers = vec![
+            Layer::conv("c1", (8, 8), 3, 4, 3, true),
+            Layer::conv("c2", (4, 4), 4, 8, 3, false),
+            Layer::fc("fc", 4 * 4 * 8, 10),
+        ];
+        let a = Network::new("lin", layers.clone()).unwrap();
+        let b = Network::from_graph("lin", layers, vec![(0, 1), (1, 2)]).unwrap();
+        assert!(a.is_linear() && b.is_linear());
+        assert_eq!(a.macs(), b.macs());
+        for i in 0..a.len() {
+            assert_eq!(a.preds(i), b.preds(i));
+            assert_eq!(a.succs(i), b.succs(i));
+        }
     }
 }

@@ -1,0 +1,257 @@
+//! The ResNet model zoo (He et al. 2015) at ImageNet resolution — the
+//! first *branching* workloads of the repository, exercising the layer-DAG
+//! machinery end to end (residual `Add` merges, strided downsampling,
+//! global average pooling).
+//!
+//! Modeling choices, consistent with the VGG zoo:
+//! - the 3x3/2 max-pool after the stem conv is fused into it
+//!   (`pool_after`, the paper's conv+pool pipelined-stage model), which
+//!   yields the same 112 -> 56 spatial reduction;
+//! - batch-norm folds into the conv weights at inference (no extra layer);
+//! - the residual `Add` and the global average pool are dataflow nodes: no
+//!   crossbar weights, executed in the tile's S&A/OR path;
+//! - projection shortcuts (1x1/2 convs) are real crossbar layers on the
+//!   skip path, so `n_conv()` counts 20 for ResNet-18 (17 trunk + 3
+//!   projections), while the canonical "18" counts trunk convs + FC.
+
+use super::layer::Layer;
+use super::network::Network;
+
+/// ResNet variant identifiers (basic-block family).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ResNetVariant {
+    /// ResNet-18: [2, 2, 2, 2] basic blocks.
+    R18,
+    /// ResNet-34: [3, 4, 6, 3] basic blocks.
+    R34,
+}
+
+impl ResNetVariant {
+    /// Every variant, in depth order.
+    pub const ALL: [ResNetVariant; 2] = [ResNetVariant::R18, ResNetVariant::R34];
+
+    /// Workload name (`resnet18` / `resnet34`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ResNetVariant::R18 => "resnet18",
+            ResNetVariant::R34 => "resnet34",
+        }
+    }
+
+    /// Basic blocks per stage.
+    fn blocks(&self) -> [usize; 4] {
+        match self {
+            ResNetVariant::R18 => [2, 2, 2, 2],
+            ResNetVariant::R34 => [3, 4, 6, 3],
+        }
+    }
+}
+
+impl std::str::FromStr for ResNetVariant {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "18" | "r18" | "resnet18" | "resnet-18" => Ok(ResNetVariant::R18),
+            "34" | "r34" | "resnet34" | "resnet-34" => Ok(ResNetVariant::R34),
+            other => Err(format!("unknown ResNet variant {other:?} (18 or 34)")),
+        }
+    }
+}
+
+/// Build a ResNet variant at ImageNet resolution (224x224x3, 1000 classes).
+pub fn build(variant: ResNetVariant) -> Network {
+    build_at(variant, 224, 1000)
+}
+
+/// Build at an arbitrary input resolution (must be divisible by 32).
+pub fn build_at(variant: ResNetVariant, input_hw: usize, classes: usize) -> Network {
+    assert!(input_hw % 32 == 0, "ResNet needs input divisible by 32");
+    let mut layers: Vec<Layer> = Vec::new();
+    let mut edges: Vec<(usize, usize)> = Vec::new();
+
+    // Stem: 7x7/2 conv (pad 3) with the 2x max-pool fused -> hw/4.
+    layers.push(Layer::conv_s(
+        "conv1",
+        (input_hw, input_hw),
+        3,
+        64,
+        7,
+        2,
+        3,
+        true,
+    ));
+    let mut trunk = 0usize; // index of the layer feeding the next block
+    let mut hw = input_hw / 4;
+    let mut ch = 64usize;
+
+    for (stage, &n_blocks) in variant.blocks().iter().enumerate() {
+        let out_ch = 64 << stage; // 64, 128, 256, 512
+        for block in 0..n_blocks {
+            let downsample = stage > 0 && block == 0;
+            let stride = if downsample { 2 } else { 1 };
+            let out_hw = hw / stride;
+            let tag = format!("s{}b{}", stage + 1, block + 1);
+
+            let conv_a = layers.len();
+            layers.push(Layer::conv_s(
+                format!("{tag}.conv_a"),
+                (hw, hw),
+                ch,
+                out_ch,
+                3,
+                stride,
+                1,
+                false,
+            ));
+            edges.push((trunk, conv_a));
+
+            let conv_b = layers.len();
+            layers.push(Layer::conv_s(
+                format!("{tag}.conv_b"),
+                (out_hw, out_hw),
+                out_ch,
+                out_ch,
+                3,
+                1,
+                1,
+                false,
+            ));
+            edges.push((conv_a, conv_b));
+
+            // Skip path: identity when shapes match, 1x1/2 projection when
+            // the block downsamples.
+            let skip = if downsample {
+                let down = layers.len();
+                layers.push(Layer::conv_s(
+                    format!("{tag}.down"),
+                    (hw, hw),
+                    ch,
+                    out_ch,
+                    1,
+                    2,
+                    0,
+                    false,
+                ));
+                edges.push((trunk, down));
+                down
+            } else {
+                trunk
+            };
+
+            let add = layers.len();
+            layers.push(Layer::add(format!("{tag}.add"), (out_hw, out_hw), out_ch));
+            edges.push((conv_b, add));
+            edges.push((skip, add));
+
+            trunk = add;
+            hw = out_hw;
+            ch = out_ch;
+        }
+    }
+
+    // Head: global average pool then the classifier FC.
+    let gap = layers.len();
+    layers.push(Layer::global_avg_pool("gap", (hw, hw), ch));
+    edges.push((trunk, gap));
+    let fc = layers.len();
+    layers.push(Layer::fc("fc", ch, classes));
+    edges.push((gap, fc));
+
+    Network::from_graph(variant.name(), layers, edges)
+        .expect("ResNet construction must validate")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet18_topology() {
+        let net = build(ResNetVariant::R18);
+        // 17 trunk convs + 3 projection shortcuts.
+        assert_eq!(net.n_conv(), 20);
+        assert_eq!(net.n_fc(), 1);
+        assert_eq!(net.n_merge(), 8);
+        assert_eq!(net.len(), 30);
+        assert!(!net.is_linear());
+        // Every block contributes 4 edges except the 3 downsample blocks (5),
+        // plus stem->first block handled inside, plus gap and fc edges.
+        assert_eq!(net.n_edges(), 8 * 4 + 3 + 2);
+    }
+
+    #[test]
+    fn resnet34_topology() {
+        let net = build(ResNetVariant::R34);
+        assert_eq!(net.n_conv(), 33 + 3);
+        assert_eq!(net.n_merge(), 16);
+        assert_eq!(net.n_fc(), 1);
+    }
+
+    #[test]
+    fn downsample_chain() {
+        // 224 -> (stem) 56 -> 28 -> 14 -> 7.
+        let net = build(ResNetVariant::R18);
+        let adds: Vec<usize> = net
+            .layers()
+            .iter()
+            .filter(|l| l.is_merge())
+            .map(|l| l.in_h)
+            .collect();
+        assert_eq!(adds, vec![56, 56, 28, 28, 14, 14, 7, 7]);
+    }
+
+    #[test]
+    fn fc_reads_channels_after_gap() {
+        let net = build(ResNetVariant::R18);
+        let fc = net.layers().last().unwrap();
+        assert_eq!(fc.in_ch, 512);
+        assert_eq!(fc.out_ch(), 1000);
+    }
+
+    #[test]
+    fn resnet18_macs_and_params_near_published() {
+        // ~1.82 GMACs and ~11.7 M parameters (conv+fc, no BN/bias).
+        let net = build(ResNetVariant::R18);
+        let g = net.macs() as f64 / 1e9;
+        assert!((1.6..2.1).contains(&g), "R18 GMACs = {g}");
+        let m = net.weights() as f64 / 1e6;
+        assert!((11.0..12.0).contains(&m), "R18 params = {m} M");
+    }
+
+    #[test]
+    fn resnet34_macs_near_published() {
+        // ~3.67 GMACs, ~21.8 M params.
+        let net = build(ResNetVariant::R34);
+        let g = net.macs() as f64 / 1e9;
+        assert!((3.3..4.0).contains(&g), "R34 GMACs = {g}");
+        let m = net.weights() as f64 / 1e6;
+        assert!((21.0..22.5).contains(&m), "R34 params = {m} M");
+    }
+
+    #[test]
+    fn parse_variants() {
+        assert_eq!(
+            "resnet18".parse::<ResNetVariant>().unwrap(),
+            ResNetVariant::R18
+        );
+        assert_eq!("34".parse::<ResNetVariant>().unwrap(), ResNetVariant::R34);
+        assert!("resnet50".parse::<ResNetVariant>().is_err());
+    }
+
+    #[test]
+    fn merge_inputs_are_slowest_predecessor_shaped() {
+        // Every Add has exactly two preds and they agree on shape.
+        let net = build(ResNetVariant::R34);
+        for (i, l) in net.layers().iter().enumerate() {
+            if l.is_merge() {
+                let p = net.preds(i);
+                assert_eq!(p.len(), 2, "{}", l.name);
+                let a = &net.layers()[p[0]];
+                let b = &net.layers()[p[1]];
+                assert_eq!(a.out_hw(), b.out_hw(), "{}", l.name);
+                assert_eq!(a.out_ch(), b.out_ch(), "{}", l.name);
+            }
+        }
+    }
+}

@@ -10,14 +10,20 @@ use super::network::Network;
 /// VGG variant identifiers.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum VggVariant {
+    /// VGG-A (VGG-11): 8 conv + 3 FC layers.
     A,
+    /// VGG-B (VGG-13): 10 conv layers.
     B,
+    /// VGG-C: 13 convs, three of them 1x1.
     C,
+    /// VGG-D (VGG-16): 13 3x3 convs.
     D,
+    /// VGG-E (VGG-19): 16 convs, the paper's headline workload.
     E,
 }
 
 impl VggVariant {
+    /// Every variant, in configuration order.
     pub const ALL: [VggVariant; 5] = [
         VggVariant::A,
         VggVariant::B,
@@ -26,6 +32,7 @@ impl VggVariant {
         VggVariant::E,
     ];
 
+    /// Workload name (`vggA` .. `vggE`).
     pub fn name(&self) -> &'static str {
         match self {
             VggVariant::A => "vggA",

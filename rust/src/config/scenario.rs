@@ -15,6 +15,7 @@ pub enum Scenario {
 }
 
 impl Scenario {
+    /// The paper's four scenarios, in Fig. 5 order.
     pub const ALL: [Scenario; 4] = [
         Scenario::Baseline,
         Scenario::BatchOnly,
@@ -22,10 +23,12 @@ impl Scenario {
         Scenario::ReplicationBatch,
     ];
 
+    /// Does this scenario replicate weights (Fig. 7 plans)?
     pub fn replication(&self) -> bool {
         matches!(self, Scenario::ReplicationOnly | Scenario::ReplicationBatch)
     }
 
+    /// Does this scenario enable batch pipelining?
     pub fn batch(&self) -> bool {
         matches!(self, Scenario::BatchOnly | Scenario::ReplicationBatch)
     }
@@ -40,6 +43,7 @@ impl Scenario {
         }
     }
 
+    /// Long name for reports.
     pub fn name(&self) -> &'static str {
         match self {
             Scenario::Baseline => "no-repl/no-batch",
@@ -62,8 +66,10 @@ pub enum NocKind {
 }
 
 impl NocKind {
+    /// Every interconnect model, in Fig. 8 row order.
     pub const ALL: [NocKind; 3] = [NocKind::Wormhole, NocKind::Smart, NocKind::Ideal];
 
+    /// Interconnect name (`wormhole` / `smart` / `ideal`).
     pub fn name(&self) -> &'static str {
         match self {
             NocKind::Wormhole => "wormhole",

@@ -12,11 +12,14 @@ use super::request::Request;
 /// images to append (padding outputs are discarded).
 #[derive(Debug)]
 pub struct FormedBatch {
+    /// The real requests in the batch.
     pub requests: Vec<Request>,
+    /// Padding images appended to reach an executable size.
     pub padding: usize,
 }
 
 impl FormedBatch {
+    /// Executable batch size (requests + padding).
     pub fn size(&self) -> usize {
         self.requests.len() + self.padding
     }

@@ -10,33 +10,40 @@
 /// layer).
 #[derive(Debug, Clone)]
 pub struct PipelineShape {
+    /// Per-layer start offset in beats after injection (critical path).
     pub offsets: Vec<u64>,
+    /// Per-layer beats an image holds the layer.
     pub occupancy: Vec<u64>,
 }
 
 impl PipelineShape {
-    /// Derive from stage plans: offset_i = offset_{i-1} + head-wait /
-    /// rate_{i-1} + depth_{i-1}; occupancy_i = p_total / rate.
+    /// Derive from stage plans over the layer DAG: a stage starts once the
+    /// *latest* of its predecessors has covered its head-wait, so
+    /// `offset_i = max over preds p of (offset_p + head-wait / rate_p +
+    /// depth_p)` — the critical (longest) path through the graph. The
+    /// pipeline fill time is `offsets[last] + occupancy[last]`. On a linear
+    /// chain this reduces exactly to the seed's cumulative-sum recurrence.
     pub fn from_plans(plans: &[crate::pipeline::StagePlan]) -> Self {
-        let mut offsets = Vec::with_capacity(plans.len());
+        let mut offsets = vec![0u64; plans.len()];
         let mut occupancy = Vec::with_capacity(plans.len());
-        let mut off = 0u64;
         for (i, p) in plans.iter().enumerate() {
-            if i > 0 {
-                let prev = &plans[i - 1];
-                let head = if p.demand.needs_all {
+            let mut off = 0u64;
+            for (k, &pi) in p.preds.iter().enumerate() {
+                let prev = &plans[pi];
+                let head = if p.demands[k].needs_all {
                     prev.p_total
                 } else {
-                    p.demand.head.min(prev.p_total)
+                    p.demands[k].head.min(prev.p_total)
                 };
-                off += head.div_ceil(prev.rate) + prev.depth;
+                off = off.max(offsets[pi] + head.div_ceil(prev.rate) + prev.depth);
             }
-            offsets.push(off);
+            offsets[i] = off;
             occupancy.push(p.p_total.div_ceil(p.rate));
         }
         Self { offsets, occupancy }
     }
 
+    /// Number of layers in the shape.
     pub fn n_layers(&self) -> usize {
         self.offsets.len()
     }
@@ -66,6 +73,7 @@ pub struct Dispatcher {
 }
 
 impl Dispatcher {
+    /// A dispatcher enforcing `shape.min_interval()` between injections.
     pub fn new(shape: PipelineShape) -> Self {
         let interval = shape.min_interval();
         Self {
@@ -76,6 +84,7 @@ impl Dispatcher {
         }
     }
 
+    /// The static pipeline shape being dispatched against.
     pub fn shape(&self) -> &PipelineShape {
         &self.shape
     }
@@ -88,6 +97,7 @@ impl Dispatcher {
         t
     }
 
+    /// Injection beats of every admitted image, in admission order.
     pub fn injections(&self) -> &[u64] {
         &self.injections
     }

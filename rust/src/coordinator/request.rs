@@ -5,16 +5,22 @@ use std::time::{Duration, Instant};
 /// An inference request: one image, flattened `32 x 32 x 3` in [0, 1].
 #[derive(Debug, Clone)]
 pub struct Request {
+    /// Request id (assigned by the server, unique per run).
     pub id: u64,
+    /// Flattened input image.
     pub image: Vec<f32>,
+    /// Submission timestamp (latency accounting).
     pub submitted: Instant,
 }
 
 /// The served result.
 #[derive(Debug, Clone)]
 pub struct Response {
+    /// Id of the request this response answers.
     pub id: u64,
+    /// Raw classifier outputs.
     pub logits: Vec<f32>,
+    /// Argmax class index.
     pub class: usize,
     /// Queueing + batching + execution time.
     pub latency: Duration,
@@ -25,7 +31,9 @@ pub struct Response {
 /// Online serving statistics.
 #[derive(Debug, Default, Clone)]
 pub struct ServeStats {
+    /// Requests served.
     pub served: u64,
+    /// Batches executed.
     pub batches: u64,
     /// Batch-size histogram indexed by size (0 unused).
     pub batch_hist: [u64; 5],
@@ -35,6 +43,7 @@ pub struct ServeStats {
 }
 
 impl ServeStats {
+    /// Record one served response.
     pub fn record(&mut self, resp: &Response, now: Instant) {
         if self.started.is_none() {
             self.started = Some(resp.submitted_proxy(now));
@@ -44,6 +53,7 @@ impl ServeStats {
         self.latencies_us.push(resp.latency.as_micros() as u64);
     }
 
+    /// Record one executed batch of the given size.
     pub fn record_batch(&mut self, size: usize) {
         self.batches += 1;
         if size < self.batch_hist.len() {
@@ -59,6 +69,7 @@ impl ServeStats {
         }
     }
 
+    /// Latency percentile (`p` in [0, 100]) in milliseconds.
     pub fn latency_percentile_ms(&self, p: f64) -> f64 {
         if self.latencies_us.is_empty() {
             return 0.0;
@@ -69,6 +80,7 @@ impl ServeStats {
         v[rank.min(v.len() - 1)] as f64 / 1000.0
     }
 
+    /// Mean serving latency in milliseconds.
     pub fn mean_latency_ms(&self) -> f64 {
         if self.latencies_us.is_empty() {
             return 0.0;

@@ -22,6 +22,7 @@ use super::dispatch::PipelineShape;
 /// The coordinator's startup decision.
 #[derive(Debug, Clone)]
 pub struct StartupPlan {
+    /// Workload the node was planned for.
     pub variant: VggVariant,
     /// Batch depth the plan was optimized for (largest executable size).
     pub batch_depth: u64,

@@ -7,16 +7,23 @@
 //! SMART-flow-control NoC, implemented as a three-layer Rust + JAX + Pallas
 //! stack (see DESIGN.md).
 //!
-//! - **Layer 3 (this crate)** — cycle-accurate processing-side simulator,
-//!   event-driven flit-level NoC simulator behind the [`noc::NocBackend`]
-//!   trait (wormhole / SMART / ideal), a unified parallel scenario-sweep
-//!   engine ([`sweep`]), power/energy model, and a serving coordinator
-//!   that executes real quantized CNN inference through AOT-compiled XLA
-//!   artifacts (PJRT, feature-gated).
+//! - **Layer 3 (this crate)** — cycle-accurate processing-side simulator
+//!   over validated layer DAGs ([`cnn::Network`]: linear VGGs and branching
+//!   ResNets alike), event-driven flit-level NoC simulator behind the
+//!   [`noc::NocBackend`] trait (wormhole / SMART / ideal), a searched
+//!   replication/batch planner ([`planner`]), a unified parallel
+//!   scenario-sweep engine ([`sweep`]), power/energy model, and a serving
+//!   coordinator that executes real quantized CNN inference through
+//!   AOT-compiled XLA artifacts (PJRT, feature-gated).
 //! - **Layer 2 (python/compile/model.py)** — the quantized CNN forward
 //!   graph in JAX, lowered once to HLO text at build time.
 //! - **Layer 1 (python/compile/kernels/crossbar.py)** — the bit-serial
 //!   2-bit-MLC crossbar GEMM as a Pallas kernel.
+//!
+//! See the repository `README.md` for the CLI quickstart and the
+//! figure-to-command table, and `DESIGN.md` for the decision record.
+
+#![warn(missing_docs)]
 
 pub mod cnn;
 pub mod config;

@@ -12,8 +12,8 @@
 //! smart-pim fig8                      # VGG-E throughput grid
 //! smart-pim fig9                      # energy efficiency
 //! smart-pim fig10 | fig11             # synthetic-traffic sweeps
-//! smart-pim plan --variant E --tiles 320 [--depth 8] [--compare] [--frontier]
-//! smart-pim simulate --vgg E --scenario 4 --noc smart [--gantt]
+//! smart-pim plan --network resnet18 [--tiles 320] [--depth 8] [--compare] [--frontier]
+//! smart-pim simulate --network vgg19|resnet18 --scenario 4 --noc smart [--gantt]
 //! smart-pim noc --pattern tornado --rate 0.1 [--noc smart]
 //! smart-pim serve --requests 64 [--artifacts artifacts]
 //! smart-pim dump-config               # active ArchConfig in file format
@@ -326,14 +326,22 @@ fn fig10_11(args: &Args, latency: bool) -> Result<(), String> {
     Ok(())
 }
 
-/// `smart-pim plan`: search a replication plan for any variant x tile
-/// budget x batch depth, confirm it through the cycle-accurate engine, and
-/// report it against the paper's hand-tuned Fig. 7 plan.
+/// `smart-pim plan`: search a replication plan for any workload (VGG A-E
+/// or ResNet-18/34) x tile budget x batch depth, confirm it through the
+/// cycle-accurate engine, and report it against the paper's hand-tuned
+/// Fig. 7 plan (VGGs; branching workloads compare against no replication).
 fn plan_cmd(args: &Args) -> Result<(), String> {
     args.check_known(&[
-        "variant", "tiles", "depth", "beam", "max-factor", "images", "config", "threads",
+        "variant", "network", "tiles", "depth", "beam", "max-factor", "images", "config",
+        "threads",
     ])?;
-    let v: VggVariant = args.get_or("variant", "E").parse()?;
+    // `--network` takes any workload name; `--variant` stays as the
+    // VGG-only spelling from earlier revisions.
+    let name: &str = match args.get("network") {
+        Some(n) => n,
+        None => args.get_or("variant", "E"),
+    };
+    let net = smart_pim::cnn::workload(name)?;
     let a = arch();
     let tiles: usize = args.get_parse_or("tiles", a.total_tiles())?;
     let depth: u64 = args.get_parse_or("depth", 8u64)?;
@@ -345,7 +353,6 @@ fn plan_cmd(args: &Args) -> Result<(), String> {
         None => SweepRunner::new(),
     };
 
-    let net = vgg::build(v);
     let planner = Planner::new(
         &net,
         &a,
@@ -364,7 +371,7 @@ fn plan_cmd(args: &Args) -> Result<(), String> {
         format!(
             "searched plan — {} @ {} tiles, batch depth {depth} \
              ({} states explored)",
-            v.name(),
+            net.name,
             result.tile_budget,
             result.explored
         ),
@@ -379,18 +386,22 @@ fn plan_cmd(args: &Args) -> Result<(), String> {
     }
     t.print();
 
-    let mut s = Table::new("plan summary", &["metric", "searched", "fig7 hand plan"]);
     let cm = smart_pim::planner::CostModel::new(&net, &a);
-    let fig7 = cm.assess(&ReplicationPlan::fig7(v))?;
+    // Reference plan: Fig. 7 for the VGGs, no-replication otherwise.
+    let (ref_label, reference) = match net.name.parse::<VggVariant>() {
+        Ok(v) => ("fig7 hand plan", cm.assess(&ReplicationPlan::fig7(v))?),
+        Err(_) => ("no replication", cm.assess(&ReplicationPlan::none(&net))?),
+    };
+    let mut s = Table::new("plan summary", &["metric", "searched", ref_label]);
     s.row(&[
         "tiles used".into(),
         best.assessment.tiles.to_string(),
-        fig7.tiles.to_string(),
+        reference.tiles.to_string(),
     ]);
     s.row(&[
         "modeled interval (cycles)".into(),
         best.assessment.interval.to_string(),
-        fig7.interval.to_string(),
+        reference.interval.to_string(),
     ]);
     s.row(&[
         "engine interval (cycles)".into(),
@@ -402,22 +413,22 @@ fn plan_cmd(args: &Args) -> Result<(), String> {
     s.row(&[
         "pipeline fill (cycles)".into(),
         best.assessment.fill_cycles.to_string(),
-        fig7.fill_cycles.to_string(),
+        reference.fill_cycles.to_string(),
     ]);
     s.row(&[
         "padding waste".into(),
         format!("{:.1} %", 100.0 * best.assessment.padding_waste),
-        format!("{:.1} %", 100.0 * fig7.padding_waste),
+        format!("{:.1} %", 100.0 * reference.padding_waste),
     ]);
     s.row(&[
         format!("modeled cycles/image @ B={depth}"),
         fnum(best.assessment.batch_cost(depth), 1),
-        fnum(fig7.batch_cost(depth), 1),
+        fnum(reference.batch_cost(depth), 1),
     ]);
     s.print();
     println!(
-        "speedup vs Fig. 7 (modeled steady-state): {}x",
-        fnum(fig7.interval as f64 / best.assessment.interval as f64, 2)
+        "speedup vs {ref_label} (modeled steady-state): {}x",
+        fnum(reference.interval as f64 / best.assessment.interval as f64, 2)
     );
 
     if args.flag("frontier") {
@@ -451,17 +462,29 @@ fn plan_cmd(args: &Args) -> Result<(), String> {
 
     if args.flag("compare") {
         println!();
-        planner_table(&a, &VggVariant::ALL, tiles, depth, &runner)?.print();
+        planner_table(&a, &smart_pim::metrics::all_workloads(), tiles, depth, &runner)?
+            .print();
     }
     Ok(())
 }
 
 fn simulate(args: &Args) -> Result<(), String> {
-    args.check_known(&["vgg", "scenario", "noc", "config"])?;
-    let v: VggVariant = args.get_or("vgg", "E").parse()?;
+    args.check_known(&["vgg", "network", "scenario", "noc", "config"])?;
     let s: Scenario = args.get_or("scenario", "4").parse()?;
     let n: NocKind = args.get_or("noc", "smart").parse()?;
     let a = arch();
+    // `--network` runs any workload through the generic path (branching
+    // workloads use the searched plan when the scenario replicates, since
+    // they have no Fig. 7 hand plan).
+    if let Some(name) = args.get("network") {
+        if name.parse::<VggVariant>().is_err() {
+            return simulate_network(name, s, n, &a, args.flag("gantt"));
+        }
+    }
+    let v: VggVariant = match args.get("network") {
+        Some(name) => name.parse()?,
+        None => args.get_or("vgg", "E").parse()?,
+    };
     let r = evaluate(v, s, n, &a);
     let mut t = Table::new(
         format!(
@@ -514,6 +537,60 @@ fn simulate(args: &Args) -> Result<(), String> {
         let plans = build_plans(&net, &m, &a);
         println!("{}", smart_pim::sim::gantt(&plans, &r.sim, 100));
     }
+    t.print();
+    Ok(())
+}
+
+/// Generic-workload `simulate` path: searched (or none) plan + the
+/// cycle-accurate engine through [`smart_pim::sim::evaluate_network`].
+fn simulate_network(
+    name: &str,
+    s: Scenario,
+    n: NocKind,
+    a: &ArchConfig,
+    gantt: bool,
+) -> Result<(), String> {
+    let net = smart_pim::cnn::workload(name)?;
+    let plan = if s.replication() {
+        ReplicationPlan::searched(&net, a, 0)?
+    } else {
+        ReplicationPlan::none(&net)
+    };
+    let images = smart_pim::sim::integrate::default_images(s);
+    let r = smart_pim::sim::evaluate_network(&net, &plan, s.batch(), n, a, images)?;
+    if gantt {
+        // Re-derive the stage plans for the trace view (same as the VGG
+        // path does).
+        use smart_pim::mapping::NetworkMapping;
+        use smart_pim::pipeline::build_plans;
+        let m = NetworkMapping::build(&net, a, &plan)?;
+        let plans = build_plans(&net, &m, a);
+        println!("{}", smart_pim::sim::gantt(&plans, &r.sim, 100));
+    }
+    let mut t = Table::new(
+        format!(
+            "simulate {} scenario {} noc {} ({} layers, {} edges, {} merges)",
+            net.name,
+            s.label(),
+            n.name(),
+            net.len(),
+            net.n_edges(),
+            net.n_merge()
+        ),
+        &["metric", "value"],
+    );
+    t.row(&[
+        "interval (logical cycles)".into(),
+        fnum(r.interval_cycles, 1),
+    ]);
+    t.row(&[
+        "latency (logical cycles)".into(),
+        fnum(r.latency_cycles, 1),
+    ]);
+    t.row(&["throughput (FPS)".into(), fnum(r.fps, 1)]);
+    t.row(&["throughput (TOPS)".into(), fnum(r.tops, 4)]);
+    t.row(&["energy/image (mJ)".into(), fnum(r.energy.total_mj(), 3)]);
+    t.row(&["efficiency (TOPS/W)".into(), fnum(r.tops_per_watt, 4)]);
     t.print();
     Ok(())
 }
@@ -660,7 +737,14 @@ fn report_all(args: &Args) -> Result<(), String> {
     fig7()?;
     println!();
     let a = arch();
-    planner_table(&a, &VggVariant::ALL, a.total_tiles(), 8, &SweepRunner::new())?.print();
+    planner_table(
+        &a,
+        &smart_pim::metrics::all_workloads(),
+        a.total_tiles(),
+        8,
+        &SweepRunner::new(),
+    )?
+    .print();
     println!();
     fig5(args)?;
     println!();

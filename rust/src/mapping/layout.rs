@@ -13,9 +13,11 @@ use super::subarray::SubarrayDemand;
 pub struct LayerMapping {
     /// Index into `Network::layers()`.
     pub layer_idx: usize,
+    /// Layer name (mirrors `Layer::name`).
     pub name: String,
     /// Replication factor `r`.
     pub replication: usize,
+    /// Subarray demand of one replica.
     pub demand: SubarrayDemand,
     /// Tiles owned by this layer (ids into the placement order).
     pub tile_ids: Vec<usize>,
@@ -29,7 +31,9 @@ pub struct LayerMapping {
 /// Whole-network mapping.
 #[derive(Debug, Clone)]
 pub struct NetworkMapping {
+    /// Per-layer mappings, aligned with `Network::layers()`.
     pub layers: Vec<LayerMapping>,
+    /// Tiles consumed by the whole network.
     pub total_tiles: usize,
 }
 
@@ -48,16 +52,10 @@ impl NetworkMapping {
         for (i, layer) in net.layers().iter().enumerate() {
             let r = plan.factor(i);
             let demand = SubarrayDemand::of(layer, arch);
-            let (tiles, reload_rounds) = if layer.is_conv() {
-                (demand.tiles(r, arch), 1)
-            } else {
-                let t = demand
-                    .subarrays_replicated(r)
-                    .div_ceil(arch.fc_reload_rounds as usize)
-                    .div_ceil(arch.subarrays_per_tile())
-                    .max(1);
-                (t, arch.fc_reload_rounds)
-            };
+            // One accounting rule for planner pre-checks and real mapping:
+            // see `replication::layer_tiles` (conv / FC reload rounds /
+            // one-buffer-tile dataflow stages).
+            let (tiles, reload_rounds) = super::replication::layer_tiles(layer, r, arch);
             let tile_ids: Vec<usize> = (next_tile..next_tile + tiles).collect();
             next_tile += tiles;
             layers.push(LayerMapping {
@@ -133,6 +131,53 @@ mod tests {
                 let m = NetworkMapping::build(&net, &arch, &plan)
                     .unwrap_or_else(|e| panic!("{}: {e}", v.name()));
                 assert!(m.total_tiles <= 320, "{}: {}", v.name(), m.total_tiles);
+            }
+        }
+    }
+
+    #[test]
+    fn plan_tiles_agrees_with_built_mapping() {
+        // The planner's budget pre-check and the real mapping share one
+        // accounting rule (replication::layer_tiles); pin the agreement on
+        // a branching workload and a replicated chain.
+        use crate::cnn::{resnet, vgg, ResNetVariant, VggVariant};
+        use crate::mapping::plan_tiles;
+        let arch = ArchConfig::paper_node();
+        for (net, plan) in [
+            {
+                let n = resnet::build(ResNetVariant::R18);
+                let p = ReplicationPlan::none(&n);
+                (n, p)
+            },
+            (
+                vgg::build(VggVariant::E),
+                ReplicationPlan::fig7(VggVariant::E),
+            ),
+        ] {
+            let m = NetworkMapping::build(&net, &arch, &plan).unwrap();
+            assert_eq!(
+                m.total_tiles,
+                plan_tiles(&net, &arch, &plan.factors),
+                "{}",
+                net.name
+            );
+        }
+    }
+
+    #[test]
+    fn resnet18_maps_with_single_tile_dataflow_stages() {
+        use crate::cnn::{resnet, ResNetVariant};
+        let arch = ArchConfig::paper_node();
+        let net = resnet::build(ResNetVariant::R18);
+        let plan = ReplicationPlan::none(&net);
+        let m = NetworkMapping::build(&net, &arch, &plan).unwrap();
+        assert!(m.total_tiles <= 320, "tiles = {}", m.total_tiles);
+        for lm in &m.layers {
+            let l = &net.layers()[lm.layer_idx];
+            if !l.is_crossbar() {
+                assert_eq!(lm.tile_ids.len(), 1, "{}", lm.name);
+                assert_eq!(lm.reload_rounds, 1, "{}", lm.name);
+                assert_eq!(lm.demand.subarrays(), 0, "{}", lm.name);
             }
         }
     }

@@ -8,5 +8,5 @@ pub mod subarray;
 
 pub use layout::{LayerMapping, NetworkMapping};
 pub use placement::{Coord, Placement};
-pub use replication::{plan_tiles, validate_plan, ReplicationPlan};
+pub use replication::{layer_tiles, plan_tiles, validate_plan, ReplicationPlan};
 pub use subarray::SubarrayDemand;

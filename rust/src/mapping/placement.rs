@@ -11,7 +11,9 @@ use crate::config::ArchConfig;
 /// (x, y) mesh coordinate of a tile/router.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Coord {
+    /// Mesh column.
     pub x: usize,
+    /// Mesh row.
     pub y: usize,
 }
 
@@ -26,7 +28,9 @@ impl Coord {
 #[derive(Debug, Clone)]
 pub struct Placement {
     coords: Vec<Coord>,
+    /// Mesh width in tiles.
     pub width: usize,
+    /// Mesh height in tiles.
     pub height: usize,
 }
 
@@ -66,14 +70,17 @@ impl Placement {
         }
     }
 
+    /// Mesh coordinate of a linear tile id.
     pub fn coord(&self, tile_id: usize) -> Coord {
         self.coords[tile_id]
     }
 
+    /// Number of placed tiles.
     pub fn len(&self) -> usize {
         self.coords.len()
     }
 
+    /// True when the placement covers no tiles.
     pub fn is_empty(&self) -> bool {
         self.coords.is_empty()
     }

@@ -16,6 +16,7 @@ use super::subarray::SubarrayDemand;
 /// `Network::layers()`.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ReplicationPlan {
+    /// Per-layer replication factors, aligned with `Network::layers()`.
     pub factors: Vec<usize>,
 }
 
@@ -120,12 +121,45 @@ impl ReplicationPlan {
         self.factors[i]
     }
 
+    /// Number of per-layer factors.
     pub fn len(&self) -> usize {
         self.factors.len()
     }
 
+    /// True when the plan covers no layers.
     pub fn is_empty(&self) -> bool {
         self.factors.is_empty()
+    }
+}
+
+/// The per-layer tile-accounting rule, in one place for both the
+/// planner's budget pre-check ([`plan_tiles`]) and the real mapping
+/// ([`super::layout::NetworkMapping::build`]): returns `(tiles,
+/// reload_rounds)` for `r` replicas of `layer`.
+///
+/// - conv layers own whole tiles for all replicas;
+/// - FC layers time-multiplex their crossbars over `fc_reload_rounds`
+///   rounds (DESIGN.md §1, substitution for the paper's unexplained FC
+///   capacity) and are charged 1/rounds of their full demand;
+/// - dataflow stages (merge nodes, global pooling) hold no weights and
+///   own one buffer tile whose S&A/OR path executes them.
+pub fn layer_tiles(
+    layer: &crate::cnn::Layer,
+    r: usize,
+    arch: &ArchConfig,
+) -> (usize, u64) {
+    let d = SubarrayDemand::of(layer, arch);
+    if layer.is_conv() {
+        (d.tiles(r, arch), 1)
+    } else if layer.is_fc() {
+        let t = d
+            .subarrays_replicated(r)
+            .div_ceil(arch.fc_reload_rounds as usize)
+            .div_ceil(arch.subarrays_per_tile())
+            .max(1);
+        (t, arch.fc_reload_rounds)
+    } else {
+        (1, 1)
     }
 }
 
@@ -135,21 +169,7 @@ pub fn plan_tiles(net: &Network, arch: &ArchConfig, factors: &[usize]) -> usize 
     net.layers()
         .iter()
         .zip(factors)
-        .map(|(l, &r)| {
-            let d = SubarrayDemand::of(l, arch);
-            if l.is_conv() {
-                d.tiles(r, arch)
-            } else {
-                // FC layers time-multiplex their crossbars over
-                // `fc_reload_rounds` rounds (DESIGN.md §1, substitution for
-                // the paper's unexplained fc capacity); they are charged
-                // 1/rounds of their full demand.
-                d.subarrays_replicated(r)
-                    .div_ceil(arch.fc_reload_rounds as usize)
-                    .div_ceil(arch.subarrays_per_tile())
-                    .max(1)
-            }
-        })
+        .map(|(l, &r)| layer_tiles(l, r, arch).0)
         .sum()
 }
 

@@ -1,7 +1,7 @@
 //! Metrics & reporting: speedup grids, geomeans, paper-style tables for
 //! Figs. 5, 6, 8, 9, and the searched-vs-Fig.7 planner comparison.
 
-use crate::cnn::{vgg, VggVariant};
+use crate::cnn::VggVariant;
 use crate::config::{ArchConfig, NocKind, Scenario};
 use crate::mapping::ReplicationPlan;
 use crate::planner::{evaluate_candidates, CostModel, PlanCandidate, Planner, PlannerConfig};
@@ -12,6 +12,7 @@ use crate::util::table::{fnum, Table};
 
 /// Full 5 x 4 x 3 benchmark grid (Sec. VI-B's 60 benchmarks).
 pub struct Grid {
+    /// One report per grid point, in run order.
     pub reports: Vec<PerfReport>,
 }
 
@@ -49,6 +50,7 @@ impl Grid {
         Self { reports }
     }
 
+    /// The report of one (VGG, scenario, NoC) point; panics if absent.
     pub fn get(&self, v: VggVariant, s: Scenario, n: NocKind) -> &PerfReport {
         self.reports
             .iter()
@@ -141,33 +143,39 @@ impl Grid {
     }
 }
 
-/// Searched-planner comparison: for each variant, the no-replication
-/// baseline, the paper's hand-tuned Fig. 7 plan, and the searched plan
-/// under the same tile budget — modeled and engine-measured steady-state
-/// intervals side by side. The table behind `smart-pim plan --compare`.
-/// Variants are independent, so the whole comparison (search + engine
-/// replays) fans out across the sweep runner, one point per variant.
+/// Searched-planner comparison: for each workload, the no-replication
+/// baseline, the paper's hand-tuned Fig. 7 plan (VGGs only — branching
+/// workloads have no hand plan and show `-`), and the searched plan under
+/// the same tile budget — modeled and engine-measured steady-state
+/// intervals side by side. The table behind `smart-pim plan --compare` and
+/// `report-all`. Workloads are independent, so the whole comparison
+/// (search + engine replays) fans out across the sweep runner, one point
+/// per workload.
 pub fn planner_table(
     arch: &ArchConfig,
-    variants: &[VggVariant],
+    nets: &[crate::cnn::Network],
     tile_budget: usize,
     batch_depth: u64,
     runner: &SweepRunner,
 ) -> Result<Table, String> {
     struct RowData {
-        v: VggVariant,
+        name: String,
         none_interval: u64,
-        fig7: crate::planner::PlanAssessment,
+        fig7: Option<crate::planner::PlanAssessment>,
         fig7_measured: Option<f64>,
         best: PlanCandidate,
     }
-    let rows: Vec<Result<RowData, String>> = runner.run(variants, |_, &v| {
-        let net = vgg::build(v);
-        let cm = CostModel::new(&net, arch);
-        let none = cm.assess(&ReplicationPlan::none(&net))?;
-        let fig7 = cm.assess(&ReplicationPlan::fig7(v))?;
+    let rows: Vec<Result<RowData, String>> = runner.run(nets, |_, net| {
+        let cm = CostModel::new(net, arch);
+        let none = cm.assess(&ReplicationPlan::none(net))?;
+        // Only the VGGs carry a hand-tuned Fig. 7 plan to compare against.
+        let fig7_plan = net.name.parse::<VggVariant>().ok().map(ReplicationPlan::fig7);
+        let fig7 = match &fig7_plan {
+            Some(p) => Some(cm.assess(p)?),
+            None => None,
+        };
         let searched = Planner::new(
-            &net,
+            net,
             arch,
             PlannerConfig {
                 tile_budget,
@@ -176,27 +184,28 @@ pub fn planner_table(
             },
         )
         .search()?;
-        // Engine confirmation for both contenders (serial here: the
-        // variants themselves are already fanned out by the runner).
-        let mut pair: Vec<PlanCandidate> = vec![
-            PlanCandidate {
-                plan: ReplicationPlan::fig7(v),
-                assessment: fig7.clone(),
+        // Engine confirmation for every contender (serial here: the
+        // workloads themselves are already fanned out by the runner).
+        let mut cands: Vec<PlanCandidate> = Vec::new();
+        if let (Some(p), Some(a)) = (fig7_plan, fig7.clone()) {
+            cands.push(PlanCandidate {
+                plan: p,
+                assessment: a,
                 measured_interval: None,
-            },
-            searched.best,
-        ];
+            });
+        }
+        cands.push(searched.best);
         evaluate_candidates(
-            &net,
+            net,
             arch,
             &SweepRunner::with_threads(1),
-            &mut pair,
+            &mut cands,
             batch_depth.max(8),
         );
-        let best = pair.pop().expect("two in, two out");
-        let fig7_measured = pair[0].measured_interval;
+        let best = cands.pop().expect("searched candidate in, candidate out");
+        let fig7_measured = cands.first().and_then(|c| c.measured_interval);
         Ok(RowData {
-            v,
+            name: net.name.clone(),
             none_interval: none.interval,
             fig7,
             fig7_measured,
@@ -210,35 +219,51 @@ pub fn planner_table(
              cycles (budget {tile_budget} tiles, batch depth {batch_depth})"
         ),
         &[
-            "vgg",
+            "network",
             "none",
             "fig7 model (tiles)",
             "fig7 engine",
             "searched model (tiles)",
             "searched engine",
-            "speedup vs fig7",
+            "speedup vs fig7|none",
         ],
     );
     let fmt_measured = |m: Option<f64>| m.map(|x| fnum(x, 0)).unwrap_or_else(|| "-".into());
     for row in rows {
         let r = row?;
+        // Branching workloads have no hand plan: their speedup column is
+        // searched vs no replication.
+        let baseline = r
+            .fig7
+            .as_ref()
+            .map(|f| f.interval)
+            .unwrap_or(r.none_interval);
         t.row(&[
-            r.v.name().into(),
+            r.name,
             format!("{}", r.none_interval),
-            format!("{} ({})", r.fig7.interval, r.fig7.tiles),
+            r.fig7
+                .as_ref()
+                .map(|f| format!("{} ({})", f.interval, f.tiles))
+                .unwrap_or_else(|| "-".into()),
             fmt_measured(r.fig7_measured),
             format!(
                 "{} ({})",
                 r.best.assessment.interval, r.best.assessment.tiles
             ),
             fmt_measured(r.best.measured_interval),
-            fnum(
-                r.fig7.interval as f64 / r.best.assessment.interval as f64,
-                2,
-            ),
+            fnum(baseline as f64 / r.best.assessment.interval as f64, 2),
         ]);
     }
     Ok(t)
+}
+
+/// Build the workload list for the comparison tables: all five VGGs plus
+/// the ResNets.
+pub fn all_workloads() -> Vec<crate::cnn::Network> {
+    crate::cnn::workload_names()
+        .into_iter()
+        .map(|n| crate::cnn::workload(n).expect("shipped workload builds"))
+        .collect()
 }
 
 /// Paper-reported reference values, used by tests and EXPERIMENTS.md to
@@ -250,6 +275,7 @@ pub mod paper {
     pub const FIG6_IDEAL_GEOMEAN: f64 = 1.0809;
     /// Fig. 8 VGG-E best case: SMART scenario (4).
     pub const FIG8_BEST_TOPS: f64 = 40.4027;
+    /// Fig. 8 VGG-E best-case FPS.
     pub const FIG8_BEST_FPS: f64 = 1029.0;
     /// Fig. 8 wormhole scenario (4).
     pub const FIG8_WORMHOLE_TOPS: f64 = 36.7904;
@@ -260,6 +286,7 @@ pub mod paper {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cnn::vgg;
 
     #[test]
     fn small_grid_tables_render() {
@@ -303,7 +330,7 @@ mod tests {
         let arch = ArchConfig::paper_node();
         let t = planner_table(
             &arch,
-            &[VggVariant::A],
+            &[vgg::build(VggVariant::A)],
             320,
             8,
             &SweepRunner::with_threads(2),
@@ -313,6 +340,32 @@ mod tests {
         let out = t.render();
         assert!(out.contains("vggA"), "{out}");
         assert!(out.contains("searched"), "{out}");
+    }
+
+    #[test]
+    fn planner_table_handles_branching_workloads() {
+        // A ResNet row has no Fig. 7 hand plan: the fig7 columns render "-"
+        // and the speedup falls back to searched-vs-none.
+        let arch = ArchConfig::paper_node();
+        let t = planner_table(
+            &arch,
+            &[crate::cnn::workload("resnet18").unwrap()],
+            320,
+            8,
+            &SweepRunner::with_threads(2),
+        )
+        .unwrap();
+        let out = t.render();
+        assert!(out.contains("resnet18"), "{out}");
+        assert!(out.contains('-'), "{out}");
+    }
+
+    #[test]
+    fn all_workloads_has_vggs_and_resnets() {
+        let w = all_workloads();
+        assert_eq!(w.len(), 7);
+        assert_eq!(w[0].name, "vggA");
+        assert_eq!(w[6].name, "resnet34");
     }
 
     #[test]

@@ -22,6 +22,22 @@ use super::topology::Mesh;
 /// provably-idle cycle spans, and [`next_event`] exposes the wakeup
 /// calendar so callers can schedule around the network.
 ///
+/// # Example
+///
+/// Drive any backend through the trait — enqueue, drain, read stats:
+///
+/// ```
+/// use smart_pim::config::NocKind;
+/// use smart_pim::noc::{build_backend, Mesh, NocBackend};
+///
+/// let mut net = build_backend(NocKind::Smart, Mesh::new(4, 4), 8, 1, 4);
+/// let id = net.enqueue(0, 15, 4); // 4-flit packet, corner to corner
+/// net.drain(10_000);
+/// assert!(net.quiescent());
+/// assert_eq!(net.table().get(id).dst, 15);
+/// assert_eq!(net.flits_ejected(), 4);
+/// ```
+///
 /// [`drain`]: NocBackend::drain
 /// [`next_event`]: NocBackend::next_event
 pub trait NocBackend {

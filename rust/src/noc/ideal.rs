@@ -13,9 +13,13 @@ pub struct IdealNet {
     src_free: Vec<u64>,
     /// Next cycle each destination's ejection port is free.
     dst_free: Vec<u64>,
+    /// All packets ever injected (stats source).
     pub table: PacketTable,
+    /// Current cycle.
     pub now: u64,
+    /// Total flits accepted at sources.
     pub flits_injected: u64,
+    /// Total flits delivered at sinks.
     pub flits_ejected: u64,
     /// (eject_cycle, pkt, flit_idx) min-heap substitute: sorted insertion is
     /// overkill; we keep a simple bucket queue keyed by cycle.
@@ -23,6 +27,7 @@ pub struct IdealNet {
 }
 
 impl IdealNet {
+    /// An ideal fabric over `nodes` endpoints.
     pub fn new(nodes: usize) -> Self {
         Self {
             nodes,
@@ -78,6 +83,7 @@ impl IdealNet {
         }
     }
 
+    /// True when no packet is still in flight.
     pub fn quiescent(&self) -> bool {
         self.pending.is_empty()
     }
@@ -110,6 +116,7 @@ impl IdealNet {
         self.now - start
     }
 
+    /// Endpoint count.
     pub fn n_nodes(&self) -> usize {
         self.nodes
     }

@@ -43,6 +43,7 @@ const PORTS: usize = 5;
 
 /// Cycle-accurate mesh NoC (wormhole / SMART).
 pub struct Network {
+    /// Mesh geometry this router array covers.
     pub mesh: Mesh,
     /// Max hops traversed per cycle: 1 = wormhole, >1 = SMART HPC_max.
     pub hpc_max: usize,
@@ -94,9 +95,13 @@ pub struct Network {
     /// Nodes with a non-empty source queue (event-driven injection scan).
     active_src: Vec<u32>,
     src_active: Vec<bool>,
+    /// All packets ever injected (stats source).
     pub table: PacketTable,
+    /// Current NoC cycle.
     pub now: u64,
+    /// Total flits accepted into source queues.
     pub flits_injected: u64,
+    /// Total flits ejected at their destination.
     pub flits_ejected: u64,
 }
 
@@ -107,6 +112,8 @@ const NO_DESIRE: u8 = u8::MAX;
 const MAX_SEG: usize = 64;
 
 impl Network {
+    /// A mesh network; `hpc_max = 1` is the wormhole baseline,
+    /// `hpc_max > 1` enables SMART multi-hop bypass.
     pub fn new(mesh: Mesh, hpc_max: usize, router_latency: u64, buffer_depth: usize) -> Self {
         assert!(hpc_max >= 1);
         assert!(buffer_depth >= 1);

@@ -11,6 +11,7 @@
 /// currently sits at `stops[seg]` (head flits extend the list as they move).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Flit {
+    /// Owning packet id.
     pub pkt: u32,
     /// 0 = head; `len-1` = tail.
     pub idx: u16,
@@ -22,6 +23,7 @@ pub struct Flit {
 }
 
 impl Flit {
+    /// Is this the packet's head flit (carries routing state)?
     pub fn is_head(&self) -> bool {
         self.idx == 0
     }
@@ -30,8 +32,11 @@ impl Flit {
 /// Book-keeping for one packet.
 #[derive(Debug, Clone)]
 pub struct PacketState {
+    /// Source node id.
     pub src: u32,
+    /// Destination node id.
     pub dst: u32,
+    /// Packet length in flits.
     pub len: u16,
     /// Cycle the traffic generator created the packet (queueing included).
     pub gen_cycle: u64,
@@ -47,6 +52,7 @@ pub struct PacketState {
 }
 
 impl PacketState {
+    /// A packet generated at `gen_cycle`.
     pub fn new(src: u32, dst: u32, len: u16, gen_cycle: u64) -> Self {
         Self {
             src,
@@ -60,6 +66,7 @@ impl PacketState {
         }
     }
 
+    /// Have all flits been ejected at the destination?
     pub fn is_done(&self) -> bool {
         self.done_cycle != u64::MAX
     }
@@ -80,28 +87,34 @@ impl PacketState {
 /// Growable table of packets, indexed by packet id.
 #[derive(Debug, Default)]
 pub struct PacketTable {
+    /// Every packet, indexed by id.
     pub packets: Vec<PacketState>,
 }
 
 impl PacketTable {
+    /// Register a new packet; returns its id.
     pub fn add(&mut self, src: u32, dst: u32, len: u16, now: u64) -> u32 {
         let id = self.packets.len() as u32;
         self.packets.push(PacketState::new(src, dst, len, now));
         id
     }
 
+    /// Packet by id.
     pub fn get(&self, id: u32) -> &PacketState {
         &self.packets[id as usize]
     }
 
+    /// Mutable packet by id.
     pub fn get_mut(&mut self, id: u32) -> &mut PacketState {
         &mut self.packets[id as usize]
     }
 
+    /// Number of packets registered.
     pub fn len(&self) -> usize {
         self.packets.len()
     }
 
+    /// True when no packet was ever registered.
     pub fn is_empty(&self) -> bool {
         self.packets.is_empty()
     }

@@ -113,15 +113,20 @@ impl DriverNet {
 /// Configuration of one synthetic-traffic run (one point of Figs. 10-11).
 #[derive(Debug, Clone)]
 pub struct SyntheticConfig {
+    /// Synthetic traffic pattern.
     pub pattern: Pattern,
     /// Offered load in flits / node / cycle.
     pub injection_rate: f64,
+    /// Flits per packet.
     pub packet_len: u16,
+    /// Warmup cycles excluded from stats.
     pub warmup: u64,
+    /// Measurement-window cycles.
     pub measure: u64,
     /// Post-measurement drain budget (latency is reported only over packets
     /// generated inside the measurement window that completed).
     pub drain: u64,
+    /// Deterministic RNG seed for source processes.
     pub seed: u64,
     /// Wormhole baseline router: (pipeline cycles, buffer depth). The
     /// garnet2.0 default is a multi-stage router; a flit occupies its
@@ -274,7 +279,9 @@ pub struct FlowStats {
     pub offered_window: u64,
     /// Packets completed during the measurement window.
     pub completed_window: u64,
+    /// Packets fully delivered over the whole run.
     pub completed: u64,
+    /// Packets still undelivered when the drain budget expired.
     pub dropped: u64,
 }
 

@@ -5,16 +5,23 @@
 /// injection/ejection port to the tile.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Dir {
+    /// Toward larger x.
     East,
+    /// Toward smaller x.
     West,
+    /// Toward larger y.
     North,
+    /// Toward smaller y.
     South,
+    /// The node's own inject/eject port.
     Local,
 }
 
 impl Dir {
+    /// The four mesh directions (no `Local`).
     pub const SIDES: [Dir; 4] = [Dir::East, Dir::West, Dir::North, Dir::South];
 
+    /// Dense index (East..Local = 0..4) for port arrays.
     pub fn index(self) -> usize {
         match self {
             Dir::East => 0,
@@ -25,6 +32,7 @@ impl Dir {
         }
     }
 
+    /// The reverse direction (east <-> west, north <-> south).
     pub fn opposite(self) -> Dir {
         match self {
             Dir::East => Dir::West,
@@ -39,24 +47,30 @@ impl Dir {
 /// A `w x h` mesh; node id = `y * w + x`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Mesh {
+    /// Width in nodes.
     pub w: usize,
+    /// Height in nodes.
     pub h: usize,
 }
 
 impl Mesh {
+    /// A `w x h` mesh.
     pub fn new(w: usize, h: usize) -> Self {
         assert!(w > 0 && h > 0);
         Self { w, h }
     }
 
+    /// Total node count.
     pub fn nodes(&self) -> usize {
         self.w * self.h
     }
 
+    /// (x, y) of a node id.
     pub fn xy(&self, node: usize) -> (usize, usize) {
         (node % self.w, node / self.w)
     }
 
+    /// Node id at (x, y).
     pub fn id(&self, x: usize, y: usize) -> usize {
         debug_assert!(x < self.w && y < self.h);
         y * self.w + x
@@ -117,6 +131,7 @@ impl Mesh {
         node * 4 + d.index()
     }
 
+    /// Directed link count of the mesh.
     pub fn n_links(&self) -> usize {
         self.nodes() * 4
     }

@@ -8,15 +8,22 @@ use super::topology::Mesh;
 /// Synthetic traffic patterns (garnet2.0's standard set, Sec. VII-A).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Pattern {
+    /// Every destination equally likely.
     UniformRandom,
+    /// (x, y) sends to (y, x).
     Transpose,
+    /// Half-mesh offset along x (adversarial for rings/meshes).
     Tornado,
+    /// Bit-rotate the node id.
     Shuffle,
+    /// Fixed one-hop neighbor (best case).
     Neighbor,
+    /// Send to the bit-complemented node id.
     BitComplement,
 }
 
 impl Pattern {
+    /// Every pattern, in Figs. 10-11 order.
     pub const ALL: [Pattern; 6] = [
         Pattern::UniformRandom,
         Pattern::Transpose,
@@ -26,6 +33,7 @@ impl Pattern {
         Pattern::BitComplement,
     ];
 
+    /// Pattern name as used by `--pattern`.
     pub fn name(&self) -> &'static str {
         match self {
             Pattern::UniformRandom => "uniform_random",
@@ -98,11 +106,14 @@ impl std::str::FromStr for Pattern {
 /// inter-layer OFM traffic of a mapped CNN.
 #[derive(Debug, Clone, Copy)]
 pub struct Flow {
+    /// Source node id.
     pub src: usize,
+    /// Destination node id.
     pub dst: usize,
     /// Offered load in packets per cycle (may exceed 1 only via multiple
     /// flows; a single flow saturates at its source's injection port).
     pub packets_per_cycle: f64,
+    /// Flits per packet of this flow.
     pub packet_len: u16,
 }
 
@@ -111,11 +122,13 @@ pub struct Flow {
 /// exactly reproducible).
 #[derive(Debug, Clone)]
 pub struct FlowPacer {
+    /// The flow being generated.
     pub flow: Flow,
     credit: f64,
 }
 
 impl FlowPacer {
+    /// A Bernoulli source for one flow.
     pub fn new(flow: Flow) -> Self {
         Self { flow, credit: 0.0 }
     }

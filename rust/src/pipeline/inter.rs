@@ -14,7 +14,12 @@
 //!   A(p) = pool_factor x (w*(l-1) + l + p) + pool_head
 //!
 //! producer pixels, where `pool_factor` is 1 (no pool) or 4 (2x2 pool) and
-//! `pool_head` adds the extra leading row. FC layers need the whole IFM
+//! `pool_head` adds the extra leading row. A stride-`s` consumer (ResNet
+//! downsample convs) advances its window `s` rows/cols per output pixel
+//! and therefore consumes `s^2` IFM pixels per output: the slope scales by
+//! `s^2` while the first-window head stays `base`. Merge nodes (`Add` /
+//! `Concat`) consume pixel-for-pixel (a 1x1 window) on every incoming
+//! edge; FC and global-average-pool layers need the whole IFM
 //! (`A(p) = everything`).
 
 use crate::cnn::{Layer, LayerKind};
@@ -24,7 +29,9 @@ use crate::cnn::{Layer, LayerKind};
 /// producer's total output.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct InputDemand {
+    /// Producer pixels needed before the first output pixel.
     pub head: u64,
+    /// Additional producer pixels per further output pixel.
     pub slope: u64,
     /// If true the consumer needs the producer's entire OFM first (FC).
     pub needs_all: bool,
@@ -67,28 +74,57 @@ pub fn values_wait(consumer_ifm_w: usize, consumer_ksize: usize, producer_kernel
     cycles_wait(consumer_ifm_w, consumer_ksize) * producer_kernels as u64
 }
 
-/// Build the input-demand model for `consumer` fed by `producer`.
+/// Build the input-demand model for `consumer` fed by `producer` — one
+/// demand per DAG edge. A merge node carries one `InputDemand` per
+/// predecessor and can only emit a pixel once **every** input has covered
+/// it, so in the engine it waits on the slowest predecessor.
 pub fn demand(producer: &Layer, consumer: &Layer) -> InputDemand {
     match consumer.kind {
-        LayerKind::Fc { .. } => InputDemand {
+        // FC consumes the whole IFM; the global pool likewise reduces over
+        // every pixel before it can emit its single output.
+        LayerKind::Fc { .. } | LayerKind::GlobalAvgPool => InputDemand {
             head: 0,
             slope: 1,
             needs_all: true,
         },
-        LayerKind::Conv { ksize, .. } => {
-            let base = cycles_wait(consumer.in_w, ksize);
+        // Element-wise merges consume pixel-for-pixel: emitting output
+        // pixel p needs input pixel p from this producer (a 1x1 window,
+        // so the head is the same as a 1x1 conv's), quadrupled through a
+        // pooled producer exactly like the conv case.
+        LayerKind::Add | LayerKind::Concat => {
             if producer.has_pool() {
-                // 2x2 pool: 4 producer pixels per consumer IFM pixel plus
-                // one extra leading producer row.
                 InputDemand {
-                    head: 4 * base + producer.conv_out_hw().1 as u64,
+                    head: 4 + producer.conv_out_hw().1 as u64,
                     slope: 4,
                     needs_all: false,
                 }
             } else {
                 InputDemand {
-                    head: base,
+                    head: 1,
                     slope: 1,
+                    needs_all: false,
+                }
+            }
+        }
+        LayerKind::Conv { ksize, stride, .. } => {
+            let base = cycles_wait(consumer.in_w, ksize);
+            // A stride-s conv advances its window s rows/cols per output
+            // pixel, consuming ~s^2 IFM pixels per output (the row-major
+            // linear envelope, exactly like the pool rule's factor 4). The
+            // first window still needs only `base` pixels.
+            let sf = (stride * stride) as u64;
+            if producer.has_pool() {
+                // 2x2 pool: 4 producer pixels per consumer IFM pixel plus
+                // one extra leading producer row.
+                InputDemand {
+                    head: 4 * base + producer.conv_out_hw().1 as u64,
+                    slope: 4 * sf,
+                    needs_all: false,
+                }
+            } else {
+                InputDemand {
+                    head: base,
+                    slope: sf,
                     needs_all: false,
                 }
             }
@@ -134,6 +170,43 @@ mod tests {
         assert_eq!(d.slope, 4);
         // head = 4*(112*2+3) + 224 = 908 + 224
         assert_eq!(d.head, 4 * 227 + 224);
+    }
+
+    #[test]
+    fn strided_conv_demand_scales_slope_not_head() {
+        // ResNet downsample: stride-2 conv consumes ~4 producer pixels per
+        // output; the first window still needs only the base head.
+        let p = Layer::conv("p", (56, 56), 64, 64, 3, false);
+        let c = Layer::conv_s("c", (56, 56), 64, 128, 3, 2, 1, false);
+        let d = demand(&p, &c);
+        assert_eq!(d.head, 56 * 2 + 3);
+        assert_eq!(d.slope, 4);
+        // 1x1/2 projection: head 1, slope 4.
+        let proj = Layer::conv_s("d", (56, 56), 64, 128, 1, 2, 0, false);
+        let dp = demand(&p, &proj);
+        assert_eq!((dp.head, dp.slope), (1, 4));
+    }
+
+    #[test]
+    fn merge_demand_is_pixel_for_pixel() {
+        let p = Layer::conv("p", (56, 56), 64, 64, 3, false);
+        let c = Layer::add("sum", (56, 56), 64);
+        let d = demand(&p, &c);
+        assert_eq!((d.head, d.slope), (1, 1));
+        assert!(!d.needs_all);
+        // Through a pooled producer the 4x rule applies like for convs.
+        let pp = Layer::conv("p", (112, 112), 64, 64, 3, true);
+        let c2 = Layer::add("sum", (56, 56), 64);
+        let d2 = demand(&pp, &c2);
+        assert_eq!((d2.head, d2.slope), (4 + 112, 4));
+    }
+
+    #[test]
+    fn gap_needs_everything() {
+        let p = Layer::conv("p", (7, 7), 512, 512, 3, false);
+        let c = Layer::global_avg_pool("gap", (7, 7), 512);
+        let d = demand(&p, &c);
+        assert!(d.needs_all);
     }
 
     #[test]

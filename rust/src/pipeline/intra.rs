@@ -22,6 +22,11 @@ pub const MULTI_TILE_EXTRA: u64 = 2;
 /// pooled operands from the OR).
 pub const POOL_EXTRA: u64 = 5;
 
+/// Pipeline depth of a dataflow stage (`Add` / `Concat` /
+/// `GlobalAvgPool`): no crossbar traversal, just an OR read, the
+/// shift-and-add (or accumulator) step, and an OR write.
+pub const DATAFLOW_DEPTH: u64 = 2;
+
 /// Intra-layer pipeline depth for a mapped layer (Sec. IV-A's four cases).
 pub fn depth(single_tile: bool, pool: bool) -> u64 {
     DEPTH_SINGLE

@@ -1,8 +1,15 @@
 //! Static per-layer pipeline parameters ("stage plans") assembled from the
 //! network, its mapping, and the architecture — the input to the
 //! cycle-accurate engine in [`crate::sim::engine`].
+//!
+//! Stage plans mirror the network's DAG: each plan records its predecessor
+//! stage indices and one [`InputDemand`] per incoming edge. A merge stage
+//! (residual `Add` / `Concat`) can only emit once *every* predecessor has
+//! covered the demand, so the engine naturally waits on the slowest input
+//! path; a linear network degenerates to the seed's chain behavior
+//! (`preds[i] == [i-1]`), bit-identically.
 
-use crate::cnn::Network;
+use crate::cnn::{LayerKind, Network};
 use crate::config::ArchConfig;
 use crate::mapping::NetworkMapping;
 
@@ -12,47 +19,69 @@ use super::intra;
 /// Everything the engine needs to simulate one layer.
 #[derive(Debug, Clone)]
 pub struct StagePlan {
+    /// Layer name (reporting / traces).
     pub name: String,
     /// Output units the stage emits per image. Conv: pre-pool OFM pixel
     /// positions. FC: its reload rounds (weight-serial crossbar loads).
+    /// Merge: its OFM pixel positions. Global pool: one.
     pub p_total: u64,
     /// Peak emission rate in units per logical cycle (the replication
-    /// factor; FC emits one unit per cycle).
+    /// factor; FC emits one unit per cycle; merges pass through at the
+    /// slowest input rate).
     pub rate: u64,
     /// Intra-layer pipeline depth (Sec. IV-A) in logical cycles.
     pub depth: u64,
-    /// Input demand on the previous stage (Sec. IV-B); `stage 0` is fed by
-    /// the host and its demand is ignored by the engine.
-    pub demand: InputDemand,
+    /// Predecessor stage indices (empty for the host-fed source stage).
+    pub preds: Vec<usize>,
+    /// Input demand on each predecessor (Sec. IV-B), aligned with `preds`.
+    pub demands: Vec<InputDemand>,
 }
 
 /// Build stage plans for a mapped network.
 pub fn build_plans(net: &Network, mapping: &NetworkMapping, arch: &ArchConfig) -> Vec<StagePlan> {
     let layers = net.layers();
-    let mut plans = Vec::with_capacity(layers.len());
+    let mut plans: Vec<StagePlan> = Vec::with_capacity(layers.len());
     for (i, layer) in layers.iter().enumerate() {
         let lm = &mapping.layers[i];
-        let (p_total, rate) = if layer.is_conv() {
-            (layer.out_pixels(), lm.replication as u64)
-        } else {
-            (arch.fc_reload_rounds.max(1), 1)
+        let preds: Vec<usize> = net.preds(i).to_vec();
+        let (p_total, rate, depth) = match layer.kind {
+            LayerKind::Conv { .. } => (
+                layer.out_pixels(),
+                lm.replication as u64,
+                intra::depth_of(lm, layer.has_pool()),
+            ),
+            LayerKind::Fc { .. } => (
+                arch.fc_reload_rounds.max(1),
+                1,
+                intra::depth_of(lm, false),
+            ),
+            // A merge streams pixels through as fast as its slowest input
+            // delivers them: its effective rate is the min over predecessor
+            // stage rates (already resolved — preds precede i in topo
+            // order), so replicating the convs around a merge lifts the
+            // merge with them and it never becomes an artificial bottleneck.
+            LayerKind::Add | LayerKind::Concat => (
+                layer.out_pixels(),
+                preds
+                    .iter()
+                    .map(|&p| plans[p].rate)
+                    .min()
+                    .unwrap_or(1)
+                    .max(1),
+                intra::DATAFLOW_DEPTH,
+            ),
+            // The global pool reduces the whole IFM into one emission.
+            LayerKind::GlobalAvgPool => (1, 1, intra::DATAFLOW_DEPTH),
         };
-        let dem = if i == 0 {
-            // Fed by the host: the whole image is present at injection.
-            InputDemand {
-                head: 0,
-                slope: 1,
-                needs_all: false,
-            }
-        } else {
-            demand(&layers[i - 1], layer)
-        };
+        let demands: Vec<InputDemand> =
+            preds.iter().map(|&p| demand(&layers[p], layer)).collect();
         plans.push(StagePlan {
             name: layer.name.clone(),
             p_total,
             rate,
-            depth: intra::depth_of(lm, layer.has_pool()),
-            demand: dem,
+            depth,
+            preds,
+            demands,
         });
     }
     plans
@@ -60,7 +89,8 @@ pub fn build_plans(net: &Network, mapping: &NetworkMapping, arch: &ArchConfig) -
 
 /// The injection interval lower bound: the busiest stage's occupancy
 /// (`ceil(p_total / rate)`) — what batch pipelining converges to when the
-/// NoC is not the bottleneck.
+/// NoC is not the bottleneck. On a DAG this is still exact: every stage
+/// serves every image, wherever it sits in the graph.
 pub fn max_occupancy(plans: &[StagePlan]) -> u64 {
     plans
         .iter()
@@ -72,7 +102,7 @@ pub fn max_occupancy(plans: &[StagePlan]) -> u64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cnn::{vgg, VggVariant};
+    use crate::cnn::{resnet, vgg, ResNetVariant, VggVariant};
     use crate::mapping::ReplicationPlan;
 
     fn plans(v: VggVariant, repl: bool) -> Vec<StagePlan> {
@@ -121,13 +151,38 @@ mod tests {
         let p = plans(VggVariant::A, false);
         let fc = &p[p.len() - 3];
         assert_eq!(fc.p_total, arch.fc_reload_rounds);
-        assert!(fc.demand.needs_all);
+        assert!(fc.demands[0].needs_all);
     }
 
     #[test]
-    fn stage0_demand_trivial() {
+    fn linear_plans_chain_preds() {
         let p = plans(VggVariant::A, false);
-        assert_eq!(p[0].demand.head, 0);
-        assert!(!p[0].demand.needs_all);
+        assert!(p[0].preds.is_empty() && p[0].demands.is_empty());
+        for (i, plan) in p.iter().enumerate().skip(1) {
+            assert_eq!(plan.preds, vec![i - 1]);
+            assert_eq!(plan.demands.len(), 1);
+        }
+    }
+
+    #[test]
+    fn resnet_merge_stages_track_slowest_input() {
+        let arch = ArchConfig::paper_node();
+        let net = resnet::build(ResNetVariant::R18);
+        let plan = ReplicationPlan::none(&net);
+        let m = NetworkMapping::build(&net, &arch, &plan).unwrap();
+        let p = build_plans(&net, &m, &arch);
+        for (i, layer) in net.layers().iter().enumerate() {
+            if layer.is_merge() {
+                assert_eq!(p[i].preds.len(), 2, "{}", p[i].name);
+                assert_eq!(p[i].depth, intra::DATAFLOW_DEPTH);
+                let min_pred = p[i].preds.iter().map(|&q| p[q].rate).min().unwrap();
+                assert_eq!(p[i].rate, min_pred, "{}", p[i].name);
+                assert_eq!(p[i].p_total, layer.out_pixels());
+            }
+        }
+        // The GAP stage emits once and needs everything.
+        let gap = &p[p.len() - 2];
+        assert_eq!(gap.p_total, 1);
+        assert!(gap.demands[0].needs_all);
     }
 }

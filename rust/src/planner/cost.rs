@@ -51,11 +51,14 @@ impl PlanAssessment {
 
 /// Cost model bound to one network + architecture.
 pub struct CostModel<'a> {
+    /// The network being planned.
     pub net: &'a Network,
+    /// The node it must map onto.
     pub arch: &'a ArchConfig,
 }
 
 impl<'a> CostModel<'a> {
+    /// A cost model bound to one network + architecture.
     pub fn new(net: &'a Network, arch: &'a ArchConfig) -> Self {
         Self { net, arch }
     }

@@ -20,6 +20,24 @@
 //!   interval, frontier, comparison against Fig. 7);
 //! - [`crate::coordinator::startup_plan`] — the serving coordinator's
 //!   startup choice, driven by the live `BatchPolicy` sizes.
+//!
+//! # Example
+//!
+//! Search a plan for any workload — linear or branching — under the
+//! paper's 320-tile budget:
+//!
+//! ```
+//! use smart_pim::cnn::workload;
+//! use smart_pim::config::ArchConfig;
+//! use smart_pim::planner::plan_for;
+//!
+//! let arch = ArchConfig::paper_node();
+//! let net = workload("vggA").unwrap();
+//! let result = plan_for(&net, &arch, 320).unwrap();
+//! assert!(result.best.assessment.tiles <= 320);
+//! // Meets or beats the paper's hand-tuned 3136-cycle beat.
+//! assert!(result.best.assessment.interval <= 3136);
+//! ```
 
 pub mod cost;
 pub mod pareto;

@@ -56,7 +56,9 @@ impl Default for PlannerConfig {
 /// One fully-assessed candidate plan.
 #[derive(Debug, Clone)]
 pub struct PlanCandidate {
+    /// The per-layer replication factors.
     pub plan: ReplicationPlan,
+    /// Modeled price of the plan (tiles, interval, fill, waste).
     pub assessment: PlanAssessment,
     /// Steady-state interval measured by the event-driven engine
     /// (`None` until [`super::evaluate_candidates`] runs).
@@ -93,6 +95,7 @@ pub struct Planner<'a> {
 }
 
 impl<'a> Planner<'a> {
+    /// A planner over one network + architecture with explicit knobs.
     pub fn new(net: &'a Network, arch: &'a ArchConfig, cfg: PlannerConfig) -> Self {
         Self { net, arch, cfg }
     }

@@ -6,7 +6,9 @@ use crate::config::ArchConfig;
 /// Node area breakdown in mm^2.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct AreaBreakdown {
+    /// Tile silicon area (cores + peripherals).
     pub tiles_mm2: f64,
+    /// Router array area.
     pub routers_mm2: f64,
 }
 
@@ -20,6 +22,7 @@ impl AreaBreakdown {
         }
     }
 
+    /// Total node area.
     pub fn total_mm2(&self) -> f64 {
         self.tiles_mm2 + self.routers_mm2
     }

@@ -12,6 +12,7 @@
 /// One row of Fig. 4.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ComponentRow {
+    /// Component name as printed in Fig. 4.
     pub name: &'static str,
     /// Area in mm^2 (per instance unless noted).
     pub area_mm2: f64,
@@ -19,6 +20,7 @@ pub struct ComponentRow {
     pub power_mw: f64,
     /// Instances at the level the row describes (0 = N/A in the paper).
     pub count: usize,
+    /// Free-text spec column (resolution, size, ...).
     pub spec: &'static str,
 }
 

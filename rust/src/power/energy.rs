@@ -25,6 +25,7 @@ pub struct EnergyBreakdown {
 }
 
 impl EnergyBreakdown {
+    /// Total per-image energy.
     pub fn total_mj(&self) -> f64 {
         self.core_mj + self.tile_mj + self.noc_mj
     }
@@ -39,6 +40,7 @@ pub struct EnergyModel<'a> {
 }
 
 impl<'a> EnergyModel<'a> {
+    /// An energy model for one architecture.
     pub fn new(arch: &'a ArchConfig) -> Self {
         // 10.5 mW per router at the NoC clock -> pJ per cycle of traversal.
         let flit_hop_pj = agg::ROUTER_POWER_MW * arch.noc_cycle_ns;
@@ -75,22 +77,29 @@ impl<'a> EnergyModel<'a> {
     }
 
     /// Total flit-hops for one image: every OFM value moves from its
-    /// producer tile to the consumer layer's tiles over the mesh.
-    pub fn flit_hops(&self, net: &Network, _mapping: &NetworkMapping, mean_hops: &[f64]) -> f64 {
+    /// producer tile to each consumer layer's tiles over the mesh.
+    /// `hops[i]` must be the layer's summed per-successor mean hop count
+    /// ([`crate::sim::LayerFlows::copy_hops`]): at a DAG branch point every
+    /// successor receives a full OFM copy (matching
+    /// `sim::traffic::extract_flows`), so the layer's hop weight is the
+    /// sum of its copies' means — on a chain, just the plain mean.
+    pub fn flit_hops(&self, net: &Network, _mapping: &NetworkMapping, hops: &[f64]) -> f64 {
         let vals_per_flit = self.arch.values_per_flit() as f64;
         net.layers()
             .iter()
-            .zip(mean_hops)
-            .map(|(l, &hops)| {
+            .zip(hops)
+            .map(|(l, &h)| {
                 let values = (l.out_pixels() * l.out_ch() as u64) as f64
                     / if l.has_pool() { 4.0 } else { 1.0 };
-                (values / vals_per_flit).ceil() * hops.max(1.0)
+                (values / vals_per_flit).ceil() * h.max(1.0)
             })
             .sum()
     }
 
-    /// Per-image energy. `mean_hops[i]` is the average hop count from layer
-    /// i's tiles to layer i+1's tiles (last entry: to the output port).
+    /// Per-image energy. `mean_hops[i]` is the layer's hop weight: the
+    /// summed per-successor mean hop count from layer i's tiles to each
+    /// consumer's tiles (see [`EnergyModel::flit_hops`]; sink layers
+    /// stream to the output port).
     pub fn image_energy(
         &self,
         net: &Network,

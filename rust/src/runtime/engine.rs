@@ -29,6 +29,7 @@ pub type Literal = xla::Literal;
 /// A compiled executable plus its metadata.
 #[cfg(feature = "pjrt")]
 pub struct Executable {
+    /// Executable name (artifact stem).
     pub name: String,
     exe: xla::PjRtLoadedExecutable,
 }
@@ -51,10 +52,12 @@ impl Runtime {
         })
     }
 
+    /// PJRT platform name (e.g. `cpu`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
+    /// Directory the artifacts are loaded from.
     pub fn artifacts_dir(&self) -> &Path {
         &self.artifacts_dir
     }
@@ -180,6 +183,7 @@ impl Literal {
 /// A compiled executable plus its metadata (stub).
 #[cfg(not(feature = "pjrt"))]
 pub struct Executable {
+    /// Executable name (artifact stem).
     pub name: String,
 }
 
@@ -191,18 +195,22 @@ pub struct Runtime {
 
 #[cfg(not(feature = "pjrt"))]
 impl Runtime {
+    /// Stub constructor: always fails with the no-PJRT error.
     pub fn new(_artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
         bail!("{NO_PJRT}");
     }
 
+    /// Stub platform name.
     pub fn platform(&self) -> String {
         "unavailable (no pjrt feature)".to_string()
     }
 
+    /// Directory the artifacts would be loaded from.
     pub fn artifacts_dir(&self) -> &Path {
         &self.artifacts_dir
     }
 
+    /// Stub loader: always fails with the no-PJRT error.
     pub fn load(&self, _name: &str) -> Result<Executable> {
         bail!("{NO_PJRT}");
     }
@@ -216,10 +224,12 @@ impl Runtime {
 
 #[cfg(not(feature = "pjrt"))]
 impl Executable {
+    /// Stub executor: always fails with the no-PJRT error.
     pub fn run_f32(&self, _inputs: &[Literal]) -> Result<Vec<f32>> {
         bail!("{NO_PJRT}");
     }
 
+    /// Stub executor: always fails with the no-PJRT error.
     pub fn run_i32(&self, _inputs: &[Literal]) -> Result<Vec<i32>> {
         bail!("{NO_PJRT}");
     }

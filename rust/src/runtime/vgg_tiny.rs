@@ -10,8 +10,11 @@ use super::weights::WeightsFile;
 
 /// Input image geometry fixed by the artifact.
 pub const IMAGE_HW: usize = 32;
+/// Input channels.
 pub const IMAGE_CH: usize = 3;
+/// Flattened input length.
 pub const IMAGE_LEN: usize = IMAGE_HW * IMAGE_HW * IMAGE_CH;
+/// Output classes (CIFAR-10).
 pub const CLASSES: usize = 10;
 
 /// The tiny-VGG model: compiled executables for batch 1 and 4 plus the
@@ -27,6 +30,7 @@ impl VggTiny {
     /// largest executable it can fill).
     pub const BATCH_SIZES: [usize; 2] = [4, 1];
 
+    /// Load every tiny-VGG executable from the runtime's artifacts.
     pub fn load(rt: &Runtime) -> Result<Self> {
         let exe_b1 = rt.load("vgg_tiny_b1")?;
         let exe_b4 = rt.load("vgg_tiny_b4")?;

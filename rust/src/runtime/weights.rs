@@ -11,17 +11,22 @@ use std::path::Path;
 use crate::bail;
 use crate::util::error::{Context, Result};
 
+/// Container magic: `"SMPW"`.
 pub const WEIGHTS_MAGIC: u32 = 0x534D_5057;
 
 /// One int32 tensor.
 #[derive(Debug, Clone)]
 pub struct Tensor {
+    /// Tensor name (graph parameter it feeds).
     pub name: String,
+    /// Shape, row-major.
     pub dims: Vec<usize>,
+    /// Quantized values.
     pub data: Vec<i32>,
 }
 
 impl Tensor {
+    /// Element count (product of dims).
     pub fn elements(&self) -> usize {
         self.dims.iter().product()
     }
@@ -30,16 +35,19 @@ impl Tensor {
 /// All tensors of a weights file, in file order.
 #[derive(Debug, Clone)]
 pub struct WeightsFile {
+    /// All tensors, in file order.
     pub tensors: Vec<Tensor>,
 }
 
 impl WeightsFile {
+    /// Read and parse a container file.
     pub fn load(path: &Path) -> Result<Self> {
         let bytes = std::fs::read(path)
             .with_context(|| format!("reading weights file {}", path.display()))?;
         Self::parse(&bytes).with_context(|| format!("parsing {}", path.display()))
     }
 
+    /// Parse a container from bytes.
     pub fn parse(mut bytes: &[u8]) -> Result<Self> {
         let magic = read_u32(&mut bytes)?;
         if magic != WEIGHTS_MAGIC {
@@ -81,6 +89,7 @@ impl WeightsFile {
         Ok(Self { tensors })
     }
 
+    /// Tensor by name, if present.
     pub fn get(&self, name: &str) -> Option<&Tensor> {
         self.tensors.iter().find(|t| t.name == name)
     }

@@ -3,11 +3,13 @@
 //!
 //! Each stage (layer) processes at most one image per logical cycle (the
 //! paper's structural-hazard rule, Sec. IV-C) and emits up to `rate` output
-//! units per cycle once its input demand (Sec. IV-B) is met. Emissions
-//! become visible to the next stage `depth` cycles later (the intra-layer
-//! pipeline, Sec. IV-A). Batch pipelining is the injection policy: with it,
-//! image k+1 enters stage 0 as soon as stage 0 finished emitting image k;
-//! without it, image k+1 waits for image k to leave the whole network.
+//! units per cycle once its input demand (Sec. IV-B) is met **on every
+//! incoming DAG edge** — a residual/concat merge therefore waits on its
+//! slowest predecessor. Emissions become visible to consumer stages `depth`
+//! cycles later (the intra-layer pipeline, Sec. IV-A). Batch pipelining is
+//! the injection policy: with it, image k+1 enters stage 0 as soon as
+//! stage 0 finished emitting image k; without it, image k+1 waits for
+//! image k to leave the whole network.
 
 use std::collections::VecDeque;
 
@@ -29,6 +31,7 @@ pub struct NocAdjust {
 }
 
 impl NocAdjust {
+    /// No-op adjustment for `n` stages (ideal NoC).
     pub fn identity(n: usize) -> Self {
         Self {
             extra_depth: vec![0; n],
@@ -265,13 +268,13 @@ impl Engine {
             }
         }
 
-        // Stage updates. Stage i reads stage i-1's ring at (now - depth_i),
-        // which this cycle's writes never touch (depth >= 1), so in-order
-        // iteration is race-free.
+        // Stage updates. Stage i reads its predecessors' rings at
+        // (now - depth_i); predecessors precede i in topological order and
+        // depth >= 1, so this cycle's writes never alias the read slots and
+        // in-order iteration is race-free. A merge stage takes the min of
+        // its per-edge emittable counts — it waits on the slowest input.
         for i in 0..self.stages.len() {
-            let (avail, prod_total) = if i == 0 {
-                (u64::MAX, u64::MAX)
-            } else {
+            let can = {
                 let img = match self.stages[i].queue.front() {
                     Some(&img) => img,
                     None => {
@@ -279,17 +282,27 @@ impl Engine {
                         continue;
                     }
                 };
-                let delay = self.stages[i].depth;
-                let prod = &self.stages[i - 1];
-                let vt = now.saturating_sub(delay);
-                (prod.emitted_at(img, vt), prod.plan.p_total)
+                let plan = &self.stages[i].plan;
+                if plan.preds.is_empty() {
+                    // Host-fed source: the whole image is present.
+                    plan.p_total
+                } else {
+                    let vt = now.saturating_sub(self.stages[i].depth);
+                    let mut can = u64::MAX;
+                    for (k, &pi) in plan.preds.iter().enumerate() {
+                        let prod = &self.stages[pi];
+                        let avail = prod.emitted_at(img, vt);
+                        can = can.min(plan.demands[k].emittable(
+                            avail,
+                            prod.plan.p_total,
+                            plan.p_total,
+                        ));
+                    }
+                    can
+                }
             };
             let s = &mut self.stages[i];
             if let Some(&img) = s.queue.front() {
-                let can = s
-                    .plan
-                    .demand
-                    .emittable(avail, prod_total, s.plan.p_total);
                 if can > s.emitted {
                     if let Some(r) = s.rate_int {
                         // Fast path: unthrottled integer rate (no credit).

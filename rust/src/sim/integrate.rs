@@ -108,8 +108,11 @@ pub fn assess_noc(
 /// One benchmark point's results (a cell of Fig. 8 / a bar of Figs. 5-6).
 #[derive(Debug, Clone)]
 pub struct PerfReport {
+    /// VGG variant evaluated.
     pub variant: VggVariant,
+    /// Pipelining scenario (Sec. VI-B's (1)-(4)).
     pub scenario: Scenario,
+    /// Interconnect model.
     pub noc: NocKind,
     /// Steady-state injection interval (logical cycles).
     pub interval_cycles: f64,
@@ -127,6 +130,75 @@ pub struct PerfReport {
     pub sim: SimResult,
 }
 
+/// Results of evaluating an arbitrary network (DAG or chain) under an
+/// explicit replication plan — the workload-agnostic core behind
+/// [`evaluate`] and the `--network` CLI paths.
+#[derive(Debug, Clone)]
+pub struct NetworkReport {
+    /// Workload name (`Network::name`).
+    pub network: String,
+    /// Steady-state injection interval (logical cycles).
+    pub interval_cycles: f64,
+    /// Per-image latency (logical cycles, steady state).
+    pub latency_cycles: f64,
+    /// Frames per second at the calibrated logical clock.
+    pub fps: f64,
+    /// Tera-operations per second (1 MAC = 2 ops).
+    pub tops: f64,
+    /// Per-image energy breakdown.
+    pub energy: EnergyBreakdown,
+    /// Energy efficiency.
+    pub tops_per_watt: f64,
+    /// Raw schedule (completions/injections) for deeper analysis.
+    pub sim: SimResult,
+}
+
+/// Evaluate any mapped network: pipeline + NoC co-simulation with `images`
+/// streamed (batch-pipelined or not), energy model included. Errors when
+/// the plan does not map under `arch`.
+pub fn evaluate_network(
+    net: &Network,
+    plan: &ReplicationPlan,
+    batch: bool,
+    noc: NocKind,
+    arch: &ArchConfig,
+    images: u64,
+) -> Result<NetworkReport, String> {
+    let mapping = NetworkMapping::build(net, arch, plan)?;
+    let placement = Placement::snake(arch);
+    let plans = build_plans(net, &mapping, arch);
+    let (adjust, layer_flows) = assess_noc(noc, net, &mapping, &placement, &plans, arch);
+    let sim = Engine::new(&plans, &adjust, batch, images).run();
+
+    let interval = sim.interval_or_makespan();
+    let lats = sim.latencies();
+    let latency = lats[lats.len() / 2..]
+        .iter()
+        .map(|&l| l as f64)
+        .sum::<f64>()
+        / (lats.len() - lats.len() / 2) as f64;
+    let t_log_s = arch.logical_cycle_ns * 1e-9;
+    let fps = 1.0 / (interval * t_log_s);
+    let tops = fps * net.ops() as f64 / 1e12;
+
+    let em = EnergyModel::new(arch);
+    // Fan-out-aware hop weights: one full OFM copy per DAG successor.
+    let copy_hops: Vec<f64> = layer_flows.iter().map(|l| l.copy_hops).collect();
+    let energy = em.image_energy(net, &mapping, &copy_hops);
+    let tops_per_watt = em.tops_per_watt(net, &energy);
+
+    Ok(NetworkReport {
+        network: net.name.clone(),
+        interval_cycles: interval,
+        latency_cycles: latency,
+        fps,
+        tops,
+        energy,
+        tops_per_watt,
+        sim,
+    })
+}
+
 /// Number of images simulated per benchmark point (enough for a stable
 /// steady-state interval; the pipeline is periodic after the first image).
 pub fn default_images(scenario: Scenario) -> u64 {
@@ -138,7 +210,8 @@ pub fn default_images(scenario: Scenario) -> u64 {
 }
 
 /// Evaluate one (VGG, scenario, NoC) benchmark — the paper's unit of
-/// evaluation (60 in total).
+/// evaluation (60 in total). Thin wrapper over [`evaluate_network`] with
+/// the scenario's canonical plan (Fig. 7 or none) and image count.
 pub fn evaluate(variant: VggVariant, scenario: Scenario, noc: NocKind, arch: &ArchConfig) -> PerfReport {
     let net = vgg::build(variant);
     let plan = if scenario.replication() {
@@ -146,43 +219,26 @@ pub fn evaluate(variant: VggVariant, scenario: Scenario, noc: NocKind, arch: &Ar
     } else {
         ReplicationPlan::none(&net)
     };
-    let mapping = NetworkMapping::build(&net, arch, &plan).expect("mapping must fit");
-    let placement = Placement::snake(arch);
-    let plans = build_plans(&net, &mapping, arch);
-    let (adjust, layer_flows) = assess_noc(noc, &net, &mapping, &placement, &plans, arch);
-    let images = default_images(scenario);
-    let sim = Engine::new(&plans, &adjust, scenario.batch(), images).run();
-
-    // Single-image runs have no steady interval; fall back to the whole
-    // run (serving one image every full pass).
-    let interval = sim.interval_or_makespan();
-    let lats = sim.latencies();
-    let latency = lats[lats.len() / 2..]
-        .iter()
-        .map(|&l| l as f64)
-        .sum::<f64>()
-        / (lats.len() - lats.len() / 2) as f64;
-    let t_log_s = arch.logical_cycle_ns * 1e-9;
-    let fps = 1.0 / (interval * t_log_s);
-    let ops = net.ops() as f64;
-    let tops = fps * ops / 1e12;
-
-    let em = EnergyModel::new(arch);
-    let mean_hops: Vec<f64> = layer_flows.iter().map(|l| l.mean_hops).collect();
-    let energy = em.image_energy(&net, &mapping, &mean_hops);
-    let tops_per_watt = em.tops_per_watt(&net, &energy);
-
+    let r = evaluate_network(
+        &net,
+        &plan,
+        scenario.batch(),
+        noc,
+        arch,
+        default_images(scenario),
+    )
+    .expect("mapping must fit");
     PerfReport {
         variant,
         scenario,
         noc,
-        interval_cycles: interval,
-        latency_cycles: latency,
-        fps,
-        tops,
-        energy,
-        tops_per_watt,
-        sim,
+        interval_cycles: r.interval_cycles,
+        latency_cycles: r.latency_cycles,
+        fps: r.fps,
+        tops: r.tops,
+        energy: r.energy,
+        tops_per_watt: r.tops_per_watt,
+        sim: r.sim,
     }
 }
 
@@ -247,6 +303,24 @@ mod tests {
         let i = f(NocKind::Ideal);
         assert!(w <= s * 1.001, "wormhole {w} > smart {s}");
         assert!(s <= i * 1.001, "smart {s} > ideal {i}");
+    }
+
+    #[test]
+    fn resnet18_evaluates_end_to_end() {
+        use crate::cnn::{resnet, ResNetVariant};
+        let a = arch();
+        let net = resnet::build(ResNetVariant::R18);
+        let plan = ReplicationPlan::none(&net);
+        let r = evaluate_network(&net, &plan, true, NocKind::Ideal, &a, 6).unwrap();
+        assert_eq!(r.network, "resnet18");
+        // Unreplicated bottleneck: the stem streams 112*112 = 12544 pixel
+        // positions (56x56 stages emit 3136 < 12544).
+        assert!(
+            (r.interval_cycles - 12544.0).abs() <= 64.0,
+            "interval {}",
+            r.interval_cycles
+        );
+        assert!(r.fps > 0.0 && r.tops > 0.0 && r.tops_per_watt > 0.0);
     }
 
     #[test]

@@ -9,9 +9,13 @@ use super::engine::SimResult;
 /// One stage's activity window for one image (logical cycles).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Window {
+    /// Stage (layer) index.
     pub stage: usize,
+    /// Image index.
     pub image: u64,
+    /// First cycle the image occupies the stage.
     pub start: u64,
+    /// One past the last occupied cycle.
     pub end: u64,
 }
 

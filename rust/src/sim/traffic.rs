@@ -8,15 +8,21 @@ use crate::mapping::{NetworkMapping, Placement};
 use crate::noc::Flow;
 use crate::pipeline::StagePlan;
 
-/// Flows of one producer layer (layer i -> layer i+1), with bookkeeping to
-/// map NoC results back to stages.
+/// Flows of one producer layer (layer i -> each of its DAG successors),
+/// with bookkeeping to map NoC results back to stages.
 #[derive(Debug, Clone)]
 pub struct LayerFlows {
+    /// Producer layer index into `Network::layers()`.
     pub layer_idx: usize,
+    /// Point-to-point flows this layer injects into the mesh.
     pub flows: Vec<Flow>,
-    /// Mean XY hop count across the flow set (for Eq. (3)-style reporting
-    /// and the energy model).
+    /// Mean XY hop count across the whole flow set (Eq. (3)-style
+    /// reporting).
     pub mean_hops: f64,
+    /// Sum over DAG successors of that successor's mean hop count — the
+    /// per-image hop cost of moving one full OFM copy to *each* consumer
+    /// (the energy model's weight; equals `mean_hops` on a chain).
+    pub copy_hops: f64,
 }
 
 /// Extract flows. `noc_cycles_per_logical` converts the pipeline's
@@ -34,12 +40,17 @@ pub fn extract_flows(
     for i in 0..layers.len() {
         let producer = &layers[i];
         let src_tiles = &mapping.layers[i].tile_ids;
-        // The last layer streams its logits off-chip through tile 0's
-        // router; intermediate layers feed the next layer's tiles.
-        let dst_tiles: Vec<usize> = if i + 1 < layers.len() {
-            mapping.layers[i + 1].tile_ids.clone()
+        // The sink layer streams its logits off-chip through tile 0's
+        // router; every other layer feeds each DAG successor's tiles. At a
+        // branch point the OFM *fans out*: every successor receives a full
+        // copy, so the injected load scales with the fan-out degree.
+        let dst_sets: Vec<Vec<usize>> = if net.succs(i).is_empty() {
+            vec![vec![0]]
         } else {
-            vec![0]
+            net.succs(i)
+                .iter()
+                .map(|&s| mapping.layers[s].tile_ids.clone())
+                .collect()
         };
         // Values leaving layer i per image: pooled OFM (the MP unit runs
         // before the OR/tile boundary).
@@ -52,26 +63,36 @@ pub fn extract_flows(
         // Packetize: one packet carries one destination-bound pixel group,
         // capped at 8 flits (64 values) to keep worms bounded.
         let packet_len = ((producer.out_ch() / arch.values_per_flit()).clamp(1, 8)) as u16;
-        let n_flows = (src_tiles.len() * dst_tiles.len()) as f64;
-        let pkts_per_cycle_per_flow =
-            flits_per_noc_cycle / packet_len as f64 / n_flows;
-        let mut flows = Vec::with_capacity(src_tiles.len() * dst_tiles.len());
+        let mut flows = Vec::new();
         let mut hop_sum = 0.0;
-        for &s in src_tiles {
-            for &d in dst_tiles.iter() {
-                let src = placement.node_of(s);
-                let dst = placement.node_of(d);
-                if src == dst {
-                    continue; // same router: the tile bus handles it
+        let mut copy_hops = 0.0;
+        for dst_tiles in &dst_sets {
+            // One full OFM copy per successor, spread over this successor's
+            // src x dst flow pairs.
+            let n_flows = (src_tiles.len() * dst_tiles.len()) as f64;
+            let pkts_per_cycle_per_flow = flits_per_noc_cycle / packet_len as f64 / n_flows;
+            let mut set_hops = 0.0;
+            for &s in src_tiles {
+                for &d in dst_tiles.iter() {
+                    let src = placement.node_of(s);
+                    let dst = placement.node_of(d);
+                    if src == dst {
+                        continue; // same router: the tile bus handles it
+                    }
+                    set_hops += placement.coord(s).hops(&placement.coord(d)) as f64;
+                    flows.push(Flow {
+                        src,
+                        dst,
+                        packets_per_cycle: pkts_per_cycle_per_flow,
+                        packet_len,
+                    });
                 }
-                hop_sum += placement.coord(s).hops(&placement.coord(d)) as f64;
-                flows.push(Flow {
-                    src,
-                    dst,
-                    packets_per_cycle: pkts_per_cycle_per_flow,
-                    packet_len,
-                });
             }
+            hop_sum += set_hops;
+            // This copy's flits split evenly over all src x dst pairs
+            // (same-router pairs ride the tile bus at zero hop cost), so
+            // the copy's mean hop distance averages over every pair.
+            copy_hops += set_hops / n_flows;
         }
         let mean_hops = if flows.is_empty() {
             0.0
@@ -82,6 +103,7 @@ pub fn extract_flows(
             layer_idx: i,
             flows,
             mean_hops,
+            copy_hops,
         });
     }
     out
@@ -160,6 +182,65 @@ mod tests {
         // far below the mesh diameter (34).
         assert!(worst < 12.0, "worst mean hops {worst}");
         let _ = net;
+    }
+
+    #[test]
+    fn chain_copy_hops_equal_mean_hops() {
+        // On a linear network every layer has one successor, so the energy
+        // model's per-copy hop weight is just the flow-set mean.
+        let (net, m, p, plans, arch) = setup();
+        let lf = extract_flows(&net, &m, &p, &plans, &arch);
+        for l in &lf {
+            assert!(
+                (l.copy_hops - l.mean_hops).abs() < 1e-12,
+                "layer {}: copy {} vs mean {}",
+                l.layer_idx,
+                l.copy_hops,
+                l.mean_hops
+            );
+        }
+        let _ = net;
+    }
+
+    #[test]
+    fn branch_points_fan_out_full_copies() {
+        use crate::cnn::{resnet, ResNetVariant};
+        let arch = ArchConfig::paper_node();
+        let net = resnet::build(ResNetVariant::R18);
+        let plan = ReplicationPlan::none(&net);
+        let m = NetworkMapping::build(&net, &arch, &plan).unwrap();
+        let p = Placement::snake(&arch);
+        let plans = build_plans(&net, &m, &arch);
+        let lf = extract_flows(&net, &m, &p, &plans, &arch);
+        assert_eq!(lf.len(), net.len());
+        let phi = arch.noc_cycles_per_logical();
+        let mut checked = 0;
+        for (i, l) in net.layers().iter().enumerate() {
+            if net.succs(i).len() < 2 {
+                continue;
+            }
+            checked += 1;
+            // Injected flit rate across all flows equals fan-out x one full
+            // OFM copy per streaming window (tile runs are disjoint, so no
+            // same-router pair is skipped under the none plan).
+            let (oh, ow) = l.out_hw();
+            let values = (oh * ow * l.out_ch()) as f64;
+            let occupancy = plans[i].p_total.div_ceil(plans[i].rate).max(1) as f64;
+            let one_copy = values / arch.values_per_flit() as f64 / (occupancy * phi);
+            let total: f64 = lf[i]
+                .flows
+                .iter()
+                .map(|f| f.packets_per_cycle * f.packet_len as f64)
+                .sum();
+            let want = net.succs(i).len() as f64 * one_copy;
+            assert!(
+                (total - want).abs() < want * 1e-9,
+                "layer {} ({}): {total} vs {want}",
+                i,
+                l.name
+            );
+        }
+        assert!(checked >= 8, "ResNet-18 has a branch before every block");
     }
 
     #[test]

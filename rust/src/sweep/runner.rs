@@ -43,6 +43,7 @@ impl SweepRunner {
         }
     }
 
+    /// Worker-thread count this runner fans out to.
     pub fn threads(&self) -> usize {
         self.threads
     }

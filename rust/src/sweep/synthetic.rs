@@ -14,11 +14,17 @@ use super::point_seed;
 /// hands points to worker threads; everything a worker needs is here).
 #[derive(Debug, Clone)]
 pub struct SyntheticPoint {
+    /// Traffic pattern of this point.
     pub pattern: Pattern,
+    /// Injection rate of this point.
     pub rate: f64,
+    /// Interconnect evaluated at this point.
     pub kind: NocKind,
+    /// Fully-resolved run configuration.
     pub cfg: SyntheticConfig,
+    /// Mesh geometry.
     pub mesh: Mesh,
+    /// SMART bypass budget (1 = wormhole).
     pub hpc_max: usize,
 }
 
@@ -26,20 +32,30 @@ pub struct SyntheticPoint {
 /// (recorded so benches can track the perf trajectory in BENCH_noc.json).
 #[derive(Debug, Clone)]
 pub struct SyntheticOutcome {
+    /// Pattern of the evaluated point.
     pub pattern: Pattern,
+    /// Injection rate of the evaluated point.
     pub rate: f64,
+    /// Interconnect of the evaluated point.
     pub kind: NocKind,
+    /// Measured statistics.
     pub stats: NocStats,
+    /// Wall-clock seconds the point took to simulate.
     pub wall_secs: f64,
 }
 
 /// A sweep grid: patterns x rates x kinds over one mesh.
 #[derive(Debug, Clone)]
 pub struct SyntheticSweep {
+    /// Mesh geometry for every point.
     pub mesh: Mesh,
+    /// SMART bypass budget for the smart points.
     pub hpc_max: usize,
+    /// Patterns axis of the grid.
     pub patterns: Vec<Pattern>,
+    /// Injection-rate axis of the grid.
     pub rates: Vec<f64>,
+    /// Interconnect axis of the grid.
     pub kinds: Vec<NocKind>,
     /// Template for every point (pattern / rate / seed overridden per point).
     pub base: SyntheticConfig,
@@ -50,6 +66,7 @@ pub struct SyntheticSweep {
 }
 
 impl SyntheticSweep {
+    /// The Figs. 10-11 default grid on the given mesh.
     pub fn new(mesh: Mesh, hpc_max: usize) -> Self {
         Self {
             mesh,

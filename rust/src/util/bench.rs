@@ -11,23 +11,29 @@ use super::stats;
 /// Result of one benchmark: per-iteration wall times in seconds.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Benchmark label.
     pub name: String,
+    /// Per-iteration wall-clock seconds.
     pub samples: Vec<f64>,
 }
 
 impl BenchResult {
+    /// Mean sample (seconds).
     pub fn mean(&self) -> f64 {
         stats::mean(&self.samples)
     }
 
+    /// Median sample (seconds).
     pub fn median(&self) -> f64 {
         stats::percentile(&self.samples, 50.0)
     }
 
+    /// Sample standard deviation (seconds).
     pub fn stddev(&self) -> f64 {
         stats::stddev(&self.samples)
     }
 
+    /// One-line human-readable summary.
     pub fn report(&self) -> String {
         format!(
             "{:<44} time: [{} {} {}]  ({} samples)",
@@ -68,6 +74,7 @@ impl Default for Bencher {
 }
 
 impl Bencher {
+    /// A harness with explicit warmup/measurement budgets.
     pub fn new(warmup: Duration, measure: Duration, max_samples: usize) -> Self {
         Self {
             warmup,
@@ -113,6 +120,7 @@ impl Bencher {
         self.results.last().unwrap()
     }
 
+    /// Results of every benchmark run so far.
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }

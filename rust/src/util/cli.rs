@@ -7,6 +7,7 @@
 use std::collections::BTreeMap;
 
 #[derive(Debug, Clone, Default)]
+/// Parsed `--key value` options, boolean flags, and positionals.
 pub struct Args {
     /// `--key value` / `--key=value` options.
     opts: BTreeMap<String, String>,
@@ -46,22 +47,27 @@ impl Args {
         Ok(out)
     }
 
+    /// Parse from `std::env::args()` (skipping the binary name).
     pub fn from_env(known_flags: &[&str]) -> Result<Self, String> {
         Self::parse(std::env::args().skip(1), known_flags)
     }
 
+    /// Was the boolean flag given?
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Raw value of `--name`, if present.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.opts.get(name).map(|s| s.as_str())
     }
 
+    /// Value of `--name`, or the default.
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
 
+    /// Parsed value of `--name`, if present.
     pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, String>
     where
         T::Err: std::fmt::Display,
@@ -75,6 +81,7 @@ impl Args {
         }
     }
 
+    /// Parsed value of `--name`, or the default.
     pub fn get_parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String>
     where
         T::Err: std::fmt::Display,
@@ -82,6 +89,7 @@ impl Args {
         Ok(self.get_parse(name)?.unwrap_or(default))
     }
 
+    /// Positional (non-option) arguments, in order.
     pub fn positional(&self) -> &[String] {
         &self.pos
     }

@@ -7,10 +7,15 @@ use std::fmt::Write as _;
 /// A JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// A number (always rendered as f64).
     Num(f64),
+    /// A string (escaped on render).
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
     /// Insertion-ordered object (stable output for diffs).
     Obj(Vec<(String, Json)>),

@@ -12,11 +12,13 @@ use super::rng::Rng;
 
 /// Generation context: a seeded RNG plus a size hint in `[0, 100]`.
 pub struct Gen {
+    /// Deterministic per-case RNG.
     pub rng: Rng,
     size: u32,
 }
 
 impl Gen {
+    /// A generator for one case with its derived seed and size.
     pub fn new(seed: u64, size: u32) -> Self {
         Self {
             rng: Rng::new(seed),
@@ -45,7 +47,9 @@ impl Gen {
 
 /// Configuration for a property run.
 pub struct Config {
+    /// Cases to run per property.
     pub cases: u32,
+    /// Base seed (case i derives from it).
     pub seed: u64,
 }
 

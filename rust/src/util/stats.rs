@@ -49,10 +49,12 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     }
 }
 
+/// Minimum of a slice (NaN-free inputs assumed).
 pub fn min(xs: &[f64]) -> f64 {
     xs.iter().copied().fold(f64::INFINITY, f64::min)
 }
 
+/// Maximum of a slice (NaN-free inputs assumed).
 pub fn max(xs: &[f64]) -> f64 {
     xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
 }
@@ -69,6 +71,7 @@ pub struct Accumulator {
 }
 
 impl Accumulator {
+    /// An empty accumulator.
     pub fn new() -> Self {
         Self {
             n: 0,
@@ -79,6 +82,7 @@ impl Accumulator {
         }
     }
 
+    /// Fold one sample in.
     pub fn add(&mut self, x: f64) {
         self.n += 1;
         let delta = x - self.mean;
@@ -88,10 +92,12 @@ impl Accumulator {
         self.max = self.max.max(x);
     }
 
+    /// Samples folded so far.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Running mean.
     pub fn mean(&self) -> f64 {
         if self.n == 0 {
             0.0
@@ -100,6 +106,7 @@ impl Accumulator {
         }
     }
 
+    /// Running sample standard deviation.
     pub fn stddev(&self) -> f64 {
         if self.n < 2 {
             0.0
@@ -108,10 +115,12 @@ impl Accumulator {
         }
     }
 
+    /// Smallest sample seen.
     pub fn min(&self) -> f64 {
         self.min
     }
 
+    /// Largest sample seen.
     pub fn max(&self) -> f64 {
         self.max
     }

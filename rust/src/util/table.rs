@@ -10,6 +10,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// A table with a title and column headers.
     pub fn new(title: impl Into<String>, header: &[&str]) -> Self {
         Self {
             title: title.into(),
@@ -18,6 +19,7 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the header arity).
     pub fn row(&mut self, cells: &[String]) -> &mut Self {
         assert_eq!(
             cells.len(),
@@ -36,10 +38,12 @@ impl Table {
         self.row(&strs)
     }
 
+    /// Rows appended so far.
     pub fn n_rows(&self) -> usize {
         self.rows.len()
     }
 
+    /// Render to an aligned ASCII string.
     pub fn render(&self) -> String {
         let ncol = self.header.len();
         let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
@@ -74,6 +78,7 @@ impl Table {
         out
     }
 
+    /// Render to stdout.
     pub fn print(&self) {
         print!("{}", self.render());
     }

@@ -1,0 +1,203 @@
+//! Golden + property tests for the layer-DAG core and the ResNet
+//! workloads.
+//!
+//! Golden: ResNet-18/34 topology, MAC/parameter counts, the unreplicated
+//! critical-path interval/fill skeleton, and the searched plan's budget
+//! feasibility at the paper's 320-tile node. All constants were derived in
+//! an executable arithmetic mirror before these tests were written.
+//!
+//! Property: a linear DAG built through `Network::from_graph` reproduces
+//! the seed VGG chain numbers **bit-identically** — stage plans, occupancy,
+//! pipeline shape, and the cycle-accurate engine schedule — so the DAG
+//! generalization provably did not move any pre-refactor golden.
+
+use smart_pim::cnn::{resnet, vgg, Network, ResNetVariant, VggVariant};
+use smart_pim::config::ArchConfig;
+use smart_pim::coordinator::PipelineShape;
+use smart_pim::mapping::{validate_plan, NetworkMapping, ReplicationPlan};
+use smart_pim::pipeline::{build_plans, max_occupancy};
+use smart_pim::planner::{evaluate_candidates, plan_for};
+use smart_pim::sim::{Engine, NocAdjust};
+use smart_pim::sweep::SweepRunner;
+
+const PAPER_BUDGET: usize = 320;
+
+fn arch() -> ArchConfig {
+    ArchConfig::paper_node()
+}
+
+#[test]
+fn golden_resnet_topology_and_op_counts() {
+    // Mirror-derived exact constants (conv+fc weights, no BN/bias).
+    let r18 = resnet::build(ResNetVariant::R18);
+    assert_eq!((r18.len(), r18.n_edges()), (30, 37));
+    assert_eq!(r18.macs(), 1_814_073_344);
+    assert_eq!(r18.weights(), 11_678_912);
+
+    let r34 = resnet::build(ResNetVariant::R34);
+    assert_eq!((r34.len(), r34.n_edges()), (54, 69));
+    assert_eq!(r34.macs(), 3_663_761_408);
+    assert_eq!(r34.weights(), 21_779_648);
+}
+
+#[test]
+fn golden_resnet18_critical_path_fill_and_interval() {
+    let a = arch();
+    let net = resnet::build(ResNetVariant::R18);
+    let plan = ReplicationPlan::none(&net);
+    let m = NetworkMapping::build(&net, &a, &plan).unwrap();
+    assert_eq!(m.total_tiles, 75, "unreplicated footprint");
+    let plans = build_plans(&net, &m, &a);
+    // The stem streams 112*112 pre-pool positions — the busiest stage.
+    assert_eq!(max_occupancy(&plans), 12544);
+    // Critical-path fill skeleton (longest path through the DAG).
+    let shape = PipelineShape::from_plans(&plans);
+    let last = shape.n_layers() - 1;
+    assert_eq!(shape.offsets[last] + shape.occupancy[last], 1956);
+    // Spot-check offsets along the path (mirror-derived).
+    let name = |i: usize| plans[i].name.as_str();
+    assert_eq!((name(0), shape.offsets[0]), ("conv1", 0));
+    assert_eq!((name(3), shape.offsets[3]), ("s1b1.add", 765));
+    assert_eq!((name(12), shape.offsets[12]), ("s2b2.conv_b", 1415));
+    assert_eq!((name(last), shape.offsets[last]), ("fc", 1948));
+}
+
+#[test]
+fn golden_resnet34_critical_path() {
+    let a = arch();
+    let net = resnet::build(ResNetVariant::R34);
+    let plan = ReplicationPlan::none(&net);
+    let m = NetworkMapping::build(&net, &a, &plan).unwrap();
+    assert_eq!(m.total_tiles, 137);
+    let plans = build_plans(&net, &m, &a);
+    assert_eq!(max_occupancy(&plans), 12544);
+    let shape = PipelineShape::from_plans(&plans);
+    let last = shape.n_layers() - 1;
+    assert_eq!(shape.offsets[last] + shape.occupancy[last], 3132);
+}
+
+#[test]
+fn golden_searched_resnet18_plan_is_budget_feasible() {
+    // The acceptance bar for `smart-pim plan --network resnet18`: a
+    // searched plan that fits the paper's node and lifts the stem
+    // bottleneck by well over an order of magnitude (the arithmetic mirror's
+    // plain greedy already reaches interval 49 in 313 tiles).
+    let a = arch();
+    let net = resnet::build(ResNetVariant::R18);
+    let result = plan_for(&net, &a, PAPER_BUDGET).unwrap();
+    let best = &result.best.assessment;
+    assert!(best.tiles <= PAPER_BUDGET, "{} tiles over budget", best.tiles);
+    assert!(
+        best.interval <= 196,
+        "searched interval {} did not lift the 12544 stem bottleneck",
+        best.interval
+    );
+    assert!(result.best.plan.factors.iter().all(|&f| f.is_power_of_two()));
+    validate_plan(&net, &a, &result.best.plan).unwrap();
+
+    // The cycle-accurate engine must confirm the modeled interval.
+    let mut cands = vec![result.best];
+    evaluate_candidates(&net, &a, &SweepRunner::new(), &mut cands, 10);
+    let measured = cands[0].measured_interval.expect("engine ran");
+    let modeled = cands[0].assessment.interval as f64;
+    assert!(
+        (measured - modeled).abs() <= modeled * 0.10 + 64.0,
+        "engine {measured} far from model {modeled}"
+    );
+}
+
+#[test]
+fn golden_resnet34_searched_plan_fits_too() {
+    let a = arch();
+    let net = resnet::build(ResNetVariant::R34);
+    let result = plan_for(&net, &a, PAPER_BUDGET).unwrap();
+    assert!(result.best.assessment.tiles <= PAPER_BUDGET);
+    assert!(
+        result.best.assessment.interval <= 392,
+        "interval {}",
+        result.best.assessment.interval
+    );
+}
+
+#[test]
+fn engine_runs_resnet18_and_converges_to_bottleneck() {
+    let a = arch();
+    let net = resnet::build(ResNetVariant::R18);
+    let plan = ReplicationPlan::none(&net);
+    let m = NetworkMapping::build(&net, &a, &plan).unwrap();
+    let plans = build_plans(&net, &m, &a);
+    let adj = NocAdjust::identity(plans.len());
+    let sim = Engine::new(&plans, &adj, true, 8).run();
+    for w in sim.completions.windows(2) {
+        assert!(w[0] < w[1], "completions not monotone");
+    }
+    let interval = sim.steady_interval().expect("8 images");
+    assert!(
+        (interval - 12544.0).abs() <= 64.0,
+        "interval {interval} != ~12544"
+    );
+}
+
+/// Rebuild a linear network through the explicit-graph constructor.
+fn as_graph(net: &Network) -> Network {
+    let edges: Vec<(usize, usize)> = (1..net.len()).map(|i| (i - 1, i)).collect();
+    Network::from_graph(net.name.clone(), net.layers().to_vec(), edges).unwrap()
+}
+
+#[test]
+fn prop_linear_dag_reproduces_vgg_chain_bit_identically() {
+    // For every VGG variant and both canonical plans, the from_graph
+    // construction must yield identical stage plans, pipeline shape, and
+    // engine schedule — the seed chain numbers are untouched by the DAG
+    // refactor.
+    let a = arch();
+    for v in VggVariant::ALL {
+        let chain = vgg::build(v);
+        let dag = as_graph(&chain);
+        assert!(chain.is_linear() && dag.is_linear());
+        assert_eq!(chain.macs(), dag.macs());
+        assert_eq!(chain.weights(), dag.weights());
+        for plan in [ReplicationPlan::none(&chain), ReplicationPlan::fig7(v)] {
+            let mc = NetworkMapping::build(&chain, &a, &plan).unwrap();
+            let md = NetworkMapping::build(&dag, &a, &plan).unwrap();
+            assert_eq!(mc.total_tiles, md.total_tiles, "{}", v.name());
+            let pc = build_plans(&chain, &mc, &a);
+            let pd = build_plans(&dag, &md, &a);
+            assert_eq!(pc.len(), pd.len());
+            for (x, y) in pc.iter().zip(&pd) {
+                assert_eq!(x.name, y.name);
+                assert_eq!(x.p_total, y.p_total, "{}", x.name);
+                assert_eq!(x.rate, y.rate, "{}", x.name);
+                assert_eq!(x.depth, y.depth, "{}", x.name);
+                assert_eq!(x.preds, y.preds, "{}", x.name);
+                assert_eq!(x.demands, y.demands, "{}", x.name);
+            }
+            assert_eq!(max_occupancy(&pc), max_occupancy(&pd));
+            let sc = PipelineShape::from_plans(&pc);
+            let sd = PipelineShape::from_plans(&pd);
+            assert_eq!(sc.offsets, sd.offsets, "{}", v.name());
+            assert_eq!(sc.occupancy, sd.occupancy, "{}", v.name());
+            // Cycle-accurate schedules are identical, image for image.
+            let adj = NocAdjust::identity(pc.len());
+            let rc = Engine::new(&pc, &adj, true, 4).run();
+            let rd = Engine::new(&pd, &adj, true, 4).run();
+            assert_eq!(rc.completions, rd.completions, "{}", v.name());
+            assert_eq!(rc.injections, rd.injections, "{}", v.name());
+            assert_eq!(rc.cycles, rd.cycles, "{}", v.name());
+        }
+    }
+}
+
+#[test]
+fn prop_vgg_e_fig7_fill_matches_mirror() {
+    // The chain fill constant (mirror-derived 1331) pins the critical-path
+    // arithmetic on the degenerate DAG: offsets accumulate exactly as the
+    // seed's cumulative-sum recurrence did.
+    let a = arch();
+    let net = vgg::build(VggVariant::E);
+    let m = NetworkMapping::build(&net, &a, &ReplicationPlan::fig7(VggVariant::E)).unwrap();
+    let plans = build_plans(&net, &m, &a);
+    let shape = PipelineShape::from_plans(&plans);
+    let last = shape.n_layers() - 1;
+    assert_eq!(shape.offsets[last] + shape.occupancy[last], 1331);
+}
