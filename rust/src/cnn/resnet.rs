@@ -51,9 +51,15 @@ impl std::str::FromStr for ResNetVariant {
     type Err = String;
 
     fn from_str(s: &str) -> Result<Self, Self::Err> {
-        match s.to_ascii_lowercase().as_str() {
-            "18" | "r18" | "resnet18" | "resnet-18" => Ok(ResNetVariant::R18),
-            "34" | "r34" | "resnet34" | "resnet-34" => Ok(ResNetVariant::R34),
+        // Accept separator spellings too: resnet_18 / resnet-18 == resnet18.
+        let norm: String = s
+            .chars()
+            .filter(|&c| c != '_' && c != '-')
+            .map(|c| c.to_ascii_lowercase())
+            .collect();
+        match norm.as_str() {
+            "18" | "r18" | "resnet18" => Ok(ResNetVariant::R18),
+            "34" | "r34" | "resnet34" => Ok(ResNetVariant::R34),
             other => Err(format!("unknown ResNet variant {other:?} (18 or 34)")),
         }
     }

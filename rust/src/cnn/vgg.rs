@@ -92,7 +92,13 @@ impl std::str::FromStr for VggVariant {
     type Err = String;
 
     fn from_str(s: &str) -> Result<Self, Self::Err> {
-        match s.to_ascii_uppercase().as_str() {
+        // Accept separator spellings too: vgg_e / vgg-e == vggE.
+        let norm: String = s
+            .chars()
+            .filter(|&c| c != '_' && c != '-')
+            .map(|c| c.to_ascii_uppercase())
+            .collect();
+        match norm.as_str() {
             "A" | "VGGA" | "VGG11" => Ok(VggVariant::A),
             "B" | "VGGB" | "VGG13" => Ok(VggVariant::B),
             "C" | "VGGC" => Ok(VggVariant::C),

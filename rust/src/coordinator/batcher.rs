@@ -2,9 +2,14 @@
 //! property-testable): prefer the largest executable batch the queue can
 //! fill; after `max_wait`, serve what is there — padding a nearly-full
 //! large batch when the padding overhead beats running singles.
+//!
+//! Time is integer [`Clock`](super::clock::Clock) ticks, never
+//! `std::time::Instant`: the same `form` logic runs under the server's
+//! [`WallClock`](super::clock::WallClock) (ticks = µs) and the cluster
+//! simulator's [`VirtualClock`](super::clock::VirtualClock) (ticks =
+//! cycles), and unit tests just pass integers — no sleeps.
 
 use std::collections::VecDeque;
-use std::time::{Duration, Instant};
 
 use super::request::Request;
 
@@ -30,8 +35,9 @@ impl FormedBatch {
 pub struct BatchPolicy {
     /// Supported batch sizes, descending (e.g. [4, 1]).
     pub sizes: Vec<usize>,
-    /// Maximum time the oldest request may wait before we stop hoarding.
-    pub max_wait: Duration,
+    /// Maximum clock ticks the oldest request may wait before we stop
+    /// hoarding (µs under the wall clock, cycles under a virtual one).
+    pub max_wait: u64,
     /// Pad to a larger batch when at least this fraction of it is real
     /// work (e.g. 0.5: two reals may ride a 4-batch).
     pub min_fill: f64,
@@ -41,16 +47,16 @@ impl Default for BatchPolicy {
     fn default() -> Self {
         Self {
             sizes: vec![4, 1],
-            max_wait: Duration::from_millis(5),
+            max_wait: 5_000, // 5 ms under the server's µs wall clock
             min_fill: 0.5,
         }
     }
 }
 
 impl BatchPolicy {
-    /// Decide the next batch from `queue` at time `now`. Returns `None` to
+    /// Decide the next batch from `queue` at tick `now`. Returns `None` to
     /// keep waiting. Pops the consumed requests from the queue.
-    pub fn form(&self, queue: &mut VecDeque<Request>, now: Instant) -> Option<FormedBatch> {
+    pub fn form(&self, queue: &mut VecDeque<Request>, now: u64) -> Option<FormedBatch> {
         let oldest = queue.front()?;
         let biggest = *self.sizes.first()?;
         if queue.len() >= biggest {
@@ -60,7 +66,7 @@ impl BatchPolicy {
                 padding: 0,
             });
         }
-        if now.duration_since(oldest.submitted) < self.max_wait {
+        if now.saturating_sub(oldest.submitted) < self.max_wait {
             return None; // hoard a little longer
         }
         // Timeout: serve everything pending with the cheapest shape mix.
@@ -93,33 +99,38 @@ impl BatchPolicy {
             requests,
         })
     }
+
+    /// The tick at which `form` stops hoarding a queue whose oldest
+    /// request was submitted at `submitted`: its batch-timeout deadline.
+    pub fn deadline(&self, submitted: u64) -> u64 {
+        submitted + self.max_wait
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    fn req(id: u64, age: Duration, now: Instant) -> Request {
+    fn req(id: u64, age: u64, now: u64) -> Request {
         Request {
             id,
             image: vec![0.0; 4],
-            submitted: now - age,
+            submitted: now.saturating_sub(age),
         }
     }
 
     fn policy() -> BatchPolicy {
         BatchPolicy {
             sizes: vec![4, 1],
-            max_wait: Duration::from_millis(5),
+            max_wait: 5_000,
             min_fill: 0.5,
         }
     }
 
     #[test]
     fn full_batch_forms_immediately() {
-        let now = Instant::now();
-        let mut q: VecDeque<Request> =
-            (0..5).map(|i| req(i, Duration::ZERO, now)).collect();
+        let now = 10_000;
+        let mut q: VecDeque<Request> = (0..5).map(|i| req(i, 0, now)).collect();
         let b = policy().form(&mut q, now).unwrap();
         assert_eq!(b.requests.len(), 4);
         assert_eq!(b.padding, 0);
@@ -128,18 +139,16 @@ mod tests {
 
     #[test]
     fn fresh_partial_waits() {
-        let now = Instant::now();
-        let mut q: VecDeque<Request> =
-            (0..2).map(|i| req(i, Duration::from_millis(1), now)).collect();
+        let now = 10_000;
+        let mut q: VecDeque<Request> = (0..2).map(|i| req(i, 1_000, now)).collect();
         assert!(policy().form(&mut q, now).is_none());
         assert_eq!(q.len(), 2);
     }
 
     #[test]
     fn stale_pair_pads_to_four() {
-        let now = Instant::now();
-        let mut q: VecDeque<Request> =
-            (0..2).map(|i| req(i, Duration::from_millis(10), now)).collect();
+        let now = 20_000;
+        let mut q: VecDeque<Request> = (0..2).map(|i| req(i, 10_000, now)).collect();
         let b = policy().form(&mut q, now).unwrap();
         assert_eq!(b.requests.len(), 2);
         assert_eq!(b.padding, 2);
@@ -149,9 +158,8 @@ mod tests {
 
     #[test]
     fn stale_single_runs_alone() {
-        let now = Instant::now();
-        let mut q: VecDeque<Request> =
-            std::iter::once(req(0, Duration::from_millis(10), now)).collect();
+        let now = 20_000;
+        let mut q: VecDeque<Request> = std::iter::once(req(0, 10_000, now)).collect();
         let b = policy().form(&mut q, now).unwrap();
         assert_eq!(b.requests.len(), 1);
         assert_eq!(b.padding, 0); // 1 < 4 * 0.5: not worth padding
@@ -161,16 +169,27 @@ mod tests {
     #[test]
     fn empty_queue_yields_none() {
         let mut q = VecDeque::new();
-        assert!(policy().form(&mut q, Instant::now()).is_none());
+        assert!(policy().form(&mut q, 0).is_none());
     }
 
     #[test]
     fn order_preserved_fifo() {
-        let now = Instant::now();
-        let mut q: VecDeque<Request> =
-            (0..6).map(|i| req(i, Duration::ZERO, now)).collect();
+        let now = 10_000;
+        let mut q: VecDeque<Request> = (0..6).map(|i| req(i, 0, now)).collect();
         let b = policy().form(&mut q, now).unwrap();
         let ids: Vec<u64> = b.requests.iter().map(|r| r.id).collect();
         assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn timeout_fires_exactly_at_deadline() {
+        // Deterministic virtual-time check that needed sleeps before the
+        // Clock refactor: one tick before the deadline hoards, at it serves.
+        let p = policy();
+        let mut q: VecDeque<Request> = std::iter::once(req(0, 0, 100)).collect();
+        let deadline = p.deadline(100);
+        assert!(p.form(&mut q, deadline - 1).is_none());
+        let b = p.form(&mut q, deadline).unwrap();
+        assert_eq!(b.requests.len(), 1);
     }
 }

@@ -1,0 +1,116 @@
+//! Time sources for the serving stack.
+//!
+//! The batcher's hoarding decision ("has the oldest request waited longer
+//! than `max_wait`?") used to be written against `std::time::Instant`,
+//! which made [`super::BatchPolicy::form`] untestable without sleeps and
+//! unusable from the virtual-time cluster simulator. A [`Clock`] produces
+//! monotone integer *ticks* instead; what a tick means is the clock's
+//! business:
+//!
+//! - [`WallClock`] — microseconds since the clock was created. The real
+//!   [`super::Server`] uses one; a 5 ms `max_wait` is `5_000` ticks.
+//! - [`VirtualClock`] — simulated cycles, advanced explicitly by a
+//!   discrete-event loop. The cluster simulator
+//!   ([`crate::cluster`]) runs the *same* `BatchPolicy` logic in
+//!   virtual time, so batching behavior is identical in both worlds.
+
+use std::time::Instant;
+
+/// A monotone source of integer ticks. Implementations define the tick
+/// unit (µs for [`WallClock`], simulated cycles for [`VirtualClock`]).
+pub trait Clock {
+    /// Current time in ticks. Must never decrease.
+    fn now(&self) -> u64;
+}
+
+/// Wall-clock ticks: microseconds elapsed since construction.
+///
+/// Copyable so the server handle and its worker thread can share one
+/// epoch — both sides then agree on what tick `N` means.
+#[derive(Debug, Clone, Copy)]
+pub struct WallClock {
+    origin: Instant,
+}
+
+impl WallClock {
+    /// A clock whose tick 0 is "now".
+    pub fn new() -> Self {
+        Self {
+            origin: Instant::now(),
+        }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> u64 {
+        self.origin.elapsed().as_micros() as u64
+    }
+}
+
+/// Virtual ticks: a counter advanced explicitly by a simulator's event
+/// loop. One tick is one simulated cycle.
+#[derive(Debug, Clone, Default)]
+pub struct VirtualClock {
+    now: u64,
+}
+
+impl VirtualClock {
+    /// A clock at cycle 0.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Jump to `cycle`; panics on time running backwards (an event-loop
+    /// ordering bug, worth failing loudly on).
+    pub fn advance_to(&mut self, cycle: u64) {
+        assert!(
+            cycle >= self.now,
+            "virtual clock moved backwards: {} -> {cycle}",
+            self.now
+        );
+        self.now = cycle;
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> u64 {
+        self.now
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_clock_is_monotone() {
+        let c = WallClock::new();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn virtual_clock_advances() {
+        let mut c = VirtualClock::new();
+        assert_eq!(c.now(), 0);
+        c.advance_to(100);
+        assert_eq!(c.now(), 100);
+        c.advance_to(100); // same cycle is fine
+        assert_eq!(c.now(), 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "moved backwards")]
+    fn virtual_clock_rejects_time_travel() {
+        let mut c = VirtualClock::new();
+        c.advance_to(10);
+        c.advance_to(9);
+    }
+}

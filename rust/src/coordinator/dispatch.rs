@@ -67,20 +67,37 @@ impl PipelineShape {
 pub struct Dispatcher {
     shape: PipelineShape,
     interval: u64,
-    /// Injection beats of all admitted images.
+    /// Injection beats of all admitted images (empty when untracked).
     injections: Vec<u64>,
+    /// Whether `admit` logs each injection beat for the verifiers.
+    tracked: bool,
     next_free: u64,
 }
 
 impl Dispatcher {
-    /// A dispatcher enforcing `shape.min_interval()` between injections.
+    /// A dispatcher enforcing `shape.min_interval()` between injections,
+    /// logging every injection beat so the hazard verifiers can audit the
+    /// whole schedule.
     pub fn new(shape: PipelineShape) -> Self {
         let interval = shape.min_interval();
         Self {
             shape,
             interval,
             injections: Vec::new(),
+            tracked: true,
             next_free: 0,
+        }
+    }
+
+    /// A dispatcher that skips the per-injection history log — O(1) memory
+    /// for long-horizon simulations (the cluster loop admits one image per
+    /// request and only needs `next_free`/`completion`). The verifiers see
+    /// an empty history and pass vacuously: audit with a tracked
+    /// dispatcher in tests.
+    pub fn untracked(shape: PipelineShape) -> Self {
+        Self {
+            tracked: false,
+            ..Self::new(shape)
         }
     }
 
@@ -92,7 +109,9 @@ impl Dispatcher {
     /// Admit an image arriving at beat `now`; returns its injection beat.
     pub fn admit(&mut self, now: u64) -> u64 {
         let t = now.max(self.next_free);
-        self.injections.push(t);
+        if self.tracked {
+            self.injections.push(t);
+        }
         self.next_free = t + self.interval;
         t
     }
@@ -100,6 +119,19 @@ impl Dispatcher {
     /// Injection beats of every admitted image, in admission order.
     pub fn injections(&self) -> &[u64] {
         &self.injections
+    }
+
+    /// First beat at which a new injection would not violate the hazard
+    /// interval — the pipeline's backlog horizon. An image admitted at
+    /// `now` injects at `now.max(next_free())`, so `next_free() - now`
+    /// is the pending pipeline wait (0 when the pipeline is caught up).
+    pub fn next_free(&self) -> u64 {
+        self.next_free
+    }
+
+    /// The enforced injection interval (`shape.min_interval()`).
+    pub fn interval(&self) -> u64 {
+        self.interval
     }
 
     /// Completion beat of the image injected at `inject`.
@@ -192,6 +224,20 @@ mod tests {
         for w in inj.windows(2) {
             assert!(w[1] - w[0] >= 3136);
         }
+    }
+
+    #[test]
+    fn untracked_dispatcher_matches_but_keeps_no_history() {
+        let s = shape();
+        let mut a = Dispatcher::new(s.clone());
+        let mut b = Dispatcher::untracked(s);
+        for i in 0..10u64 {
+            assert_eq!(a.admit(i * 100), b.admit(i * 100));
+        }
+        assert_eq!(a.injections().len(), 10);
+        assert!(b.injections().is_empty(), "untracked keeps no log");
+        assert_eq!(a.next_free(), b.next_free());
+        assert_eq!(a.interval(), b.interval());
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! here.
 
 pub mod batcher;
+pub mod clock;
 pub mod dispatch;
 pub mod ingress;
 pub mod request;
@@ -13,6 +14,7 @@ pub mod server;
 pub mod startup;
 
 pub use batcher::{BatchPolicy, FormedBatch};
+pub use clock::{Clock, VirtualClock, WallClock};
 pub use dispatch::{Dispatcher, PipelineShape};
 pub use ingress::{assess_ingress, IngressReport};
 pub use request::{Request, Response, ServeStats};

@@ -9,8 +9,9 @@ pub struct Request {
     pub id: u64,
     /// Flattened input image.
     pub image: Vec<f32>,
-    /// Submission timestamp (latency accounting).
-    pub submitted: Instant,
+    /// Submission time in [`Clock`](super::clock::Clock) ticks (µs for the
+    /// real server, simulated cycles in the cluster simulator).
+    pub submitted: u64,
 }
 
 /// The served result.

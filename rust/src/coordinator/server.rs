@@ -7,7 +7,7 @@
 use std::collections::VecDeque;
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::format_err;
 use crate::util::error::Result;
@@ -16,6 +16,7 @@ use crate::runtime::vgg_tiny::{CLASSES, IMAGE_LEN};
 use crate::runtime::{Runtime, VggTiny};
 
 use super::batcher::BatchPolicy;
+use super::clock::{Clock, WallClock};
 use super::request::{Request, Response, ServeStats};
 
 enum Msg {
@@ -28,17 +29,21 @@ pub struct Server {
     tx: Sender<Msg>,
     worker: Option<JoinHandle<()>>,
     next_id: u64,
+    /// Tick source shared with the worker (µs since server start); requests
+    /// are stamped against it so the batcher sees pure integer time.
+    clock: WallClock,
 }
 
 impl Server {
     /// Start the worker; fails fast (through the returned channel probe) if
     /// artifacts are missing.
     pub fn start(artifacts_dir: String, policy: BatchPolicy) -> Result<Self> {
+        let clock = WallClock::new();
         let (tx, rx) = mpsc::channel::<Msg>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
         let worker = std::thread::Builder::new()
             .name("smart-pim-serve".into())
-            .spawn(move || worker_loop(artifacts_dir, policy, rx, ready_tx))?;
+            .spawn(move || worker_loop(artifacts_dir, policy, clock, rx, ready_tx))?;
         ready_rx
             .recv()
             .map_err(|_| format_err!("worker died during startup"))?
@@ -47,6 +52,7 @@ impl Server {
             tx,
             worker: Some(worker),
             next_id: 0,
+            clock,
         })
     }
 
@@ -56,7 +62,7 @@ impl Server {
         let req = Request {
             id: self.next_id,
             image,
-            submitted: Instant::now(),
+            submitted: self.clock.now(),
         };
         self.next_id += 1;
         // A send error means the worker is gone; the receiver will error.
@@ -97,6 +103,7 @@ impl Drop for Server {
 fn worker_loop(
     artifacts_dir: String,
     policy: BatchPolicy,
+    clock: WallClock,
     rx: Receiver<Msg>,
     ready_tx: Sender<Result<(), String>>,
 ) {
@@ -156,7 +163,7 @@ fn worker_loop(
         }
 
         // Form and serve batches. At shutdown, flush regardless of age.
-        let now = Instant::now();
+        let now = clock.now();
         let flushing = shutdown_to.is_some();
         let batch = if flushing && !queue.is_empty() {
             let n = queue.len().min(4);
@@ -177,7 +184,6 @@ fn worker_loop(
                 flat.extend_from_slice(&r.image);
             }
             flat.resize(size * IMAGE_LEN, 0.0);
-            let done = Instant::now();
             match model.infer(&flat) {
                 Ok(logits) => {
                     for (i, r) in b.requests.iter().enumerate() {
@@ -192,7 +198,11 @@ fn worker_loop(
                             id: r.id,
                             logits: row.to_vec(),
                             class,
-                            latency: done.elapsed() + (done - r.submitted),
+                            // Queueing + batching + execution, µs ticks on
+                            // the shared wall clock.
+                            latency: Duration::from_micros(
+                                clock.now().saturating_sub(r.submitted),
+                            ),
                             batch: size,
                         };
                         stats.record(&resp, Instant::now());

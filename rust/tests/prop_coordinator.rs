@@ -4,7 +4,6 @@
 //! engine's schedule respects dependencies for every image.
 
 use std::collections::VecDeque;
-use std::time::{Duration, Instant};
 
 use smart_pim::cnn::{vgg, VggVariant};
 use smart_pim::config::ArchConfig;
@@ -17,13 +16,15 @@ use smart_pim::sim::engine::{Engine, NocAdjust};
 use smart_pim::util::prop::{check, Config, Gen};
 use smart_pim::{prop_assert, prop_assert_eq};
 
-fn random_queue(g: &mut Gen, now: Instant) -> VecDeque<Request> {
+/// A queue of requests submitted up to 20 000 ticks before `now` (ticks are
+/// µs under the server's wall clock — the batcher only sees integers).
+fn random_queue(g: &mut Gen, now: u64) -> VecDeque<Request> {
     let n = g.scaled(40);
     (0..n as u64)
         .map(|id| Request {
             id,
             image: vec![0.0; 4],
-            submitted: now - Duration::from_micros(g.rng.below(20_000)),
+            submitted: now.saturating_sub(g.rng.below(20_000)),
         })
         .collect()
 }
@@ -31,7 +32,7 @@ fn random_queue(g: &mut Gen, now: Instant) -> VecDeque<Request> {
 fn random_policy(g: &mut Gen) -> BatchPolicy {
     BatchPolicy {
         sizes: vec![4, 1],
-        max_wait: Duration::from_micros(1 + g.rng.below(10_000)),
+        max_wait: 1 + g.rng.below(10_000),
         min_fill: 0.25 + g.rng.next_f64() * 0.5,
     }
 }
@@ -39,17 +40,17 @@ fn random_policy(g: &mut Gen) -> BatchPolicy {
 #[test]
 fn batcher_never_loses_duplicates_or_reorders() {
     check("batcher-conservation", &Config::default(), |g| {
-        let now = Instant::now();
+        let now = 100_000u64;
         let mut q = random_queue(g, now);
         let total = q.len();
         let policy = random_policy(g);
         let mut seen = Vec::new();
-        let mut guard = 0;
+        let mut guard = 0u64;
         while !q.is_empty() {
             guard += 1;
             prop_assert!(guard < 10_000, "batcher stalled");
             // Advance time far enough that timeouts always fire eventually.
-            let t = now + Duration::from_secs(guard);
+            let t = now + guard * 1_000_000;
             if let Some(b) = policy.form(&mut q, t) {
                 prop_assert!(b.size() <= 4, "batch size {}", b.size());
                 prop_assert!(!b.requests.is_empty(), "empty batch");
@@ -68,10 +69,10 @@ fn batcher_never_loses_duplicates_or_reorders() {
 #[test]
 fn batcher_padding_bounded_by_min_fill() {
     check("batcher-padding", &Config::default(), |g| {
-        let now = Instant::now();
+        let now = 100_000u64;
         let mut q = random_queue(g, now);
         let policy = random_policy(g);
-        let t = now + Duration::from_secs(1);
+        let t = now + 1_000_000;
         while let Some(b) = policy.form(&mut q, t) {
             if b.padding > 0 {
                 let fill = b.requests.len() as f64 / b.size() as f64;
