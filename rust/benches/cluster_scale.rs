@@ -1,0 +1,192 @@
+//! Bench: cluster-serving scalability — end-to-end latency percentiles and
+//! delivered throughput across a fleet-size x offered-QPS grid of VGG-E
+//! Fig. 7 replicas, plus a capacity-planning run, timed serially and
+//! through the parallel sweep runner. Emits `BENCH_cluster.json`
+//! (override the path with `SMART_PIM_CLUSTER_BENCH_JSON`; set
+//! `SMART_PIM_BENCH_QUICK=1` for the CI-sized grid) so the cluster perf
+//! trajectory is trackable across PRs.
+
+use std::time::Instant;
+
+use smart_pim::cluster::{
+    plan_capacity, rate_from_qps, simulate, ClusterConfig, ClusterStats, NodeModel,
+};
+use smart_pim::cnn::{vgg, VggVariant};
+use smart_pim::config::ArchConfig;
+use smart_pim::mapping::ReplicationPlan;
+use smart_pim::sweep::SweepRunner;
+use smart_pim::util::bench::fmt_duration;
+use smart_pim::util::table::{fnum, Table};
+use smart_pim::util::Json;
+
+fn main() {
+    let arch = ArchConfig::paper_node();
+    let net = vgg::build(VggVariant::E);
+    let plan = ReplicationPlan::fig7(VggVariant::E);
+    let model = NodeModel::from_workload(&net, &arch, &plan).expect("VGG-E fig7 maps");
+    let quick = std::env::var("SMART_PIM_BENCH_QUICK").is_ok();
+
+    let (fleet_sizes, qps_list, horizon): (&[usize], &[f64], u64) = if quick {
+        (&[1, 2], &[500.0, 1500.0], 1_000_000)
+    } else {
+        (
+            &[1, 2, 4, 8],
+            &[250.0, 500.0, 1000.0, 2000.0, 4000.0, 8000.0],
+            4_000_000,
+        )
+    };
+    let points: Vec<(usize, f64)> = fleet_sizes
+        .iter()
+        .flat_map(|&n| qps_list.iter().map(move |&q| (n, q)))
+        .collect();
+    let cfg_for = |nodes: usize, qps: f64| ClusterConfig {
+        nodes,
+        rate_per_cycle: rate_from_qps(qps, arch.logical_cycle_ns),
+        horizon_cycles: horizon,
+        ..ClusterConfig::default()
+    };
+    let run_grid = |runner: &SweepRunner| -> Vec<ClusterStats> {
+        runner.run(&points, |_, &(nodes, qps)| {
+            simulate(&model, &cfg_for(nodes, qps))
+        })
+    };
+
+    println!(
+        "== cluster scalability grid: {} points ({} fleets x {} loads), \
+         horizon {horizon} cycles ==",
+        points.len(),
+        fleet_sizes.len(),
+        qps_list.len()
+    );
+    let runner = SweepRunner::new();
+    let t0 = Instant::now();
+    let serial = run_grid(&SweepRunner::with_threads(1));
+    let serial_secs = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let parallel = run_grid(&runner);
+    let parallel_secs = t0.elapsed().as_secs_f64();
+
+    // Parity: the sweep runner must not perturb a deterministic grid.
+    let parity_ok = serial.iter().zip(&parallel).all(|(a, b)| {
+        a.offered == b.offered
+            && a.latency.p99() == b.latency.p99()
+            && a.node_utilization == b.node_utilization
+    });
+    assert!(parity_ok, "parallel sweep changed deterministic cluster stats");
+
+    let mut t = Table::new(
+        "cluster grid — latency (cycles) and delivered throughput vs nodes x qps",
+        &[
+            "nodes", "qps", "offered", "p50", "p99", "p999", "req/s", "util", "rejected",
+        ],
+    );
+    for ((nodes, qps), s) in points.iter().zip(&parallel) {
+        t.row(&[
+            nodes.to_string(),
+            format!("{qps}"),
+            s.offered.to_string(),
+            s.latency.p50().to_string(),
+            s.latency.p99().to_string(),
+            s.latency.p999().to_string(),
+            fnum(s.throughput_rps(arch.logical_cycle_ns), 0),
+            format!("{:.0}%", 100.0 * s.mean_utilization()),
+            s.rejected.to_string(),
+        ]);
+    }
+    t.print();
+    println!(
+        "grid wall: serial {} | {} threads {} ({:.2}x)",
+        fmt_duration(serial_secs),
+        runner.threads(),
+        fmt_duration(parallel_secs),
+        serial_secs / parallel_secs.max(1e-12)
+    );
+
+    // Capacity planning demo: fleet for 3x one node's capacity at a p99
+    // SLO of two pipeline beats above the fill.
+    let cap_qps = 3.0 / (model.interval as f64 * arch.logical_cycle_ns * 1e-9);
+    let target = model.fill + 2 * model.interval;
+    let t0 = Instant::now();
+    let cap = plan_capacity(
+        &model,
+        &cfg_for(1, cap_qps),
+        target,
+        64,
+        &runner,
+    );
+    let cap_secs = t0.elapsed().as_secs_f64();
+    let cap_json = match &cap {
+        Ok(r) => {
+            println!(
+                "capacity: {} nodes meet p99 <= {target} cycles at {} qps \
+                 ({} points probed, {})",
+                r.nodes,
+                fnum(cap_qps, 0),
+                r.evaluated.len(),
+                fmt_duration(cap_secs)
+            );
+            Json::obj(vec![
+                ("qps", cap_qps.into()),
+                ("p99_target_cycles", target.into()),
+                ("nodes", r.nodes.into()),
+                ("points_probed", r.evaluated.len().into()),
+                ("confirmed_p99", r.stats.latency.p99().into()),
+                ("wall_secs", cap_secs.into()),
+            ])
+        }
+        Err(e) => {
+            println!("capacity search failed: {e}");
+            Json::obj(vec![("error", e.as_str().into())])
+        }
+    };
+
+    // ---- machine-readable trajectory ----------------------------------
+    let json_path = std::env::var("SMART_PIM_CLUSTER_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_cluster.json".to_string());
+    let epoch_secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let grid: Vec<Json> = points
+        .iter()
+        .zip(&parallel)
+        .map(|(&(nodes, qps), s)| {
+            let mut row: Vec<(String, Json)> =
+                vec![("nodes".into(), nodes.into()), ("qps".into(), qps.into())];
+            if let Json::Obj(kvs) = s.to_json(arch.logical_cycle_ns) {
+                row.extend(kvs);
+            }
+            Json::Obj(row)
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("schema", "smart-pim/bench-cluster/v1".into()),
+        ("unix_time", epoch_secs.into()),
+        ("workload", net.name.as_str().into()),
+        ("plan", "fig7".into()),
+        ("interval_cycles", model.interval.into()),
+        ("fill_cycles", model.fill.into()),
+        ("horizon_cycles", horizon.into()),
+        ("quick", quick.into()),
+        ("threads", runner.threads().into()),
+        ("grid", Json::Arr(grid)),
+        (
+            "perf",
+            Json::obj(vec![
+                ("points", points.len().into()),
+                ("serial_secs", serial_secs.into()),
+                ("parallel_secs", parallel_secs.into()),
+                (
+                    "speedup",
+                    (serial_secs / parallel_secs.max(1e-12)).into(),
+                ),
+                ("parity_ok", parity_ok.into()),
+            ]),
+        ),
+        ("capacity", cap_json),
+    ]);
+    match std::fs::write(&json_path, doc.render_pretty()) {
+        Ok(()) => println!("wrote {json_path}"),
+        Err(e) => eprintln!("could not write {json_path}: {e}"),
+    }
+}

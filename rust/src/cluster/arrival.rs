@@ -1,0 +1,345 @@
+//! Deterministic seeded arrival processes in simulated cycles.
+//!
+//! Every generator is a pure function of `(rate, seed)` — wall-clock never
+//! enters — so a cluster run replays bit-identically from its seed. The
+//! Poisson generator is built on a *unit-rate* exponential stream scaled by
+//! `1/rate`: the same seed at a higher offered rate produces the same
+//! event stream compressed in time. That construction makes per-request
+//! queueing waits monotone in the offered rate (Lindley's recurrence under
+//! gap-wise compression), which `tests/prop_cluster.rs` pins.
+
+use crate::util::{Json, Rng};
+
+/// A request arrival process over simulated cycles.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalProcess {
+    /// Memoryless arrivals at the offered rate.
+    Poisson,
+    /// MMPP on-off bursts: exponential sojourns in an ON state arriving at
+    /// `(on_mean + off_mean) / on_mean` times the offered rate, and a
+    /// silent OFF state — the long-run mean rate equals the offered rate.
+    Bursty {
+        /// Mean ON-state sojourn in cycles.
+        on_mean: u64,
+        /// Mean OFF-state sojourn in cycles.
+        off_mean: u64,
+    },
+    /// Diurnal ramp: a non-homogeneous Poisson process whose instantaneous
+    /// rate sweeps `offered * (1 + sin(2*pi*t/period))` — peak twice the
+    /// offered rate, trough zero — via thinning.
+    Diurnal {
+        /// Cycles per full ramp period.
+        period: u64,
+    },
+    /// Replay explicit arrival cycles (e.g. from a recorded trace file).
+    Trace(Vec<u64>),
+}
+
+impl ArrivalProcess {
+    /// Resolve a CLI pattern name with this module's default parameters.
+    pub fn from_name(name: &str) -> Result<Self, String> {
+        match name {
+            "poisson" => Ok(Self::Poisson),
+            "bursty" => Ok(Self::Bursty {
+                on_mean: 20_000,
+                off_mean: 20_000,
+            }),
+            "diurnal" => Ok(Self::Diurnal { period: 1_000_000 }),
+            other => Err(format!(
+                "unknown arrival pattern {other:?} \
+                 (poisson | bursty | diurnal | trace via --trace FILE)"
+            )),
+        }
+    }
+
+    /// Load a trace: a JSON array of arrival cycles, or an object with an
+    /// `arrivals_cycles` array. Cycles are sorted if needed.
+    pub fn from_trace_json(doc: &Json) -> Result<Self, String> {
+        let arr = doc
+            .as_arr()
+            .or_else(|| doc.get("arrivals_cycles").and_then(Json::as_arr))
+            .ok_or_else(|| {
+                "trace must be a JSON array of cycles or {\"arrivals_cycles\": [...]}"
+                    .to_string()
+            })?;
+        let mut cycles = Vec::with_capacity(arr.len());
+        for (i, v) in arr.iter().enumerate() {
+            let x = v
+                .as_f64()
+                .ok_or_else(|| format!("trace entry {i} is not a number"))?;
+            if !x.is_finite() || x < 0.0 {
+                return Err(format!("trace entry {i} ({x}) is not a valid cycle"));
+            }
+            cycles.push(x as u64);
+        }
+        cycles.sort_unstable();
+        Ok(Self::Trace(cycles))
+    }
+
+    /// Load a trace file from disk (see [`Self::from_trace_json`]).
+    pub fn from_trace_file(path: &str) -> Result<Self, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("reading trace {path}: {e}"))?;
+        let doc = Json::parse(&text).map_err(|e| format!("parsing trace {path}: {e}"))?;
+        Self::from_trace_json(&doc)
+    }
+
+    /// Pattern name for reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Poisson => "poisson",
+            Self::Bursty { .. } => "bursty",
+            Self::Diurnal { .. } => "diurnal",
+            Self::Trace(_) => "trace",
+        }
+    }
+
+    /// Arrival cycles in `[0, horizon)` at `rate` requests/cycle, sorted
+    /// non-decreasing. `rate` must be positive for the synthetic processes
+    /// (a trace ignores it).
+    pub fn generate(&self, rate: f64, horizon: u64, seed: u64) -> Vec<u64> {
+        match self {
+            Self::Trace(cycles) => cycles.iter().copied().filter(|&c| c < horizon).collect(),
+            _ => self.stream(rate, seed, Limit::Horizon(horizon)),
+        }
+    }
+
+    /// The first `n` arrival cycles at `rate` requests/cycle (a trace
+    /// yields its first `n` entries). Used by fixed-population experiments
+    /// — the monotonicity properties compare equal request counts.
+    pub fn generate_n(&self, rate: f64, n: usize, seed: u64) -> Vec<u64> {
+        match self {
+            Self::Trace(cycles) => cycles.iter().copied().take(n).collect(),
+            _ => self.stream(rate, seed, Limit::Count(n)),
+        }
+    }
+
+    fn stream(&self, rate: f64, seed: u64, limit: Limit) -> Vec<u64> {
+        assert!(
+            rate > 0.0 && rate.is_finite(),
+            "synthetic arrivals need a positive rate, got {rate}"
+        );
+        let mut rng = Rng::new(seed);
+        let mut out = Vec::new();
+        match *self {
+            Self::Poisson => {
+                // Unit-rate exponential stream, scaled: t_k = S_k / rate.
+                let mut unit_t = 0.0f64;
+                while limit.wants_more(&out, unit_t / rate) {
+                    unit_t += exp1(&mut rng);
+                    out.push((unit_t / rate) as u64);
+                }
+                limit.trim(&mut out);
+            }
+            Self::Bursty { on_mean, off_mean } => {
+                let duty = on_mean as f64 / (on_mean + off_mean) as f64;
+                let on_rate = rate / duty;
+                let mut t = 0.0f64; // current cycle (f64 for sub-cycle gaps)
+                let mut on = true; // start bursting: tests see arrivals early
+                let mut window_end = exp_mean(&mut rng, on_mean as f64);
+                while limit.wants_more(&out, t) {
+                    if on {
+                        let gap = exp1(&mut rng) / on_rate;
+                        if t + gap < window_end {
+                            t += gap;
+                            out.push(t as u64);
+                            continue;
+                        }
+                    }
+                    // Sojourn exhausted (or OFF): hop to the next window.
+                    t = window_end;
+                    on = !on;
+                    let mean = (if on { on_mean } else { off_mean }) as f64;
+                    window_end = t + exp_mean(&mut rng, mean);
+                }
+                limit.trim(&mut out);
+            }
+            Self::Diurnal { period } => {
+                // Thinning against the peak rate 2*rate.
+                let peak = 2.0 * rate;
+                let w = std::f64::consts::TAU / period as f64;
+                let mut t = 0.0f64;
+                while limit.wants_more(&out, t) {
+                    t += exp1(&mut rng) / peak;
+                    let accept = 0.5 * (1.0 + (w * t).sin()); // rate(t)/peak
+                    if rng.chance(accept) {
+                        out.push(t as u64);
+                    }
+                }
+                limit.trim(&mut out);
+            }
+            Self::Trace(_) => unreachable!("traces do not stream"),
+        }
+        out
+    }
+}
+
+/// Stop condition for streaming generators.
+enum Limit {
+    Horizon(u64),
+    Count(usize),
+}
+
+impl Limit {
+    /// Should the generator keep producing, given the events so far and the
+    /// current (pre-push) simulated time?
+    fn wants_more(&self, out: &[u64], t: f64) -> bool {
+        match *self {
+            Limit::Horizon(h) => t < h as f64,
+            Limit::Count(n) => out.len() < n,
+        }
+    }
+
+    /// Drop any overshoot past the stop condition (the last pushed event
+    /// may land beyond a horizon).
+    fn trim(&self, out: &mut Vec<u64>) {
+        if let Limit::Horizon(h) = *self {
+            while out.last().is_some_and(|&c| c >= h) {
+                out.pop();
+            }
+        }
+    }
+}
+
+/// Exponential(1) variate (inverse CDF on a (0, 1] uniform).
+fn exp1(rng: &mut Rng) -> f64 {
+    -(1.0 - rng.next_f64()).ln()
+}
+
+/// Exponential variate with the given mean.
+fn exp_mean(rng: &mut Rng, mean: f64) -> f64 {
+    mean * exp1(rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_is_respected() {
+        let a = ArrivalProcess::Poisson.generate(0.01, 1_000_000, 42);
+        // Expect ~10000 arrivals; allow generous 5% slack.
+        assert!((9_500..10_500).contains(&a.len()), "{}", a.len());
+        assert!(a.windows(2).all(|w| w[0] <= w[1]), "not sorted");
+        assert!(a.iter().all(|&c| c < 1_000_000));
+    }
+
+    #[test]
+    fn poisson_same_seed_same_stream() {
+        let a = ArrivalProcess::Poisson.generate(0.001, 500_000, 7);
+        let b = ArrivalProcess::Poisson.generate(0.001, 500_000, 7);
+        assert_eq!(a, b);
+        let c = ArrivalProcess::Poisson.generate(0.001, 500_000, 8);
+        assert_ne!(a, c, "different seed must differ");
+    }
+
+    #[test]
+    fn poisson_higher_rate_compresses_the_same_stream() {
+        // The monotonicity keystone: t_k(rate) = S_k / rate with the SAME
+        // unit stream S, so doubling the rate exactly halves every time.
+        let lo = ArrivalProcess::Poisson.generate_n(0.001, 500, 3);
+        let hi = ArrivalProcess::Poisson.generate_n(0.002, 500, 3);
+        assert_eq!(lo.len(), hi.len());
+        for (&l, &h) in lo.iter().zip(&hi) {
+            assert!(h <= l, "compression violated: {h} > {l}");
+            // Integer truncation of an exact halving.
+            assert!(h >= l / 2, "{h} < {l}/2");
+        }
+    }
+
+    #[test]
+    fn generate_n_yields_exactly_n() {
+        for p in [
+            ArrivalProcess::Poisson,
+            ArrivalProcess::from_name("bursty").unwrap(),
+            ArrivalProcess::from_name("diurnal").unwrap(),
+        ] {
+            let a = p.generate_n(0.01, 137, 11);
+            assert_eq!(a.len(), 137, "{}", p.name());
+            assert!(a.windows(2).all(|w| w[0] <= w[1]), "{}", p.name());
+        }
+    }
+
+    #[test]
+    fn bursty_long_run_rate_matches_offered() {
+        let p = ArrivalProcess::Bursty {
+            on_mean: 10_000,
+            off_mean: 10_000,
+        };
+        let a = p.generate(0.01, 4_000_000, 5);
+        let measured = a.len() as f64 / 4_000_000.0;
+        assert!(
+            (measured - 0.01).abs() < 0.002,
+            "long-run rate {measured} != 0.01"
+        );
+    }
+
+    #[test]
+    fn bursty_is_burstier_than_poisson() {
+        // Index of dispersion of counts in fixed windows: MMPP > Poisson.
+        let windows = |a: &[u64]| -> f64 {
+            let mut counts = vec![0f64; 100];
+            for &c in a {
+                counts[(c / 10_000).min(99) as usize] += 1.0;
+            }
+            let m = crate::util::stats::mean(&counts);
+            let v = crate::util::stats::stddev(&counts).powi(2);
+            v / m
+        };
+        let pois = ArrivalProcess::Poisson.generate(0.01, 1_000_000, 9);
+        let burst = ArrivalProcess::from_name("bursty").unwrap().generate(0.01, 1_000_000, 9);
+        assert!(
+            windows(&burst) > 2.0 * windows(&pois),
+            "bursty dispersion {} vs poisson {}",
+            windows(&burst),
+            windows(&pois)
+        );
+    }
+
+    #[test]
+    fn diurnal_peaks_and_troughs() {
+        let p = ArrivalProcess::Diurnal { period: 1_000_000 };
+        let a = p.generate(0.01, 1_000_000, 13);
+        // First half-period carries the sin>0 crest, second the trough.
+        let first = a.iter().filter(|&&c| c < 500_000).count();
+        let second = a.len() - first;
+        assert!(
+            first > 2 * second,
+            "ramp not visible: {first} vs {second}"
+        );
+    }
+
+    #[test]
+    fn trace_replay_filters_and_sorts() {
+        let doc = Json::parse("[30, 10, 20, 99]").unwrap();
+        let p = ArrivalProcess::from_trace_json(&doc).unwrap();
+        assert_eq!(p.generate(1.0, 50, 0), vec![10, 20, 30]);
+        assert_eq!(p.generate_n(1.0, 2, 0), vec![10, 20]);
+        assert_eq!(p.name(), "trace");
+    }
+
+    #[test]
+    fn trace_object_form_and_errors() {
+        let doc = Json::parse(r#"{"arrivals_cycles": [5, 6]}"#).unwrap();
+        assert_eq!(
+            ArrivalProcess::from_trace_json(&doc).unwrap(),
+            ArrivalProcess::Trace(vec![5, 6])
+        );
+        for bad in ["{\"x\": 1}", "[1, \"two\"]", "[-4]", "3"] {
+            let doc = Json::parse(bad).unwrap();
+            assert!(
+                ArrivalProcess::from_trace_json(&doc).is_err(),
+                "{bad} should be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn from_name_resolves() {
+        assert_eq!(
+            ArrivalProcess::from_name("poisson").unwrap(),
+            ArrivalProcess::Poisson
+        );
+        assert!(ArrivalProcess::from_name("storm").is_err());
+    }
+}

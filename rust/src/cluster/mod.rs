@@ -1,0 +1,40 @@
+//! Cluster-scale serving simulator: trace-driven multi-node inference
+//! with SLO metrics and capacity planning.
+//!
+//! The single-node stack models what happens *after* a request reaches a
+//! PIM pipeline — replication plans, batch pipelining, the 3136-cycle
+//! VGG-E beat. This layer models everything between request arrival and
+//! pipeline injection across a fleet of node replicas, in virtual time:
+//!
+//! - [`arrival`] — deterministic seeded arrival processes (Poisson,
+//!   bursty MMPP, diurnal ramp, JSON trace replay) in simulated cycles;
+//! - [`node`] — one replica: queue + the real [`BatchPolicy`]
+//!   (virtual ticks) + the pipeline-slot [`Dispatcher`] from the node's
+//!   replication plan, so per-request latency = queueing + backlog + fill;
+//! - [`sim`] — the binary-heap event loop over N nodes with pluggable
+//!   routing (round-robin / join-shortest-queue / least-work) and
+//!   admission control (max outstanding per node, rejections counted
+//!   against the SLO);
+//! - [`stats`] — exact p50/p95/p99/p999 latency, throughput, per-node
+//!   utilization, rejection rate;
+//! - [`capacity`] — "minimum nodes such that p99 <= target at this QPS",
+//!   by parallel section search over fleet size on [`SweepRunner`].
+//!
+//! Everything is deterministic from the seed; `smart-pim cluster` is the
+//! CLI surface and `benches/cluster_scale.rs` writes `BENCH_cluster.json`.
+//!
+//! [`BatchPolicy`]: crate::coordinator::BatchPolicy
+//! [`Dispatcher`]: crate::coordinator::Dispatcher
+//! [`SweepRunner`]: crate::sweep::SweepRunner
+
+pub mod arrival;
+pub mod capacity;
+pub mod node;
+pub mod sim;
+pub mod stats;
+
+pub use arrival::ArrivalProcess;
+pub use capacity::{plan_capacity, CapacityPoint, CapacityReport};
+pub use node::{Node, NodeModel, Served};
+pub use sim::{cycle_policy, rate_from_qps, simulate, ClusterConfig, RoutePolicy};
+pub use stats::{ClusterStats, LatencySummary};

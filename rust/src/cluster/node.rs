@@ -1,0 +1,342 @@
+//! One node replica of the serving fleet: a request queue, the *same*
+//! [`BatchPolicy`] the real server runs (virtual ticks = cycles after the
+//! Clock refactor), and the pipeline-slot [`Dispatcher`] built from the
+//! node's replication plan — so per-request latency decomposes into
+//! queueing (arrival -> batch formation), pipeline backlog (formation ->
+//! injection) and the batch-pipelined fill (injection -> completion), all
+//! in the validated single-node cycle model.
+
+use std::collections::VecDeque;
+
+use crate::cnn::Network;
+use crate::config::ArchConfig;
+use crate::coordinator::{BatchPolicy, Dispatcher, PipelineShape, Request};
+use crate::mapping::{NetworkMapping, ReplicationPlan};
+use crate::pipeline::build_plans;
+
+/// The static per-replica pipeline model every node of a (homogeneous)
+/// fleet shares: the dispatcher shape plus its two defining constants.
+#[derive(Debug, Clone)]
+pub struct NodeModel {
+    /// Stage offsets/occupancy for the dispatcher.
+    pub shape: PipelineShape,
+    /// Hazard-free injection interval in cycles (`shape.min_interval()`).
+    pub interval: u64,
+    /// Injection-to-completion cycles for one image (pipeline fill).
+    pub fill: u64,
+}
+
+impl NodeModel {
+    /// Wrap a dispatcher shape.
+    pub fn new(shape: PipelineShape) -> Self {
+        let interval = shape.min_interval();
+        let last = shape.n_layers() - 1;
+        let fill = shape.offsets[last] + shape.occupancy[last];
+        Self {
+            shape,
+            interval,
+            fill,
+        }
+    }
+
+    /// Build from a workload + replication plan on `arch` (the same
+    /// mapping -> stage-plan -> shape chain `smart-pim serve` uses).
+    pub fn from_workload(
+        net: &Network,
+        arch: &ArchConfig,
+        plan: &ReplicationPlan,
+    ) -> Result<Self, String> {
+        let mapping = NetworkMapping::build(net, arch, plan)?;
+        let shape = PipelineShape::from_plans(&build_plans(net, &mapping, arch));
+        Ok(Self::new(shape))
+    }
+
+    /// Steady-state capacity in requests per cycle (one image per
+    /// `interval`), before batching fill effects.
+    pub fn capacity_per_cycle(&self) -> f64 {
+        1.0 / self.interval as f64
+    }
+}
+
+/// One request served to completion (the node's answer to the event loop).
+#[derive(Debug, Clone, Copy)]
+pub struct Served {
+    /// Request id.
+    pub id: u64,
+    /// Arrival cycle at the cluster.
+    pub arrived: u64,
+    /// Pipeline injection cycle (>= formation cycle; the gap is backlog).
+    pub injected: u64,
+    /// Pipeline completion cycle (`injected + fill`).
+    pub completed: u64,
+}
+
+/// Mutable per-node simulation state.
+#[derive(Debug)]
+pub struct Node {
+    interval: u64,
+    policy: BatchPolicy,
+    dispatcher: Dispatcher,
+    queue: VecDeque<Request>,
+    /// Outstanding requests: queued + admitted-but-not-completed.
+    in_flight: u64,
+    /// Real requests completed.
+    pub completed: u64,
+    /// Requests this node's admission control rejected.
+    pub rejected: u64,
+    /// Total pipeline injections (real + padding) for utilization.
+    pub injected: u64,
+}
+
+impl Node {
+    /// A fresh node running `policy` over `model`'s pipeline. The
+    /// dispatcher runs untracked (O(1) memory per node regardless of
+    /// horizon); use [`Self::with_hazard_log`] to audit the schedule.
+    pub fn new(model: &NodeModel, policy: BatchPolicy) -> Self {
+        Self::build(model, policy, false)
+    }
+
+    /// A node whose dispatcher logs every injection beat so
+    /// [`Self::verify_no_hazard`] can audit the full schedule (tests).
+    pub fn with_hazard_log(model: &NodeModel, policy: BatchPolicy) -> Self {
+        Self::build(model, policy, true)
+    }
+
+    fn build(model: &NodeModel, policy: BatchPolicy, log: bool) -> Self {
+        let shape = model.shape.clone();
+        Self {
+            interval: model.interval,
+            policy,
+            dispatcher: if log {
+                Dispatcher::new(shape)
+            } else {
+                Dispatcher::untracked(shape)
+            },
+            queue: VecDeque::new(),
+            in_flight: 0,
+            completed: 0,
+            rejected: 0,
+            injected: 0,
+        }
+    }
+
+    /// Outstanding requests (queued + in the pipeline) — the
+    /// join-shortest-queue routing signal and the admission-control gauge.
+    pub fn in_flight(&self) -> u64 {
+        self.in_flight
+    }
+
+    /// Pending work in cycles at `now`: the pipeline's backlog horizon
+    /// plus the unformed queue priced at one interval each — the
+    /// least-work routing signal.
+    pub fn backlog(&self, now: u64) -> u64 {
+        self.dispatcher.next_free().saturating_sub(now)
+            + self.queue.len() as u64 * self.interval
+    }
+
+    /// Offer a request; `false` means admission control rejected it
+    /// (`in_flight` already at `max_queue`).
+    pub fn offer(&mut self, id: u64, now: u64, max_queue: u64) -> bool {
+        if self.in_flight >= max_queue {
+            self.rejected += 1;
+            return false;
+        }
+        self.in_flight += 1;
+        self.queue.push_back(Request {
+            id,
+            image: Vec::new(), // virtual requests carry no pixels
+            submitted: now,
+        });
+        true
+    }
+
+    /// Form every batch the policy will release at `now` and admit it to
+    /// the pipeline; returns the served requests (their completion events).
+    pub fn form_batches(&mut self, now: u64) -> Vec<Served> {
+        let mut served = Vec::new();
+        while let Some(batch) = self.policy.form(&mut self.queue, now) {
+            for r in &batch.requests {
+                let injected = self.dispatcher.admit(now);
+                self.injected += 1;
+                served.push(Served {
+                    id: r.id,
+                    arrived: r.submitted,
+                    injected,
+                    completed: self.dispatcher.completion(injected),
+                });
+            }
+            // Padding images occupy real pipeline slots (their outputs are
+            // discarded) — charge them or utilization and backlog lie.
+            for _ in 0..batch.padding {
+                self.dispatcher.admit(now);
+                self.injected += 1;
+            }
+        }
+        served
+    }
+
+    /// The batch-timeout deadline of the current queue head, if any: by
+    /// this cycle `form_batches` is guaranteed to release something.
+    pub fn next_deadline(&self) -> Option<u64> {
+        self.queue
+            .front()
+            .map(|oldest| self.policy.deadline(oldest.submitted))
+    }
+
+    /// Record a completion (the event loop calls this when a [`Served`]
+    /// event fires).
+    pub fn complete_one(&mut self) {
+        debug_assert!(self.in_flight > 0, "completion without admission");
+        self.in_flight -= 1;
+        self.completed += 1;
+    }
+
+    /// Bottleneck-stage busy cycles so far (injections x interval).
+    pub fn busy_cycles(&self) -> u64 {
+        self.injected * self.interval
+    }
+
+    /// Cycle at which the pipeline's bottleneck stage frees its last
+    /// reserved slot (`Dispatcher::next_free`). The utilization span must
+    /// cover this: when the offset-skeleton fill is shorter than the
+    /// interval (e.g. ResNet-18's 1956 vs 12544), the last completion
+    /// lands *before* the bottleneck finishes its window, and dividing
+    /// busy cycles by the completion span alone would exceed 100%.
+    pub fn busy_until(&self) -> u64 {
+        self.dispatcher.next_free()
+    }
+
+    /// The node's hazard verifier (delegates to the dispatcher; vacuous
+    /// unless the node was built with [`Self::with_hazard_log`]).
+    pub fn verify_no_hazard(&self) -> Result<(), String> {
+        self.dispatcher.verify_no_hazard()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::{vgg, VggVariant};
+
+    fn model() -> NodeModel {
+        let arch = ArchConfig::paper_node();
+        let net = vgg::build(VggVariant::E);
+        let plan = ReplicationPlan::fig7(VggVariant::E);
+        NodeModel::from_workload(&net, &arch, &plan).unwrap()
+    }
+
+    fn singles_policy() -> BatchPolicy {
+        BatchPolicy {
+            sizes: vec![1],
+            max_wait: 0,
+            min_fill: 1.0,
+        }
+    }
+
+    #[test]
+    fn node_model_carries_the_validated_constants() {
+        let m = model();
+        assert_eq!(m.interval, 3136, "VGG-E Fig. 7 interval");
+        assert_eq!(m.fill, m.shape.offsets[m.shape.n_layers() - 1]
+            + m.shape.occupancy[m.shape.n_layers() - 1]);
+        assert!((m.capacity_per_cycle() - 1.0 / 3136.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn sparse_singles_complete_in_exactly_fill_cycles() {
+        let m = model();
+        let mut n = Node::with_hazard_log(&m, singles_policy());
+        for (i, at) in [(0u64, 0u64), (1, 100_000), (2, 200_000)] {
+            assert!(n.offer(i, at, u64::MAX));
+            let s = n.form_batches(at);
+            assert_eq!(s.len(), 1);
+            assert_eq!(s[0].injected, at, "idle pipeline injects immediately");
+            assert_eq!(s[0].completed - s[0].arrived, m.fill);
+            n.complete_one();
+        }
+        n.verify_no_hazard().unwrap();
+    }
+
+    #[test]
+    fn burst_of_singles_spaces_by_interval() {
+        let m = model();
+        let mut n = Node::with_hazard_log(&m, singles_policy());
+        let k = 5;
+        for i in 0..k {
+            assert!(n.offer(i, 0, u64::MAX));
+        }
+        let s = n.form_batches(0);
+        assert_eq!(s.len() as u64, k);
+        for (j, srv) in s.iter().enumerate() {
+            assert_eq!(srv.injected, j as u64 * m.interval);
+            assert_eq!(srv.completed, srv.injected + m.fill);
+        }
+        n.verify_no_hazard().unwrap();
+        assert_eq!(n.busy_cycles(), k * m.interval);
+    }
+
+    #[test]
+    fn admission_control_bounds_in_flight() {
+        let m = model();
+        let mut n = Node::new(&m, singles_policy());
+        assert!(n.offer(0, 0, 2));
+        assert!(n.offer(1, 0, 2));
+        assert!(!n.offer(2, 0, 2), "third must be rejected at depth 2");
+        assert_eq!(n.rejected, 1);
+        assert_eq!(n.in_flight(), 2);
+        let s = n.form_batches(0);
+        assert_eq!(s.len(), 2);
+        n.complete_one();
+        assert_eq!(n.in_flight(), 1);
+        assert!(n.offer(3, 0, 2), "freed capacity readmits");
+    }
+
+    #[test]
+    fn hoarding_policy_waits_for_deadline() {
+        let m = model();
+        let policy = BatchPolicy {
+            sizes: vec![4, 1],
+            max_wait: 1_000,
+            min_fill: 0.5,
+        };
+        let mut n = Node::new(&m, policy);
+        assert!(n.offer(0, 0, u64::MAX));
+        assert!(n.offer(1, 0, u64::MAX));
+        assert!(n.form_batches(0).is_empty(), "2 of 4: hoard");
+        assert_eq!(n.next_deadline(), Some(1_000));
+        let s = n.form_batches(1_000);
+        assert_eq!(s.len(), 2, "deadline releases the pair (padded to 4)");
+        // Padding rode along: 4 injections total.
+        assert_eq!(n.injected, 4);
+        assert!(n.next_deadline().is_none());
+    }
+
+    #[test]
+    fn full_batch_forms_without_waiting() {
+        let m = model();
+        let policy = BatchPolicy {
+            sizes: vec![4, 1],
+            max_wait: 1_000_000,
+            min_fill: 0.5,
+        };
+        let mut n = Node::new(&m, policy);
+        for i in 0..4 {
+            assert!(n.offer(i, 5, u64::MAX));
+        }
+        let s = n.form_batches(5);
+        assert_eq!(s.len(), 4);
+        assert_eq!(n.injected, 4);
+    }
+
+    #[test]
+    fn backlog_tracks_queue_and_pipeline() {
+        let m = model();
+        let mut n = Node::new(&m, singles_policy());
+        assert_eq!(n.backlog(0), 0);
+        n.offer(0, 0, u64::MAX);
+        assert_eq!(n.backlog(0), m.interval, "queued, unformed");
+        n.form_batches(0);
+        assert_eq!(n.backlog(0), m.interval, "now in the pipeline");
+        assert_eq!(n.backlog(m.interval), 0, "caught up");
+    }
+}

@@ -1,0 +1,241 @@
+//! Serving statistics for cluster runs: exact latency percentiles,
+//! throughput, per-node utilization, rejection rate — the SLO surface a
+//! capacity planner bisects against.
+
+use crate::util::Json;
+
+/// Exact latency percentiles over the full sample set (no sketches: a
+/// cluster run holds every completion anyway, and SLO math on p999 cannot
+/// afford approximation error).
+#[derive(Debug, Clone, Default)]
+pub struct LatencySummary {
+    /// All per-request latencies in cycles, sorted ascending.
+    sorted: Vec<u64>,
+}
+
+impl LatencySummary {
+    /// Summarize a sample set (takes ownership; sorts once).
+    pub fn from_samples(mut samples: Vec<u64>) -> Self {
+        samples.sort_unstable();
+        Self { sorted: samples }
+    }
+
+    /// Number of samples.
+    pub fn count(&self) -> usize {
+        self.sorted.len()
+    }
+
+    /// Exact percentile by the nearest-rank method (`p` in (0, 100]):
+    /// the smallest sample such that at least `p`% of samples are <= it.
+    /// 0 for an empty summary.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.sorted.is_empty() {
+            return 0;
+        }
+        debug_assert!(p > 0.0 && p <= 100.0);
+        let n = self.sorted.len();
+        let rank = (p / 100.0 * n as f64).ceil() as usize;
+        self.sorted[rank.clamp(1, n) - 1]
+    }
+
+    /// Median latency in cycles.
+    pub fn p50(&self) -> u64 {
+        self.percentile(50.0)
+    }
+
+    /// 95th percentile in cycles.
+    pub fn p95(&self) -> u64 {
+        self.percentile(95.0)
+    }
+
+    /// 99th percentile in cycles.
+    pub fn p99(&self) -> u64 {
+        self.percentile(99.0)
+    }
+
+    /// 99.9th percentile in cycles.
+    pub fn p999(&self) -> u64 {
+        self.percentile(99.9)
+    }
+
+    /// Arithmetic mean in cycles (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.sorted.is_empty() {
+            return 0.0;
+        }
+        self.sorted.iter().map(|&x| x as u128).sum::<u128>() as f64 / self.sorted.len() as f64
+    }
+
+    /// Largest sample (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.sorted.last().copied().unwrap_or(0)
+    }
+}
+
+/// Everything a cluster simulation reports.
+#[derive(Debug, Clone)]
+pub struct ClusterStats {
+    /// Requests the arrival process offered.
+    pub offered: u64,
+    /// Requests completed (served to the end of the pipeline).
+    pub completed: u64,
+    /// Requests rejected by admission control.
+    pub rejected: u64,
+    /// Cycles of simulated arrival horizon.
+    pub horizon_cycles: u64,
+    /// Cycle of the last completion (the drain point; >= horizon under
+    /// load). 0 when nothing completed.
+    pub drained_at: u64,
+    /// End-to-end latency (arrival -> pipeline completion) in cycles.
+    pub latency: LatencySummary,
+    /// Queueing component only (arrival -> pipeline injection) in cycles.
+    pub queueing: LatencySummary,
+    /// Per-node bottleneck-stage busy fraction, in [0, 1], over the
+    /// simulated span (last completion or last reserved pipeline slot,
+    /// whichever is later).
+    pub node_utilization: Vec<f64>,
+    /// Per-node completed-request counts.
+    pub per_node_completed: Vec<u64>,
+    /// Per-node rejected-request counts.
+    pub per_node_rejected: Vec<u64>,
+}
+
+impl ClusterStats {
+    /// Completed requests per simulated cycle.
+    pub fn throughput_per_cycle(&self) -> f64 {
+        if self.drained_at == 0 {
+            return 0.0;
+        }
+        self.completed as f64 / self.drained_at as f64
+    }
+
+    /// Completed requests per wall second at `logical_cycle_ns` per cycle.
+    pub fn throughput_rps(&self, logical_cycle_ns: f64) -> f64 {
+        self.throughput_per_cycle() / (logical_cycle_ns * 1e-9)
+    }
+
+    /// Fraction of offered requests rejected by admission control.
+    pub fn rejection_rate(&self) -> f64 {
+        if self.offered == 0 {
+            return 0.0;
+        }
+        self.rejected as f64 / self.offered as f64
+    }
+
+    /// Mean utilization across the fleet.
+    pub fn mean_utilization(&self) -> f64 {
+        crate::util::stats::mean(&self.node_utilization)
+    }
+
+    /// The run meets an SLO of `p99 <= target cycles` with zero rejections.
+    /// Rejections count against the SLO (a dropped request is an infinite
+    /// latency), so any rejection fails the point.
+    pub fn meets_slo(&self, p99_target_cycles: u64) -> bool {
+        self.rejected == 0 && self.completed > 0 && self.latency.p99() <= p99_target_cycles
+    }
+
+    /// Machine-readable form (BENCH_cluster.json rows, `cluster --json`).
+    pub fn to_json(&self, logical_cycle_ns: f64) -> Json {
+        Json::obj(vec![
+            ("offered", self.offered.into()),
+            ("completed", self.completed.into()),
+            ("rejected", self.rejected.into()),
+            ("rejection_rate", self.rejection_rate().into()),
+            ("horizon_cycles", self.horizon_cycles.into()),
+            ("drained_at", self.drained_at.into()),
+            ("throughput_rps", self.throughput_rps(logical_cycle_ns).into()),
+            ("latency_mean_cycles", self.latency.mean().into()),
+            ("latency_p50_cycles", self.latency.p50().into()),
+            ("latency_p95_cycles", self.latency.p95().into()),
+            ("latency_p99_cycles", self.latency.p99().into()),
+            ("latency_p999_cycles", self.latency.p999().into()),
+            ("latency_max_cycles", self.latency.max().into()),
+            ("queueing_p99_cycles", self.queueing.p99().into()),
+            ("mean_utilization", self.mean_utilization().into()),
+            (
+                "node_utilization",
+                Json::Arr(self.node_utilization.iter().map(|&u| u.into()).collect()),
+            ),
+            (
+                "per_node_completed",
+                Json::Arr(self.per_node_completed.iter().map(|&c| c.into()).collect()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nearest_rank_percentiles_are_exact() {
+        // 1..=100: pN is exactly N by nearest rank.
+        let s = LatencySummary::from_samples((1..=100).rev().collect());
+        assert_eq!(s.p50(), 50);
+        assert_eq!(s.p95(), 95);
+        assert_eq!(s.p99(), 99);
+        assert_eq!(s.p999(), 100);
+        assert_eq!(s.percentile(1.0), 1);
+        assert_eq!(s.max(), 100);
+        assert_eq!(s.mean(), 50.5);
+    }
+
+    #[test]
+    fn single_sample_is_every_percentile() {
+        let s = LatencySummary::from_samples(vec![42]);
+        assert_eq!(s.p50(), 42);
+        assert_eq!(s.p999(), 42);
+    }
+
+    #[test]
+    fn empty_summary_is_zero() {
+        let s = LatencySummary::from_samples(vec![]);
+        assert_eq!(s.p99(), 0);
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.count(), 0);
+    }
+
+    fn stats() -> ClusterStats {
+        ClusterStats {
+            offered: 10,
+            completed: 8,
+            rejected: 2,
+            horizon_cycles: 1000,
+            drained_at: 2000,
+            latency: LatencySummary::from_samples(vec![10, 20, 30, 40, 50, 60, 70, 80]),
+            queueing: LatencySummary::from_samples(vec![0; 8]),
+            node_utilization: vec![0.5, 0.7],
+            per_node_completed: vec![4, 4],
+            per_node_rejected: vec![1, 1],
+        }
+    }
+
+    #[test]
+    fn throughput_and_rejection() {
+        let s = stats();
+        assert_eq!(s.throughput_per_cycle(), 8.0 / 2000.0);
+        assert_eq!(s.rejection_rate(), 0.2);
+        assert!((s.mean_utilization() - 0.6).abs() < 1e-12);
+        // 306 ns cycles: rps = per-cycle / 306e-9.
+        let rps = s.throughput_rps(306.0);
+        assert!((rps - (8.0 / 2000.0) / 306e-9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn slo_counts_rejections_as_failures() {
+        let mut s = stats();
+        assert!(!s.meets_slo(1_000_000), "rejections must fail the SLO");
+        s.rejected = 0;
+        assert!(s.meets_slo(80));
+        assert!(!s.meets_slo(79), "p99 is 80");
+    }
+
+    #[test]
+    fn json_renders_key_fields() {
+        let j = stats().to_json(306.0).render();
+        assert!(j.contains("\"latency_p99_cycles\":80"), "{j}");
+        assert!(j.contains("\"rejected\":2"), "{j}");
+        assert!(j.contains("\"node_utilization\""), "{j}");
+    }
+}

@@ -12,9 +12,11 @@
 //!   ResNets alike), event-driven flit-level NoC simulator behind the
 //!   [`noc::NocBackend`] trait (wormhole / SMART / ideal), a searched
 //!   replication/batch planner ([`planner`]), a unified parallel
-//!   scenario-sweep engine ([`sweep`]), power/energy model, and a serving
+//!   scenario-sweep engine ([`sweep`]), power/energy model, a serving
 //!   coordinator that executes real quantized CNN inference through
-//!   AOT-compiled XLA artifacts (PJRT, feature-gated).
+//!   AOT-compiled XLA artifacts (PJRT, feature-gated), and a cluster-scale
+//!   serving simulator ([`cluster`]): trace-driven multi-node inference
+//!   with SLO metrics and capacity planning.
 //! - **Layer 2 (python/compile/model.py)** — the quantized CNN forward
 //!   graph in JAX, lowered once to HLO text at build time.
 //! - **Layer 1 (python/compile/kernels/crossbar.py)** — the bit-serial
@@ -25,6 +27,7 @@
 
 #![warn(missing_docs)]
 
+pub mod cluster;
 pub mod cnn;
 pub mod config;
 pub mod coordinator;

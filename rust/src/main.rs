@@ -16,6 +16,8 @@
 //! smart-pim simulate --network vgg19|resnet18 --scenario 4 --noc smart [--gantt]
 //! smart-pim noc --pattern tornado --rate 0.1 [--noc smart]
 //! smart-pim serve --requests 64 [--artifacts artifacts]
+//! smart-pim cluster --network vgg_e --nodes 4 --qps 500 --pattern poisson
+//! smart-pim cluster --qps 3000 --capacity --p99-target 20000
 //! smart-pim dump-config               # active ArchConfig in file format
 //! smart-pim report-all                # everything (minutes)
 //! ```
@@ -27,7 +29,7 @@ use smart_pim::cnn::{vgg, VggVariant};
 use smart_pim::config::{ArchConfig, NocKind, Scenario};
 use smart_pim::coordinator::{assess_ingress, startup_plan, BatchPolicy, Server};
 use smart_pim::mapping::{plan_tiles, ReplicationPlan};
-use smart_pim::metrics::{paper, planner_table, Grid};
+use smart_pim::metrics::{cluster_table, paper, planner_table, Grid};
 use smart_pim::planner::{evaluate_candidates, Planner, PlannerConfig};
 use smart_pim::noc::{
     build_backend, run_synthetic_with, Mesh, Pattern, StepMode, SyntheticConfig,
@@ -44,12 +46,15 @@ fn main() {
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() {
         eprintln!(
-            "usage: smart-pim <fig4..fig11|plan|simulate|noc|serve|report-all> [options]"
+            "usage: smart-pim <fig4..fig11|plan|simulate|noc|serve|cluster|report-all> [options]"
         );
         std::process::exit(2);
     }
     let cmd = argv.remove(0);
-    let args = match Args::parse(argv, &["batch", "no-batch", "gantt", "compare", "frontier"]) {
+    let args = match Args::parse(
+        argv,
+        &["batch", "no-batch", "gantt", "compare", "frontier", "capacity"],
+    ) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}");
@@ -73,6 +78,7 @@ fn main() {
         "simulate" => simulate(&args),
         "noc" => noc_cmd(&args),
         "serve" => serve(&args),
+        "cluster" => cluster_cmd(&args),
         "dump-config" => {
             print!("{}", smart_pim::config::render_arch(&arch()));
             Ok(())
@@ -636,6 +642,226 @@ fn noc_cmd(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// `smart-pim cluster`: trace-driven multi-node serving simulation over
+/// node replicas running the workload's replication plan, with SLO
+/// metrics; `--capacity` turns it into a planner ("minimum nodes such
+/// that p99 <= --p99-target at this --qps").
+fn cluster_cmd(args: &Args) -> Result<(), String> {
+    use smart_pim::cluster::{
+        plan_capacity, rate_from_qps, simulate as cluster_simulate, ArrivalProcess,
+        ClusterConfig, NodeModel, RoutePolicy,
+    };
+
+    args.check_known(&[
+        "network", "plan", "nodes", "qps", "pattern", "trace", "route", "max-queue",
+        "horizon", "seed", "p99-target", "max-nodes", "json", "threads", "config",
+    ])?;
+    let a = arch();
+    let name = args.get_or("network", "vggE");
+    let net = smart_pim::cnn::workload(name)?;
+
+    // Replication plan carried by every replica: Fig. 7 for the VGGs by
+    // default (the validated single-node anchor), searched otherwise.
+    let plan_name = args.get_or(
+        "plan",
+        if net.name.parse::<VggVariant>().is_ok() {
+            "fig7"
+        } else {
+            "searched"
+        },
+    );
+    let plan = match plan_name {
+        "none" => ReplicationPlan::none(&net),
+        "fig7" => ReplicationPlan::fig7(net.name.parse::<VggVariant>().map_err(|_| {
+            format!("--plan fig7 needs a VGG workload, not {}", net.name)
+        })?),
+        "searched" => ReplicationPlan::searched(&net, &a, 0)?,
+        other => return Err(format!("--plan {other:?} (none | fig7 | searched)")),
+    };
+    let model = NodeModel::from_workload(&net, &a, &plan)?;
+
+    let qps: f64 = args.get_parse_or("qps", 500.0)?;
+    if qps <= 0.0 || !qps.is_finite() {
+        return Err(format!("--qps must be positive, got {qps}"));
+    }
+    let pattern = match args.get("trace") {
+        Some(path) => {
+            if args.get("pattern").is_some_and(|p| p != "trace") {
+                return Err(format!(
+                    "--pattern {} conflicts with --trace (a trace replaces \
+                     the synthetic pattern); drop one of them",
+                    args.get("pattern").unwrap_or_default()
+                ));
+            }
+            if args.get("qps").is_some() {
+                return Err(
+                    "--qps conflicts with --trace (the trace fixes every \
+                     arrival time); drop one of them"
+                        .into(),
+                );
+            }
+            ArrivalProcess::from_trace_file(path)?
+        }
+        None => {
+            let p = args.get_or("pattern", "poisson");
+            if p == "trace" {
+                return Err("--pattern trace needs --trace FILE".into());
+            }
+            ArrivalProcess::from_name(p)?
+        }
+    };
+    let capacity_mode = args.flag("capacity");
+    if capacity_mode && args.get("nodes").is_some() {
+        return Err(
+            "--nodes conflicts with --capacity (the planner searches the \
+             fleet size); bound the search with --max-nodes instead"
+                .into(),
+        );
+    }
+    if !capacity_mode {
+        for opt in ["p99-target", "max-nodes", "threads"] {
+            if args.get(opt).is_some() {
+                return Err(format!("--{opt} only applies with --capacity"));
+            }
+        }
+    }
+    let nodes: usize = args.get_parse_or("nodes", 4usize)?;
+    if nodes == 0 {
+        return Err("--nodes must be at least 1".into());
+    }
+    let max_nodes: usize = args.get_parse_or("max-nodes", 64usize)?;
+    if max_nodes == 0 {
+        return Err("--max-nodes must be at least 1".into());
+    }
+    // A trace fixes every arrival time, so by default the horizon covers
+    // the whole trace (an explicit --horizon still windows it on purpose).
+    let horizon_default = if matches!(pattern, ArrivalProcess::Trace(_)) {
+        u64::MAX
+    } else {
+        5_000_000
+    };
+    let cfg = ClusterConfig {
+        nodes,
+        rate_per_cycle: rate_from_qps(qps, a.logical_cycle_ns),
+        pattern,
+        route: args.get_or("route", "rr").parse::<RoutePolicy>()?,
+        max_queue: args.get_parse_or("max-queue", 64u64)?,
+        horizon_cycles: args.get_parse_or("horizon", horizon_default)?,
+        seed: args.get_parse_or("seed", 0xC105_7E4u64)?,
+        ..ClusterConfig::default()
+    };
+    let ms = |cycles: f64| cycles * a.logical_cycle_ns / 1e6;
+
+    let fleet = if capacity_mode {
+        format!("<={max_nodes} (searching)")
+    } else {
+        cfg.nodes.to_string()
+    };
+    let load = if matches!(cfg.pattern, ArrivalProcess::Trace(_)) {
+        "trace-driven arrivals".to_string()
+    } else {
+        format!("{qps} qps {} arrivals", cfg.pattern.name())
+    };
+    println!(
+        "cluster: {} x {} ({} plan, interval {} cycles, fill {} cycles), \
+         {load}, route {}, max queue {}",
+        fleet,
+        net.name,
+        plan_name,
+        model.interval,
+        model.fill,
+        cfg.route.name(),
+        cfg.max_queue
+    );
+
+    let stats = if capacity_mode {
+        let target: u64 = args
+            .get_parse::<u64>("p99-target")?
+            .ok_or("--capacity needs --p99-target CYCLES")?;
+        let runner = match args.get("threads") {
+            Some(t) => {
+                SweepRunner::with_threads(t.parse().map_err(|e| format!("--threads: {e}"))?)
+            }
+            None => SweepRunner::new(),
+        };
+        let r = plan_capacity(&model, &cfg, target, max_nodes, &runner)?;
+        let mut t = Table::new(
+            format!(
+                "capacity search — p99 <= {target} cycles ({} ms), {load}",
+                fnum(ms(target as f64), 2)
+            ),
+            &["nodes", "p99 (cycles)", "rejected", "meets SLO"],
+        );
+        for p in &r.evaluated {
+            t.row(&[
+                p.nodes.to_string(),
+                p.p99.to_string(),
+                p.rejected.to_string(),
+                if p.meets { "yes" } else { "no" }.into(),
+            ]);
+        }
+        t.print();
+        println!(
+            "minimum fleet: {} nodes (confirmed by direct simulation below)",
+            r.nodes
+        );
+        r.stats
+    } else {
+        cluster_simulate(&model, &cfg)
+    };
+
+    let mut t = Table::new(
+        format!(
+            "cluster stats — {} offered, seed {:#x}",
+            stats.offered, cfg.seed
+        ),
+        &["metric", "value"],
+    );
+    t.row(&["completed".into(), stats.completed.to_string()]);
+    t.row(&["rejected".into(), stats.rejected.to_string()]);
+    t.row(&[
+        "rejection rate".into(),
+        format!("{:.2} %", 100.0 * stats.rejection_rate()),
+    ]);
+    t.row(&[
+        "throughput (req/s)".into(),
+        fnum(stats.throughput_rps(a.logical_cycle_ns), 1),
+    ]);
+    for (label, cycles) in [
+        ("latency mean", stats.latency.mean()),
+        ("latency p50", stats.latency.p50() as f64),
+        ("latency p95", stats.latency.p95() as f64),
+        ("latency p99", stats.latency.p99() as f64),
+        ("latency p999", stats.latency.p999() as f64),
+        ("latency max", stats.latency.max() as f64),
+        ("queueing p99", stats.queueing.p99() as f64),
+    ] {
+        t.row(&[
+            format!("{label} (cycles | ms)"),
+            format!("{} | {}", fnum(cycles, 1), fnum(ms(cycles), 3)),
+        ]);
+    }
+    t.row(&[
+        "mean node utilization".into(),
+        format!("{:.1} %", 100.0 * stats.mean_utilization()),
+    ]);
+    let util_cells: Vec<String> = stats
+        .node_utilization
+        .iter()
+        .map(|u| format!("{:.0}%", 100.0 * u))
+        .collect();
+    t.row(&["per-node utilization".into(), util_cells.join(" ")]);
+    t.print();
+
+    if let Some(path) = args.get("json") {
+        let doc = stats.to_json(a.logical_cycle_ns);
+        std::fs::write(path, doc.render_pretty())
+            .map_err(|e| format!("writing {path}: {e}"))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
 fn serve(args: &Args) -> Result<(), String> {
     args.check_known(&["requests", "artifacts", "seed", "config", "plan-variant", "tiles"])?;
     let n: usize = args.get_parse_or("requests", 32usize)?;
@@ -753,6 +979,8 @@ fn report_all(args: &Args) -> Result<(), String> {
     fig8()?;
     println!();
     fig9()?;
+    println!();
+    cluster_table(&a, &SweepRunner::new())?.print();
     println!();
     fig10_11(args, true)?;
     fig10_11(args, false)?;

@@ -257,6 +257,55 @@ pub fn planner_table(
     Ok(t)
 }
 
+/// Cluster-serving rows for `report-all` and `smart-pim cluster`-adjacent
+/// reporting: a small fleet-size x offered-QPS grid of VGG-E Fig. 7
+/// replicas under seeded Poisson arrivals (per-node steady-state capacity
+/// is ~1042 req/s — the paper's Fig. 8 FPS anchor), with SLO metrics per
+/// point. Points are independent simulations, so the grid fans out on the
+/// sweep runner.
+pub fn cluster_table(arch: &ArchConfig, runner: &SweepRunner) -> Result<Table, String> {
+    use crate::cluster::{rate_from_qps, simulate, ClusterConfig, NodeModel};
+
+    let net = crate::cnn::vgg::build(VggVariant::E);
+    let plan = ReplicationPlan::fig7(VggVariant::E);
+    let model = NodeModel::from_workload(&net, arch, &plan)?;
+    // Loads from comfortable to near-saturation (per-node cap ~1042 rps).
+    let points: [(usize, f64); 4] = [(1, 500.0), (2, 1500.0), (4, 3000.0), (4, 4000.0)];
+    let stats = runner.run(&points, |_, &(nodes, qps)| {
+        simulate(
+            &model,
+            &ClusterConfig {
+                nodes,
+                rate_per_cycle: rate_from_qps(qps, arch.logical_cycle_ns),
+                horizon_cycles: 3_000_000,
+                ..ClusterConfig::default()
+            },
+        )
+    });
+    let mut t = Table::new(
+        "cluster serving — VGG-E Fig. 7 replicas, poisson arrivals, \
+         rr routing (latency in logical cycles)",
+        &[
+            "nodes", "qps", "offered", "p50", "p99", "p99 (ms)", "throughput (req/s)",
+            "util", "rejected",
+        ],
+    );
+    for ((nodes, qps), s) in points.iter().zip(&stats) {
+        t.row(&[
+            nodes.to_string(),
+            format!("{qps}"),
+            s.offered.to_string(),
+            s.latency.p50().to_string(),
+            s.latency.p99().to_string(),
+            fnum(s.latency.p99() as f64 * arch.logical_cycle_ns / 1e6, 3),
+            fnum(s.throughput_rps(arch.logical_cycle_ns), 1),
+            format!("{:.1} %", 100.0 * s.mean_utilization()),
+            format!("{:.1} %", 100.0 * s.rejection_rate()),
+        ]);
+    }
+    Ok(t)
+}
+
 /// Build the workload list for the comparison tables: all five VGGs plus
 /// the ResNets.
 pub fn all_workloads() -> Vec<crate::cnn::Network> {
@@ -358,6 +407,16 @@ mod tests {
         let out = t.render();
         assert!(out.contains("resnet18"), "{out}");
         assert!(out.contains('-'), "{out}");
+    }
+
+    #[test]
+    fn cluster_table_renders_slo_columns() {
+        let arch = ArchConfig::paper_node();
+        let t = cluster_table(&arch, &SweepRunner::with_threads(2)).unwrap();
+        assert_eq!(t.n_rows(), 4);
+        let out = t.render();
+        assert!(out.contains("p99"), "{out}");
+        assert!(out.contains("throughput"), "{out}");
     }
 
     #[test]

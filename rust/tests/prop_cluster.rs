@@ -1,0 +1,250 @@
+//! Property tests over the cluster serving simulator:
+//!
+//! 1. mean end-to-end latency is monotone **non-decreasing in offered
+//!    QPS** at fixed fleet size (same unit-rate arrival stream, FIFO
+//!    singles: Lindley's recurrence under gap compression);
+//! 2. mean latency is monotone **non-increasing in fleet size** at fixed
+//!    QPS (round-robin subsampling stretches every node-local gap);
+//! 3. **conservation**: arrivals = completions + rejections at drain, for
+//!    every routing policy, batching shape, and admission bound;
+//! 4. **determinism**: identical seeds give bit-identical stats.
+//!
+//! The monotonicity properties hold pointwise per request for FIFO
+//! single-image batches (`sizes = [1]`) and round-robin routing — the
+//! configuration the capacity planner's section search relies on; see
+//! DESIGN.md §4a for why hoarding batchers can locally invert them.
+
+use smart_pim::cluster::{
+    simulate, ArrivalProcess, ClusterConfig, NodeModel, RoutePolicy,
+};
+use smart_pim::cnn::{vgg, VggVariant};
+use smart_pim::config::ArchConfig;
+use smart_pim::coordinator::BatchPolicy;
+use smart_pim::mapping::ReplicationPlan;
+use smart_pim::prop_assert;
+use smart_pim::util::prop::{check, Config, Gen};
+
+fn model() -> NodeModel {
+    let arch = ArchConfig::paper_node();
+    let net = vgg::build(VggVariant::E);
+    let plan = ReplicationPlan::fig7(VggVariant::E);
+    NodeModel::from_workload(&net, &arch, &plan).unwrap()
+}
+
+/// FIFO singles: the configuration under which per-request waits are
+/// provably monotone (no hoarding, no padding).
+fn singles() -> BatchPolicy {
+    BatchPolicy {
+        sizes: vec![1],
+        max_wait: 0,
+        min_fill: 1.0,
+    }
+}
+
+/// Fixed-population scenario: `n` requests from the seeded unit stream.
+fn fixed_cfg(nodes: usize, rate: f64, requests: usize, seed: u64) -> ClusterConfig {
+    ClusterConfig {
+        nodes,
+        rate_per_cycle: rate,
+        pattern: ArrivalProcess::Poisson,
+        route: RoutePolicy::RoundRobin,
+        max_queue: u64::MAX,
+        horizon_cycles: 0, // unused with fixed_requests
+        fixed_requests: Some(requests),
+        policy: singles(),
+        seed,
+    }
+}
+
+#[test]
+fn mean_latency_monotone_in_offered_qps() {
+    let m = model();
+    let cases = Config {
+        cases: 24,
+        ..Config::default()
+    };
+    check("cluster-qps-monotone", &cases, |g| {
+        let nodes = 1 + g.rng.below_usize(4);
+        let requests = 20 + g.scaled(120);
+        let seed = g.rng.next_u64();
+        // A ladder of offered rates from light to past saturation.
+        let base = (0.2 + g.rng.next_f64() * 0.4) * nodes as f64 / m.interval as f64;
+        let rates = [base, base * 1.7, base * 2.9, base * 5.0];
+        let mut prev = -1.0f64;
+        for &rate in &rates {
+            let s = simulate(&m, &fixed_cfg(nodes, rate, requests, seed));
+            prop_assert!(s.completed == s.offered, "no rejections configured");
+            let mean = s.latency.mean();
+            // Tolerance 2.0: arrival cycles are floor(S_k / rate), and the
+            // floor errors telescope to under one cycle of wait
+            // perturbation per request between two rates of the same unit
+            // stream (exact monotonicity holds in real-valued time).
+            prop_assert!(
+                mean >= prev - 2.0,
+                "mean latency fell from {prev} to {mean} when the offered \
+                 rate rose to {rate} ({nodes} nodes, {requests} requests)"
+            );
+            prev = mean;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn mean_latency_monotone_in_fleet_size() {
+    let m = model();
+    let cases = Config {
+        cases: 24,
+        ..Config::default()
+    };
+    check("cluster-fleet-monotone", &cases, |g| {
+        let requests = 20 + g.scaled(120);
+        let seed = g.rng.next_u64();
+        // A load around one-to-three nodes' worth of capacity.
+        let rate = (0.5 + g.rng.next_f64() * 2.5) / m.interval as f64;
+        let mut prev = f64::INFINITY;
+        for nodes in [1usize, 2, 3, 5, 8] {
+            let s = simulate(&m, &fixed_cfg(nodes, rate, requests, seed));
+            prop_assert!(s.completed == s.offered, "no rejections configured");
+            let mean = s.latency.mean();
+            prop_assert!(
+                mean <= prev + 1e-6,
+                "mean latency rose from {prev} to {mean} when the fleet \
+                 grew to {nodes} nodes (rate {rate}, {requests} requests)"
+            );
+            prev = mean;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn conservation_for_any_policy_mix() {
+    let m = model();
+    let cases = Config {
+        cases: 32,
+        ..Config::default()
+    };
+    check("cluster-conservation", &cases, |g| {
+        let nodes = 1 + g.rng.below_usize(5);
+        let route = RoutePolicy::ALL[g.rng.below_usize(3)];
+        let pattern = match g.rng.below(4) {
+            0 => ArrivalProcess::Poisson,
+            1 => ArrivalProcess::from_name("bursty").unwrap(),
+            2 => ArrivalProcess::from_name("diurnal").unwrap(),
+            _ => {
+                // A short random trace, unsorted on purpose (the loader
+                // sorts; raw Trace values must already be sorted).
+                let mut t: Vec<u64> =
+                    (0..g.scaled(60)).map(|_| g.rng.below(400_000)).collect();
+                t.sort_unstable();
+                ArrivalProcess::Trace(t)
+            }
+        };
+        let policy = if g.rng.chance(0.5) {
+            BatchPolicy {
+                sizes: vec![4, 1],
+                max_wait: 1 + g.rng.below(8_000),
+                min_fill: 0.25 + g.rng.next_f64() * 0.5,
+            }
+        } else {
+            singles()
+        };
+        let cfg = ClusterConfig {
+            nodes,
+            rate_per_cycle: (0.2 + g.rng.next_f64() * 3.0) * nodes as f64
+                / m.interval as f64,
+            pattern,
+            route,
+            // Small bounds force rejections in some draws.
+            max_queue: 1 + g.rng.below(24),
+            horizon_cycles: 200_000 + g.rng.below(400_000),
+            fixed_requests: None,
+            policy,
+            seed: g.rng.next_u64(),
+        };
+        let s = simulate(&m, &cfg);
+        prop_assert!(
+            s.completed + s.rejected == s.offered,
+            "conservation broke: {} + {} != {} ({:?})",
+            s.completed,
+            s.rejected,
+            s.offered,
+            cfg.route
+        );
+        let node_sum: u64 = s.per_node_completed.iter().sum();
+        prop_assert!(
+            node_sum == s.completed,
+            "per-node completions {node_sum} != total {}",
+            s.completed
+        );
+        let reject_sum: u64 = s.per_node_rejected.iter().sum();
+        prop_assert!(
+            reject_sum == s.rejected,
+            "per-node rejections {reject_sum} != total {}",
+            s.rejected
+        );
+        prop_assert!(
+            s.latency.count() as u64 == s.completed,
+            "one latency sample per completion"
+        );
+        // Every latency is at least the pipeline fill (the nearest-rank
+        // 0.001-percentile of u64 samples is the minimum).
+        if s.completed > 0 {
+            prop_assert!(
+                s.latency.percentile(0.001) >= m.fill,
+                "latency {} below pipeline fill {}",
+                s.latency.percentile(0.001),
+                m.fill
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn identical_seed_is_bit_identical() {
+    let m = model();
+    let cases = Config {
+        cases: 16,
+        ..Config::default()
+    };
+    check("cluster-determinism", &cases, |g| {
+        let cfg = ClusterConfig {
+            nodes: 1 + g.rng.below_usize(4),
+            rate_per_cycle: (0.3 + g.rng.next_f64() * 2.0) / m.interval as f64,
+            pattern: ArrivalProcess::Poisson,
+            route: RoutePolicy::ALL[g.rng.below_usize(3)],
+            max_queue: 4 + g.rng.below(60),
+            horizon_cycles: 300_000,
+            fixed_requests: None,
+            policy: BatchPolicy {
+                sizes: vec![4, 1],
+                max_wait: 1 + g.rng.below(5_000),
+                min_fill: 0.5,
+            },
+            seed: g.rng.next_u64(),
+        };
+        let a = simulate(&m, &cfg);
+        let b = simulate(&m, &cfg);
+        prop_assert!(a.offered == b.offered, "offered differs");
+        prop_assert!(a.completed == b.completed, "completed differs");
+        prop_assert!(a.rejected == b.rejected, "rejected differs");
+        prop_assert!(a.drained_at == b.drained_at, "drain cycle differs");
+        for p in [50.0, 95.0, 99.0, 99.9] {
+            prop_assert!(
+                a.latency.percentile(p) == b.latency.percentile(p),
+                "p{p} differs"
+            );
+        }
+        prop_assert!(
+            a.node_utilization == b.node_utilization,
+            "utilization differs"
+        );
+        prop_assert!(
+            a.per_node_completed == b.per_node_completed,
+            "per-node counts differ"
+        );
+        Ok(())
+    });
+}
