@@ -112,6 +112,7 @@ fn main() {
         &cfg_for(1, cap_qps),
         target,
         64,
+        None,
         &runner,
     );
     let cap_secs = t0.elapsed().as_secs_f64();
@@ -131,6 +132,14 @@ fn main() {
                 ("nodes", r.nodes.into()),
                 ("points_probed", r.evaluated.len().into()),
                 ("confirmed_p99", r.stats.latency.p99().into()),
+                (
+                    "confirmed_fleet_power_w",
+                    r.stats
+                        .energy
+                        .as_ref()
+                        .map(|e| Json::Num(e.avg_power_w()))
+                        .unwrap_or(Json::Null),
+                ),
                 ("wall_secs", cap_secs.into()),
             ])
         }

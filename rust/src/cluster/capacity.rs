@@ -25,6 +25,9 @@ pub struct CapacityPoint {
     pub rejected: u64,
     /// Whether the point met the SLO (no rejections, p99 <= target).
     pub meets: bool,
+    /// Average fleet power at this size (W); `None` when the node model
+    /// carries no energy profile.
+    pub power_w: Option<f64>,
 }
 
 /// The planner's answer.
@@ -39,16 +42,29 @@ pub struct CapacityReport {
     pub evaluated: Vec<CapacityPoint>,
     /// The SLO target the search ran against (p99 cycles).
     pub p99_target: u64,
+    /// The power budget the answer was checked against, if any (W).
+    pub power_budget_w: Option<f64>,
 }
 
 /// Find the minimum `nodes <= max_nodes` such that the scenario in `base`
 /// (its `nodes` field is ignored) meets `p99 <= p99_target` cycles with
-/// zero rejections. Errors when even `max_nodes` misses the target.
+/// zero rejections — and, when `power_budget_w` is set, draws at most that
+/// average fleet power. Errors when even `max_nodes` misses the target, or
+/// when the p99-minimal fleet busts the power budget.
+///
+/// Power needs no second search: average fleet power is non-decreasing in
+/// fleet size (every extra replica adds its always-on idle floor while
+/// the dynamic work — one image's energy per injection — stays fixed by
+/// the offered load; a smaller-but-slower fleet additionally spreads the
+/// same energy over a longer drain span). The p99-minimal size from the
+/// existing k-section is therefore also the power-minimal size among
+/// SLO-feasible fleets: if it exceeds the budget, no feasible size exists.
 pub fn plan_capacity(
     model: &NodeModel,
     base: &ClusterConfig,
     p99_target: u64,
     max_nodes: usize,
+    power_budget_w: Option<f64>,
     runner: &SweepRunner,
 ) -> Result<CapacityReport, String> {
     assert!(max_nodes >= 1, "max_nodes must be at least 1");
@@ -63,6 +79,16 @@ pub fn plan_capacity(
             )
         })
     };
+    if let Some(b) = power_budget_w {
+        if !b.is_finite() || b <= 0.0 {
+            return Err(format!("power budget must be a positive wattage, got {b}"));
+        }
+        if model.energy.is_none() {
+            return Err("a power budget needs an energy profile: build the \
+                        NodeModel from a workload (NodeModel::from_workload)"
+                .into());
+        }
+    }
     let mut evaluated: Vec<CapacityPoint> = Vec::new();
     let mut record = |sizes: &[usize], stats: &[ClusterStats]| {
         for (&n, s) in sizes.iter().zip(stats) {
@@ -71,6 +97,7 @@ pub fn plan_capacity(
                 p99: s.latency.p99(),
                 rejected: s.rejected,
                 meets: s.meets_slo(p99_target),
+                power_w: s.energy.as_ref().map(|e| e.avg_power_w()),
             });
         }
     };
@@ -137,11 +164,31 @@ pub fn plan_capacity(
         }
     }
 
+    // Power gate: the p99-minimal fleet is also the power-minimal one
+    // among SLO-feasible sizes (see the function docs), so a budget
+    // violation here means no fleet size can satisfy both constraints.
+    if let Some(budget) = power_budget_w {
+        let power = hi_stats
+            .energy
+            .as_ref()
+            .map(|e| e.avg_power_w())
+            .expect("profile presence checked on entry");
+        if power > budget {
+            return Err(format!(
+                "the minimum SLO-feasible fleet ({hi} nodes) draws {power:.1} W \
+                 > budget {budget} W, and larger fleets only draw more (each \
+                 replica adds its idle floor) — relax --power-budget-w or \
+                 --p99-target, or lower the load"
+            ));
+        }
+    }
+
     Ok(CapacityReport {
         nodes: hi,
         stats: hi_stats,
         evaluated,
         p99_target,
+        power_budget_w,
     })
 }
 
@@ -174,7 +221,7 @@ mod tests {
         // returned stats must themselves meet the SLO.
         let cfg = base(2.5 / 3136.0);
         let target = 40_000;
-        let r = plan_capacity(&m, &cfg, target, 32, &SweepRunner::with_threads(4)).unwrap();
+        let r = plan_capacity(&m, &cfg, target, 32, None, &SweepRunner::with_threads(4)).unwrap();
         assert!(r.stats.meets_slo(target), "confirming run must meet SLO");
         assert!(r.nodes >= 3, "cannot serve 2.5 nodes of load on {}", r.nodes);
         // Minimality: one node fewer must miss (re-simulate directly).
@@ -199,8 +246,8 @@ mod tests {
     fn planner_is_deterministic() {
         let m = model();
         let cfg = base(1.5 / 3136.0);
-        let a = plan_capacity(&m, &cfg, 50_000, 16, &SweepRunner::with_threads(1)).unwrap();
-        let b = plan_capacity(&m, &cfg, 50_000, 16, &SweepRunner::with_threads(4)).unwrap();
+        let a = plan_capacity(&m, &cfg, 50_000, 16, None, &SweepRunner::with_threads(1)).unwrap();
+        let b = plan_capacity(&m, &cfg, 50_000, 16, None, &SweepRunner::with_threads(4)).unwrap();
         assert_eq!(a.nodes, b.nodes, "thread count must not change the answer");
         assert_eq!(a.stats.latency.p99(), b.stats.latency.p99());
     }
@@ -214,6 +261,7 @@ mod tests {
             &base(1e-4),
             m.fill / 2,
             8,
+            None,
             &SweepRunner::with_threads(2),
         )
         .unwrap_err();
@@ -228,9 +276,70 @@ mod tests {
             &base(0.2 / 3136.0),
             60_000,
             8,
+            None,
             &SweepRunner::with_threads(2),
         )
         .unwrap();
         assert_eq!(r.nodes, 1, "light load needs one node");
+    }
+
+    #[test]
+    fn generous_power_budget_does_not_change_the_answer() {
+        let m = model();
+        let cfg = base(1.5 / 3136.0);
+        let runner = SweepRunner::with_threads(2);
+        let plain = plan_capacity(&m, &cfg, 50_000, 16, None, &runner).unwrap();
+        // 1 kW covers any fleet this search can return (16 nodes idle at
+        // ~191 W; even 16 peaks stay well under).
+        let budgeted = plan_capacity(&m, &cfg, 50_000, 16, Some(1_000.0), &runner).unwrap();
+        assert_eq!(plain.nodes, budgeted.nodes);
+        assert_eq!(budgeted.power_budget_w, Some(1_000.0));
+        let power = budgeted.stats.energy.unwrap().avg_power_w();
+        assert!(power > 0.0 && power <= 1_000.0, "power {power} W");
+        assert!(
+            budgeted.evaluated.iter().all(|p| p.power_w.is_some()),
+            "every probe must record its power"
+        );
+    }
+
+    #[test]
+    fn impossible_power_budget_errors_with_wattage() {
+        // 1 W is below a single node's ~12 W idle floor: no fleet can
+        // meet it, and the error must say so with the measured draw.
+        let m = model();
+        let err = plan_capacity(
+            &m,
+            &base(1.5 / 3136.0),
+            50_000,
+            16,
+            Some(1.0),
+            &SweepRunner::with_threads(2),
+        )
+        .unwrap_err();
+        assert!(err.contains("budget 1 W"), "{err}");
+        assert!(err.contains("W >"), "{err}");
+    }
+
+    #[test]
+    fn power_budget_rejects_bad_inputs() {
+        let m = model();
+        let cfg = base(1e-4);
+        for bad in [0.0, -5.0, f64::NAN] {
+            let err = plan_capacity(&m, &cfg, 50_000, 8, Some(bad), &SweepRunner::with_threads(1))
+                .unwrap_err();
+            assert!(err.contains("positive wattage"), "{bad}: {err}");
+        }
+        // A bare-shape model has no energy profile to budget against.
+        let bare = NodeModel::new(m.shape.clone());
+        let err = plan_capacity(
+            &bare,
+            &cfg,
+            50_000,
+            8,
+            Some(100.0),
+            &SweepRunner::with_threads(1),
+        )
+        .unwrap_err();
+        assert!(err.contains("energy profile"), "{err}");
     }
 }

@@ -18,7 +18,15 @@
 //! - [`stats`] — exact p50/p95/p99/p999 latency, throughput, per-node
 //!   utilization, rejection rate;
 //! - [`capacity`] — "minimum nodes such that p99 <= target at this QPS",
-//!   by parallel section search over fleet size on [`SweepRunner`].
+//!   by parallel section search over fleet size on [`SweepRunner`],
+//!   optionally gated by an average-fleet-power budget.
+//!
+//! Fleet energy rides along (DESIGN.md §5): every [`NodeModel`] built
+//! from a workload carries an [`EnergyProfile`] (one injection = one
+//! image's dynamic energy; an allocated replica burns the node idle
+//! floor while its bottleneck is not streaming), and every run reports
+//! [`FleetEnergy`] — joules per image, average watts, fleet TOPS/W,
+//! padding waste — in [`ClusterStats`] and its JSON form.
 //!
 //! Everything is deterministic from the seed; `smart-pim cluster` is the
 //! CLI surface and `benches/cluster_scale.rs` writes `BENCH_cluster.json`.
@@ -35,6 +43,6 @@ pub mod stats;
 
 pub use arrival::ArrivalProcess;
 pub use capacity::{plan_capacity, CapacityPoint, CapacityReport};
-pub use node::{Node, NodeModel, Served};
+pub use node::{EnergyProfile, Node, NodeModel, Served};
 pub use sim::{cycle_policy, rate_from_qps, simulate, ClusterConfig, RoutePolicy};
-pub use stats::{ClusterStats, LatencySummary};
+pub use stats::{ClusterStats, FleetEnergy, LatencySummary};

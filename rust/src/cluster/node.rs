@@ -11,8 +11,36 @@ use std::collections::VecDeque;
 use crate::cnn::Network;
 use crate::config::ArchConfig;
 use crate::coordinator::{BatchPolicy, Dispatcher, PipelineShape, Request};
-use crate::mapping::{NetworkMapping, ReplicationPlan};
+use crate::mapping::{NetworkMapping, Placement, ReplicationPlan};
 use crate::pipeline::build_plans;
+use crate::power::{components::aggregates, EnergyModel};
+use crate::sim::extract_flows;
+
+/// The static energy parameters of one fleet replica, derived from the
+/// same mapping/placement/traffic chain the single-node energy model uses
+/// (DESIGN.md §5): an allocated replica burns the always-on node idle
+/// floor (eDRAM buffers + routers never power-gate) over its whole
+/// lifetime, and every pipeline injection — real or padding — adds one
+/// image's dynamic energy on top.
+#[derive(Debug, Clone, Copy)]
+pub struct EnergyProfile {
+    /// Dynamic energy of one pipeline injection in millijoules
+    /// ([`EnergyModel::image_energy`] over the replica's mapping, with
+    /// fan-out-aware `copy_hops` weights).
+    pub image_mj: f64,
+    /// Incremental power above the idle floor while the bottleneck stage
+    /// streams (W): `image_mj / (interval x logical cycle)`. By
+    /// construction, utilization x active power x span == injections x
+    /// image energy.
+    pub active_power_w: f64,
+    /// Always-on idle floor (W) — [`aggregates::NODE_IDLE_POWER_MW`] —
+    /// burned over the full span regardless of traffic.
+    pub idle_power_w: f64,
+    /// Crossbar operations one completed image represents (`Network::ops`).
+    pub ops_per_image: u64,
+    /// Logical cycle duration in ns (converts spans to wall seconds).
+    pub logical_cycle_ns: f64,
+}
 
 /// The static per-replica pipeline model every node of a (homogeneous)
 /// fleet shares: the dispatcher shape plus its two defining constants.
@@ -24,10 +52,14 @@ pub struct NodeModel {
     pub interval: u64,
     /// Injection-to-completion cycles for one image (pipeline fill).
     pub fill: u64,
+    /// Energy parameters of one replica; present when the model was built
+    /// from a real workload ([`Self::from_workload`]), absent for a bare
+    /// shape ([`Self::new`]) which has no network to price.
+    pub energy: Option<EnergyProfile>,
 }
 
 impl NodeModel {
-    /// Wrap a dispatcher shape.
+    /// Wrap a dispatcher shape (no workload attached, so no energy model).
     pub fn new(shape: PipelineShape) -> Self {
         let interval = shape.min_interval();
         let last = shape.n_layers() - 1;
@@ -36,19 +68,38 @@ impl NodeModel {
             shape,
             interval,
             fill,
+            energy: None,
         }
     }
 
     /// Build from a workload + replication plan on `arch` (the same
-    /// mapping -> stage-plan -> shape chain `smart-pim serve` uses).
+    /// mapping -> stage-plan -> shape chain `smart-pim serve` uses),
+    /// including the replica's [`EnergyProfile`].
     pub fn from_workload(
         net: &Network,
         arch: &ArchConfig,
         plan: &ReplicationPlan,
     ) -> Result<Self, String> {
         let mapping = NetworkMapping::build(net, arch, plan)?;
-        let shape = PipelineShape::from_plans(&build_plans(net, &mapping, arch));
-        Ok(Self::new(shape))
+        let plans = build_plans(net, &mapping, arch);
+        let shape = PipelineShape::from_plans(&plans);
+        let mut model = Self::new(shape);
+        // Price one injection through the single-node energy model: snake
+        // placement, fan-out-aware copy_hops, DAG-aware per-layer energy.
+        let placement = Placement::snake(arch);
+        let flows = extract_flows(net, &mapping, &placement, &plans, arch);
+        let hops: Vec<f64> = flows.iter().map(|l| l.copy_hops).collect();
+        let em = EnergyModel::new(arch);
+        let image_mj = em.image_energy(net, &mapping, &hops).total_mj();
+        let interval_s = model.interval as f64 * arch.logical_cycle_ns * 1e-9;
+        model.energy = Some(EnergyProfile {
+            image_mj,
+            active_power_w: image_mj * 1e-3 / interval_s,
+            idle_power_w: aggregates::NODE_IDLE_POWER_MW / 1000.0,
+            ops_per_image: net.ops(),
+            logical_cycle_ns: arch.logical_cycle_ns,
+        });
+        Ok(model)
     }
 
     /// Steady-state capacity in requests per cycle (one image per
@@ -240,6 +291,24 @@ mod tests {
         assert_eq!(m.fill, m.shape.offsets[m.shape.n_layers() - 1]
             + m.shape.occupancy[m.shape.n_layers() - 1]);
         assert!((m.capacity_per_cycle() - 1.0 / 3136.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn workload_model_carries_an_energy_profile() {
+        // Mirror-derived anchors (VGG-E Fig. 7 on the paper node): one
+        // image costs ~11.23 mJ, so streaming at the 3136-cycle beat draws
+        // ~11.7 W on top of the ~11.96 W idle floor.
+        let m = model();
+        let e = m.energy.expect("from_workload must attach energy");
+        assert!((10.5..12.0).contains(&e.image_mj), "image {} mJ", e.image_mj);
+        assert!((10.9..12.5).contains(&e.active_power_w), "active {} W", e.active_power_w);
+        assert!((e.idle_power_w - 11.9584).abs() < 0.01, "idle {} W", e.idle_power_w);
+        assert!((38.0e9..41.0e9).contains(&(e.ops_per_image as f64)), "{}", e.ops_per_image);
+        // The defining identity: active power x interval time == image energy.
+        let interval_s = m.interval as f64 * e.logical_cycle_ns * 1e-9;
+        assert!((e.active_power_w * interval_s - e.image_mj * 1e-3).abs() < 1e-12);
+        // A bare shape has no workload to price.
+        assert!(NodeModel::new(m.shape.clone()).energy.is_none());
     }
 
     #[test]

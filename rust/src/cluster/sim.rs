@@ -11,7 +11,7 @@ use crate::coordinator::{BatchPolicy, Clock, VirtualClock};
 
 use super::arrival::ArrivalProcess;
 use super::node::{Node, NodeModel};
-use super::stats::{ClusterStats, LatencySummary};
+use super::stats::{ClusterStats, FleetEnergy, LatencySummary};
 
 /// How arriving requests pick a node.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -251,6 +251,30 @@ pub fn simulate(model: &NodeModel, cfg: &ClusterConfig) -> ClusterStats {
     // busy <= span, so the fraction stays in [0, 1]).
     let busy_until = nodes.iter().map(|n| n.busy_until()).max().unwrap_or(0);
     let span = drained_at.max(busy_until).max(1);
+    // Fleet energy: every injection (real or padding) costs one image's
+    // dynamic energy ON TOP of the always-on idle floor every allocated
+    // replica burns over the whole span (eDRAM refresh and routers never
+    // power-gate, so a busy node always draws MORE than an idle one).
+    // Dynamic energy is charged over the same span utilization uses, so
+    // dynamic_j == Σ utilization x active power x span exactly (the
+    // conservation identity tests/golden_energy.rs pins).
+    let energy = model.energy.map(|p| {
+        let t_s = p.logical_cycle_ns * 1e-9;
+        let (mut dynamic_mj, mut padding_mj) = (0.0, 0.0);
+        for n in &nodes {
+            dynamic_mj += n.injected as f64 * p.image_mj;
+            padding_mj += (n.injected - n.completed) as f64 * p.image_mj;
+        }
+        let idle_j = nodes.len() as f64 * span as f64 * t_s * p.idle_power_w;
+        FleetEnergy {
+            dynamic_j: dynamic_mj * 1e-3,
+            idle_j,
+            padding_waste_j: padding_mj * 1e-3,
+            span_s: span as f64 * t_s,
+            completed_ops: completed * p.ops_per_image,
+            completed,
+        }
+    });
     ClusterStats {
         offered: arrivals.len() as u64,
         completed,
@@ -265,6 +289,8 @@ pub fn simulate(model: &NodeModel, cfg: &ClusterConfig) -> ClusterStats {
             .collect(),
         per_node_completed: nodes.iter().map(|n| n.completed).collect(),
         per_node_rejected: nodes.iter().map(|n| n.rejected).collect(),
+        per_node_injected: nodes.iter().map(|n| n.injected).collect(),
+        energy,
     }
 }
 
@@ -438,6 +464,34 @@ mod tests {
         assert_eq!(s.latency.p50(), m.fill);
         assert_eq!(s.latency.max(), m.fill);
         assert_eq!(s.queueing.max(), 0);
+    }
+
+    #[test]
+    fn energy_accounting_rides_along() {
+        let s = simulate(&model(), &light_cfg());
+        let e = s.energy.expect("workload-built model carries energy");
+        assert!(e.dynamic_j > 0.0 && e.idle_j > 0.0);
+        assert!(e.total_j() > e.dynamic_j, "idle floor must add energy");
+        assert!(e.joules_per_image() > 0.0);
+        assert!(e.avg_power_w() > 0.0);
+        // Light load on 2 nodes: a few watts of dynamic draw on top of the
+        // 2-node always-on floor (~23.9 W), far below 2 peak envelopes.
+        assert!((23.9..40.0).contains(&e.avg_power_w()), "{} W", e.avg_power_w());
+        // Dynamic energy == injections x image energy, summed per node.
+        let injected: u64 = s.per_node_injected.iter().sum();
+        let img_mj = model().energy.unwrap().image_mj;
+        assert!((e.dynamic_j - injected as f64 * img_mj * 1e-3).abs() < 1e-9);
+        // Padding is a subset of dynamic energy.
+        assert!(e.padding_waste_j >= 0.0 && e.padding_waste_j <= e.dynamic_j);
+    }
+
+    #[test]
+    fn bare_shape_model_reports_no_energy() {
+        let m = model();
+        let bare = NodeModel::new(m.shape.clone());
+        let s = simulate(&bare, &light_cfg());
+        assert!(s.energy.is_none(), "no profile, no energy block");
+        assert_eq!(s.completed + s.rejected, s.offered);
     }
 
     #[test]

@@ -72,6 +72,93 @@ impl LatencySummary {
     }
 }
 
+/// Fleet-wide energy accounting over one simulated run (present when the
+/// [`NodeModel`] carried an [`EnergyProfile`], i.e. was built from a real
+/// workload). Semantics (DESIGN.md §5): every allocated replica burns the
+/// always-on node idle floor (eDRAM refresh + routers never power-gate)
+/// over the whole span; each pipeline injection — real or padding — adds
+/// one image's dynamic energy on top, so a busy node always draws more
+/// than an idle one; padding injections are pure waste (their outputs
+/// are discarded).
+///
+/// [`NodeModel`]: super::node::NodeModel
+/// [`EnergyProfile`]: super::node::EnergyProfile
+#[derive(Debug, Clone, Copy)]
+pub struct FleetEnergy {
+    /// Dynamic (above-floor) energy of all pipeline injections, real +
+    /// padding (J). Identity pinned by `tests/golden_energy.rs`: this
+    /// equals Σ_node utilization x active power x span — the "fleet
+    /// dynamic energy = per-node utilization x active power" conservation
+    /// law.
+    pub dynamic_j: f64,
+    /// Always-on floor energy of the whole fleet over the full span (J):
+    /// fleet size x span x idle power, burned whether or not a replica
+    /// serves traffic.
+    pub idle_j: f64,
+    /// The subset of `dynamic_j` spent on padding injections (J) — batches
+    /// padded to an executable size occupy real pipeline slots whose
+    /// outputs are discarded.
+    pub padding_waste_j: f64,
+    /// Simulated span in wall seconds (the utilization span: last
+    /// completion or last reserved bottleneck slot).
+    pub span_s: f64,
+    /// Crossbar operations completed (completed images x ops/image).
+    pub completed_ops: u64,
+    /// Completed images (the joules-per-image denominator).
+    pub completed: u64,
+}
+
+impl FleetEnergy {
+    /// Total fleet energy: dynamic + idle (J).
+    pub fn total_j(&self) -> f64 {
+        self.dynamic_j + self.idle_j
+    }
+
+    /// Joules per completed image, idle floor included (0 when nothing
+    /// completed — an empty run burned idle energy for no images, which
+    /// has no meaningful per-image cost).
+    pub fn joules_per_image(&self) -> f64 {
+        if self.completed == 0 {
+            return 0.0;
+        }
+        self.total_j() / self.completed as f64
+    }
+
+    /// Average fleet power over the simulated span (W); 0 for a zero span.
+    pub fn avg_power_w(&self) -> f64 {
+        if self.span_s <= 0.0 {
+            return 0.0;
+        }
+        self.total_j() / self.span_s
+    }
+
+    /// Fleet-level energy efficiency: completed crossbar tera-ops per
+    /// watt. Unlike the single-node Fig. 9 number this includes the idle
+    /// floor and padding waste, so it is bounded above by the workload's
+    /// dynamic-only TOPS/W and degrades as the fleet idles. 0 when no
+    /// energy was burned.
+    pub fn tops_per_watt(&self) -> f64 {
+        let j = self.total_j();
+        if j <= 0.0 {
+            return 0.0;
+        }
+        self.completed_ops as f64 / j / 1e12
+    }
+
+    /// Machine-readable form (merged into [`ClusterStats::to_json`]).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("energy_dynamic_j", self.dynamic_j.into()),
+            ("energy_idle_j", self.idle_j.into()),
+            ("energy_padding_waste_j", self.padding_waste_j.into()),
+            ("energy_total_j", self.total_j().into()),
+            ("joules_per_image", self.joules_per_image().into()),
+            ("avg_power_w", self.avg_power_w().into()),
+            ("fleet_tops_per_watt", self.tops_per_watt().into()),
+        ])
+    }
+}
+
 /// Everything a cluster simulation reports.
 #[derive(Debug, Clone)]
 pub struct ClusterStats {
@@ -98,6 +185,12 @@ pub struct ClusterStats {
     pub per_node_completed: Vec<u64>,
     /// Per-node rejected-request counts.
     pub per_node_rejected: Vec<u64>,
+    /// Per-node pipeline injections, real + padding (the energy model's
+    /// dynamic-energy unit; `injected - completed` per node is padding).
+    pub per_node_injected: Vec<u64>,
+    /// Fleet energy accounting; `None` when the node model carried no
+    /// [`EnergyProfile`](super::node::EnergyProfile).
+    pub energy: Option<FleetEnergy>,
 }
 
 impl ClusterStats {
@@ -135,8 +228,9 @@ impl ClusterStats {
     }
 
     /// Machine-readable form (BENCH_cluster.json rows, `cluster --json`).
+    /// Fleet-energy fields ride along when energy accounting ran.
     pub fn to_json(&self, logical_cycle_ns: f64) -> Json {
-        Json::obj(vec![
+        let mut doc = Json::obj(vec![
             ("offered", self.offered.into()),
             ("completed", self.completed.into()),
             ("rejected", self.rejected.into()),
@@ -160,7 +254,17 @@ impl ClusterStats {
                 "per_node_completed",
                 Json::Arr(self.per_node_completed.iter().map(|&c| c.into()).collect()),
             ),
-        ])
+            (
+                "per_node_injected",
+                Json::Arr(self.per_node_injected.iter().map(|&c| c.into()).collect()),
+            ),
+        ]);
+        if let (Json::Obj(pairs), Some(e)) = (&mut doc, &self.energy) {
+            if let Json::Obj(extra) = e.to_json() {
+                pairs.extend(extra);
+            }
+        }
+        doc
     }
 }
 
@@ -208,6 +312,8 @@ mod tests {
             node_utilization: vec![0.5, 0.7],
             per_node_completed: vec![4, 4],
             per_node_rejected: vec![1, 1],
+            per_node_injected: vec![5, 5],
+            energy: None,
         }
     }
 
@@ -237,5 +343,53 @@ mod tests {
         assert!(j.contains("\"latency_p99_cycles\":80"), "{j}");
         assert!(j.contains("\"rejected\":2"), "{j}");
         assert!(j.contains("\"node_utilization\""), "{j}");
+        assert!(j.contains("\"per_node_injected\""), "{j}");
+        assert!(!j.contains("energy_total_j"), "no profile, no energy: {j}");
+    }
+
+    fn energy() -> FleetEnergy {
+        FleetEnergy {
+            dynamic_j: 8.0,
+            idle_j: 2.0,
+            padding_waste_j: 0.5,
+            span_s: 4.0,
+            completed_ops: 100 * 39_300_000_000,
+            completed: 100,
+        }
+    }
+
+    #[test]
+    fn fleet_energy_derived_quantities() {
+        let e = energy();
+        assert_eq!(e.total_j(), 10.0);
+        assert_eq!(e.joules_per_image(), 0.1);
+        assert_eq!(e.avg_power_w(), 2.5);
+        // 3.93e12 ops / 10 J / 1e12 = 0.393 TOPS/W.
+        assert!((e.tops_per_watt() - 0.393).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fleet_energy_guards_empty_runs() {
+        let mut e = energy();
+        e.completed = 0;
+        e.completed_ops = 0;
+        assert_eq!(e.joules_per_image(), 0.0, "no images, no per-image cost");
+        assert_eq!(e.tops_per_watt(), 0.0);
+        e.span_s = 0.0;
+        assert_eq!(e.avg_power_w(), 0.0, "zero span must not divide");
+        e.dynamic_j = 0.0;
+        e.idle_j = 0.0;
+        assert_eq!(e.tops_per_watt(), 0.0, "zero energy must not divide");
+    }
+
+    #[test]
+    fn json_includes_energy_when_present() {
+        let mut s = stats();
+        s.energy = Some(energy());
+        let j = s.to_json(306.0).render();
+        assert!(j.contains("\"energy_total_j\":10"), "{j}");
+        assert!(j.contains("\"energy_padding_waste_j\":0.5"), "{j}");
+        assert!(j.contains("\"fleet_tops_per_watt\""), "{j}");
+        assert!(j.contains("\"avg_power_w\":2.5"), "{j}");
     }
 }

@@ -17,7 +17,8 @@
 //! smart-pim noc --pattern tornado --rate 0.1 [--noc smart]
 //! smart-pim serve --requests 64 [--artifacts artifacts]
 //! smart-pim cluster --network vgg_e --nodes 4 --qps 500 --pattern poisson
-//! smart-pim cluster --qps 3000 --capacity --p99-target 20000
+//! smart-pim cluster --qps 3000 --capacity --p99-target 20000 [--power-budget-w 60]
+//! smart-pim reproduce                 # paper-headline scoreboard + BENCH_headline.json
 //! smart-pim dump-config               # active ArchConfig in file format
 //! smart-pim report-all                # everything (minutes)
 //! ```
@@ -46,7 +47,8 @@ fn main() {
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() {
         eprintln!(
-            "usage: smart-pim <fig4..fig11|plan|simulate|noc|serve|cluster|report-all> [options]"
+            "usage: smart-pim <fig4..fig11|plan|simulate|noc|serve|cluster|reproduce|report-all> \
+             [options]"
         );
         std::process::exit(2);
     }
@@ -79,6 +81,7 @@ fn main() {
         "noc" => noc_cmd(&args),
         "serve" => serve(&args),
         "cluster" => cluster_cmd(&args),
+        "reproduce" => reproduce(&args),
         "dump-config" => {
             print!("{}", smart_pim::config::render_arch(&arch()));
             Ok(())
@@ -642,10 +645,42 @@ fn noc_cmd(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// `smart-pim reproduce`: recompute the paper's five abstract-level
+/// headline claims (best-case TOPS / FPS / TOPS/W, the ~14x pipelining
+/// speedup, the ~1.08x SMART-over-wormhole speedup) through the full
+/// model stack, check each against its pinned tolerance band
+/// (`metrics::headline::bands`), and write the scoreboard to
+/// `BENCH_headline.json`. Exits non-zero when any band fails, so CI and
+/// scripts can gate on it.
+fn reproduce(args: &Args) -> Result<(), String> {
+    args.check_known(&["json", "threads", "config"])?;
+    let runner = match args.get("threads") {
+        Some(t) => SweepRunner::with_threads(t.parse().map_err(|e| format!("--threads: {e}"))?),
+        None => SweepRunner::new(),
+    };
+    println!("recomputing the 5 headline metrics (20-point grid, SMART + wormhole) ...");
+    let board = smart_pim::metrics::scoreboard(&arch(), &runner);
+    board.table().print();
+    let path = args.get_or("json", "BENCH_headline.json");
+    std::fs::write(path, board.to_json().render_pretty())
+        .map_err(|e| format!("writing {path}: {e}"))?;
+    println!("wrote {path}");
+    if board.all_pass() {
+        println!("all 5 headline metrics within their pinned bands");
+        Ok(())
+    } else {
+        Err(format!(
+            "headline metrics out of band: {}",
+            board.failures().join(", ")
+        ))
+    }
+}
+
 /// `smart-pim cluster`: trace-driven multi-node serving simulation over
 /// node replicas running the workload's replication plan, with SLO
 /// metrics; `--capacity` turns it into a planner ("minimum nodes such
-/// that p99 <= --p99-target at this --qps").
+/// that p99 <= --p99-target at this --qps", optionally also under a
+/// fleet power budget).
 fn cluster_cmd(args: &Args) -> Result<(), String> {
     use smart_pim::cluster::{
         plan_capacity, rate_from_qps, simulate as cluster_simulate, ArrivalProcess,
@@ -654,7 +689,8 @@ fn cluster_cmd(args: &Args) -> Result<(), String> {
 
     args.check_known(&[
         "network", "plan", "nodes", "qps", "pattern", "trace", "route", "max-queue",
-        "horizon", "seed", "p99-target", "max-nodes", "json", "threads", "config",
+        "horizon", "seed", "p99-target", "max-nodes", "power-budget-w", "json", "threads",
+        "config",
     ])?;
     let a = arch();
     let name = args.get_or("network", "vggE");
@@ -719,7 +755,7 @@ fn cluster_cmd(args: &Args) -> Result<(), String> {
         );
     }
     if !capacity_mode {
-        for opt in ["p99-target", "max-nodes", "threads"] {
+        for opt in ["p99-target", "max-nodes", "threads", "power-budget-w"] {
             if args.get(opt).is_some() {
                 return Err(format!("--{opt} only applies with --capacity"));
             }
@@ -778,25 +814,31 @@ fn cluster_cmd(args: &Args) -> Result<(), String> {
         let target: u64 = args
             .get_parse::<u64>("p99-target")?
             .ok_or("--capacity needs --p99-target CYCLES")?;
+        let power_budget: Option<f64> = args.get_parse::<f64>("power-budget-w")?;
         let runner = match args.get("threads") {
             Some(t) => {
                 SweepRunner::with_threads(t.parse().map_err(|e| format!("--threads: {e}"))?)
             }
             None => SweepRunner::new(),
         };
-        let r = plan_capacity(&model, &cfg, target, max_nodes, &runner)?;
+        let r = plan_capacity(&model, &cfg, target, max_nodes, power_budget, &runner)?;
+        let budget_note = match power_budget {
+            Some(b) => format!(", fleet power <= {b} W"),
+            None => String::new(),
+        };
         let mut t = Table::new(
             format!(
-                "capacity search — p99 <= {target} cycles ({} ms), {load}",
+                "capacity search — p99 <= {target} cycles ({} ms){budget_note}, {load}",
                 fnum(ms(target as f64), 2)
             ),
-            &["nodes", "p99 (cycles)", "rejected", "meets SLO"],
+            &["nodes", "p99 (cycles)", "rejected", "power (W)", "meets SLO"],
         );
         for p in &r.evaluated {
             t.row(&[
                 p.nodes.to_string(),
                 p.p99.to_string(),
                 p.rejected.to_string(),
+                p.power_w.map(|w| fnum(w, 1)).unwrap_or_else(|| "-".into()),
                 if p.meets { "yes" } else { "no" }.into(),
             ]);
         }
@@ -851,6 +893,19 @@ fn cluster_cmd(args: &Args) -> Result<(), String> {
         .map(|u| format!("{:.0}%", 100.0 * u))
         .collect();
     t.row(&["per-node utilization".into(), util_cells.join(" ")]);
+    if let Some(e) = &stats.energy {
+        t.row(&[
+            "energy / image (mJ)".into(),
+            fnum(e.joules_per_image() * 1e3, 2),
+        ]);
+        t.row(&["fleet avg power (W)".into(), fnum(e.avg_power_w(), 2)]);
+        t.row(&["fleet TOPS/W".into(), fnum(e.tops_per_watt(), 4)]);
+        t.row(&[
+            "energy dynamic | idle (J)".into(),
+            format!("{} | {}", fnum(e.dynamic_j, 2), fnum(e.idle_j, 2)),
+        ]);
+        t.row(&["padding waste (J)".into(), fnum(e.padding_waste_j, 3)]);
+    }
     t.print();
 
     if let Some(path) = args.get("json") {

@@ -1,0 +1,261 @@
+//! The paper-headline scoreboard behind `smart-pim reproduce`: the five
+//! abstract-level claims — best-case TOPS, FPS and TOPS/W, the ~14x
+//! pipelining speedup, and the ~1.08x SMART-over-wormhole speedup — each
+//! recomputed through the full model stack and checked against a pinned
+//! tolerance band, then written to `BENCH_headline.json`.
+//!
+//! Band provenance (DESIGN.md §5): the FPS/TOPS bands bracket the ideal
+//! calibration anchor (1042 FPS at the 3136-cycle VGG-E beat) from below,
+//! since the SMART co-simulation can only throttle it; the TOPS/W band
+//! brackets the arithmetic energy model (3.50 TOPS/W for VGG-E Fig. 7,
+//! engine-independent); the speedup bands are the paper-band integration
+//! ranges `tests/integration_pipeline.rs` has pinned since the grid first
+//! ran. A band failure therefore means a *regression*, not a noisy run —
+//! every quantity here is deterministic.
+
+use crate::cnn::VggVariant;
+use crate::config::{ArchConfig, NocKind, Scenario};
+use crate::sweep::SweepRunner;
+use crate::util::stats::geomean;
+use crate::util::table::{fnum, Table};
+use crate::util::Json;
+
+use super::{paper, Grid};
+
+/// One headline claim: the model's value vs the paper's, with the pinned
+/// acceptance band for the model.
+#[derive(Debug, Clone)]
+pub struct HeadlineMetric {
+    /// Stable machine key (JSON field-friendly).
+    pub key: &'static str,
+    /// Human-readable row label.
+    pub label: &'static str,
+    /// The value this model produces.
+    pub model: f64,
+    /// The value the paper reports.
+    pub paper: f64,
+    /// Inclusive lower edge of the model's acceptance band.
+    pub lo: f64,
+    /// Inclusive upper edge of the model's acceptance band.
+    pub hi: f64,
+}
+
+impl HeadlineMetric {
+    /// Does the model value sit inside its pinned band?
+    pub fn pass(&self) -> bool {
+        self.model.is_finite() && self.lo <= self.model && self.model <= self.hi
+    }
+}
+
+/// The full scoreboard: all five headline metrics in abstract order.
+#[derive(Debug, Clone)]
+pub struct Scoreboard {
+    /// The metrics, in report order.
+    pub metrics: Vec<HeadlineMetric>,
+}
+
+/// Acceptance bands, pinned. Each constant documents its derivation.
+pub mod bands {
+    /// Best-case TOPS (VGG-E, scenario 4, SMART). The ideal-NoC anchor is
+    /// 40.92 TOPS (19.63 GMACs x 1042 FPS); SMART may throttle a few
+    /// percent but must stay above the paper's wormhole result (36.79).
+    pub const TOPS: (f64, f64) = (37.5, 41.5);
+    /// Best-case FPS: the 1042-FPS calibration anchor minus the same
+    /// few-percent SMART allowance.
+    pub const FPS: (f64, f64) = (950.0, 1065.0);
+    /// Best-case TOPS/W (VGG-E, scenario 4): the arithmetic energy model
+    /// yields 3.50, engine-independent; the band brackets it against the
+    /// paper's 3.5914.
+    pub const TOPS_PER_WATT: (f64, f64) = (3.2, 3.8);
+    /// Geomean speedup of scenario (4) over (1) across the five VGGs on
+    /// SMART — the abstract's "up to 14x better performance" claim; same
+    /// band `integration_pipeline.rs::fig5_geomeans_in_paper_band` pins.
+    pub const SCENARIO_SPEEDUP: (f64, f64) = (11.0, 20.0);
+    /// Geomean speedup of SMART over wormhole in scenario (4) — the
+    /// abstract's 1.08x claim. The model keeps the gap in the single-digit
+    /// percent range (wormhole sits just past the conv1/conv2 hotspot's
+    /// stability edge); the floor allows the sub-percent sampling jitter
+    /// the NoC-ordering tests tolerate on unsaturated variants, the cap is
+    /// the ideal/wormhole plausibility bound.
+    pub const SMART_SPEEDUP: (f64, f64) = (0.99, 1.35);
+}
+
+/// Compute the scoreboard: one 20-point benchmark grid (5 VGGs x
+/// scenarios {(1), (4)} x NoCs {wormhole, smart}) fanned out on `runner`,
+/// then the five headline reductions.
+pub fn scoreboard(arch: &ArchConfig, runner: &SweepRunner) -> Scoreboard {
+    let grid = Grid::run_with(
+        runner,
+        arch,
+        &VggVariant::ALL,
+        &[Scenario::Baseline, Scenario::ReplicationBatch],
+        &[NocKind::Wormhole, NocKind::Smart],
+    );
+    let best = grid.get(VggVariant::E, Scenario::ReplicationBatch, NocKind::Smart);
+    let scenario_ratios: Vec<f64> = VggVariant::ALL
+        .iter()
+        .map(|&v| {
+            grid.get(v, Scenario::ReplicationBatch, NocKind::Smart).fps
+                / grid.get(v, Scenario::Baseline, NocKind::Smart).fps
+        })
+        .collect();
+    let smart_ratios: Vec<f64> = VggVariant::ALL
+        .iter()
+        .map(|&v| {
+            grid.get(v, Scenario::ReplicationBatch, NocKind::Smart).fps
+                / grid.get(v, Scenario::ReplicationBatch, NocKind::Wormhole).fps
+        })
+        .collect();
+    let metric = |key, label, model, paper, (lo, hi): (f64, f64)| HeadlineMetric {
+        key,
+        label,
+        model,
+        paper,
+        lo,
+        hi,
+    };
+    Scoreboard {
+        metrics: vec![
+            metric(
+                "best_tops",
+                "best-case TOPS (VGG-E, scenario 4, SMART)",
+                best.tops,
+                paper::FIG8_BEST_TOPS,
+                bands::TOPS,
+            ),
+            metric(
+                "best_fps",
+                "best-case FPS (VGG-E, scenario 4, SMART)",
+                best.fps,
+                paper::FIG8_BEST_FPS,
+                bands::FPS,
+            ),
+            metric(
+                "best_tops_per_watt",
+                "best-case TOPS/W (VGG-E, scenario 4)",
+                best.tops_per_watt,
+                paper::FIG9_TOPS_PER_WATT[4],
+                bands::TOPS_PER_WATT,
+            ),
+            metric(
+                "scenario_speedup",
+                "pipelining speedup, geomean (4)/(1)",
+                geomean(&scenario_ratios),
+                paper::FIG5_GEOMEANS[2],
+                bands::SCENARIO_SPEEDUP,
+            ),
+            metric(
+                "smart_speedup",
+                "SMART/wormhole speedup, geomean @ (4)",
+                geomean(&smart_ratios),
+                paper::FIG6_SMART_GEOMEAN,
+                bands::SMART_SPEEDUP,
+            ),
+        ],
+    }
+}
+
+impl Scoreboard {
+    /// True when every metric sits inside its band.
+    pub fn all_pass(&self) -> bool {
+        self.metrics.iter().all(|m| m.pass())
+    }
+
+    /// The failing metrics' keys (empty on a clean board).
+    pub fn failures(&self) -> Vec<&'static str> {
+        self.metrics
+            .iter()
+            .filter(|m| !m.pass())
+            .map(|m| m.key)
+            .collect()
+    }
+
+    /// The paper-vs-model table `smart-pim reproduce` prints.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            "paper-headline scoreboard — model vs paper, pinned bands",
+            &["metric", "model", "paper", "band", "status"],
+        );
+        for m in &self.metrics {
+            t.row(&[
+                m.label.into(),
+                fnum(m.model, 4),
+                fnum(m.paper, 4),
+                format!("[{}, {}]", fnum(m.lo, 2), fnum(m.hi, 2)),
+                if m.pass() { "PASS" } else { "FAIL" }.into(),
+            ]);
+        }
+        t
+    }
+
+    /// The `BENCH_headline.json` document.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "metrics",
+                Json::Arr(
+                    self.metrics
+                        .iter()
+                        .map(|m| {
+                            Json::obj(vec![
+                                ("key", m.key.into()),
+                                ("label", m.label.into()),
+                                ("model", m.model.into()),
+                                ("paper", m.paper.into()),
+                                ("band_lo", m.lo.into()),
+                                ("band_hi", m.hi.into()),
+                                ("pass", m.pass().into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("all_pass", self.all_pass().into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake(model: f64, lo: f64, hi: f64) -> HeadlineMetric {
+        HeadlineMetric {
+            key: "k",
+            label: "l",
+            model,
+            paper: 1.0,
+            lo,
+            hi,
+        }
+    }
+
+    #[test]
+    fn band_edges_are_inclusive() {
+        assert!(fake(1.0, 1.0, 2.0).pass());
+        assert!(fake(2.0, 1.0, 2.0).pass());
+        assert!(!fake(0.999, 1.0, 2.0).pass());
+        assert!(!fake(2.001, 1.0, 2.0).pass());
+        assert!(!fake(f64::NAN, 0.0, 2.0).pass(), "NaN must fail, not pass");
+    }
+
+    #[test]
+    fn scoreboard_reports_failures_and_json() {
+        let b = Scoreboard {
+            metrics: vec![fake(1.5, 1.0, 2.0), fake(5.0, 1.0, 2.0)],
+        };
+        assert!(!b.all_pass());
+        assert_eq!(b.failures(), vec!["k"]);
+        let j = b.to_json().render();
+        assert!(j.contains("\"all_pass\":false"), "{j}");
+        assert!(j.contains("\"band_lo\":1"), "{j}");
+        let t = b.table().render();
+        assert!(t.contains("FAIL") && t.contains("PASS"), "{t}");
+    }
+
+    // The full-grid scoreboard run is pinned by tests/golden_energy.rs
+    // (one 20-point grid under `cargo test`, the same scale as the
+    // existing paper-band integration tests); the CI `reproduce` smoke
+    // step runs it a second time to gate the CLI surface and the
+    // BENCH_headline.json artifact path specifically.
+}

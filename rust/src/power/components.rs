@@ -25,6 +25,7 @@ pub struct ComponentRow {
 }
 
 /// Core-level rows (per core).
+#[rustfmt::skip]
 pub const CORE_ROWS: &[ComponentRow] = &[
     ComponentRow { name: "SUB", area_mm2: 0.0002, power_mw: 2.4, count: 8, spec: "128 x 128, 2-bit MLC" },
     ComponentRow { name: "DAC", area_mm2: 0.00017, power_mw: 4.0, count: 1024, spec: "1-bit resolution" },
@@ -36,6 +37,7 @@ pub const CORE_ROWS: &[ComponentRow] = &[
 ];
 
 /// Tile-level rows (per tile, excluding the 12 cores).
+#[rustfmt::skip]
 pub const TILE_ROWS: &[ComponentRow] = &[
     ComponentRow { name: "MEM", area_mm2: 0.086, power_mw: 17.66, count: 1, spec: "64KB eDRAM" },
     ComponentRow { name: "TileBus", area_mm2: 0.09, power_mw: 7.0, count: 1, spec: "bus width 384 bit" },
@@ -74,6 +76,12 @@ pub mod aggregates {
     pub const TILE_PERIPHERAL_POWER_MW: f64 = TILE_POWER_MW - CORES_PER_TILE_POWER_MW;
     /// One router (mW).
     pub const ROUTER_POWER_MW: f64 = ROUTERS_POWER_MW / 320.0;
+    /// Always-on idle floor of one node (mW): the eDRAM buffers / tile
+    /// peripherals (refresh never power-gates) of all 320 tiles plus every
+    /// mesh router. This is what an allocated-but-idle fleet replica burns
+    /// per the cluster energy model (DESIGN.md §5) — about 11.96 W, ~11 %
+    /// of the 108.27 W all-units-firing peak.
+    pub const NODE_IDLE_POWER_MW: f64 = TILE_PERIPHERAL_POWER_MW * 320.0 + ROUTERS_POWER_MW;
 }
 
 #[cfg(test)]
@@ -125,5 +133,13 @@ mod tests {
         assert!(agg::TILE_PERIPHERAL_POWER_MW > 0.0);
         assert!(agg::TILE_PERIPHERAL_POWER_MW < 30.0);
         assert!((agg::ROUTER_POWER_MW - 10.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn idle_floor_is_a_small_fraction_of_peak() {
+        // 320 x 26.87 mW peripherals + 3.36 W routers ≈ 11.958 W.
+        assert!((agg::NODE_IDLE_POWER_MW - 11_958.4).abs() < 0.5);
+        let frac = agg::NODE_IDLE_POWER_MW / agg::NODE_POWER_MW;
+        assert!((0.05..0.2).contains(&frac), "idle fraction {frac}");
     }
 }

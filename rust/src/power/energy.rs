@@ -29,6 +29,15 @@ impl EnergyBreakdown {
     pub fn total_mj(&self) -> f64 {
         self.core_mj + self.tile_mj + self.noc_mj
     }
+
+    /// The additive identity (fold seed for per-layer sums).
+    pub fn zero() -> Self {
+        Self {
+            core_mj: 0.0,
+            tile_mj: 0.0,
+            noc_mj: 0.0,
+        }
+    }
 }
 
 /// Energy model over a mapped network.
@@ -47,19 +56,34 @@ impl<'a> EnergyModel<'a> {
         Self { arch, flit_hop_pj }
     }
 
+    /// Active crossbar core-cycles of one layer for one image. Dataflow
+    /// stages (`Add` / `Concat` / `GlobalAvgPool`) own zero subarrays
+    /// (`SubarrayDemand::subarrays() == 0`), so their core contribution is
+    /// structurally 0 — they execute in the tile's S&A/OR path, which is
+    /// charged by [`Self::tile_cycles`] instead.
+    fn layer_core_cycles(&self, l: &crate::cnn::Layer, lm: &crate::mapping::LayerMapping) -> u64 {
+        let cores_per_copy = lm
+            .demand
+            .subarrays()
+            .div_ceil(self.arch.subarrays_per_core) as u64;
+        l.out_pixels() * cores_per_copy * lm.reload_rounds
+    }
+
+    /// Tile-peripheral cycles of one layer for one image: every tile the
+    /// layer owns is powered while the layer streams. For a dataflow stage
+    /// this is its single buffer tile over its full streaming window — the
+    /// "buffer energy" a weight-less merge/pool stage costs.
+    fn layer_tile_cycles(&self, l: &crate::cnn::Layer, lm: &crate::mapping::LayerMapping) -> u64 {
+        let occupancy = l.out_pixels().div_ceil(lm.replication as u64) * lm.reload_rounds;
+        occupancy * lm.tile_ids.len() as u64
+    }
+
     /// Active crossbar core-cycles for one image (replication-invariant).
     pub fn core_cycles(&self, net: &Network, mapping: &NetworkMapping) -> u64 {
         net.layers()
             .iter()
             .zip(&mapping.layers)
-            .map(|(l, lm)| {
-                let cores_per_copy = lm
-                    .demand
-                    .subarrays()
-                    .div_ceil(self.arch.subarrays_per_core)
-                    as u64;
-                l.out_pixels() * cores_per_copy * lm.reload_rounds
-            })
+            .map(|(l, lm)| self.layer_core_cycles(l, lm))
             .sum()
     }
 
@@ -68,11 +92,7 @@ impl<'a> EnergyModel<'a> {
         net.layers()
             .iter()
             .zip(&mapping.layers)
-            .map(|(l, lm)| {
-                let occupancy = l.out_pixels().div_ceil(lm.replication as u64)
-                    * lm.reload_rounds;
-                occupancy * lm.tile_ids.len() as u64
-            })
+            .map(|(l, lm)| self.layer_tile_cycles(l, lm))
             .sum()
     }
 
@@ -84,16 +104,20 @@ impl<'a> EnergyModel<'a> {
     /// `sim::traffic::extract_flows`), so the layer's hop weight is the
     /// sum of its copies' means — on a chain, just the plain mean.
     pub fn flit_hops(&self, net: &Network, _mapping: &NetworkMapping, hops: &[f64]) -> f64 {
-        let vals_per_flit = self.arch.values_per_flit() as f64;
         net.layers()
             .iter()
             .zip(hops)
-            .map(|(l, &h)| {
-                let values = (l.out_pixels() * l.out_ch() as u64) as f64
-                    / if l.has_pool() { 4.0 } else { 1.0 };
-                (values / vals_per_flit).ceil() * h.max(1.0)
-            })
+            .map(|(l, &h)| self.layer_flit_hops(l, h))
             .sum()
+    }
+
+    /// Flit-hops one layer injects for one image at hop weight `h` (its
+    /// summed per-successor mean hop count — fan-out is already folded in).
+    fn layer_flit_hops(&self, l: &crate::cnn::Layer, h: f64) -> f64 {
+        let vals_per_flit = self.arch.values_per_flit() as f64;
+        let values = (l.out_pixels() * l.out_ch() as u64) as f64
+            / if l.has_pool() { 4.0 } else { 1.0 };
+        (values / vals_per_flit).ceil() * h.max(1.0)
     }
 
     /// Per-image energy. `mean_hops[i]` is the layer's hop weight: the
@@ -106,35 +130,74 @@ impl<'a> EnergyModel<'a> {
         mapping: &NetworkMapping,
         mean_hops: &[f64],
     ) -> EnergyBreakdown {
+        self.layer_energy(net, mapping, mean_hops)
+            .iter()
+            .fold(EnergyBreakdown::zero(), |acc, e| EnergyBreakdown {
+                core_mj: acc.core_mj + e.core_mj,
+                tile_mj: acc.tile_mj + e.tile_mj,
+                noc_mj: acc.noc_mj + e.noc_mj,
+            })
+    }
+
+    /// Per-layer energy breakdown for one image, aligned with
+    /// `Network::layers()` ([`Self::image_energy`] is its sum). This is the
+    /// DAG-aware decomposition: crossbar layers pay core + tile + NoC;
+    /// dataflow stages (`Add` / `Concat` / `GlobalAvgPool`) own no
+    /// crossbars, so their `core_mj` is exactly 0 and they pay only their
+    /// buffer tile plus the fan-out NoC cost already folded into
+    /// `mean_hops` (one full OFM copy per DAG successor,
+    /// [`crate::sim::LayerFlows::copy_hops`]).
+    pub fn layer_energy(
+        &self,
+        net: &Network,
+        mapping: &NetworkMapping,
+        mean_hops: &[f64],
+    ) -> Vec<EnergyBreakdown> {
         let t_log_s = self.arch.logical_cycle_ns * 1e-9;
-        let core_mj = self.core_cycles(net, mapping) as f64
-            * agg::CORE_POWER_MW
-            * t_log_s; // mW * s = mJ? mW*s = mJ yes (1e-3 J)
-        let tile_mj = self.tile_cycles(net, mapping) as f64
-            * agg::TILE_PERIPHERAL_POWER_MW
-            * t_log_s;
-        let noc_mj = self.flit_hops(net, mapping, mean_hops) * self.flit_hop_pj * 1e-9;
-        EnergyBreakdown {
-            core_mj,
-            tile_mj,
-            noc_mj,
-        }
+        net.layers()
+            .iter()
+            .zip(&mapping.layers)
+            .zip(mean_hops)
+            .map(|((l, lm), &h)| EnergyBreakdown {
+                // mW x s = mJ on both cycle terms.
+                core_mj: self.layer_core_cycles(l, lm) as f64 * agg::CORE_POWER_MW * t_log_s,
+                tile_mj: self.layer_tile_cycles(l, lm) as f64
+                    * agg::TILE_PERIPHERAL_POWER_MW
+                    * t_log_s,
+                noc_mj: self.layer_flit_hops(l, h) * self.flit_hop_pj * 1e-9,
+            })
+            .collect()
     }
 
     /// Tera-operations per second per watt given per-image energy.
+    /// Dataflow layers contribute 0 MACs to `Network::ops` and 0 core
+    /// energy, so DAG workloads divide compute ops by compute-plus-buffer
+    /// energy — no double counting. Returns 0 for a zero-energy breakdown
+    /// (a weight-less network performs no crossbar ops; reporting 0 beats
+    /// the silent NaN/inf a bare division would produce).
     pub fn tops_per_watt(&self, net: &Network, energy: &EnergyBreakdown) -> f64 {
+        let mj = energy.total_mj();
+        if mj <= 0.0 {
+            return 0.0;
+        }
         // ops / (energy in J) = ops/J = ops/s per W; scale to tera.
-        net.ops() as f64 / (energy.total_mj() * 1e-3) / 1e12
+        net.ops() as f64 / (mj * 1e-3) / 1e12
     }
 
     /// Average power draw (W) at a given throughput, and its fraction of
     /// the node's 108.27 W peak (Fig. 4's "every component functioning"
-    /// bound): energy/image x images/second.
+    /// bound): energy/image x images/second. A non-positive or non-finite
+    /// `fps` means "no throughput measured" and reports 0 W rather than
+    /// silently propagating 0/NaN/inf into downstream tables.
     pub fn avg_power_w(&self, energy: &EnergyBreakdown, fps: f64) -> f64 {
+        if !fps.is_finite() || fps <= 0.0 {
+            return 0.0;
+        }
         energy.total_mj() * 1e-3 * fps
     }
 
-    /// Fraction of the Fig. 4 peak-power envelope actually used.
+    /// Fraction of the Fig. 4 peak-power envelope actually used (0 when
+    /// `fps` is non-positive or non-finite, like [`Self::avg_power_w`]).
     pub fn peak_utilization(&self, energy: &EnergyBreakdown, fps: f64) -> f64 {
         self.avg_power_w(energy, fps) / (agg::NODE_POWER_MW / 1000.0)
     }
@@ -219,6 +282,64 @@ mod tests {
         assert!(util > 0.02, "util {util} implausibly low");
         assert!(util < 1.0, "util {util} exceeds peak envelope");
         assert!((em.avg_power_w(&e, 1042.0) - e.total_mj() * 1.042).abs() < 1e-9);
+    }
+
+    #[test]
+    fn layer_energy_sums_to_image_energy() {
+        let (net, m, arch) = setup(VggVariant::E, true);
+        let em = EnergyModel::new(&arch);
+        let hops = vec![2.5; net.len()];
+        let per_layer = em.layer_energy(&net, &m, &hops);
+        assert_eq!(per_layer.len(), net.len());
+        let total = em.image_energy(&net, &m, &hops);
+        let sum: f64 = per_layer.iter().map(|e| e.total_mj()).sum();
+        assert!((sum - total.total_mj()).abs() < 1e-9, "{sum} vs {}", total.total_mj());
+    }
+
+    #[test]
+    fn dataflow_layers_charge_buffer_and_noc_only() {
+        // ResNet's Add / GlobalAvgPool stages own no crossbars: zero core
+        // energy, but a positive buffer-tile and fan-out NoC cost.
+        use crate::cnn::{resnet, ResNetVariant};
+        let arch = ArchConfig::paper_node();
+        let net = resnet::build(ResNetVariant::R18);
+        let m = NetworkMapping::build(&net, &arch, &ReplicationPlan::none(&net)).unwrap();
+        let em = EnergyModel::new(&arch);
+        let hops = vec![2.0; net.len()];
+        let per_layer = em.layer_energy(&net, &m, &hops);
+        let mut dataflow = 0;
+        for (l, e) in net.layers().iter().zip(&per_layer) {
+            if !l.is_crossbar() {
+                dataflow += 1;
+                assert_eq!(e.core_mj, 0.0, "{}: dataflow stage drew core energy", l.name);
+                assert!(e.tile_mj > 0.0, "{}: buffer tile must cost energy", l.name);
+                assert!(e.noc_mj > 0.0, "{}: OFM copies must cost NoC energy", l.name);
+            } else {
+                assert!(e.core_mj > 0.0, "{}: crossbar layer drew no core energy", l.name);
+            }
+        }
+        assert_eq!(dataflow, 9, "8 Adds + 1 GAP in ResNet-18");
+    }
+
+    #[test]
+    fn zero_fps_reports_zero_power_not_nan() {
+        let (net, m, arch) = setup(VggVariant::A, false);
+        let em = EnergyModel::new(&arch);
+        let hops = vec![2.0; net.len()];
+        let e = em.image_energy(&net, &m, &hops);
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            assert_eq!(em.avg_power_w(&e, bad), 0.0, "fps {bad}");
+            assert_eq!(em.peak_utilization(&e, bad), 0.0, "fps {bad}");
+        }
+        assert!(em.avg_power_w(&e, 100.0) > 0.0, "valid fps must still report");
+    }
+
+    #[test]
+    fn zero_energy_reports_zero_efficiency_not_inf() {
+        let (net, _, arch) = setup(VggVariant::A, false);
+        let em = EnergyModel::new(&arch);
+        let tpw = em.tops_per_watt(&net, &EnergyBreakdown::zero());
+        assert_eq!(tpw, 0.0, "zero energy must not divide to inf/NaN");
     }
 
     #[test]

@@ -212,7 +212,12 @@ pub fn default_images(scenario: Scenario) -> u64 {
 /// Evaluate one (VGG, scenario, NoC) benchmark — the paper's unit of
 /// evaluation (60 in total). Thin wrapper over [`evaluate_network`] with
 /// the scenario's canonical plan (Fig. 7 or none) and image count.
-pub fn evaluate(variant: VggVariant, scenario: Scenario, noc: NocKind, arch: &ArchConfig) -> PerfReport {
+pub fn evaluate(
+    variant: VggVariant,
+    scenario: Scenario,
+    noc: NocKind,
+    arch: &ArchConfig,
+) -> PerfReport {
     let net = vgg::build(variant);
     let plan = if scenario.replication() {
         ReplicationPlan::fig7(variant)

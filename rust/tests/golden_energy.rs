@@ -1,0 +1,252 @@
+//! Golden energy tests: per-workload TOPS/W bands for all seven shipped
+//! workloads, the fleet-energy conservation law of the cluster simulator,
+//! the replication-vs-energy-per-image monotonicity property, the
+//! power-budgeted capacity planner, and the paper-headline scoreboard.
+//!
+//! The numeric anchors were derived in an independent executable mirror of
+//! the mapping -> placement -> copy_hops -> energy chain (arithmetic only,
+//! no engine), so a band failure means the model moved, not that a test
+//! guessed wrong.
+
+use smart_pim::cluster::{plan_capacity, rate_from_qps, simulate, ClusterConfig, NodeModel};
+use smart_pim::cnn::{resnet, vgg, ResNetVariant, VggVariant};
+use smart_pim::config::ArchConfig;
+use smart_pim::coordinator::BatchPolicy;
+use smart_pim::mapping::{NetworkMapping, Placement, ReplicationPlan};
+use smart_pim::metrics::scoreboard;
+use smart_pim::pipeline::build_plans;
+use smart_pim::power::EnergyModel;
+use smart_pim::sim::extract_flows;
+use smart_pim::sweep::SweepRunner;
+
+/// TOPS/W of one workload under one plan, through the same chain
+/// `sim::evaluate_network` uses (mapping -> snake placement -> fan-out
+/// copy_hops -> per-layer energy) — engine-free, so the values are exact.
+fn tops_per_watt(net: &smart_pim::cnn::Network, plan: &ReplicationPlan, arch: &ArchConfig) -> f64 {
+    let m = NetworkMapping::build(net, arch, plan).expect("workload maps");
+    let placement = Placement::snake(arch);
+    let plans = build_plans(net, &m, arch);
+    let flows = extract_flows(net, &m, &placement, &plans, arch);
+    let hops: Vec<f64> = flows.iter().map(|l| l.copy_hops).collect();
+    let em = EnergyModel::new(arch);
+    let e = em.image_energy(net, &m, &hops);
+    em.tops_per_watt(net, &e)
+}
+
+#[test]
+fn tops_per_watt_bands_all_seven_workloads() {
+    // Mirror-derived anchors (Fig. 7 plans for the VGGs, no replication
+    // for the ResNets), +-0.25 band each. Paper Fig. 9 for comparison:
+    // A 2.8841, B 2.5538, C 2.5846, D 3.1271, E 3.5914.
+    let arch = ArchConfig::paper_node();
+    let mut measured = Vec::new();
+    for (v, want) in VggVariant::ALL.iter().zip([3.2131, 3.2491, 3.2641, 3.4016, 3.4956]) {
+        let net = vgg::build(*v);
+        let got = tops_per_watt(&net, &ReplicationPlan::fig7(*v), &arch);
+        assert!(
+            (got - want).abs() < 0.25,
+            "{}: {got} TOPS/W, expected ~{want}",
+            v.name()
+        );
+        measured.push(got);
+    }
+    for (r, want) in ResNetVariant::ALL.iter().zip([2.7399, 3.0462]) {
+        let net = resnet::build(*r);
+        let got = tops_per_watt(&net, &ReplicationPlan::none(&net), &arch);
+        assert!(
+            (got - want).abs() < 0.25,
+            "{}: {got} TOPS/W, expected ~{want}",
+            r.name()
+        );
+    }
+    // Fig. 9's headline trend: VGG-E is the most efficient VGG.
+    let e = measured[4];
+    assert!(measured[..4].iter().all(|&x| x < e), "{measured:?}");
+}
+
+fn vgg_e_model() -> NodeModel {
+    let arch = ArchConfig::paper_node();
+    let net = vgg::build(VggVariant::E);
+    NodeModel::from_workload(&net, &arch, &ReplicationPlan::fig7(VggVariant::E)).unwrap()
+}
+
+#[test]
+fn fleet_dynamic_energy_conservation() {
+    // The conservation law the energy model is built on: fleet dynamic
+    // energy == Σ per-node utilization x active power x span == Σ
+    // injections x image energy — exactly, not approximately.
+    let arch = ArchConfig::paper_node();
+    let model = vgg_e_model();
+    let profile = model.energy.unwrap();
+    let s = simulate(
+        &model,
+        &ClusterConfig {
+            nodes: 2,
+            rate_per_cycle: rate_from_qps(1500.0, arch.logical_cycle_ns),
+            horizon_cycles: 2_000_000,
+            ..ClusterConfig::default()
+        },
+    );
+    let e = s.energy.expect("workload model reports energy");
+    assert!(s.completed > 100, "need a real run, got {}", s.completed);
+
+    // (a) injections x image energy.
+    let injected: u64 = s.per_node_injected.iter().sum();
+    let by_injections = injected as f64 * profile.image_mj * 1e-3;
+    assert!(
+        (e.dynamic_j - by_injections).abs() < 1e-9 * by_injections.max(1.0),
+        "dynamic {} vs injections {}",
+        e.dynamic_j,
+        by_injections
+    );
+
+    // (b) utilization x active power x span, per node.
+    let by_utilization: f64 = s
+        .node_utilization
+        .iter()
+        .map(|u| u * profile.active_power_w * e.span_s)
+        .sum();
+    assert!(
+        (e.dynamic_j - by_utilization).abs() < 1e-6 * by_utilization.max(1.0),
+        "dynamic {} vs utilization form {}",
+        e.dynamic_j,
+        by_utilization
+    );
+
+    // (c) the ledger adds up: total = dynamic + idle, padding within
+    // dynamic, and padding == the per-node injected-minus-completed share.
+    assert!((e.total_j() - (e.dynamic_j + e.idle_j)).abs() < 1e-12);
+    let padding: u64 = s
+        .per_node_injected
+        .iter()
+        .zip(&s.per_node_completed)
+        .map(|(i, c)| i - c)
+        .sum();
+    let by_padding = padding as f64 * profile.image_mj * 1e-3;
+    assert!(
+        (e.padding_waste_j - by_padding).abs() < 1e-9 * by_padding.max(1.0),
+        "padding {} vs {}",
+        e.padding_waste_j,
+        by_padding
+    );
+    assert!(e.padding_waste_j <= e.dynamic_j);
+    // Average power is the ledger over the span.
+    assert!((e.avg_power_w() * e.span_s - e.total_j()).abs() < 1e-9 * e.total_j());
+}
+
+#[test]
+fn replication_moves_energy_per_image_monotonically() {
+    // Replication vs energy-per-image is monotone at a fixed offered
+    // load: with the always-on floor charged over the whole span, a
+    // more-replicated (faster) node finishes the same request stream
+    // sooner — its span ends at `last injection + max(interval, fill)`
+    // instead of the unreplicated plan's 50176-cycle beat — and its
+    // dynamic per-image energy is no larger (replicas share partially
+    // filled tiles). Both terms push joules-per-image strictly DOWN as
+    // replication rises, so fleet TOPS/W rises, while staying within
+    // band: bounded above by the workload's dynamic-only efficiency
+    // (~3.5 for VGG-E), since the floor only ever subtracts.
+    // (An earlier draft charged the floor only over non-busy time, which
+    // made a busy node draw less than an idle one and inverted this
+    // ordering — that accounting was a bug, not a property.) Mirror
+    // anchors at 40 qps x 1 node: none ~314, halved ~310.6, fig7 ~310.4
+    // mJ/image.
+    let arch = ArchConfig::paper_node();
+    let net = vgg::build(VggVariant::E);
+    let fig7 = ReplicationPlan::fig7(VggVariant::E);
+    let halved = ReplicationPlan {
+        factors: fig7.factors.iter().map(|&f| (f / 2).max(1)).collect(),
+    };
+    let plans = [ReplicationPlan::none(&net), halved, fig7];
+    let singles = BatchPolicy {
+        sizes: vec![1],
+        max_wait: 0,
+        min_fill: 1.0,
+    };
+    let mut per_image = Vec::new();
+    let mut tpw = Vec::new();
+    for plan in &plans {
+        let model = NodeModel::from_workload(&net, &arch, plan).unwrap();
+        let s = simulate(
+            &model,
+            &ClusterConfig {
+                nodes: 1,
+                rate_per_cycle: rate_from_qps(40.0, arch.logical_cycle_ns),
+                horizon_cycles: 5_000_000,
+                policy: singles.clone(),
+                ..ClusterConfig::default()
+            },
+        );
+        assert_eq!(s.rejected, 0, "40 qps must be under every plan's capacity");
+        assert!(s.completed > 30, "completed {}", s.completed);
+        let e = s.energy.unwrap();
+        per_image.push(e.joules_per_image());
+        tpw.push(e.tops_per_watt());
+    }
+    assert!(
+        per_image[0] > per_image[1] && per_image[1] > per_image[2],
+        "J/image not monotone decreasing in replication: {per_image:?}"
+    );
+    for (j, t) in per_image.iter().zip(&tpw) {
+        assert!(*j > 0.0);
+        assert!(
+            (0.0..=3.7).contains(t),
+            "fleet TOPS/W {t} outside (0, 3.7]: per-image {j}"
+        );
+        assert!(*t > 0.0);
+    }
+    // Same ops, fewer joules: efficiency rises with replication.
+    assert!(tpw[0] < tpw[1] && tpw[1] < tpw[2], "{tpw:?}");
+}
+
+#[test]
+fn capacity_planner_honors_power_budget() {
+    // ~2.5 nodes of offered load under a 200 W budget: the planner must
+    // return a fleet that meets p99 AND draws within budget (a 16-node
+    // ladder probe peaks near 16 x ~12 W idle + dynamic, so the minimal
+    // SLO fleet sits comfortably inside 200 W).
+    let model = vgg_e_model();
+    let cfg = ClusterConfig {
+        rate_per_cycle: 2.5 / 3136.0,
+        horizon_cycles: 1_500_000,
+        ..ClusterConfig::default()
+    };
+    let target = 40_000;
+    let r = plan_capacity(&model, &cfg, target, 32, Some(200.0), &SweepRunner::with_threads(4))
+        .expect("200 W is feasible for this load");
+    assert!(r.stats.meets_slo(target));
+    let power = r.stats.energy.unwrap().avg_power_w();
+    assert!(power <= 200.0, "planner returned {power} W > budget");
+    assert!(r.nodes >= 3, "2.5 nodes of load needs >= 3 replicas");
+}
+
+#[test]
+fn headline_scoreboard_passes_all_bands() {
+    // The `smart-pim reproduce` gate, as a test: all five headline
+    // metrics inside their pinned bands (metrics::headline::bands).
+    let board = scoreboard(&ArchConfig::paper_node(), &SweepRunner::new());
+    assert_eq!(board.metrics.len(), 5);
+    let keys: Vec<&str> = board.metrics.iter().map(|m| m.key).collect();
+    assert_eq!(
+        keys,
+        [
+            "best_tops",
+            "best_fps",
+            "best_tops_per_watt",
+            "scenario_speedup",
+            "smart_speedup"
+        ]
+    );
+    for m in &board.metrics {
+        assert!(
+            m.pass(),
+            "{}: model {} outside [{}, {}] (paper {})",
+            m.key,
+            m.model,
+            m.lo,
+            m.hi,
+            m.paper
+        );
+    }
+    assert!(board.all_pass() && board.failures().is_empty());
+}
