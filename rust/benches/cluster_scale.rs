@@ -5,11 +5,20 @@
 //! (override the path with `SMART_PIM_CLUSTER_BENCH_JSON`; set
 //! `SMART_PIM_BENCH_QUICK=1` for the CI-sized grid) so the cluster perf
 //! trajectory is trackable across PRs.
+//!
+//! A second section is the PR 6 scaling study: fleets up to 10k nodes x
+//! 1M streamed arrivals through the flattened event loop (indexed
+//! routing + deadline suppression), with the linear-scan reference timed
+//! side by side at a capped arrival count and re-checked for bit-exact
+//! parity at that count. Emits `BENCH_cluster_scale.json` (override with
+//! `SMART_PIM_CLUSTER_SCALE_JSON`); the run aborts if any parity pair
+//! diverges, so a committed file always certifies equivalence.
 
 use std::time::Instant;
 
 use smart_pim::cluster::{
-    plan_capacity, rate_from_qps, simulate, ClusterConfig, ClusterStats, NodeModel,
+    plan_capacity, rate_from_qps, simulate, ArrivalStream, ClusterConfig, ClusterStats,
+    NodeModel, RouteImpl, RoutePolicy,
 };
 use smart_pim::cnn::{vgg, VggVariant};
 use smart_pim::config::ArchConfig;
@@ -193,6 +202,163 @@ fn main() {
             ]),
         ),
         ("capacity", cap_json),
+    ]);
+    match std::fs::write(&json_path, doc.render_pretty()) {
+        Ok(()) => println!("wrote {json_path}"),
+        Err(e) => eprintln!("could not write {json_path}: {e}"),
+    }
+
+    scaling_study(&model, net.name.as_str(), quick);
+}
+
+/// Two runs are interchangeable only if every observable agrees exactly —
+/// counts, the effective horizon, drain cycle, perf gauges, the latency
+/// distribution and every per-node vector.
+fn identical(a: &ClusterStats, b: &ClusterStats) -> bool {
+    a.offered == b.offered
+        && a.completed == b.completed
+        && a.rejected == b.rejected
+        && a.horizon_cycles == b.horizon_cycles
+        && a.drained_at == b.drained_at
+        && a.events_processed == b.events_processed
+        && a.peak_calendar_depth == b.peak_calendar_depth
+        && a.latency.mean() == b.latency.mean()
+        && a.latency.max() == b.latency.max()
+        && a.latency.p50() == b.latency.p50()
+        && a.latency.p99() == b.latency.p99()
+        && a.queueing.mean() == b.queueing.mean()
+        && a.node_utilization == b.node_utilization
+        && a.per_node_completed == b.per_node_completed
+        && a.per_node_rejected == b.per_node_rejected
+        && a.per_node_injected == b.per_node_injected
+}
+
+/// PR 6 scaling study: the flattened loop (indexed routing, streamed
+/// arrivals, deadline suppression) timed on fleets up to 10k nodes x 1M
+/// arrivals, with the O(N)-per-arrival linear-scan reference alongside at
+/// a capped arrival count — then the indexed loop re-run at that capped
+/// count and compared bit-exactly, so every speedup row doubles as a
+/// parity certificate. Writes `BENCH_cluster_scale.json`.
+fn scaling_study(model: &NodeModel, workload: &str, quick: bool) {
+    // (fleet, arrivals through the indexed loop, arrivals for the scan
+    // reference — capped so the quadratic side stays affordable).
+    let points: &[(usize, usize, usize)] = if quick {
+        &[(64, 30_000, 30_000), (256, 60_000, 15_000)]
+    } else {
+        &[
+            (100, 1_000_000, 1_000_000),
+            (1_000, 1_000_000, 200_000),
+            (10_000, 1_000_000, 50_000),
+        ]
+    };
+    println!("\n== scaling study: flat event loop vs linear-scan reference ==");
+    let cfg_for = |nodes: usize, requests: usize, route: RoutePolicy, imp: RouteImpl| {
+        ClusterConfig {
+            nodes,
+            // ~90% of aggregate fleet capacity: queues form and deadlines
+            // fire, but the run still drains promptly.
+            rate_per_cycle: 0.9 * nodes as f64 / model.interval as f64,
+            route,
+            fixed_requests: Some(requests),
+            seed: 0x5CA1_AB1E,
+            route_impl: imp,
+            ..ClusterConfig::default()
+        }
+    };
+    let timed = |cfg: &ClusterConfig| {
+        let t0 = Instant::now();
+        let s = simulate(model, cfg);
+        (s, t0.elapsed().as_secs_f64())
+    };
+
+    let mut t = Table::new(
+        "flat loop vs scan — events/sec, peak calendar depth, parity",
+        &[
+            "nodes", "route", "arrivals", "wall", "Mev/s", "peak", "scan N", "scan wall",
+            "scan Mev/s", "speedup", "parity",
+        ],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    let mut all_parity_ok = true;
+    for &(nodes, arrivals, scan_arrivals) in points {
+        for route in [RoutePolicy::ShortestQueue, RoutePolicy::LeastWork] {
+            let (ix, ix_secs) = timed(&cfg_for(nodes, arrivals, route, RouteImpl::Indexed));
+            let (sc, sc_secs) =
+                timed(&cfg_for(nodes, scan_arrivals, route, RouteImpl::LinearScan));
+            // Re-run the indexed loop at the scan's (possibly capped)
+            // arrival count: same seed, same stream — the stats must be
+            // bit-identical, and the wall-clock ratio is the speedup at
+            // an equal workload.
+            let (ix_cap, ix_cap_secs) =
+                timed(&cfg_for(nodes, scan_arrivals, route, RouteImpl::Indexed));
+            let parity_ok = identical(&ix_cap, &sc);
+            all_parity_ok &= parity_ok;
+            let ev_per_sec = ix.events_processed as f64 / ix_secs.max(1e-12);
+            let scan_ev_per_sec = sc.events_processed as f64 / sc_secs.max(1e-12);
+            let speedup = sc_secs / ix_cap_secs.max(1e-12);
+            t.row(&[
+                nodes.to_string(),
+                route.name().to_string(),
+                arrivals.to_string(),
+                fmt_duration(ix_secs),
+                fnum(ev_per_sec / 1e6, 2),
+                ix.peak_calendar_depth.to_string(),
+                scan_arrivals.to_string(),
+                fmt_duration(sc_secs),
+                fnum(scan_ev_per_sec / 1e6, 2),
+                format!("{speedup:.1}x"),
+                if parity_ok { "ok" } else { "FAIL" }.to_string(),
+            ]);
+            rows.push(Json::obj(vec![
+                ("nodes", nodes.into()),
+                ("route", route.name().into()),
+                ("arrivals", arrivals.into()),
+                ("indexed_wall_secs", ix_secs.into()),
+                ("indexed_events", ix.events_processed.into()),
+                ("indexed_events_per_sec", ev_per_sec.into()),
+                ("peak_calendar_depth", ix.peak_calendar_depth.into()),
+                ("completed", ix.completed.into()),
+                ("rejected", ix.rejected.into()),
+                ("latency_p99_cycles", ix.latency.p99().into()),
+                ("scan_arrivals", scan_arrivals.into()),
+                ("scan_wall_secs", sc_secs.into()),
+                ("scan_events_per_sec", scan_ev_per_sec.into()),
+                ("indexed_wall_at_scan_count_secs", ix_cap_secs.into()),
+                ("speedup_at_scan_count", speedup.into()),
+                ("parity_ok", parity_ok.into()),
+            ]));
+        }
+    }
+    t.print();
+    assert!(
+        all_parity_ok,
+        "indexed routing diverged from the linear-scan reference"
+    );
+
+    let json_path = std::env::var("SMART_PIM_CLUSTER_SCALE_JSON")
+        .unwrap_or_else(|_| "BENCH_cluster_scale.json".to_string());
+    let epoch_secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let doc = Json::obj(vec![
+        ("schema", "smart-pim/bench-cluster-scale/v1".into()),
+        ("unix_time", epoch_secs.into()),
+        ("producer", "rust-bench".into()),
+        ("workload", workload.into()),
+        ("plan", "fig7".into()),
+        ("interval_cycles", model.interval.into()),
+        ("fill_cycles", model.fill.into()),
+        ("quick", quick.into()),
+        // The streamed-arrival state is a few machine words regardless of
+        // how many arrivals a run pulls; a materialized Vec<u64> at the
+        // largest point would be `arrivals * 8` bytes per run.
+        (
+            "arrival_stream_bytes",
+            std::mem::size_of::<ArrivalStream<'static>>().into(),
+        ),
+        ("rows", Json::Arr(rows)),
+        ("all_parity_ok", all_parity_ok.into()),
     ]);
     match std::fs::write(&json_path, doc.render_pretty()) {
         Ok(()) => println!("wrote {json_path}"),

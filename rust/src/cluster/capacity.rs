@@ -6,7 +6,11 @@
 //! fixed (same seed), per-request waits are non-increasing in fleet size,
 //! so "meets the SLO" is a monotone predicate over `nodes` and section
 //! search applies. Each probe is a full [`simulate`] run; probes within a
-//! round are independent, so they fan out on [`SweepRunner`].
+//! round are independent, so they fan out on [`SweepRunner`]. Probes
+//! clone `base` (default [`RouteImpl::Indexed`](super::RouteImpl)), so
+//! the planner inherits the flattened event loop's speed for free —
+//! 10k-node probe points finish in seconds, which is what makes the
+//! paper-scale "millions of users" ladders checkable at all.
 
 use crate::sweep::SweepRunner;
 

@@ -7,14 +7,21 @@
 //! pipeline injection across a fleet of node replicas, in virtual time:
 //!
 //! - [`arrival`] — deterministic seeded arrival processes (Poisson,
-//!   bursty MMPP, diurnal ramp, JSON trace replay) in simulated cycles;
+//!   bursty MMPP, diurnal ramp, JSON trace replay) in simulated cycles,
+//!   consumed through the pull-based [`ArrivalStream`] so arrival memory
+//!   is O(1) in the horizon;
 //! - [`node`] — one replica: queue + the real [`BatchPolicy`]
 //!   (virtual ticks) + the pipeline-slot [`Dispatcher`] from the node's
 //!   replication plan, so per-request latency = queueing + backlog + fill;
 //! - [`sim`] — the binary-heap event loop over N nodes with pluggable
 //!   routing (round-robin / join-shortest-queue / least-work) and
 //!   admission control (max outstanding per node, rejections counted
-//!   against the SLO);
+//!   against the SLO). Routing runs on incremental indexes by default
+//!   ([`RouteImpl`]; the O(N) scan survives as the bit-identical
+//!   reference) and deadline suppression keeps the calendar at
+//!   O(fleet + in-flight batches), so 10k-node fleets stream millions of
+//!   requests in seconds — see DESIGN.md §4a and
+//!   `benches/cluster_scale.rs`;
 //! - [`stats`] — exact p50/p95/p99/p999 latency, throughput, per-node
 //!   utilization, rejection rate;
 //! - [`capacity`] — "minimum nodes such that p99 <= target at this QPS",
@@ -41,8 +48,8 @@ pub mod node;
 pub mod sim;
 pub mod stats;
 
-pub use arrival::ArrivalProcess;
+pub use arrival::{ArrivalProcess, ArrivalStream};
 pub use capacity::{plan_capacity, CapacityPoint, CapacityReport};
 pub use node::{EnergyProfile, Node, NodeModel, Served};
-pub use sim::{cycle_policy, rate_from_qps, simulate, ClusterConfig, RoutePolicy};
+pub use sim::{cycle_policy, rate_from_qps, simulate, ClusterConfig, RouteImpl, RoutePolicy};
 pub use stats::{ClusterStats, FleetEnergy, LatencySummary};

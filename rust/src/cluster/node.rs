@@ -205,6 +205,14 @@ impl Node {
     /// the pipeline; returns the served requests (their completion events).
     pub fn form_batches(&mut self, now: u64) -> Vec<Served> {
         let mut served = Vec::new();
+        self.form_batches_into(now, &mut served);
+        served
+    }
+
+    /// [`Self::form_batches`] into a caller-owned buffer (appended, not
+    /// cleared): the event loop reuses one scratch `Vec` across all events
+    /// instead of allocating per service call.
+    pub fn form_batches_into(&mut self, now: u64, served: &mut Vec<Served>) {
         while let Some(batch) = self.policy.form(&mut self.queue, now) {
             for r in &batch.requests {
                 let injected = self.dispatcher.admit(now);
@@ -223,7 +231,13 @@ impl Node {
                 self.injected += 1;
             }
         }
-        served
+    }
+
+    /// Unformed requests still waiting in the batch queue (a component of
+    /// [`Self::backlog`]; the indexed least-work router tracks it
+    /// incrementally).
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
     }
 
     /// The batch-timeout deadline of the current queue head, if any: by

@@ -5,12 +5,12 @@
 //! seconds, and identical seeds give bit-identical stats.
 
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BTreeSet, BinaryHeap};
 
 use crate::coordinator::{BatchPolicy, Clock, VirtualClock};
 
 use super::arrival::ArrivalProcess;
-use super::node::{Node, NodeModel};
+use super::node::{Node, NodeModel, Served};
 use super::stats::{ClusterStats, FleetEnergy, LatencySummary};
 
 /// How arriving requests pick a node.
@@ -59,6 +59,49 @@ impl std::str::FromStr for RoutePolicy {
     }
 }
 
+/// How the routing decision is computed. Both implementations produce
+/// **bit-identical** [`ClusterStats`] — the tie-break contract (lowest
+/// node index wins on equal signal) is part of each index's ordering key,
+/// and `tests/prop_cluster_perf.rs` pins the parity across random
+/// policy/routing/admission/seed mixes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RouteImpl {
+    /// Incrementally maintained routing indexes: a bucketed occupancy
+    /// index for `jsq` and a ready/lagging backlog index for
+    /// `least-work`, so each arrival routes in O(1)–O(log N) instead of
+    /// scanning the fleet.
+    #[default]
+    Indexed,
+    /// The original O(N)-per-arrival scan over every node — kept as the
+    /// reference the indexes must match, and as the "old" side of the
+    /// scaling bench.
+    LinearScan,
+}
+
+impl RouteImpl {
+    /// Short name for flags and bench rows.
+    pub fn name(&self) -> &'static str {
+        match self {
+            RouteImpl::Indexed => "indexed",
+            RouteImpl::LinearScan => "scan",
+        }
+    }
+}
+
+impl std::str::FromStr for RouteImpl {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "indexed" => Ok(RouteImpl::Indexed),
+            "scan" | "linear-scan" => Ok(RouteImpl::LinearScan),
+            other => Err(format!(
+                "unknown route implementation {other:?} (indexed | scan)"
+            )),
+        }
+    }
+}
+
 /// One cluster scenario: fleet size, offered load, arrival shape, routing
 /// and admission, all in simulated cycles.
 #[derive(Debug, Clone)]
@@ -85,6 +128,9 @@ pub struct ClusterConfig {
     pub policy: BatchPolicy,
     /// Seed for the arrival process.
     pub seed: u64,
+    /// Routing implementation ([`RouteImpl::Indexed`] by default; the
+    /// linear scan is the bit-identical reference).
+    pub route_impl: RouteImpl,
 }
 
 impl Default for ClusterConfig {
@@ -99,6 +145,7 @@ impl Default for ClusterConfig {
             fixed_requests: None,
             policy: cycle_policy(),
             seed: 0xC105_E12,
+            route_impl: RouteImpl::Indexed,
         }
     }
 }
@@ -122,10 +169,14 @@ pub fn rate_from_qps(qps: f64, logical_cycle_ns: f64) -> f64 {
 
 #[derive(Debug, PartialEq, Eq)]
 enum EventKind {
-    /// The `idx`-th request of the arrival stream reaches the cluster.
-    Arrival { idx: usize },
-    /// A node's batch-timeout deadline may have ripened (lazy-deleted:
-    /// stale deadlines are harmless re-checks).
+    /// Request `id` of the arrival stream reaches the cluster (ids count
+    /// up from 0 in stream order; the next arrival is pulled from the
+    /// [`ArrivalStream`](super::arrival::ArrivalStream) only when this
+    /// one fires).
+    Arrival { id: u64 },
+    /// A node's batch-timeout deadline may have ripened. Lazy-deleted: the
+    /// event is *live* only while it matches the node's armed target
+    /// (`armed[node]`); superseded entries fire as skipped no-ops.
     Deadline { node: usize },
     /// A request finishes its pipeline on `node`.
     Completion { node: usize, arrived: u64, injected: u64 },
@@ -152,11 +203,16 @@ impl PartialOrd for Event {
     }
 }
 
-/// Min-heap wakeup calendar with the deterministic tie-break counter.
+/// Min-heap wakeup calendar with the deterministic tie-break counter,
+/// instrumented with the perf gauges the scaling bench reports.
 #[derive(Debug, Default)]
 struct Calendar {
     heap: BinaryHeap<Reverse<Event>>,
     seq: u64,
+    /// High-water mark of the heap (peak calendar depth).
+    peak: usize,
+    /// Events popped (arrivals + completions + deadline fires).
+    pops: u64,
 }
 
 impl Calendar {
@@ -167,15 +223,30 @@ impl Calendar {
             kind,
         }));
         self.seq += 1;
+        self.peak = self.peak.max(self.heap.len());
     }
 
     fn pop(&mut self) -> Option<Event> {
-        self.heap.pop().map(|Reverse(e)| e)
+        let ev = self.heap.pop().map(|Reverse(e)| e);
+        if ev.is_some() {
+            self.pops += 1;
+        }
+        ev
     }
 }
 
 /// Run one cluster scenario to completion (arrivals exhausted, queues
 /// drained, pipelines empty) and report.
+///
+/// The event loop is asymptotically flat in fleet size and request count:
+/// arrivals are pulled one at a time from an
+/// [`ArrivalStream`](super::arrival::ArrivalStream) (O(1) arrival
+/// memory), routing decisions come from incremental indexes (O(log
+/// N) per arrival instead of an O(N) scan; see [`RouteImpl`]), and each
+/// node keeps at most one *live* Deadline event in the calendar, so the
+/// heap stays at O(fleet + in-flight batches) no matter the horizon. Every
+/// flattening preserves bit-identical stats against the original loop —
+/// see DESIGN.md §4a and `tests/prop_cluster_perf.rs`.
 pub fn simulate(model: &NodeModel, cfg: &ClusterConfig) -> ClusterStats {
     assert!(cfg.nodes > 0, "a cluster needs at least one node");
     assert!(
@@ -183,24 +254,33 @@ pub fn simulate(model: &NodeModel, cfg: &ClusterConfig) -> ClusterStats {
         "batch policy sizes must be non-empty and positive (an empty list \
          never releases the queue; a zero size forms empty batches forever)"
     );
-    let arrivals = match cfg.fixed_requests {
-        Some(n) => cfg.pattern.generate_n(cfg.rate_per_cycle, n, cfg.seed),
+    let mut stream = match cfg.fixed_requests {
+        Some(n) => cfg.pattern.stream_n(cfg.rate_per_cycle, n, cfg.seed),
         None => cfg
             .pattern
-            .generate(cfg.rate_per_cycle, cfg.horizon_cycles, cfg.seed),
+            .stream_horizon(cfg.rate_per_cycle, cfg.horizon_cycles, cfg.seed),
     };
     let mut nodes: Vec<Node> = (0..cfg.nodes)
         .map(|_| Node::new(model, cfg.policy.clone()))
         .collect();
+    let mut router = Router::new(cfg.route, cfg.route_impl, cfg.nodes, model.interval);
+    // Deadline suppression state: `armed[i] == Some(t)` iff the calendar
+    // holds exactly one live Deadline event for node i at cycle t.
+    let mut armed: Vec<Option<u64>> = vec![None; cfg.nodes];
+    // One scratch buffer for every `form_batches_into` call in the run.
+    let mut scratch: Vec<Served> = Vec::new();
 
     let mut cal = Calendar::default();
-    if !arrivals.is_empty() {
-        cal.push(arrivals[0], EventKind::Arrival { idx: 0 });
+    let mut offered = 0u64;
+    let mut last_arrival = 0u64;
+    if let Some(c) = stream.next() {
+        cal.push(c, EventKind::Arrival { id: 0 });
+        offered = 1;
+        last_arrival = c;
     }
 
-    let mut rr_next = 0usize;
-    let mut latencies: Vec<u64> = Vec::with_capacity(arrivals.len());
-    let mut queueing: Vec<u64> = Vec::with_capacity(arrivals.len());
+    let mut latencies: Vec<u64> = Vec::new();
+    let mut queueing: Vec<u64> = Vec::new();
     let mut drained_at = 0u64;
 
     // The simulation's time source: nodes batch against the same integer
@@ -212,19 +292,47 @@ pub fn simulate(model: &NodeModel, cfg: &ClusterConfig) -> ClusterStats {
         clock.advance_to(ev.cycle);
         let now = clock.now();
         match ev.kind {
-            EventKind::Arrival { idx } => {
-                // Stream the calendar: materialize the next arrival only
-                // when this one fires, keeping the heap O(fleet + batch).
-                if idx + 1 < arrivals.len() {
-                    cal.push(arrivals[idx + 1], EventKind::Arrival { idx: idx + 1 });
+            EventKind::Arrival { id } => {
+                // Pull the next arrival only when this one fires (and push
+                // it FIRST, preserving the original loop's same-cycle push
+                // order): the calendar holds at most one pending arrival.
+                if let Some(c) = stream.next() {
+                    cal.push(c, EventKind::Arrival { id: offered });
+                    offered += 1;
+                    last_arrival = c;
                 }
-                let target = route(&nodes, cfg.route, &mut rr_next, now);
-                if nodes[target].offer(idx as u64, now, cfg.max_queue) {
-                    service_node(&mut cal, &mut nodes[target], target, now);
+                let target = router.pick(&nodes, now);
+                if nodes[target].offer(id, now, cfg.max_queue) {
+                    service_node(
+                        &mut cal,
+                        &mut nodes[target],
+                        target,
+                        now,
+                        &mut armed[target],
+                        &mut scratch,
+                    );
                 }
+                router.refresh(target, &nodes[target], now);
             }
             EventKind::Deadline { node } => {
-                service_node(&mut cal, &mut nodes[node], node, now);
+                if armed[node] == Some(now) {
+                    // Live: consume the armed slot and let the node form
+                    // whatever ripened (service re-arms for the new head).
+                    armed[node] = None;
+                    service_node(
+                        &mut cal,
+                        &mut nodes[node],
+                        node,
+                        now,
+                        &mut armed[node],
+                        &mut scratch,
+                    );
+                    router.refresh(node, &nodes[node], now);
+                }
+                // Superseded deadlines skip without touching the node: the
+                // queue has not changed since its last service call, and
+                // re-forming before the live target releases nothing — the
+                // original loop's re-check here was provably a no-op.
             }
             EventKind::Completion {
                 node,
@@ -232,6 +340,7 @@ pub fn simulate(model: &NodeModel, cfg: &ClusterConfig) -> ClusterStats {
                 injected,
             } => {
                 nodes[node].complete_one();
+                router.refresh(node, &nodes[node], now);
                 latencies.push(now - arrived);
                 queueing.push(injected - arrived);
                 drained_at = drained_at.max(now);
@@ -243,9 +352,18 @@ pub fn simulate(model: &NodeModel, cfg: &ClusterConfig) -> ClusterStats {
     let rejected: u64 = nodes.iter().map(|n| n.rejected).sum();
     debug_assert_eq!(
         completed + rejected,
-        arrivals.len() as u64,
+        offered,
         "conservation: every arrival completes or is rejected at drain"
     );
+    // The effective generation span: under `fixed_requests` the configured
+    // horizon is ignored entirely, and a trace replay only uses it as an
+    // upper bound — report what the arrivals actually covered.
+    let arrival_extent = if offered == 0 { 0 } else { last_arrival + 1 };
+    let horizon_cycles = match (cfg.fixed_requests, &cfg.pattern) {
+        (Some(_), _) => arrival_extent,
+        (None, ArrivalProcess::Trace(_)) => cfg.horizon_cycles.min(arrival_extent),
+        (None, _) => cfg.horizon_cycles,
+    };
     // Utilization span: last completion or last reserved bottleneck slot,
     // whichever is later (injections spaced >= interval guarantee
     // busy <= span, so the fraction stays in [0, 1]).
@@ -276,11 +394,13 @@ pub fn simulate(model: &NodeModel, cfg: &ClusterConfig) -> ClusterStats {
         }
     });
     ClusterStats {
-        offered: arrivals.len() as u64,
+        offered,
         completed,
         rejected,
-        horizon_cycles: cfg.horizon_cycles,
+        horizon_cycles,
         drained_at,
+        events_processed: cal.pops,
+        peak_calendar_depth: cal.peak as u64,
         latency: LatencySummary::from_samples(latencies),
         queueing: LatencySummary::from_samples(queueing),
         node_utilization: nodes
@@ -297,13 +417,27 @@ pub fn simulate(model: &NodeModel, cfg: &ClusterConfig) -> ClusterStats {
 /// Form whatever `node` releases at `now`, schedule the resulting
 /// completion events, and re-arm the node's batch-timeout deadline.
 ///
-/// Deadline invariant: whenever a node's queue is non-empty, the calendar
-/// holds at least one Deadline event no later than the queue head's
-/// timeout — so hoarded requests always get a future chance to form.
-/// Stale deadlines (the head they were armed for already served) fire as
-/// harmless no-ops and re-arm for the current head.
-fn service_node(cal: &mut Calendar, node: &mut Node, node_idx: usize, now: u64) {
-    for s in node.form_batches(now) {
+/// Deadline invariant (suppressed form): whenever a node's queue is
+/// non-empty, `*armed == Some(t)` and the calendar holds exactly one live
+/// Deadline event at `t`, the current head's timeout — so hoarded requests
+/// always get a future chance to form, and the heap holds at most one live
+/// deadline per node. The target is strictly in the future after any
+/// service call: `BatchPolicy::form`'s timeout branch always releases at
+/// least one request, so the surviving head's age is under `max_wait`.
+/// Superseded entries (the head they were armed for already formed early)
+/// stay in the heap and fire as skipped no-ops; they cannot outnumber the
+/// batches in flight.
+fn service_node(
+    cal: &mut Calendar,
+    node: &mut Node,
+    node_idx: usize,
+    now: u64,
+    armed: &mut Option<u64>,
+    scratch: &mut Vec<Served>,
+) {
+    scratch.clear();
+    node.form_batches_into(now, scratch);
+    for s in scratch.iter() {
         cal.push(
             s.completed,
             EventKind::Completion {
@@ -315,29 +449,248 @@ fn service_node(cal: &mut Calendar, node: &mut Node, node_idx: usize, now: u64) 
     }
     if let Some(deadline) = node.next_deadline() {
         // The head is still hoarding; it will be releasable at `deadline`.
-        cal.push(deadline.max(now), EventKind::Deadline { node: node_idx });
+        let target = deadline.max(now);
+        if *armed != Some(target) {
+            cal.push(target, EventKind::Deadline { node: node_idx });
+            *armed = Some(target);
+        }
     }
 }
 
-fn route(nodes: &[Node], policy: RoutePolicy, rr_next: &mut usize, now: u64) -> usize {
-    match policy {
-        RoutePolicy::RoundRobin => {
-            let t = *rr_next % nodes.len();
-            *rr_next = (*rr_next + 1) % nodes.len();
-            t
+/// The routing decision engine: either the original O(N) scans or the
+/// incremental indexes, behind one interface so the event loop is
+/// implementation-blind. `pick` is called with the *pre-offer* fleet state
+/// (exactly what the scans observed); `refresh` folds a node's new state
+/// into the index after every mutation (offer + service, live deadline
+/// service, completion).
+#[derive(Debug)]
+enum Router {
+    RoundRobin { next: usize },
+    ScanJsq,
+    ScanLw,
+    Jsq(JsqIndex),
+    Lw(LwIndex),
+}
+
+impl Router {
+    fn new(route: RoutePolicy, imp: RouteImpl, n: usize, interval: u64) -> Self {
+        match (route, imp) {
+            (RoutePolicy::RoundRobin, _) => Router::RoundRobin { next: 0 },
+            (RoutePolicy::ShortestQueue, RouteImpl::LinearScan) => Router::ScanJsq,
+            (RoutePolicy::ShortestQueue, RouteImpl::Indexed) => Router::Jsq(JsqIndex::new(n)),
+            (RoutePolicy::LeastWork, RouteImpl::LinearScan) => Router::ScanLw,
+            (RoutePolicy::LeastWork, RouteImpl::Indexed) => Router::Lw(LwIndex::new(n, interval)),
         }
-        RoutePolicy::ShortestQueue => nodes
-            .iter()
-            .enumerate()
-            .min_by_key(|&(i, n)| (n.in_flight(), i))
-            .map(|(i, _)| i)
-            .expect("non-empty fleet"),
-        RoutePolicy::LeastWork => nodes
-            .iter()
-            .enumerate()
-            .min_by_key(|&(i, n)| (n.backlog(now), i))
-            .map(|(i, _)| i)
-            .expect("non-empty fleet"),
+    }
+
+    fn pick(&mut self, nodes: &[Node], now: u64) -> usize {
+        match self {
+            Router::RoundRobin { next } => {
+                let t = *next % nodes.len();
+                *next = (*next + 1) % nodes.len();
+                t
+            }
+            Router::ScanJsq => nodes
+                .iter()
+                .enumerate()
+                .min_by_key(|&(i, n)| (n.in_flight(), i))
+                .map(|(i, _)| i)
+                .expect("non-empty fleet"),
+            Router::ScanLw => nodes
+                .iter()
+                .enumerate()
+                .min_by_key(|&(i, n)| (n.backlog(now), i))
+                .map(|(i, _)| i)
+                .expect("non-empty fleet"),
+            Router::Jsq(ix) => ix.best(),
+            Router::Lw(ix) => ix.best(now),
+        }
+    }
+
+    fn refresh(&mut self, i: usize, node: &Node, now: u64) {
+        match self {
+            Router::Jsq(ix) => ix.set(i, node.in_flight()),
+            Router::Lw(ix) => ix.set(i, node.busy_until(), node.queue_len() as u64, now),
+            _ => {}
+        }
+    }
+}
+
+/// Bucketed occupancy index for join-shortest-queue: `buckets[k]` is the
+/// ordered set of nodes with `in_flight == k`, and `min_occ` is a cursor
+/// below which every bucket is empty. `best` returns the lowest-index node
+/// in the lowest non-empty bucket — exactly the scan's
+/// `min_by_key((in_flight, i))` contract. The cursor only moves down when
+/// a node's occupancy drops, so its total forward travel is amortized by
+/// the number of `set` calls: O(1) amortized per operation plus one
+/// O(log N) ordered-set update.
+#[derive(Debug)]
+struct JsqIndex {
+    /// Per-node in_flight mirror.
+    occ: Vec<u64>,
+    /// Nodes by occupancy; grown lazily (admission bounds may be u64::MAX,
+    /// so the vec tracks the highest occupancy actually seen).
+    buckets: Vec<BTreeSet<usize>>,
+    /// No non-empty bucket exists below this index.
+    min_occ: usize,
+}
+
+impl JsqIndex {
+    fn new(n: usize) -> Self {
+        Self {
+            occ: vec![0; n],
+            buckets: vec![(0..n).collect()],
+            min_occ: 0,
+        }
+    }
+
+    fn set(&mut self, i: usize, occ: u64) {
+        let old = self.occ[i] as usize;
+        let new = occ as usize;
+        if old == new {
+            return;
+        }
+        self.buckets[old].remove(&i);
+        if new >= self.buckets.len() {
+            self.buckets.resize_with(new + 1, BTreeSet::new);
+        }
+        self.buckets[new].insert(i);
+        self.occ[i] = occ;
+        self.min_occ = self.min_occ.min(new);
+    }
+
+    fn best(&mut self) -> usize {
+        while self.buckets[self.min_occ].is_empty() {
+            // Cannot run off the end: every node sits in some bucket.
+            self.min_occ += 1;
+        }
+        *self.buckets[self.min_occ]
+            .first()
+            .expect("cursor stopped at a non-empty bucket")
+    }
+}
+
+/// Incremental least-work index. The routing signal is time-dependent —
+/// `backlog(now) = max(next_free - now, 0) + queue_len * interval` — so a
+/// single static order would go stale as `now` advances. Decompose by the
+/// max: a node is *ready* once its pipeline has caught up
+/// (`next_free <= now`, backlog is the constant `c = queue_len *
+/// interval`) and *lagging* before that (backlog is `(next_free + c) -
+/// now`, a shared `-now` shift that preserves order). Each group is kept
+/// in its own ordered set — ready by `(c, i)`, lagging by `(next_free + c,
+/// i)` — and a migration min-heap keyed by `next_free` moves nodes from
+/// lagging to ready lazily as `now` passes them (stale heap entries are
+/// skipped via per-node stamps). `best` compares the two group minima on
+/// the common `(backlog, i)` key, reproducing the scan's
+/// `min_by_key((backlog(now), i))` bit for bit.
+#[derive(Debug)]
+struct LwIndex {
+    interval: u64,
+    /// Nodes with `next_free <= now`, ordered by `(c, i)`.
+    ready: BTreeSet<(u64, usize)>,
+    /// Nodes with `next_free > now`, ordered by `(next_free + c, i)`.
+    lagging: BTreeSet<(u64, usize)>,
+    /// Pending lagging->ready migrations `(next_free, stamp, i)`; entries
+    /// whose stamp no longer matches the node's are skipped.
+    migrations: BinaryHeap<Reverse<(u64, u64, usize)>>,
+    keys: Vec<LwKey>,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct LwKey {
+    nf: u64,
+    c: u64,
+    stamp: u64,
+    lagging: bool,
+}
+
+impl LwIndex {
+    fn new(n: usize, interval: u64) -> Self {
+        Self {
+            interval,
+            ready: (0..n).map(|i| (0, i)).collect(),
+            lagging: BTreeSet::new(),
+            migrations: BinaryHeap::new(),
+            keys: vec![
+                LwKey {
+                    nf: 0,
+                    c: 0,
+                    stamp: 0,
+                    lagging: false
+                };
+                n
+            ],
+        }
+    }
+
+    fn set(&mut self, i: usize, nf: u64, queue_len: u64, now: u64) {
+        let c = queue_len * self.interval;
+        let k = self.keys[i];
+        if k.nf == nf && k.c == c {
+            // Unchanged inputs (e.g. a completion event): membership may
+            // still need a lagging->ready migration, but the pending heap
+            // entry handles that lazily in `best`.
+            return;
+        }
+        if k.lagging {
+            self.lagging.remove(&(k.nf + k.c, i));
+        } else {
+            self.ready.remove(&(k.c, i));
+        }
+        let stamp = k.stamp + 1;
+        if nf > now {
+            self.lagging.insert((nf + c, i));
+            self.migrations.push(Reverse((nf, stamp, i)));
+            self.keys[i] = LwKey {
+                nf,
+                c,
+                stamp,
+                lagging: true,
+            };
+        } else {
+            self.ready.insert((c, i));
+            self.keys[i] = LwKey {
+                nf,
+                c,
+                stamp,
+                lagging: false,
+            };
+        }
+    }
+
+    fn best(&mut self, now: u64) -> usize {
+        // Migrate every node whose pipeline caught up (`next_free <= now`)
+        // out of the time-shifted lagging order. Each node enters the
+        // migration heap at most once per `set`, so this drain is
+        // amortized O(log N) per index update.
+        while let Some(&Reverse((nf, stamp, i))) = self.migrations.peek() {
+            if nf > now {
+                break;
+            }
+            self.migrations.pop();
+            let k = self.keys[i];
+            if k.stamp == stamp && k.lagging {
+                self.lagging.remove(&(k.nf + k.c, i));
+                self.ready.insert((k.c, i));
+                self.keys[i].lagging = false;
+            }
+        }
+        let ready = self.ready.first().map(|&(c, i)| (c, i));
+        let lag = self.lagging.first().map(|&(s, i)| (s - now, i));
+        match (ready, lag) {
+            // `(backlog, i)` tuple order settles ties to the lowest index;
+            // a node is in exactly one set, so keys never fully collide.
+            (Some(a), Some(b)) => {
+                if a <= b {
+                    a.1
+                } else {
+                    b.1
+                }
+            }
+            (Some(a), None) => a.1,
+            (None, Some(b)) => b.1,
+            (None, None) => unreachable!("non-empty fleet"),
+        }
     }
 }
 
@@ -505,6 +858,137 @@ mod tests {
         assert_eq!(s.completed, 0);
         assert_eq!(s.latency.count(), 0);
         assert_eq!(s.throughput_per_cycle(), 0.0);
+    }
+
+    #[test]
+    fn effective_horizon_reflects_the_generation_span() {
+        let m = model();
+        // Horizon-bounded synthetic runs report the configured horizon.
+        let s = simulate(&m, &light_cfg());
+        assert_eq!(s.horizon_cycles, 1_000_000);
+        // fixed_requests ignores the configured horizon entirely: report
+        // the arrival extent (last arrival + 1) instead.
+        let cfg = ClusterConfig {
+            nodes: 1,
+            fixed_requests: Some(5),
+            horizon_cycles: 123, // would be nonsense to report
+            ..ClusterConfig::default()
+        };
+        let last = *cfg
+            .pattern
+            .generate_n(cfg.rate_per_cycle, 5, cfg.seed)
+            .last()
+            .unwrap();
+        let s = simulate(&m, &cfg);
+        assert_eq!(s.horizon_cycles, last + 1);
+        assert!(s.horizon_cycles > 123, "5 Poisson arrivals at 1e-4/cycle");
+        // A trace only uses the horizon as an upper bound: report the
+        // replayed extent when the trace ends first...
+        let cfg = ClusterConfig {
+            nodes: 1,
+            pattern: ArrivalProcess::Trace(vec![0, 10_000, 500_000]),
+            horizon_cycles: 1_000_000,
+            ..ClusterConfig::default()
+        };
+        assert_eq!(simulate(&m, &cfg).horizon_cycles, 500_001);
+        // ...and the horizon when it cuts the trace short.
+        let cfg = ClusterConfig {
+            nodes: 1,
+            pattern: ArrivalProcess::Trace(vec![0, 10_000, 500_000]),
+            horizon_cycles: 200_000,
+            ..ClusterConfig::default()
+        };
+        assert_eq!(simulate(&m, &cfg).horizon_cycles, 10_001);
+        // An empty run spans nothing.
+        let cfg = ClusterConfig {
+            pattern: ArrivalProcess::Trace(vec![]),
+            ..light_cfg()
+        };
+        assert_eq!(simulate(&m, &cfg).horizon_cycles, 0);
+    }
+
+    #[test]
+    fn indexed_and_scan_routing_are_bit_identical_smoke() {
+        // Quick in-crate check (the full random-mix property lives in
+        // tests/prop_cluster_perf.rs): saturating load over both
+        // load-aware policies, every stat equal.
+        let m = model();
+        for route in [RoutePolicy::ShortestQueue, RoutePolicy::LeastWork] {
+            let cfg = ClusterConfig {
+                nodes: 5,
+                rate_per_cycle: 7.0 / 3136.0,
+                route,
+                max_queue: 6,
+                horizon_cycles: 1_500_000,
+                ..ClusterConfig::default()
+            };
+            let a = simulate(&m, &cfg);
+            let b = simulate(
+                &m,
+                &ClusterConfig {
+                    route_impl: RouteImpl::LinearScan,
+                    ..cfg
+                },
+            );
+            assert_eq!(a.offered, b.offered, "{}", route.name());
+            assert_eq!(a.rejected, b.rejected, "{}", route.name());
+            assert_eq!(a.drained_at, b.drained_at, "{}", route.name());
+            assert_eq!(a.latency.mean(), b.latency.mean(), "{}", route.name());
+            assert_eq!(a.per_node_completed, b.per_node_completed, "{}", route.name());
+            assert_eq!(a.per_node_injected, b.per_node_injected, "{}", route.name());
+            assert_eq!(a.node_utilization, b.node_utilization, "{}", route.name());
+            assert_eq!(a.events_processed, b.events_processed, "{}", route.name());
+            assert_eq!(a.peak_calendar_depth, b.peak_calendar_depth, "{}", route.name());
+        }
+    }
+
+    #[test]
+    fn deadline_suppression_bounds_the_calendar() {
+        // Overload a hoarding fleet: without suppression every service
+        // call would stack another Deadline entry. With at most one live
+        // deadline per node, peak depth is bounded by 1 pending arrival +
+        // per-node completions (<= max_queue) + live deadlines (<= 1) +
+        // superseded strays (<= in-flight batches <= max_queue; max_wait
+        // is far below the pipeline fill, so strays expire before their
+        // batch completes).
+        let m = model();
+        let (nodes, max_queue) = (2u64, 8u64);
+        let cfg = ClusterConfig {
+            nodes: nodes as usize,
+            rate_per_cycle: 3.0 * nodes as f64 / 3136.0,
+            route: RoutePolicy::ShortestQueue,
+            max_queue,
+            horizon_cycles: 800_000,
+            policy: BatchPolicy {
+                sizes: vec![4, 1],
+                max_wait: 500,
+                min_fill: 0.9,
+            },
+            ..ClusterConfig::default()
+        };
+        let s = simulate(&m, &cfg);
+        assert!(s.offered > 1_000, "overload run should be busy");
+        let bound = 1 + nodes + 2 * nodes * max_queue;
+        assert!(
+            s.peak_calendar_depth <= bound,
+            "peak {} exceeds the suppression bound {bound}",
+            s.peak_calendar_depth
+        );
+        assert!(s.events_processed >= s.offered, "every arrival is an event");
+    }
+
+    #[test]
+    fn route_impl_parses() {
+        assert_eq!("indexed".parse::<RouteImpl>().unwrap(), RouteImpl::Indexed);
+        assert_eq!("scan".parse::<RouteImpl>().unwrap(), RouteImpl::LinearScan);
+        assert_eq!(
+            "linear-scan".parse::<RouteImpl>().unwrap(),
+            RouteImpl::LinearScan
+        );
+        assert_eq!(RouteImpl::default(), RouteImpl::Indexed);
+        assert_eq!(RouteImpl::Indexed.name(), "indexed");
+        assert_eq!(RouteImpl::LinearScan.name(), "scan");
+        assert!("btree".parse::<RouteImpl>().is_err());
     }
 
     #[test]

@@ -168,11 +168,26 @@ pub struct ClusterStats {
     pub completed: u64,
     /// Requests rejected by admission control.
     pub rejected: u64,
-    /// Cycles of simulated arrival horizon.
+    /// *Effective* arrival-generation span in cycles: the configured
+    /// horizon for horizon-bounded synthetic runs, the arrival extent
+    /// (last arrival + 1, or 0 when empty) under `fixed_requests`, and the
+    /// smaller of the two for trace replays — the configured horizon is
+    /// ignored or only an upper bound in those modes, so reporting it
+    /// verbatim would misstate the span (pinned by
+    /// `effective_horizon_reflects_the_generation_span` in `sim.rs`).
     pub horizon_cycles: u64,
     /// Cycle of the last completion (the drain point; >= horizon under
     /// load). 0 when nothing completed.
     pub drained_at: u64,
+    /// Calendar events processed (arrivals + completions + deadline
+    /// fires, stale ones included) — the denominator of the events/sec
+    /// throughput the scaling bench reports.
+    pub events_processed: u64,
+    /// High-water mark of the calendar heap. Deadline suppression plus
+    /// streamed arrivals bound this by fleet size + in-flight batches + 1
+    /// instead of growing with the horizon
+    /// (`tests/prop_cluster_perf.rs` pins the bound).
+    pub peak_calendar_depth: u64,
     /// End-to-end latency (arrival -> pipeline completion) in cycles.
     pub latency: LatencySummary,
     /// Queueing component only (arrival -> pipeline injection) in cycles.
@@ -237,6 +252,8 @@ impl ClusterStats {
             ("rejection_rate", self.rejection_rate().into()),
             ("horizon_cycles", self.horizon_cycles.into()),
             ("drained_at", self.drained_at.into()),
+            ("events_processed", self.events_processed.into()),
+            ("peak_calendar_depth", self.peak_calendar_depth.into()),
             ("throughput_rps", self.throughput_rps(logical_cycle_ns).into()),
             ("latency_mean_cycles", self.latency.mean().into()),
             ("latency_p50_cycles", self.latency.p50().into()),
@@ -307,6 +324,8 @@ mod tests {
             rejected: 2,
             horizon_cycles: 1000,
             drained_at: 2000,
+            events_processed: 30,
+            peak_calendar_depth: 5,
             latency: LatencySummary::from_samples(vec![10, 20, 30, 40, 50, 60, 70, 80]),
             queueing: LatencySummary::from_samples(vec![0; 8]),
             node_utilization: vec![0.5, 0.7],
@@ -342,6 +361,8 @@ mod tests {
         let j = stats().to_json(306.0).render();
         assert!(j.contains("\"latency_p99_cycles\":80"), "{j}");
         assert!(j.contains("\"rejected\":2"), "{j}");
+        assert!(j.contains("\"events_processed\":30"), "{j}");
+        assert!(j.contains("\"peak_calendar_depth\":5"), "{j}");
         assert!(j.contains("\"node_utilization\""), "{j}");
         assert!(j.contains("\"per_node_injected\""), "{j}");
         assert!(!j.contains("energy_total_j"), "no profile, no energy: {j}");

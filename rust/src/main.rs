@@ -684,13 +684,13 @@ fn reproduce(args: &Args) -> Result<(), String> {
 fn cluster_cmd(args: &Args) -> Result<(), String> {
     use smart_pim::cluster::{
         plan_capacity, rate_from_qps, simulate as cluster_simulate, ArrivalProcess,
-        ClusterConfig, NodeModel, RoutePolicy,
+        ClusterConfig, NodeModel, RouteImpl, RoutePolicy,
     };
 
     args.check_known(&[
-        "network", "plan", "nodes", "qps", "pattern", "trace", "route", "max-queue",
-        "horizon", "seed", "p99-target", "max-nodes", "power-budget-w", "json", "threads",
-        "config",
+        "network", "plan", "nodes", "qps", "pattern", "trace", "route", "route-impl",
+        "requests", "max-queue", "horizon", "seed", "p99-target", "max-nodes",
+        "power-budget-w", "json", "threads", "config",
     ])?;
     let a = arch();
     let name = args.get_or("network", "vggE");
@@ -776,13 +776,31 @@ fn cluster_cmd(args: &Args) -> Result<(), String> {
     } else {
         5_000_000
     };
+    // Fixed-population mode: exactly N arrivals, horizon-independent
+    // (10k-node x millions-of-requests scale runs pick a count, not a
+    // window — the stats then report the effective arrival span).
+    let fixed_requests: Option<usize> = args.get_parse::<usize>("requests")?;
+    if let Some(n) = fixed_requests {
+        if n == 0 {
+            return Err("--requests must be at least 1".into());
+        }
+        if args.get("horizon").is_some() {
+            return Err(
+                "--horizon conflicts with --requests (a fixed population \
+                 ignores the horizon); drop one of them"
+                    .into(),
+            );
+        }
+    }
     let cfg = ClusterConfig {
         nodes,
         rate_per_cycle: rate_from_qps(qps, a.logical_cycle_ns),
         pattern,
         route: args.get_or("route", "rr").parse::<RoutePolicy>()?,
+        route_impl: args.get_or("route-impl", "indexed").parse::<RouteImpl>()?,
         max_queue: args.get_parse_or("max-queue", 64u64)?,
         horizon_cycles: args.get_parse_or("horizon", horizon_default)?,
+        fixed_requests,
         seed: args.get_parse_or("seed", 0xC105_7E4u64)?,
         ..ClusterConfig::default()
     };
@@ -795,6 +813,8 @@ fn cluster_cmd(args: &Args) -> Result<(), String> {
     };
     let load = if matches!(cfg.pattern, ArrivalProcess::Trace(_)) {
         "trace-driven arrivals".to_string()
+    } else if let Some(n) = cfg.fixed_requests {
+        format!("{qps} qps {} arrivals (fixed {n} requests)", cfg.pattern.name())
     } else {
         format!("{qps} qps {} arrivals", cfg.pattern.name())
     };
@@ -893,6 +913,10 @@ fn cluster_cmd(args: &Args) -> Result<(), String> {
         .map(|u| format!("{:.0}%", 100.0 * u))
         .collect();
     t.row(&["per-node utilization".into(), util_cells.join(" ")]);
+    t.row(&[
+        "calendar events | peak depth".into(),
+        format!("{} | {}", stats.events_processed, stats.peak_calendar_depth),
+    ]);
     if let Some(e) = &stats.energy {
         t.row(&[
             "energy / image (mJ)".into(),

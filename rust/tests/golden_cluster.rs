@@ -9,7 +9,7 @@
 //!   — the cluster layer adds zero latency when there is no contention.
 
 use smart_pim::cluster::{
-    simulate, ArrivalProcess, ClusterConfig, NodeModel, RoutePolicy,
+    simulate, ArrivalProcess, ClusterConfig, NodeModel, RouteImpl, RoutePolicy,
 };
 use smart_pim::cnn::{vgg, VggVariant};
 use smart_pim::config::ArchConfig;
@@ -48,6 +48,7 @@ fn trace_cfg(trace: Vec<u64>) -> ClusterConfig {
         fixed_requests: None,
         policy: singles(),
         seed: 0,
+        route_impl: RouteImpl::Indexed,
     }
 }
 

@@ -15,7 +15,7 @@
 //! DESIGN.md §4a for why hoarding batchers can locally invert them.
 
 use smart_pim::cluster::{
-    simulate, ArrivalProcess, ClusterConfig, NodeModel, RoutePolicy,
+    simulate, ArrivalProcess, ClusterConfig, NodeModel, RouteImpl, RoutePolicy,
 };
 use smart_pim::cnn::{vgg, VggVariant};
 use smart_pim::config::ArchConfig;
@@ -53,6 +53,7 @@ fn fixed_cfg(nodes: usize, rate: f64, requests: usize, seed: u64) -> ClusterConf
         fixed_requests: Some(requests),
         policy: singles(),
         seed,
+        route_impl: RouteImpl::Indexed,
     }
 }
 
@@ -162,6 +163,12 @@ fn conservation_for_any_policy_mix() {
             fixed_requests: None,
             policy,
             seed: g.rng.next_u64(),
+            // Conservation must hold on both implementations.
+            route_impl: if g.rng.chance(0.5) {
+                RouteImpl::Indexed
+            } else {
+                RouteImpl::LinearScan
+            },
         };
         let s = simulate(&m, &cfg);
         prop_assert!(
@@ -224,6 +231,7 @@ fn identical_seed_is_bit_identical() {
                 min_fill: 0.5,
             },
             seed: g.rng.next_u64(),
+            route_impl: RouteImpl::Indexed,
         };
         let a = simulate(&m, &cfg);
         let b = simulate(&m, &cfg);

@@ -1,0 +1,284 @@
+//! Properties of the flattened cluster event loop (PR 6):
+//!
+//! 1. **routing parity** — indexed jsq/least-work routing produces
+//!    bit-identical [`ClusterStats`] to the linear-scan reference across
+//!    random policy/routing/admission/seed mixes (the tie-break contract
+//!    "lowest index wins on equal signal" is part of each index's key);
+//! 2. **calendar bound** — deadline suppression keeps the heap's
+//!    high-water mark at O(nodes + in-flight batches), independent of how
+//!    many requests stream through;
+//! 3. **streamed arrivals** — pulling arrivals one at a time reproduces
+//!    the materialized generator's runs exactly (`offered`, latencies,
+//!    the effective horizon), pinned here at the stats level on top of
+//!    the per-pattern stream-vs-vec equality in `arrival.rs`.
+//!
+//! [`ClusterStats`]: smart_pim::cluster::ClusterStats
+
+use smart_pim::cluster::{
+    simulate, ArrivalProcess, ClusterConfig, ClusterStats, NodeModel, RouteImpl, RoutePolicy,
+};
+use smart_pim::cnn::{vgg, VggVariant};
+use smart_pim::config::ArchConfig;
+use smart_pim::coordinator::BatchPolicy;
+use smart_pim::mapping::ReplicationPlan;
+use smart_pim::prop_assert;
+use smart_pim::util::prop::{check, Config, Gen};
+
+fn model() -> NodeModel {
+    let arch = ArchConfig::paper_node();
+    let net = vgg::build(VggVariant::E);
+    let plan = ReplicationPlan::fig7(VggVariant::E);
+    NodeModel::from_workload(&net, &arch, &plan).unwrap()
+}
+
+/// A random scenario mixing every axis the routing indexes must survive:
+/// fleet size, load level, arrival shape, admission bound, batching
+/// policy (hoarding and singles) and seed.
+fn random_cfg(g: &mut Gen, m: &NodeModel, route: RoutePolicy) -> ClusterConfig {
+    let nodes = 1 + g.rng.below_usize(6);
+    let pattern = match g.rng.below(4) {
+        0 => ArrivalProcess::Poisson,
+        1 => ArrivalProcess::from_name("bursty").unwrap(),
+        2 => ArrivalProcess::from_name("diurnal").unwrap(),
+        _ => {
+            let mut t: Vec<u64> = (0..g.scaled(80)).map(|_| g.rng.below(400_000)).collect();
+            t.sort_unstable();
+            ArrivalProcess::Trace(t)
+        }
+    };
+    let policy = if g.rng.chance(0.5) {
+        BatchPolicy {
+            sizes: vec![4, 1],
+            max_wait: 1 + g.rng.below(8_000),
+            min_fill: 0.25 + g.rng.next_f64() * 0.5,
+        }
+    } else {
+        BatchPolicy {
+            sizes: vec![1],
+            max_wait: 0,
+            min_fill: 1.0,
+        }
+    };
+    ClusterConfig {
+        nodes,
+        // From light load to ~3x fleet capacity, so the mixes cover idle
+        // fleets, rejection storms and everything between.
+        rate_per_cycle: (0.2 + g.rng.next_f64() * 3.0) * nodes as f64 / m.interval as f64,
+        pattern,
+        route,
+        max_queue: 1 + g.rng.below(24),
+        horizon_cycles: 150_000 + g.rng.below(350_000),
+        fixed_requests: if g.rng.chance(0.25) {
+            Some(10 + g.rng.below_usize(120))
+        } else {
+            None
+        },
+        policy,
+        seed: g.rng.next_u64(),
+        route_impl: RouteImpl::Indexed,
+    }
+}
+
+/// Every field of two runs must match exactly — latency distributions,
+/// per-node vectors, energy, even the perf gauges.
+fn assert_identical(a: &ClusterStats, b: &ClusterStats, what: &str) -> Result<(), String> {
+    prop_assert!(a.offered == b.offered, "{what}: offered {} != {}", a.offered, b.offered);
+    prop_assert!(a.completed == b.completed, "{what}: completed differs");
+    prop_assert!(a.rejected == b.rejected, "{what}: rejected differs");
+    prop_assert!(
+        a.horizon_cycles == b.horizon_cycles,
+        "{what}: effective horizon differs"
+    );
+    prop_assert!(a.drained_at == b.drained_at, "{what}: drain cycle differs");
+    prop_assert!(
+        a.events_processed == b.events_processed,
+        "{what}: event count differs ({} vs {})",
+        a.events_processed,
+        b.events_processed
+    );
+    prop_assert!(
+        a.peak_calendar_depth == b.peak_calendar_depth,
+        "{what}: peak depth differs"
+    );
+    prop_assert!(a.latency.count() == b.latency.count(), "{what}: sample counts");
+    for p in [0.001, 25.0, 50.0, 95.0, 99.0, 99.9, 100.0] {
+        prop_assert!(
+            a.latency.percentile(p) == b.latency.percentile(p),
+            "{what}: latency p{p} differs"
+        );
+        prop_assert!(
+            a.queueing.percentile(p) == b.queueing.percentile(p),
+            "{what}: queueing p{p} differs"
+        );
+    }
+    prop_assert!(a.latency.mean() == b.latency.mean(), "{what}: latency mean");
+    prop_assert!(a.latency.max() == b.latency.max(), "{what}: latency max");
+    prop_assert!(
+        a.node_utilization == b.node_utilization,
+        "{what}: utilization differs"
+    );
+    prop_assert!(
+        a.per_node_completed == b.per_node_completed,
+        "{what}: per-node completions differ"
+    );
+    prop_assert!(
+        a.per_node_rejected == b.per_node_rejected,
+        "{what}: per-node rejections differ"
+    );
+    prop_assert!(
+        a.per_node_injected == b.per_node_injected,
+        "{what}: per-node injections differ"
+    );
+    match (&a.energy, &b.energy) {
+        (Some(x), Some(y)) => {
+            prop_assert!(
+                x.dynamic_j == y.dynamic_j
+                    && x.idle_j == y.idle_j
+                    && x.padding_waste_j == y.padding_waste_j
+                    && x.span_s == y.span_s
+                    && x.completed_ops == y.completed_ops,
+                "{what}: energy differs"
+            );
+        }
+        (None, None) => {}
+        _ => return Err(format!("{what}: energy presence differs")),
+    }
+    Ok(())
+}
+
+#[test]
+fn indexed_routing_is_bit_identical_to_the_scan_reference() {
+    let m = model();
+    let cases = Config {
+        cases: 28,
+        ..Config::default()
+    };
+    check("cluster-route-impl-parity", &cases, |g| {
+        // jsq and least-work have real indexes; round-robin shares one
+        // code path but rides along as a control.
+        let route = RoutePolicy::ALL[g.rng.below_usize(3)];
+        let cfg = random_cfg(g, &m, route);
+        let indexed = simulate(&m, &cfg);
+        let scanned = simulate(
+            &m,
+            &ClusterConfig {
+                route_impl: RouteImpl::LinearScan,
+                ..cfg.clone()
+            },
+        );
+        assert_identical(&indexed, &scanned, route.name())?;
+        prop_assert!(
+            indexed.completed + indexed.rejected == indexed.offered,
+            "conservation rides along"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn calendar_depth_is_bounded_by_fleet_and_admission() {
+    // With at most one live deadline per node, the heap holds: 1 pending
+    // arrival + per-node completion events (<= max_queue outstanding
+    // admissions) + live deadlines (<= 1 per node) + superseded deadline
+    // strays. Constraining max_wait <= pipeline fill makes every stray
+    // expire before its batch completes, so strays are also <= in-flight
+    // admissions — the bound is 1 + nodes + 2*nodes*max_queue no matter
+    // how many requests stream through.
+    let m = model();
+    let cases = Config {
+        cases: 12,
+        ..Config::default()
+    };
+    check("cluster-calendar-bound", &cases, |g| {
+        let nodes = 1 + g.rng.below_usize(6);
+        let max_queue = 2 + g.rng.below(14);
+        let cfg = ClusterConfig {
+            nodes,
+            // Up to ~4x capacity: deep queues, heavy deadline churn.
+            rate_per_cycle: (1.0 + g.rng.next_f64() * 3.0) * nodes as f64
+                / m.interval as f64,
+            route: RoutePolicy::ALL[g.rng.below_usize(3)],
+            max_queue,
+            horizon_cycles: 400_000,
+            policy: BatchPolicy {
+                sizes: vec![4, 1],
+                max_wait: 1 + g.rng.below(m.fill),
+                min_fill: 0.25 + g.rng.next_f64() * 0.7,
+            },
+            seed: g.rng.next_u64(),
+            ..ClusterConfig::default()
+        };
+        let s = simulate(&m, &cfg);
+        let bound = 1 + nodes as u64 + 2 * nodes as u64 * max_queue;
+        prop_assert!(
+            s.peak_calendar_depth <= bound,
+            "peak {} exceeds bound {bound} ({nodes} nodes, max_queue {max_queue})",
+            s.peak_calendar_depth
+        );
+        prop_assert!(
+            s.peak_calendar_depth >= 1,
+            "a run with arrivals must use the calendar"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn streamed_arrivals_reproduce_materialized_runs() {
+    // The loop pulls from ArrivalStream; `generate`/`generate_n` are the
+    // materializing reference. Feeding the materialized vec back through
+    // a Trace replay must give the same offered count, completions and
+    // latency distribution (the effective horizon is compared against the
+    // extent, which is what a trace reports).
+    let m = model();
+    let cases = Config {
+        cases: 16,
+        ..Config::default()
+    };
+    check("cluster-streamed-arrivals", &cases, |g| {
+        let route = RoutePolicy::ALL[g.rng.below_usize(3)];
+        let mut cfg = random_cfg(g, &m, route);
+        if matches!(cfg.pattern, ArrivalProcess::Trace(_)) {
+            cfg.pattern = ArrivalProcess::Poisson;
+        }
+        let live = simulate(&m, &cfg);
+        let materialized = match cfg.fixed_requests {
+            Some(n) => cfg.pattern.generate_n(cfg.rate_per_cycle, n, cfg.seed),
+            None => cfg
+                .pattern
+                .generate(cfg.rate_per_cycle, cfg.horizon_cycles, cfg.seed),
+        };
+        let extent = materialized.last().map_or(0, |&c| c + 1);
+        let replay = simulate(
+            &m,
+            &ClusterConfig {
+                pattern: ArrivalProcess::Trace(materialized),
+                fixed_requests: None,
+                horizon_cycles: u64::MAX,
+                ..cfg.clone()
+            },
+        );
+        prop_assert!(live.offered == replay.offered, "offered differs");
+        prop_assert!(live.completed == replay.completed, "completed differs");
+        prop_assert!(live.rejected == replay.rejected, "rejected differs");
+        prop_assert!(live.drained_at == replay.drained_at, "drain differs");
+        prop_assert!(
+            live.latency.mean() == replay.latency.mean()
+                && live.latency.max() == replay.latency.max(),
+            "latency distribution differs"
+        );
+        prop_assert!(
+            live.horizon_cycles >= extent || cfg.fixed_requests.is_none(),
+            "fixed-request span is the arrival extent"
+        );
+        if cfg.fixed_requests.is_some() {
+            prop_assert!(
+                live.horizon_cycles == replay.horizon_cycles,
+                "fixed-request span {} != trace extent {}",
+                live.horizon_cycles,
+                replay.horizon_cycles
+            );
+        }
+        Ok(())
+    });
+}
