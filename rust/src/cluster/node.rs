@@ -11,7 +11,7 @@ use std::collections::VecDeque;
 use crate::cnn::Network;
 use crate::config::ArchConfig;
 use crate::coordinator::{BatchPolicy, Dispatcher, PipelineShape, Request};
-use crate::mapping::{NetworkMapping, Placement, ReplicationPlan};
+use crate::mapping::{MappingSelection, NetworkMapping, Placement, ReplicationPlan};
 use crate::pipeline::build_plans;
 use crate::power::{components::aggregates, EnergyModel};
 use crate::sim::extract_flows;
@@ -80,7 +80,20 @@ impl NodeModel {
         arch: &ArchConfig,
         plan: &ReplicationPlan,
     ) -> Result<Self, String> {
-        let mapping = NetworkMapping::build(net, arch, plan)?;
+        Self::from_workload_mapped(net, arch, plan, &MappingSelection::im2col(net.len()))
+    }
+
+    /// [`Self::from_workload`] under a per-layer mapping selection — the
+    /// whole replica model (shape, interval, fill, energy profile) is
+    /// derived from the selected packing, so a VW-SDK fleet is priced end
+    /// to end under VW-SDK.
+    pub fn from_workload_mapped(
+        net: &Network,
+        arch: &ArchConfig,
+        plan: &ReplicationPlan,
+        selection: &MappingSelection,
+    ) -> Result<Self, String> {
+        let mapping = NetworkMapping::build_with(net, arch, plan, selection)?;
         let plans = build_plans(net, &mapping, arch);
         let shape = PipelineShape::from_plans(&plans);
         let mut model = Self::new(shape);

@@ -76,7 +76,9 @@ pub fn startup_plan(
         batch_depth.max(4),
     );
     let candidate = chosen.pop().expect("one candidate in, one out");
-    let mapping = NetworkMapping::build(&net, arch, &candidate.plan)?;
+    // The dispatcher shape must reflect the candidate's own mapping
+    // selection (all-im2col under the default planner config).
+    let mapping = NetworkMapping::build_with(&net, arch, &candidate.plan, &candidate.mapping)?;
     let shape = PipelineShape::from_plans(&build_plans(&net, &mapping, arch));
     Ok(StartupPlan {
         variant,

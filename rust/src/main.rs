@@ -12,11 +12,11 @@
 //! smart-pim fig8                      # VGG-E throughput grid
 //! smart-pim fig9                      # energy efficiency
 //! smart-pim fig10 | fig11             # synthetic-traffic sweeps
-//! smart-pim plan --network resnet18 [--tiles 320] [--depth 8] [--compare] [--frontier]
-//! smart-pim simulate --network vgg19|resnet18 --scenario 4 --noc smart [--gantt]
+//! smart-pim plan --network resnet18 [--tiles 320] [--depth 8] [--mapping vwsdk] [--compare] [--frontier]
+//! smart-pim simulate --network vgg19|resnet18 --scenario 4 --noc smart [--mapping auto] [--gantt]
 //! smart-pim noc --pattern tornado --rate 0.1 [--noc smart]
 //! smart-pim serve --requests 64 [--artifacts artifacts]
-//! smart-pim cluster --network vgg_e --nodes 4 --qps 500 --pattern poisson
+//! smart-pim cluster --network vgg_e --nodes 4 --qps 500 --pattern poisson [--mapping vwsdk]
 //! smart-pim cluster --qps 3000 --capacity --p99-target 20000 [--power-budget-w 60]
 //! smart-pim reproduce                 # paper-headline scoreboard + BENCH_headline.json
 //! smart-pim dump-config               # active ArchConfig in file format
@@ -29,7 +29,9 @@
 use smart_pim::cnn::{vgg, VggVariant};
 use smart_pim::config::{ArchConfig, NocKind, Scenario};
 use smart_pim::coordinator::{assess_ingress, startup_plan, BatchPolicy, Server};
-use smart_pim::mapping::{plan_tiles, ReplicationPlan};
+use smart_pim::mapping::{
+    plan_tiles, MappingKind, MappingMode, MappingSelection, ReplicationPlan,
+};
 use smart_pim::metrics::{cluster_table, paper, planner_table, Grid};
 use smart_pim::planner::{evaluate_candidates, Planner, PlannerConfig};
 use smart_pim::noc::{
@@ -341,8 +343,8 @@ fn fig10_11(args: &Args, latency: bool) -> Result<(), String> {
 /// Fig. 7 plan (VGGs; branching workloads compare against no replication).
 fn plan_cmd(args: &Args) -> Result<(), String> {
     args.check_known(&[
-        "variant", "network", "tiles", "depth", "beam", "max-factor", "images", "config",
-        "threads",
+        "variant", "network", "tiles", "depth", "beam", "max-factor", "mapping", "images",
+        "config", "threads",
     ])?;
     // `--network` takes any workload name; `--variant` stays as the
     // VGG-only spelling from earlier revisions.
@@ -356,6 +358,7 @@ fn plan_cmd(args: &Args) -> Result<(), String> {
     let depth: u64 = args.get_parse_or("depth", 8u64)?;
     let beam: usize = args.get_parse_or("beam", 4usize)?;
     let max_factor: usize = args.get_parse_or("max-factor", 1024usize)?;
+    let mapping: MappingMode = args.get_or("mapping", "im2col").parse()?;
     let images: u64 = args.get_parse_or("images", 10u64)?;
     let runner = match args.get("threads") {
         Some(t) => SweepRunner::with_threads(t.parse().map_err(|e| format!("--threads: {e}"))?),
@@ -370,26 +373,37 @@ fn plan_cmd(args: &Args) -> Result<(), String> {
             batch_depth: depth,
             max_factor,
             beam_width: beam,
+            mapping,
         },
     );
     let mut result = planner.search()?;
     evaluate_candidates(&net, &a, &runner, std::slice::from_mut(&mut result.best), images);
 
     let best = &result.best;
+    // Replay the winning plan under its own mapping selection so the table
+    // can show the per-layer backend and parallel-window count.
+    let best_map =
+        smart_pim::mapping::NetworkMapping::build_with(&net, &a, &best.plan, &best.mapping)?;
     let mut t = Table::new(
         format!(
-            "searched plan — {} @ {} tiles, batch depth {depth} \
+            "searched plan — {} @ {} tiles, batch depth {depth}, mapping {mapping} \
              ({} states explored)",
             net.name,
             result.tile_budget,
             result.explored
         ),
-        &["layer", "replicate", "occupancy (cycles)"],
+        &["layer", "replicate", "mapping", "occupancy (cycles)"],
     );
     for (i, layer) in net.layers().iter().enumerate() {
+        let lm = &best_map.layers[i];
         t.row(&[
             layer.name.clone(),
             best.plan.factor(i).to_string(),
+            if lm.parallel_windows > 1 {
+                format!("{} pw={}", lm.mapping, lm.parallel_windows)
+            } else {
+                lm.mapping.to_string()
+            },
             best.assessment.occupancy[i].to_string(),
         ]);
     }
@@ -402,6 +416,11 @@ fn plan_cmd(args: &Args) -> Result<(), String> {
         Err(_) => ("no replication", cm.assess(&ReplicationPlan::none(&net))?),
     };
     let mut s = Table::new("plan summary", &["metric", "searched", ref_label]);
+    s.row(&[
+        "mapping".into(),
+        best.mapping.summary(),
+        "im2col".into(),
+    ]);
     s.row(&[
         "tiles used".into(),
         best.assessment.tiles.to_string(),
@@ -471,29 +490,83 @@ fn plan_cmd(args: &Args) -> Result<(), String> {
 
     if args.flag("compare") {
         println!();
-        planner_table(&a, &smart_pim::metrics::all_workloads(), tiles, depth, &runner)?
-            .print();
+        mapping_compare_table(&net, &a).print();
+        println!();
+        planner_table(
+            &a,
+            &smart_pim::metrics::all_workloads(),
+            tiles,
+            depth,
+            mapping,
+            &runner,
+        )?
+        .print();
     }
     Ok(())
 }
 
+/// `plan --compare`: per-conv-layer subarray accounting, im2col vs VW-SDK.
+/// The "per rate" columns divide each backend's subarrays per copy by the
+/// output positions it retires per cycle — the honest comparison, since a
+/// VW-SDK copy is bigger but runs `pw`x faster. On the paper node's
+/// 128-column subarrays the two tie per rate (the column-conservation law,
+/// see `mapping::backend`); VW-SDK still wins whole-layer interval where
+/// its tie-break packs more parallel windows into one copy.
+fn mapping_compare_table(net: &smart_pim::cnn::Network, a: &ArchConfig) -> Table {
+    use smart_pim::mapping::pack_layer;
+    let mut t = Table::new(
+        format!("mapping comparison — {} (subarrays per replica copy)", net.name),
+        &[
+            "layer",
+            "im2col subs",
+            "vwsdk subs",
+            "pw",
+            "window",
+            "im2col subs/rate",
+            "vwsdk subs/rate",
+        ],
+    );
+    for layer in net.layers().iter().filter(|l| l.is_conv()) {
+        let seed = pack_layer(MappingKind::Im2col, layer, a);
+        let vw = pack_layer(MappingKind::VwSdk, layer, a);
+        let (s_subs, v_subs) = (seed.demand.subarrays(), vw.demand.subarrays());
+        t.row(&[
+            layer.name.clone(),
+            s_subs.to_string(),
+            v_subs.to_string(),
+            vw.parallel_windows.to_string(),
+            format!("{}x{}", vw.window.0, vw.window.1),
+            fnum(s_subs as f64, 0),
+            fnum(v_subs as f64 / vw.parallel_windows as f64, 2),
+        ]);
+    }
+    t
+}
+
 fn simulate(args: &Args) -> Result<(), String> {
-    args.check_known(&["vgg", "network", "scenario", "noc", "config"])?;
+    args.check_known(&["vgg", "network", "scenario", "noc", "mapping", "config"])?;
     let s: Scenario = args.get_or("scenario", "4").parse()?;
     let n: NocKind = args.get_or("noc", "smart").parse()?;
+    let mapping: MappingMode = args.get_or("mapping", "im2col").parse()?;
     let a = arch();
     // `--network` runs any workload through the generic path (branching
     // workloads use the searched plan when the scenario replicates, since
     // they have no Fig. 7 hand plan).
     if let Some(name) = args.get("network") {
         if name.parse::<VggVariant>().is_err() {
-            return simulate_network(name, s, n, &a, args.flag("gantt"));
+            return simulate_network(name, s, n, &a, mapping, args.flag("gantt"));
         }
     }
     let v: VggVariant = match args.get("network") {
         Some(name) => name.parse()?,
         None => args.get_or("vgg", "E").parse()?,
     };
+    if mapping != MappingMode::Im2col {
+        // The classic VGG path replays the seed im2col goldens (Fig. 7 +
+        // `sim::evaluate`); a non-default mapping runs the same workload
+        // through the generic mapped path instead.
+        return simulate_network(v.name(), s, n, &a, mapping, args.flag("gantt"));
+    }
     let r = evaluate(v, s, n, &a);
     let mut t = Table::new(
         format!(
@@ -551,37 +624,47 @@ fn simulate(args: &Args) -> Result<(), String> {
 }
 
 /// Generic-workload `simulate` path: searched (or none) plan + the
-/// cycle-accurate engine through [`smart_pim::sim::evaluate_network`].
+/// cycle-accurate engine through
+/// [`smart_pim::sim::evaluate_network_mapped`]. Under a replicating
+/// scenario the plan *and* the per-layer mapping selection come from the
+/// planner (`--mapping auto` makes that search joint); without
+/// replication, `vwsdk`/`auto` apply the VW-SDK backend uniformly — at a
+/// fixed replication a VW-SDK layer retires `pw`x more positions per
+/// cycle, so its interval can only improve.
 fn simulate_network(
     name: &str,
     s: Scenario,
     n: NocKind,
     a: &ArchConfig,
+    mapping: MappingMode,
     gantt: bool,
 ) -> Result<(), String> {
     let net = smart_pim::cnn::workload(name)?;
-    let plan = if s.replication() {
-        ReplicationPlan::searched(&net, a, 0)?
+    let (plan, selection) = if s.replication() {
+        let r = smart_pim::planner::plan_for_mapped(&net, a, 0, mapping)?;
+        (r.best.plan, r.best.mapping)
     } else {
-        ReplicationPlan::none(&net)
+        (ReplicationPlan::none(&net), selection_for(mapping, net.len()))
     };
     let images = smart_pim::sim::integrate::default_images(s);
-    let r = smart_pim::sim::evaluate_network(&net, &plan, s.batch(), n, a, images)?;
+    let r =
+        smart_pim::sim::evaluate_network_mapped(&net, &plan, &selection, s.batch(), n, a, images)?;
     if gantt {
         // Re-derive the stage plans for the trace view (same as the VGG
         // path does).
         use smart_pim::mapping::NetworkMapping;
         use smart_pim::pipeline::build_plans;
-        let m = NetworkMapping::build(&net, a, &plan)?;
+        let m = NetworkMapping::build_with(&net, a, &plan, &selection)?;
         let plans = build_plans(&net, &m, a);
         println!("{}", smart_pim::sim::gantt(&plans, &r.sim, 100));
     }
     let mut t = Table::new(
         format!(
-            "simulate {} scenario {} noc {} ({} layers, {} edges, {} merges)",
+            "simulate {} scenario {} noc {} mapping {} ({} layers, {} edges, {} merges)",
             net.name,
             s.label(),
             n.name(),
+            selection.summary(),
             net.len(),
             net.n_edges(),
             net.n_merge()
@@ -602,6 +685,20 @@ fn simulate_network(
     t.row(&["efficiency (TOPS/W)".into(), fnum(r.tops_per_watt, 4)]);
     t.print();
     Ok(())
+}
+
+/// Mapping selection for a fixed (non-searched) replication plan. At a
+/// fixed replication the VW-SDK backend can only lower a layer's occupancy
+/// (it retires `pw` positions per cycle from one copy), so both `vwsdk`
+/// and `auto` apply it uniformly; non-conv layers fall back to im2col
+/// inside `NetworkMapping::build_with`.
+fn selection_for(mapping: MappingMode, n: usize) -> MappingSelection {
+    match mapping {
+        MappingMode::Im2col => MappingSelection::im2col(n),
+        MappingMode::VwSdk | MappingMode::Auto => {
+            MappingSelection::uniform(MappingKind::VwSdk, n)
+        }
+    }
 }
 
 fn noc_cmd(args: &Args) -> Result<(), String> {
@@ -647,8 +744,9 @@ fn noc_cmd(args: &Args) -> Result<(), String> {
 
 /// `smart-pim reproduce`: recompute the paper's five abstract-level
 /// headline claims (best-case TOPS / FPS / TOPS/W, the ~14x pipelining
-/// speedup, the ~1.08x SMART-over-wormhole speedup) through the full
-/// model stack, check each against its pinned tolerance band
+/// speedup, the ~1.08x SMART-over-wormhole speedup) plus the VW-SDK
+/// mapping-search gate through the full model stack, check each against
+/// its pinned tolerance band
 /// (`metrics::headline::bands`), and write the scoreboard to
 /// `BENCH_headline.json`. Exits non-zero when any band fails, so CI and
 /// scripts can gate on it.
@@ -658,7 +756,10 @@ fn reproduce(args: &Args) -> Result<(), String> {
         Some(t) => SweepRunner::with_threads(t.parse().map_err(|e| format!("--threads: {e}"))?),
         None => SweepRunner::new(),
     };
-    println!("recomputing the 5 headline metrics (20-point grid, SMART + wormhole) ...");
+    println!(
+        "recomputing the 6 headline metrics (20-point grid, SMART + wormhole, \
+         + VW-SDK search gate) ..."
+    );
     let board = smart_pim::metrics::scoreboard(&arch(), &runner);
     board.table().print();
     let path = args.get_or("json", "BENCH_headline.json");
@@ -666,7 +767,7 @@ fn reproduce(args: &Args) -> Result<(), String> {
         .map_err(|e| format!("writing {path}: {e}"))?;
     println!("wrote {path}");
     if board.all_pass() {
-        println!("all 5 headline metrics within their pinned bands");
+        println!("all 6 headline metrics within their pinned bands");
         Ok(())
     } else {
         Err(format!(
@@ -688,16 +789,19 @@ fn cluster_cmd(args: &Args) -> Result<(), String> {
     };
 
     args.check_known(&[
-        "network", "plan", "nodes", "qps", "pattern", "trace", "route", "route-impl",
-        "requests", "max-queue", "horizon", "seed", "p99-target", "max-nodes",
+        "network", "plan", "mapping", "nodes", "qps", "pattern", "trace", "route",
+        "route-impl", "requests", "max-queue", "horizon", "seed", "p99-target", "max-nodes",
         "power-budget-w", "json", "threads", "config",
     ])?;
     let a = arch();
     let name = args.get_or("network", "vggE");
     let net = smart_pim::cnn::workload(name)?;
+    let mapping: MappingMode = args.get_or("mapping", "im2col").parse()?;
 
     // Replication plan carried by every replica: Fig. 7 for the VGGs by
-    // default (the validated single-node anchor), searched otherwise.
+    // default (the validated single-node anchor), searched otherwise. A
+    // searched plan is derived jointly with its mapping selection; the
+    // fixed plans pair with the uniform selection (`selection_for`).
     let plan_name = args.get_or(
         "plan",
         if net.name.parse::<VggVariant>().is_ok() {
@@ -706,15 +810,24 @@ fn cluster_cmd(args: &Args) -> Result<(), String> {
             "searched"
         },
     );
-    let plan = match plan_name {
-        "none" => ReplicationPlan::none(&net),
-        "fig7" => ReplicationPlan::fig7(net.name.parse::<VggVariant>().map_err(|_| {
-            format!("--plan fig7 needs a VGG workload, not {}", net.name)
-        })?),
-        "searched" => ReplicationPlan::searched(&net, &a, 0)?,
+    let (plan, selection) = match plan_name {
+        "none" => (
+            ReplicationPlan::none(&net),
+            selection_for(mapping, net.len()),
+        ),
+        "fig7" => (
+            ReplicationPlan::fig7(net.name.parse::<VggVariant>().map_err(|_| {
+                format!("--plan fig7 needs a VGG workload, not {}", net.name)
+            })?),
+            selection_for(mapping, net.len()),
+        ),
+        "searched" => {
+            let r = smart_pim::planner::plan_for_mapped(&net, &a, 0, mapping)?;
+            (r.best.plan, r.best.mapping)
+        }
         other => return Err(format!("--plan {other:?} (none | fig7 | searched)")),
     };
-    let model = NodeModel::from_workload(&net, &a, &plan)?;
+    let model = NodeModel::from_workload_mapped(&net, &a, &plan, &selection)?;
 
     let qps: f64 = args.get_parse_or("qps", 500.0)?;
     if qps <= 0.0 || !qps.is_finite() {
@@ -819,11 +932,12 @@ fn cluster_cmd(args: &Args) -> Result<(), String> {
         format!("{qps} qps {} arrivals", cfg.pattern.name())
     };
     println!(
-        "cluster: {} x {} ({} plan, interval {} cycles, fill {} cycles), \
+        "cluster: {} x {} ({} plan, {} mapping, interval {} cycles, fill {} cycles), \
          {load}, route {}, max queue {}",
         fleet,
         net.name,
         plan_name,
+        selection.summary(),
         model.interval,
         model.fill,
         cfg.route.name(),
@@ -1047,6 +1161,7 @@ fn report_all(args: &Args) -> Result<(), String> {
         &smart_pim::metrics::all_workloads(),
         a.total_tiles(),
         8,
+        MappingMode::Auto,
         &SweepRunner::new(),
     )?
     .print();

@@ -1,0 +1,386 @@
+//! Mapping backends: how a conv layer's weights become subarrays.
+//!
+//! The seed mapping (Sec. III) unrolls one im2col window: `K = c*l*l` rows
+//! by `N*8` physical columns, one OFM pixel position per logical cycle.
+//! VW-SDK (arxiv 2112.11282) generalizes the window: a *parallel window*
+//! covering `p x q` output positions maps `c*wh*ww` input rows
+//! (`wh = l + (p-1)s`, `ww = l + (q-1)s`) against `p*q*N` shifted duplicate
+//! kernels, emitting `p*q` OFM pixel positions per cycle from one copy.
+//!
+//! Both live behind the object-safe [`MappingBackend`] trait (the PR-1
+//! `NocBackend` pattern): [`Im2col`] is the golden-pinned seed rule,
+//! [`VwSdk`] picks the best parallel window per layer.
+//!
+//! # The column-conservation law (why VW-SDK ties on the paper node)
+//!
+//! Every OFM value emitted per cycle needs its own group of
+//! `slices_per_weight` physical columns — columns are the MAC lanes, and
+//! no mapping can share them. Per unit emission rate a packing therefore
+//! costs `ceil(c*wh*ww/rows) * ceil(8N/cols) / 1` subarrays with the window
+//! rows shared across all `p*q` duplicates, versus im2col's
+//! `ceil(c*l*l/rows) * ceil(8N/cols)`. On the paper node (128 columns,
+//! 8 slices) every VGG/ResNet channel count is a multiple of 16, so the
+//! column term is *exact* and the comparison reduces to row blocks alone —
+//! which only grow with the window. Hence VW-SDK can **tie** im2col's
+//! per-rate subarray cost (it does, on the stem convs, where the enlarged
+//! window still fits one row block) but never strictly beat it; the strict
+//! wins reported by the VW-SDK paper come entirely from column slack
+//! (`8N % cols != 0`), which this geometry does not have. The golden tests
+//! pin both facts: equality on the paper node, strict savings on a
+//! column-slack node (`rust/tests/golden_mapping.rs`).
+//!
+//! The tie is still worth taking: a tied `p x q` packing emits `p*q`
+//! pixels per cycle from *one* copy, so at low replication the mapping
+//! itself buys interval (VGG-A unreplicated: 50176 -> 12544 cycles;
+//! ResNet: 12544 -> 3136) at identical subarrays-per-rate.
+
+use crate::cnn::Layer;
+use crate::config::ArchConfig;
+
+use super::subarray::SubarrayDemand;
+
+/// Hard cap on parallel windows per copy: the OR/IR datapath moves at most
+/// this many OFM pixel positions per logical cycle out of one copy —
+/// matching the paper's maximum replication granularity (16x, Fig. 7).
+pub const MAX_PARALLEL_WINDOWS: usize = 16;
+
+/// Which packing rule maps a layer onto subarrays.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum MappingKind {
+    /// The seed rule: one im2col window per cycle (golden-pinned).
+    Im2col,
+    /// Variable-window + shifted-duplicate-kernel packing.
+    VwSdk,
+}
+
+impl std::fmt::Display for MappingKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            MappingKind::Im2col => "im2col",
+            MappingKind::VwSdk => "vwsdk",
+        })
+    }
+}
+
+/// How the planner treats the mapping axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MappingMode {
+    /// Every layer uses the seed im2col rule (the default everywhere).
+    Im2col,
+    /// Every conv layer uses the VW-SDK backend.
+    VwSdk,
+    /// The planner searches per-layer backend choice jointly with
+    /// replication.
+    Auto,
+}
+
+impl std::fmt::Display for MappingMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            MappingMode::Im2col => "im2col",
+            MappingMode::VwSdk => "vwsdk",
+            MappingMode::Auto => "auto",
+        })
+    }
+}
+
+impl std::str::FromStr for MappingMode {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "im2col" | "seed" => Ok(MappingMode::Im2col),
+            "vwsdk" | "vw-sdk" | "vw_sdk" => Ok(MappingMode::VwSdk),
+            "auto" | "joint" => Ok(MappingMode::Auto),
+            other => Err(format!(
+                "unknown mapping {other:?} (im2col | vwsdk | auto)"
+            )),
+        }
+    }
+}
+
+/// Per-layer backend choice, aligned with `Network::layers()`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct MappingSelection {
+    /// Backend per layer (non-crossbar layers ignore their entry).
+    pub kinds: Vec<MappingKind>,
+}
+
+impl MappingSelection {
+    /// The all-im2col selection (seed behavior).
+    pub fn im2col(n_layers: usize) -> Self {
+        Self {
+            kinds: vec![MappingKind::Im2col; n_layers],
+        }
+    }
+
+    /// One backend for every layer.
+    pub fn uniform(kind: MappingKind, n_layers: usize) -> Self {
+        Self {
+            kinds: vec![kind; n_layers],
+        }
+    }
+
+    /// Backend for layer `i`.
+    pub fn kind(&self, i: usize) -> MappingKind {
+        self.kinds[i]
+    }
+
+    /// Number of per-layer entries.
+    pub fn len(&self) -> usize {
+        self.kinds.len()
+    }
+
+    /// True when the selection covers no layers.
+    pub fn is_empty(&self) -> bool {
+        self.kinds.is_empty()
+    }
+
+    /// Short human-readable form: `im2col`, `vwsdk`, or `mixed(k/n vwsdk)`.
+    pub fn summary(&self) -> String {
+        let vw = self
+            .kinds
+            .iter()
+            .filter(|&&k| k == MappingKind::VwSdk)
+            .count();
+        if vw == 0 {
+            "im2col".into()
+        } else if vw == self.kinds.len() {
+            "vwsdk".into()
+        } else {
+            format!("mixed({vw}/{} vwsdk)", self.kinds.len())
+        }
+    }
+}
+
+/// Resolved packing of one copy of one layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerPacking {
+    /// Subarray blocks of one copy (window rows x duplicated-kernel cols).
+    pub demand: SubarrayDemand,
+    /// OFM pixel positions one copy emits per logical cycle (`p*q`; 1 for
+    /// im2col and every non-conv layer).
+    pub parallel_windows: u64,
+    /// IFM window spatial dims `(wh, ww)` feeding one copy per cycle —
+    /// `(l, l)` for im2col; drives the inter-layer input-demand head.
+    pub window: (usize, usize),
+}
+
+/// An object-safe layer -> subarray packing rule.
+pub trait MappingBackend {
+    /// Which rule this is.
+    fn kind(&self) -> MappingKind;
+    /// Pack one copy of `layer` under `arch`.
+    fn pack(&self, layer: &Layer, arch: &ArchConfig) -> LayerPacking;
+}
+
+/// Packing for every non-conv (and every im2col) layer: the seed rule,
+/// one window per cycle.
+fn seed_packing(layer: &Layer, arch: &ArchConfig) -> LayerPacking {
+    let k = layer.ksize();
+    LayerPacking {
+        demand: SubarrayDemand::of(layer, arch),
+        parallel_windows: 1,
+        window: (k, k),
+    }
+}
+
+/// The seed im2col rule behind the trait — bit-identical to
+/// [`SubarrayDemand::of`] (golden-pinned in `rust/tests/golden_mapping.rs`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Im2col;
+
+impl MappingBackend for Im2col {
+    fn kind(&self) -> MappingKind {
+        MappingKind::Im2col
+    }
+
+    fn pack(&self, layer: &Layer, arch: &ArchConfig) -> LayerPacking {
+        seed_packing(layer, arch)
+    }
+}
+
+/// Variable-window + shifted-duplicate-kernel packing.
+///
+/// Candidate windows cover `p x q` output positions with `p` dividing the
+/// conv's output height and `q` its width (so every cycle's emission block
+/// tiles the OFM exactly and the steady-state occupancy stays integral),
+/// `p*q <= MAX_PARALLEL_WINDOWS`. Among candidates the backend minimizes
+/// subarrays per unit emission rate, breaking ties toward the *largest*
+/// window (free intra-copy parallelism) and then the smallest `p`. `(1,1)`
+/// is always a candidate, so VW-SDK never costs more per rate than im2col.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct VwSdk;
+
+impl MappingBackend for VwSdk {
+    fn kind(&self) -> MappingKind {
+        MappingKind::VwSdk
+    }
+
+    fn pack(&self, layer: &Layer, arch: &ArchConfig) -> LayerPacking {
+        let crate::cnn::LayerKind::Conv { ksize, stride, .. } = layer.kind else {
+            return seed_packing(layer, arch);
+        };
+        let (oh, ow) = layer.conv_out_hw();
+        let c = layer.in_ch;
+        let phys_cols_per_window = layer.gemm_n() * arch.slices_per_weight();
+        let mut best: Option<(LayerPacking, usize, usize)> = None;
+        for p in 1..=oh {
+            if oh % p != 0 || p > MAX_PARALLEL_WINDOWS {
+                continue;
+            }
+            for q in 1..=ow {
+                let pq = p * q;
+                if ow % q != 0 || pq > MAX_PARALLEL_WINDOWS {
+                    continue;
+                }
+                let wh = ksize + (p - 1) * stride;
+                let ww = ksize + (q - 1) * stride;
+                let demand = SubarrayDemand {
+                    row_blocks: (c * wh * ww).div_ceil(arch.subarray_rows),
+                    col_blocks: (pq * phys_cols_per_window)
+                        .div_ceil(arch.subarray_cols),
+                };
+                let cand = LayerPacking {
+                    demand,
+                    parallel_windows: pq as u64,
+                    window: (wh, ww),
+                };
+                // Minimize subarrays per unit rate (cross-multiplied to stay
+                // in integers); ties -> larger window, then smaller p.
+                let better = match &best {
+                    None => true,
+                    Some((b, b_pq, b_p)) => {
+                        let lhs = cand.demand.subarrays() * b_pq;
+                        let rhs = b.demand.subarrays() * pq;
+                        lhs < rhs || (lhs == rhs && (pq > *b_pq || (pq == *b_pq && p < *b_p)))
+                    }
+                };
+                if better {
+                    best = Some((cand, pq, p));
+                }
+            }
+        }
+        best.expect("(1,1) always qualifies").0
+    }
+}
+
+/// The backend implementing `kind` (both are stateless).
+pub fn backend_for(kind: MappingKind) -> &'static dyn MappingBackend {
+    match kind {
+        MappingKind::Im2col => &Im2col,
+        MappingKind::VwSdk => &VwSdk,
+    }
+}
+
+/// Convenience: pack `layer` with the backend for `kind`.
+pub fn pack_layer(kind: MappingKind, layer: &Layer, arch: &ArchConfig) -> LayerPacking {
+    backend_for(kind).pack(layer, arch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::{vgg, Layer, VggVariant};
+
+    fn arch() -> ArchConfig {
+        ArchConfig::paper_node()
+    }
+
+    #[test]
+    fn im2col_backend_is_the_seed_rule() {
+        let net = vgg::build(VggVariant::E);
+        for l in net.layers() {
+            let p = pack_layer(MappingKind::Im2col, l, &arch());
+            assert_eq!(p.demand, SubarrayDemand::of(l, &arch()), "{}", l.name);
+            assert_eq!(p.parallel_windows, 1);
+            assert_eq!(p.window, (l.ksize(), l.ksize()));
+        }
+    }
+
+    #[test]
+    fn vwsdk_never_worse_per_rate_and_ties_on_stem() {
+        // Column conservation: per unit rate vwsdk <= im2col on every conv
+        // layer (the module doc's law), with the enlarged window chosen on
+        // the stem conv where the row block ties.
+        let net = vgg::build(VggVariant::E);
+        for l in net.layers() {
+            if !l.is_conv() {
+                continue;
+            }
+            let i = pack_layer(MappingKind::Im2col, l, &arch());
+            let v = pack_layer(MappingKind::VwSdk, l, &arch());
+            assert!(
+                v.demand.subarrays() as u64
+                    <= i.demand.subarrays() as u64 * v.parallel_windows,
+                "{}: vwsdk {} subs @ pw {} vs im2col {}",
+                l.name,
+                v.demand.subarrays(),
+                v.parallel_windows,
+                i.demand.subarrays()
+            );
+        }
+        // VGG stem: c=3, l=3 -> (2,8) window, 120 rows in one block, 16
+        // pixel positions per cycle at im2col's exact per-rate cost.
+        let stem = &net.layers()[0];
+        let v = pack_layer(MappingKind::VwSdk, stem, &arch());
+        assert_eq!(v.parallel_windows, 16);
+        assert_eq!(v.window, (4, 10));
+        assert_eq!(v.demand.row_blocks, 1);
+        assert_eq!(v.demand.subarrays(), 64); // == 4 * 16
+    }
+
+    #[test]
+    fn vwsdk_falls_back_to_im2col_on_deep_convs() {
+        // c=512 3x3: any window growth multiplies row blocks past the
+        // duplicate count -> (1,1) is per-rate optimal.
+        let l = Layer::conv("c", (14, 14), 512, 512, 3, false);
+        let v = pack_layer(MappingKind::VwSdk, &l, &arch());
+        assert_eq!(v.parallel_windows, 1);
+        assert_eq!(v.demand, SubarrayDemand::of(&l, &arch()));
+    }
+
+    #[test]
+    fn vwsdk_non_conv_is_seed() {
+        let l = Layer::fc("fc", 25088, 4096);
+        let v = pack_layer(MappingKind::VwSdk, &l, &arch());
+        assert_eq!(v.demand, SubarrayDemand::of(&l, &arch()));
+        assert_eq!(v.parallel_windows, 1);
+    }
+
+    #[test]
+    fn vwsdk_wins_strictly_with_column_slack() {
+        // Shrink subarrays to 192 columns: 8N = 512 leaves 64 slack columns
+        // per block, and the (4,4) window amortizes the slack across 16
+        // duplicates — the geometry class where VW-SDK's strict savings
+        // live (the paper's 512-wide arrays with N <= 256).
+        let mut a = arch();
+        a.subarray_cols = 192;
+        a.validate().expect("192-column node validates");
+        let stem = Layer::conv("c1", (224, 224), 3, 64, 3, true);
+        let i = pack_layer(MappingKind::Im2col, &stem, &a);
+        let v = pack_layer(MappingKind::VwSdk, &stem, &a);
+        assert!(v.parallel_windows > 1);
+        assert!(
+            v.demand.subarrays() as u64
+                < i.demand.subarrays() as u64 * v.parallel_windows,
+            "vwsdk {} subs @ pw {} vs im2col {} per window",
+            v.demand.subarrays(),
+            v.parallel_windows,
+            i.demand.subarrays()
+        );
+    }
+
+    #[test]
+    fn selection_summary_forms() {
+        let mut s = MappingSelection::im2col(4);
+        assert_eq!(s.summary(), "im2col");
+        s.kinds[1] = MappingKind::VwSdk;
+        assert_eq!(s.summary(), "mixed(1/4 vwsdk)");
+        let u = MappingSelection::uniform(MappingKind::VwSdk, 3);
+        assert_eq!(u.summary(), "vwsdk");
+        assert_eq!(u.kind(2), MappingKind::VwSdk);
+        assert_eq!("auto".parse::<MappingMode>().unwrap(), MappingMode::Auto);
+        assert!("bogus".parse::<MappingMode>().is_err());
+    }
+}

@@ -5,7 +5,8 @@
 use crate::cnn::Network;
 use crate::config::ArchConfig;
 
-use super::replication::{validate_plan, ReplicationPlan};
+use super::backend::{pack_layer, MappingKind, MappingSelection};
+use super::replication::{validate_plan_with, ReplicationPlan};
 use super::subarray::SubarrayDemand;
 
 /// Resolved mapping of one layer.
@@ -17,7 +18,8 @@ pub struct LayerMapping {
     pub name: String,
     /// Replication factor `r`.
     pub replication: usize,
-    /// Subarray demand of one replica.
+    /// Subarray demand of one replica (one packed copy under the layer's
+    /// mapping backend; the seed window under im2col).
     pub demand: SubarrayDemand,
     /// Tiles owned by this layer (ids into the placement order).
     pub tile_ids: Vec<usize>,
@@ -26,6 +28,15 @@ pub struct LayerMapping {
     pub single_tile: bool,
     /// FC layers time-multiplex crossbars over this many reload rounds.
     pub reload_rounds: u64,
+    /// Backend that produced this packing.
+    pub mapping: MappingKind,
+    /// OFM pixel positions one copy emits per logical cycle (`p*q` under
+    /// VW-SDK; 1 under im2col and for every non-conv layer). The stage's
+    /// emission rate is `replication * parallel_windows`.
+    pub parallel_windows: u64,
+    /// IFM window spatial dims `(wh, ww)` one copy consumes per cycle
+    /// (`(l, l)` under im2col) — drives the inter-layer input-demand head.
+    pub window: (usize, usize),
 }
 
 /// Whole-network mapping.
@@ -46,26 +57,47 @@ impl NetworkMapping {
         arch: &ArchConfig,
         plan: &ReplicationPlan,
     ) -> Result<Self, String> {
-        validate_plan(net, arch, plan)?;
+        Self::build_with(net, arch, plan, &MappingSelection::im2col(net.len()))
+    }
+
+    /// [`NetworkMapping::build`] under a per-layer mapping selection. The
+    /// all-im2col selection is bit-identical to the seed path (golden-pinned
+    /// in `rust/tests/golden_mapping.rs`).
+    pub fn build_with(
+        net: &Network,
+        arch: &ArchConfig,
+        plan: &ReplicationPlan,
+        selection: &MappingSelection,
+    ) -> Result<Self, String> {
+        validate_plan_with(net, arch, plan, selection)?;
         let mut layers = Vec::with_capacity(net.len());
         let mut next_tile = 0usize;
         for (i, layer) in net.layers().iter().enumerate() {
             let r = plan.factor(i);
-            let demand = SubarrayDemand::of(layer, arch);
+            let kind = if layer.is_conv() {
+                selection.kind(i)
+            } else {
+                MappingKind::Im2col // FC/dataflow layers are backend-blind
+            };
+            let packing = pack_layer(kind, layer, arch);
             // One accounting rule for planner pre-checks and real mapping:
-            // see `replication::layer_tiles` (conv / FC reload rounds /
+            // see `replication::layer_tiles_with` (conv / FC reload rounds /
             // one-buffer-tile dataflow stages).
-            let (tiles, reload_rounds) = super::replication::layer_tiles(layer, r, arch);
+            let (tiles, reload_rounds) =
+                super::replication::layer_tiles_with(layer, r, arch, kind);
             let tile_ids: Vec<usize> = (next_tile..next_tile + tiles).collect();
             next_tile += tiles;
             layers.push(LayerMapping {
                 layer_idx: i,
                 name: layer.name.clone(),
                 replication: r,
-                demand,
+                demand: packing.demand,
                 single_tile: tiles == 1,
                 tile_ids,
                 reload_rounds,
+                mapping: kind,
+                parallel_windows: packing.parallel_windows,
+                window: packing.window,
             });
         }
         if next_tile > arch.total_tiles() {
@@ -91,6 +123,7 @@ mod tests {
     use super::*;
     use crate::cnn::vgg;
     use crate::cnn::VggVariant;
+    use crate::mapping::backend::{MappingKind, MappingSelection};
 
     #[test]
     fn vgg_e_fig7_mapping_builds() {
@@ -180,6 +213,40 @@ mod tests {
                 assert_eq!(lm.demand.subarrays(), 0, "{}", lm.name);
             }
         }
+    }
+
+    #[test]
+    fn build_default_is_im2col_everywhere() {
+        let arch = ArchConfig::paper_node();
+        let net = vgg::build(VggVariant::E);
+        let m = NetworkMapping::build(&net, &arch, &ReplicationPlan::fig7(VggVariant::E)).unwrap();
+        for lm in &m.layers {
+            assert_eq!(lm.mapping, MappingKind::Im2col, "{}", lm.name);
+            assert_eq!(lm.parallel_windows, 1, "{}", lm.name);
+            let k = net.layers()[lm.layer_idx].ksize();
+            assert_eq!(lm.window, (k, k), "{}", lm.name);
+        }
+    }
+
+    #[test]
+    fn build_with_vwsdk_records_windows() {
+        let arch = ArchConfig::paper_node();
+        let net = vgg::build(VggVariant::A);
+        let plan = ReplicationPlan::none(&net);
+        let sel = MappingSelection::uniform(MappingKind::VwSdk, net.len());
+        let m = NetworkMapping::build_with(&net, &arch, &plan, &sel).unwrap();
+        // VGG stem: (2,8) parallel window over a 4x10 IFM patch.
+        assert_eq!(m.layer(0).parallel_windows, 16);
+        assert_eq!(m.layer(0).window, (4, 10));
+        assert_eq!(m.layer(0).mapping, MappingKind::VwSdk);
+        // FC layers stay on the seed rule regardless of selection.
+        let fc = m
+            .layers
+            .iter()
+            .find(|lm| net.layers()[lm.layer_idx].is_fc())
+            .unwrap();
+        assert_eq!(fc.mapping, MappingKind::Im2col);
+        assert_eq!(fc.parallel_windows, 1);
     }
 
     #[test]

@@ -1,12 +1,21 @@
-//! Weight mapping: subarray packing, replication planning (Fig. 7), layer →
+//! Weight mapping: subarray packing behind a backend trait (seed im2col and
+//! VW-SDK variable-window packing), replication planning (Fig. 7), layer →
 //! tile layout, and physical placement on the mesh.
 
+pub mod backend;
 pub mod layout;
 pub mod placement;
 pub mod replication;
 pub mod subarray;
 
+pub use backend::{
+    backend_for, pack_layer, Im2col, LayerPacking, MappingBackend, MappingKind, MappingMode,
+    MappingSelection, VwSdk,
+};
 pub use layout::{LayerMapping, NetworkMapping};
 pub use placement::{Coord, Placement};
-pub use replication::{layer_tiles, plan_tiles, validate_plan, ReplicationPlan};
+pub use replication::{
+    layer_tiles, layer_tiles_with, plan_tiles, plan_tiles_with, validate_plan,
+    validate_plan_with, ReplicationPlan,
+};
 pub use subarray::SubarrayDemand;

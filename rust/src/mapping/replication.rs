@@ -10,6 +10,7 @@
 use crate::cnn::{Network, VggVariant};
 use crate::config::ArchConfig;
 
+use super::backend::{pack_layer, MappingKind, MappingSelection};
 use super::subarray::SubarrayDemand;
 
 /// Replication factors, one per layer (convs then FCs), aligned with
@@ -148,11 +149,22 @@ pub fn layer_tiles(
     r: usize,
     arch: &ArchConfig,
 ) -> (usize, u64) {
-    let d = SubarrayDemand::of(layer, arch);
+    layer_tiles_with(layer, r, arch, MappingKind::Im2col)
+}
+
+/// [`layer_tiles`] under an explicit mapping backend. Only conv layers are
+/// backend-sensitive: FC layers have no spatial window to vary and dataflow
+/// stages hold no weights, so both ignore `kind`.
+pub fn layer_tiles_with(
+    layer: &crate::cnn::Layer,
+    r: usize,
+    arch: &ArchConfig,
+    kind: MappingKind,
+) -> (usize, u64) {
     if layer.is_conv() {
-        (d.tiles(r, arch), 1)
+        (pack_layer(kind, layer, arch).demand.tiles(r, arch), 1)
     } else if layer.is_fc() {
-        let t = d
+        let t = SubarrayDemand::of(layer, arch)
             .subarrays_replicated(r)
             .div_ceil(arch.fc_reload_rounds as usize)
             .div_ceil(arch.subarrays_per_tile())
@@ -173,11 +185,38 @@ pub fn plan_tiles(net: &Network, arch: &ArchConfig, factors: &[usize]) -> usize 
         .sum()
 }
 
+/// [`plan_tiles`] under a per-layer mapping selection.
+pub fn plan_tiles_with(
+    net: &Network,
+    arch: &ArchConfig,
+    factors: &[usize],
+    selection: &MappingSelection,
+) -> usize {
+    assert_eq!(factors.len(), net.len());
+    assert_eq!(selection.len(), net.len());
+    net.layers()
+        .iter()
+        .enumerate()
+        .zip(factors)
+        .map(|((i, l), &r)| layer_tiles_with(l, r, arch, selection.kind(i)).0)
+        .sum()
+}
+
 /// Validate a plan: arity, positivity, and the 320-tile constraint.
 pub fn validate_plan(
     net: &Network,
     arch: &ArchConfig,
     plan: &ReplicationPlan,
+) -> Result<usize, String> {
+    validate_plan_with(net, arch, plan, &MappingSelection::im2col(net.len()))
+}
+
+/// [`validate_plan`] under a per-layer mapping selection.
+pub fn validate_plan_with(
+    net: &Network,
+    arch: &ArchConfig,
+    plan: &ReplicationPlan,
+    selection: &MappingSelection,
 ) -> Result<usize, String> {
     if plan.len() != net.len() {
         return Err(format!(
@@ -186,10 +225,17 @@ pub fn validate_plan(
             net.len()
         ));
     }
+    if selection.len() != net.len() {
+        return Err(format!(
+            "mapping selection arity {} != network {} layers",
+            selection.len(),
+            net.len()
+        ));
+    }
     if plan.factors.iter().any(|&f| f == 0) {
         return Err("replication factors must be >= 1".into());
     }
-    let tiles = plan_tiles(net, arch, &plan.factors);
+    let tiles = plan_tiles_with(net, arch, &plan.factors, selection);
     if tiles > arch.total_tiles() {
         return Err(format!(
             "plan needs {tiles} tiles > budget {}",
@@ -277,6 +323,36 @@ mod tests {
         let tiles = validate_plan(&net, &arch, &plan).unwrap();
         assert!(tiles <= 320, "{tiles}");
         assert!(plan.factors.iter().all(|&f| f.is_power_of_two()));
+    }
+
+    #[test]
+    fn with_variants_default_to_seed() {
+        let arch = ArchConfig::paper_node();
+        let net = vgg::build(VggVariant::E);
+        let plan = ReplicationPlan::fig7(VggVariant::E);
+        let sel = MappingSelection::im2col(net.len());
+        assert_eq!(
+            plan_tiles_with(&net, &arch, &plan.factors, &sel),
+            plan_tiles(&net, &arch, &plan.factors)
+        );
+        assert_eq!(
+            validate_plan_with(&net, &arch, &plan, &sel).unwrap(),
+            validate_plan(&net, &arch, &plan).unwrap()
+        );
+    }
+
+    #[test]
+    fn vwsdk_fig7_plans_still_fit_320_tiles() {
+        // The enlarged stem windows grow conv1's per-copy footprint; the
+        // whole Fig. 7 plan must still fit the node under VW-SDK.
+        let arch = ArchConfig::paper_node();
+        for v in VggVariant::ALL {
+            let net = vgg::build(v);
+            let sel = MappingSelection::uniform(MappingKind::VwSdk, net.len());
+            let tiles = validate_plan_with(&net, &arch, &ReplicationPlan::fig7(v), &sel)
+                .unwrap_or_else(|e| panic!("{}: {e}", v.name()));
+            assert!(tiles <= 320, "{}: {tiles}", v.name());
+        }
     }
 
     #[test]

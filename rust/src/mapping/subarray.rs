@@ -4,6 +4,11 @@
 //! each 16-bit weight occupies 8 x 2-bit cells across 8 adjacent bit lines,
 //! so the physical column demand is `N * 8`. The matrix tiles over 128x128
 //! subarrays: `ceil(K/128)` row blocks x `ceil(N*8/128)` column blocks.
+//!
+//! [`SubarrayDemand::of`] is the *seed* (one-window im2col) packing rule;
+//! it is also exposed behind the mapping-backend trait as
+//! [`super::backend::Im2col`], the golden-pinned reference that alternative
+//! packings ([`super::backend::VwSdk`]) are measured against.
 
 use crate::cnn::Layer;
 use crate::config::ArchConfig;

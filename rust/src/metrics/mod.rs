@@ -8,7 +8,7 @@ pub use headline::{scoreboard, HeadlineMetric, Scoreboard};
 
 use crate::cnn::VggVariant;
 use crate::config::{ArchConfig, NocKind, Scenario};
-use crate::mapping::ReplicationPlan;
+use crate::mapping::{MappingMode, MappingSelection, ReplicationPlan};
 use crate::planner::{evaluate_candidates, CostModel, PlanCandidate, Planner, PlannerConfig};
 use crate::sim::{evaluate, PerfReport};
 use crate::sweep::SweepRunner;
@@ -151,8 +151,9 @@ impl Grid {
 /// Searched-planner comparison: for each workload, the no-replication
 /// baseline, the paper's hand-tuned Fig. 7 plan (VGGs only — branching
 /// workloads have no hand plan and show `-`), and the searched plan under
-/// the same tile budget — modeled and engine-measured steady-state
-/// intervals side by side. The table behind `smart-pim plan --compare` and
+/// the same tile budget and mapping mode — modeled and engine-measured
+/// steady-state intervals side by side, plus the mapping selection the
+/// search settled on. The table behind `smart-pim plan --compare` and
 /// `report-all`. Workloads are independent, so the whole comparison
 /// (search + engine replays) fans out across the sweep runner, one point
 /// per workload.
@@ -161,6 +162,7 @@ pub fn planner_table(
     nets: &[crate::cnn::Network],
     tile_budget: usize,
     batch_depth: u64,
+    mapping: MappingMode,
     runner: &SweepRunner,
 ) -> Result<Table, String> {
     struct RowData {
@@ -173,7 +175,8 @@ pub fn planner_table(
     let rows: Vec<Result<RowData, String>> = runner.run(nets, |_, net| {
         let cm = CostModel::new(net, arch);
         let none = cm.assess(&ReplicationPlan::none(net))?;
-        // Only the VGGs carry a hand-tuned Fig. 7 plan to compare against.
+        // Only the VGGs carry a hand-tuned Fig. 7 plan to compare against
+        // (always priced under the seed im2col mapping, as published).
         let fig7_plan = net.name.parse::<VggVariant>().ok().map(ReplicationPlan::fig7);
         let fig7 = match &fig7_plan {
             Some(p) => Some(cm.assess(p)?),
@@ -185,6 +188,7 @@ pub fn planner_table(
             PlannerConfig {
                 tile_budget,
                 batch_depth,
+                mapping,
                 ..PlannerConfig::default()
             },
         )
@@ -195,6 +199,7 @@ pub fn planner_table(
         if let (Some(p), Some(a)) = (fig7_plan, fig7.clone()) {
             cands.push(PlanCandidate {
                 plan: p,
+                mapping: MappingSelection::im2col(net.len()),
                 assessment: a,
                 measured_interval: None,
             });
@@ -221,7 +226,8 @@ pub fn planner_table(
     let mut t = Table::new(
         format!(
             "searched vs Fig. 7 vs no replication — interval in logical \
-             cycles (budget {tile_budget} tiles, batch depth {batch_depth})"
+             cycles (budget {tile_budget} tiles, batch depth {batch_depth}, \
+             mapping {mapping})"
         ),
         &[
             "network",
@@ -230,6 +236,7 @@ pub fn planner_table(
             "fig7 engine",
             "searched model (tiles)",
             "searched engine",
+            "mapping",
             "speedup vs fig7|none",
         ],
     );
@@ -256,6 +263,7 @@ pub fn planner_table(
                 r.best.assessment.interval, r.best.assessment.tiles
             ),
             fmt_measured(r.best.measured_interval),
+            r.best.mapping.summary(),
             fnum(baseline as f64 / r.best.assessment.interval as f64, 2),
         ]);
     }
@@ -393,6 +401,7 @@ mod tests {
             &[vgg::build(VggVariant::A)],
             320,
             8,
+            MappingMode::Im2col,
             &SweepRunner::with_threads(2),
         )
         .unwrap();
@@ -400,6 +409,7 @@ mod tests {
         let out = t.render();
         assert!(out.contains("vggA"), "{out}");
         assert!(out.contains("searched"), "{out}");
+        assert!(out.contains("im2col"), "{out}");
     }
 
     #[test]
@@ -412,6 +422,7 @@ mod tests {
             &[crate::cnn::workload("resnet18").unwrap()],
             320,
             8,
+            MappingMode::Auto,
             &SweepRunner::with_threads(2),
         )
         .unwrap();

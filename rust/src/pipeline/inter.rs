@@ -79,6 +79,21 @@ pub fn values_wait(consumer_ifm_w: usize, consumer_ksize: usize, producer_kernel
 /// predecessor and can only emit a pixel once **every** input has covered
 /// it, so in the engine it waits on the slowest predecessor.
 pub fn demand(producer: &Layer, consumer: &Layer) -> InputDemand {
+    let k = consumer.ksize();
+    demand_windowed(producer, consumer, (k, k))
+}
+
+/// [`demand`] for a consumer whose mapping consumes a `(wh, ww)` IFM patch
+/// per logical cycle (VW-SDK parallel windows; `(l, l)` reproduces the seed
+/// formula exactly). Only the conv head changes — the first emission needs
+/// `w*(wh-1) + ww` producer pixels instead of `w*(l-1) + l`; the slope is
+/// an amortized per-output-pixel quantity and stays `s^2` (x4 through a
+/// pool). Non-conv consumers have no spatial window and ignore `window`.
+pub fn demand_windowed(
+    producer: &Layer,
+    consumer: &Layer,
+    window: (usize, usize),
+) -> InputDemand {
     match consumer.kind {
         // FC consumes the whole IFM; the global pool likewise reduces over
         // every pixel before it can emit its single output.
@@ -106,8 +121,9 @@ pub fn demand(producer: &Layer, consumer: &Layer) -> InputDemand {
                 }
             }
         }
-        LayerKind::Conv { ksize, stride, .. } => {
-            let base = cycles_wait(consumer.in_w, ksize);
+        LayerKind::Conv { stride, .. } => {
+            let (wh, ww) = window;
+            let base = (consumer.in_w * (wh - 1) + ww) as u64;
             // A stride-s conv advances its window s rows/cols per output
             // pixel, consuming ~s^2 IFM pixels per output (the row-major
             // linear envelope, exactly like the pool rule's factor 4). The
@@ -199,6 +215,20 @@ mod tests {
         let c2 = Layer::add("sum", (56, 56), 64);
         let d2 = demand(&pp, &c2);
         assert_eq!((d2.head, d2.slope), (4 + 112, 4));
+    }
+
+    #[test]
+    fn windowed_demand_at_kernel_size_is_seed_demand() {
+        let p = Layer::conv("p", (224, 224), 3, 64, 3, true);
+        let c = Layer::conv("c", (112, 112), 64, 128, 3, true);
+        assert_eq!(demand_windowed(&p, &c, (3, 3)), demand(&p, &c));
+        // A (2,8) parallel window (4x10 patch) enlarges only the head.
+        let d = demand_windowed(&p, &c, (4, 10));
+        assert_eq!(d.head, 4 * (112 * 3 + 10) as u64 + 224);
+        assert_eq!(d.slope, 4);
+        // Non-conv consumers ignore the window.
+        let fc = Layer::fc("fc", 25088, 4096);
+        assert_eq!(demand_windowed(&p, &fc, (9, 9)), demand(&p, &fc));
     }
 
     #[test]

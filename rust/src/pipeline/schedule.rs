@@ -13,7 +13,7 @@ use crate::cnn::{LayerKind, Network};
 use crate::config::ArchConfig;
 use crate::mapping::NetworkMapping;
 
-use super::inter::{demand, InputDemand};
+use super::inter::{demand_windowed, InputDemand};
 use super::intra;
 
 /// Everything the engine needs to simulate one layer.
@@ -25,9 +25,9 @@ pub struct StagePlan {
     /// positions. FC: its reload rounds (weight-serial crossbar loads).
     /// Merge: its OFM pixel positions. Global pool: one.
     pub p_total: u64,
-    /// Peak emission rate in units per logical cycle (the replication
-    /// factor; FC emits one unit per cycle; merges pass through at the
-    /// slowest input rate).
+    /// Peak emission rate in units per logical cycle (replication factor x
+    /// the mapping's parallel windows — `r` under im2col; FC emits one unit
+    /// per cycle; merges pass through at the slowest input rate).
     pub rate: u64,
     /// Intra-layer pipeline depth (Sec. IV-A) in logical cycles.
     pub depth: u64,
@@ -45,9 +45,12 @@ pub fn build_plans(net: &Network, mapping: &NetworkMapping, arch: &ArchConfig) -
         let lm = &mapping.layers[i];
         let preds: Vec<usize> = net.preds(i).to_vec();
         let (p_total, rate, depth) = match layer.kind {
+            // A VW-SDK-mapped conv emits `parallel_windows` OFM positions
+            // per copy per cycle; im2col packings have parallel_windows = 1,
+            // reducing to the seed's rate = r.
             LayerKind::Conv { .. } => (
                 layer.out_pixels(),
-                lm.replication as u64,
+                lm.replication as u64 * lm.parallel_windows,
                 intra::depth_of(lm, layer.has_pool()),
             ),
             LayerKind::Fc { .. } => (
@@ -73,8 +76,13 @@ pub fn build_plans(net: &Network, mapping: &NetworkMapping, arch: &ArchConfig) -
             // The global pool reduces the whole IFM into one emission.
             LayerKind::GlobalAvgPool => (1, 1, intra::DATAFLOW_DEPTH),
         };
-        let demands: Vec<InputDemand> =
-            preds.iter().map(|&p| demand(&layers[p], layer)).collect();
+        // Each edge's demand reflects the *consumer's* packing window:
+        // lm.window is (l, l) under im2col (the seed formula) and the
+        // enlarged (wh, ww) patch under VW-SDK.
+        let demands: Vec<InputDemand> = preds
+            .iter()
+            .map(|&p| demand_windowed(&layers[p], layer, lm.window))
+            .collect();
         plans.push(StagePlan {
             name: layer.name.clone(),
             p_total,
@@ -143,6 +151,23 @@ mod tests {
         // deep 512-channel convs are multi-tile, no pool -> 26.
         let c13 = &p[12];
         assert_eq!(c13.depth, 26, "{}", c13.name);
+    }
+
+    #[test]
+    fn vwsdk_mapping_scales_conv_rate() {
+        use crate::mapping::{MappingKind, MappingSelection};
+        let arch = ArchConfig::paper_node();
+        let net = vgg::build(VggVariant::A);
+        let plan = ReplicationPlan::none(&net);
+        let sel = MappingSelection::uniform(MappingKind::VwSdk, net.len());
+        let m = NetworkMapping::build_with(&net, &arch, &plan, &sel).unwrap();
+        let p = build_plans(&net, &m, &arch);
+        // Stem: (2,8) window -> 16 OFM positions/cycle from one copy.
+        assert_eq!(p[0].rate, 16);
+        assert_eq!(p[0].p_total, 224 * 224);
+        // Deep convs fall back to (1,1): the interval now binds on conv2,
+        // 4x better than the seed's unreplicated 50176.
+        assert_eq!(max_occupancy(&p), 12544);
     }
 
     #[test]

@@ -20,7 +20,9 @@
 use crate::cnn::Network;
 use crate::config::ArchConfig;
 use crate::coordinator::PipelineShape;
-use crate::mapping::{plan_tiles, NetworkMapping, ReplicationPlan};
+use crate::mapping::{
+    plan_tiles, plan_tiles_with, MappingSelection, NetworkMapping, ReplicationPlan,
+};
 use crate::pipeline::{build_plans, max_occupancy};
 
 /// Everything the search needs to know about one candidate plan.
@@ -67,7 +69,18 @@ impl<'a> CostModel<'a> {
     /// over the architecture's physical tile count) — the search only calls
     /// this for plans it already knows fit its budget.
     pub fn assess(&self, plan: &ReplicationPlan) -> Result<PlanAssessment, String> {
-        let mapping = NetworkMapping::build(self.net, self.arch, plan)?;
+        self.assess_with(plan, &MappingSelection::im2col(self.net.len()))
+    }
+
+    /// [`CostModel::assess`] under a per-layer mapping selection (the joint
+    /// mapping x replication search's pricing path; all-im2col is
+    /// bit-identical to `assess`).
+    pub fn assess_with(
+        &self,
+        plan: &ReplicationPlan,
+        selection: &MappingSelection,
+    ) -> Result<PlanAssessment, String> {
+        let mapping = NetworkMapping::build_with(self.net, self.arch, plan, selection)?;
         let plans = build_plans(self.net, &mapping, self.arch);
         let occupancy: Vec<u64> = plans
             .iter()
@@ -90,6 +103,11 @@ impl<'a> CostModel<'a> {
     /// cheap budget pre-check).
     pub fn tiles_of(&self, factors: &[usize]) -> usize {
         plan_tiles(self.net, self.arch, factors)
+    }
+
+    /// [`CostModel::tiles_of`] under a per-layer mapping selection.
+    pub fn tiles_of_with(&self, factors: &[usize], selection: &MappingSelection) -> usize {
+        plan_tiles_with(self.net, self.arch, factors, selection)
     }
 
     /// Allocated-but-empty subarray fraction. Derived from the resolved
@@ -154,6 +172,34 @@ mod tests {
         let a = cm.assess(&ReplicationPlan::none(&net)).unwrap();
         assert_eq!(a.interval, 50176);
         assert_eq!(a.occupancy[0], 50176);
+    }
+
+    #[test]
+    fn assess_with_im2col_is_assess() {
+        let arch = ArchConfig::paper_node();
+        let net = vgg::build(VggVariant::E);
+        let cm = CostModel::new(&net, &arch);
+        let plan = ReplicationPlan::fig7(VggVariant::E);
+        let a = cm.assess(&plan).unwrap();
+        let b = cm
+            .assess_with(&plan, &MappingSelection::im2col(net.len()))
+            .unwrap();
+        assert_eq!(a.tiles, b.tiles);
+        assert_eq!(a.interval, b.interval);
+        assert_eq!(a.fill_cycles, b.fill_cycles);
+        assert_eq!(a.occupancy, b.occupancy);
+    }
+
+    #[test]
+    fn assess_with_vwsdk_cuts_unreplicated_interval() {
+        use crate::mapping::MappingKind;
+        let arch = ArchConfig::paper_node();
+        let net = vgg::build(VggVariant::A);
+        let cm = CostModel::new(&net, &arch);
+        let sel = MappingSelection::uniform(MappingKind::VwSdk, net.len());
+        let a = cm.assess_with(&ReplicationPlan::none(&net), &sel).unwrap();
+        // The (2,8) stem window emits 16 pixels/cycle: conv2 now binds.
+        assert_eq!(a.interval, 12544);
     }
 
     #[test]

@@ -4,12 +4,17 @@
 //! The paper derives its per-VGG replication factors by hand for exactly
 //! one node (320 tiles). This module derives them: a greedy
 //! bottleneck-lifting search with a small beam ([`search::Planner`]) walks
-//! power-of-two replication lifts, priced by the same occupancy math the
-//! simulator uses ([`cost::CostModel`], batch-depth aware), and returns
-//! both a single best plan and the Pareto frontier over throughput vs
-//! tiles vs padding waste ([`pareto::pareto_frontier`]). Candidates are
-//! confirmed against the cycle-accurate engine via the parallel sweep
-//! runner ([`pareto::evaluate_candidates`]).
+//! power-of-two replication lifts — and, under
+//! [`MappingMode::Auto`](crate::mapping::MappingMode), per-layer
+//! im2col → VW-SDK backend switches, making the search joint over mapping x
+//! replication — priced by the same occupancy math the simulator uses
+//! ([`cost::CostModel`], batch-depth aware), and returns both a single best
+//! plan and the Pareto frontier over throughput vs tiles vs padding waste
+//! ([`pareto::pareto_frontier`]; candidates are deduplicated over
+//! factors *and* mapping selection). Candidates are confirmed against the
+//! cycle-accurate engine via the parallel sweep runner
+//! ([`pareto::evaluate_candidates`], which replays each candidate under its
+//! own mapping selection).
 //!
 //! Entry points:
 //! - [`ReplicationPlan::searched`](crate::mapping::ReplicationPlan::searched)
@@ -45,4 +50,6 @@ pub mod search;
 
 pub use cost::{CostModel, PlanAssessment};
 pub use pareto::{evaluate_candidates, pareto_frontier};
-pub use search::{plan_for, PlanCandidate, Planner, PlannerConfig, PlanSearchResult};
+pub use search::{
+    plan_for, plan_for_mapped, PlanCandidate, Planner, PlannerConfig, PlanSearchResult,
+};

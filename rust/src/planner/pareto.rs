@@ -37,7 +37,9 @@ pub fn pareto_frontier(mut cands: Vec<PlanCandidate>) -> Vec<PlanCandidate> {
                     || o.assessment.tiles < c.assessment.tiles
                     || o.assessment.padding_waste < c.assessment.padding_waste)
         });
-        let duplicate = out.iter().any(|o| o.plan == c.plan);
+        let duplicate = out
+            .iter()
+            .any(|o| o.plan == c.plan && o.mapping == c.mapping);
         if !dominated && !duplicate {
             out.push(c);
         }
@@ -59,7 +61,9 @@ pub fn evaluate_candidates(
     let images = images.max(2); // one image has no steady interval
     let plans: Vec<&PlanCandidate> = cands.iter().collect();
     let measured: Vec<Option<f64>> = runner.run(&plans, |_, c| {
-        let mapping = NetworkMapping::build(net, arch, &c.plan).ok()?;
+        // Replay under the candidate's own mapping selection — a VW-SDK
+        // plan measured through the im2col mapping would be a lie.
+        let mapping = NetworkMapping::build_with(net, arch, &c.plan, &c.mapping).ok()?;
         let stage_plans = build_plans(net, &mapping, arch);
         let adj = NocAdjust::identity(stage_plans.len());
         let sim = Engine::new(&stage_plans, &adj, true, images).run();
@@ -81,6 +85,7 @@ mod tests {
         let assessment = CostModel::new(net, arch).assess(&plan).unwrap();
         PlanCandidate {
             plan,
+            mapping: crate::mapping::MappingSelection::im2col(net.len()),
             assessment,
             measured_interval: None,
         }
@@ -91,6 +96,7 @@ mod tests {
             plan: ReplicationPlan {
                 factors: vec![tag; 3],
             },
+            mapping: crate::mapping::MappingSelection::im2col(3),
             assessment: crate::planner::cost::PlanAssessment {
                 tiles,
                 interval,

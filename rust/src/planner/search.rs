@@ -1,25 +1,34 @@
 //! The replication-plan search: greedy bottleneck-lifting generalized to a
-//! small beam.
+//! small beam, optionally joint over the mapping-backend axis.
 //!
 //! State = a vector of per-layer replication factors (powers of two, the
-//! paper's replication granularity). From the all-ones plan, each step
-//! doubles the factor of a conv layer, subject to the tile budget and the
-//! per-layer factor cap. At batch depth >= 2 only layers whose occupancy
-//! *is* the current bottleneck are lifted — lifting any other layer cannot
-//! reduce the modeled interval, which dominates the cost; at batch depth 1
-//! the objective is the pipeline fill, which any conv lift can reduce, so
-//! every conv layer is a candidate. When several candidates tie the order
-//! of lifting matters once the budget gets tight, so instead of committing
-//! to one order (the pure greedy) the search keeps the `beam_width` best
-//! states per generation, scored by batch-aware modeled cost then tiles.
-//! Every state ever visited feeds the Pareto frontier (throughput vs tiles
-//! vs padding waste).
+//! paper's replication granularity) plus, under [`MappingMode::Auto`], a
+//! vector of per-layer mapping backends. From the all-ones plan, each step
+//! either doubles the factor of a conv layer or (auto mode) switches a conv
+//! layer from im2col to the VW-SDK packing, subject to the tile budget and
+//! the per-layer factor cap. At batch depth >= 2 only layers whose
+//! occupancy *is* the current bottleneck are expanded — changing any other
+//! layer cannot reduce the modeled interval, which dominates the cost; at
+//! batch depth 1 the objective is the pipeline fill, which any conv move
+//! can reduce, so every conv layer is a candidate. When several candidates
+//! tie the order of expansion matters once the budget gets tight, so
+//! instead of committing to one order (the pure greedy) the search keeps
+//! the `beam_width` best states per generation, scored by batch-aware
+//! modeled cost then tiles. Every state ever visited feeds the Pareto
+//! frontier (throughput vs tiles vs padding waste).
+//!
+//! Because auto mode expands a strict superset of the im2col moves from the
+//! same base state, its best candidate pool always contains the pure-im2col
+//! search's trajectory prefix; on the paper node the column-conservation
+//! law (`mapping::backend` module docs) makes the two converge to the same
+//! interval at the 320-tile budget — pinned by
+//! `rust/tests/golden_mapping.rs`.
 
 use std::collections::HashSet;
 
 use crate::cnn::Network;
 use crate::config::ArchConfig;
-use crate::mapping::ReplicationPlan;
+use crate::mapping::{MappingKind, MappingMode, MappingSelection, ReplicationPlan};
 
 use super::cost::{CostModel, PlanAssessment};
 
@@ -40,6 +49,9 @@ pub struct PlannerConfig {
     pub max_factor: usize,
     /// States kept per search generation (1 = pure greedy).
     pub beam_width: usize,
+    /// Mapping-backend axis: fixed im2col (the default, bit-identical to
+    /// the pre-backend search), fixed VW-SDK, or joint per-layer search.
+    pub mapping: MappingMode,
 }
 
 impl Default for PlannerConfig {
@@ -49,6 +61,7 @@ impl Default for PlannerConfig {
             batch_depth: 8,
             max_factor: 1024,
             beam_width: 4,
+            mapping: MappingMode::Im2col,
         }
     }
 }
@@ -58,6 +71,8 @@ impl Default for PlannerConfig {
 pub struct PlanCandidate {
     /// The per-layer replication factors.
     pub plan: ReplicationPlan,
+    /// The per-layer mapping backends the plan was priced under.
+    pub mapping: MappingSelection,
     /// Modeled price of the plan (tiles, interval, fill, waste).
     pub assessment: PlanAssessment,
     /// Steady-state interval measured by the event-driven engine
@@ -117,29 +132,53 @@ impl<'a> Planner<'a> {
         let budget = self.budget();
         let b = self.cfg.batch_depth.max(1);
 
+        // Base mapping per mode: fixed modes pin every conv layer to that
+        // backend (non-conv layers are backend-blind and stay im2col, the
+        // same normalization `mapping::layout` applies); auto starts from
+        // the seed im2col everywhere and lets switch moves diverge.
+        let base_kind = match self.cfg.mapping {
+            MappingMode::VwSdk => MappingKind::VwSdk,
+            MappingMode::Im2col | MappingMode::Auto => MappingKind::Im2col,
+        };
+        let base_kinds: Vec<MappingKind> = self
+            .net
+            .layers()
+            .iter()
+            .map(|l| if l.is_conv() { base_kind } else { MappingKind::Im2col })
+            .collect();
+
         let base_factors = vec![1usize; self.net.len()];
-        let base_tiles = cm.tiles_of(&base_factors);
+        let base_tiles = cm.tiles_of_with(
+            &base_factors,
+            &MappingSelection {
+                kinds: base_kinds.clone(),
+            },
+        );
         if base_tiles > budget {
             return Err(format!(
                 "{}: needs {base_tiles} tiles unreplicated > budget {budget}",
                 self.net.name
             ));
         }
-        let assess = |factors: &[usize]| -> Result<PlanCandidate, String> {
+        let assess = |factors: &[usize], kinds: &[MappingKind]| -> Result<PlanCandidate, String> {
             let plan = ReplicationPlan {
                 factors: factors.to_vec(),
             };
-            let assessment = cm.assess(&plan)?;
+            let mapping = MappingSelection {
+                kinds: kinds.to_vec(),
+            };
+            let assessment = cm.assess_with(&plan, &mapping)?;
             Ok(PlanCandidate {
                 plan,
+                mapping,
                 assessment,
                 measured_interval: None,
             })
         };
 
-        let mut seen: HashSet<Vec<usize>> = HashSet::new();
-        seen.insert(base_factors.clone());
-        let base = assess(&base_factors)?;
+        let mut seen: HashSet<(Vec<usize>, Vec<MappingKind>)> = HashSet::new();
+        seen.insert((base_factors.clone(), base_kinds.clone()));
+        let base = assess(&base_factors, &base_kinds)?;
         let mut all: Vec<PlanCandidate> = vec![base.clone()];
         let mut beam: Vec<PlanCandidate> = vec![base];
 
@@ -161,17 +200,40 @@ impl<'a> Planner<'a> {
                     // replicating them buys nothing, only tiles.
                     if !layer.is_conv()
                         || (!lift_all && state.assessment.occupancy[i] != bottleneck)
-                        || r * 2 > self.cfg.max_factor
                     {
                         continue;
                     }
-                    let mut factors = state.plan.factors.clone();
-                    factors[i] = r * 2;
-                    if seen.contains(&factors) || cm.tiles_of(&factors) > budget {
-                        continue;
+                    let mut moves: Vec<(Vec<usize>, Vec<MappingKind>)> = Vec::new();
+                    if r * 2 <= self.cfg.max_factor {
+                        let mut factors = state.plan.factors.clone();
+                        factors[i] = r * 2;
+                        moves.push((factors, state.mapping.kinds.clone()));
                     }
-                    seen.insert(factors.clone());
-                    children.push(assess(&factors)?);
+                    // Auto: switching a conv to the VW-SDK packing is a
+                    // move on the mapping axis (rate x= parallel windows at
+                    // unchanged replication).
+                    if self.cfg.mapping == MappingMode::Auto
+                        && state.mapping.kind(i) == MappingKind::Im2col
+                    {
+                        let mut kinds = state.mapping.kinds.clone();
+                        kinds[i] = MappingKind::VwSdk;
+                        moves.push((state.plan.factors.clone(), kinds));
+                    }
+                    for (factors, kinds) in moves {
+                        let key = (factors, kinds);
+                        if seen.contains(&key)
+                            || cm.tiles_of_with(
+                                &key.0,
+                                &MappingSelection {
+                                    kinds: key.1.clone(),
+                                },
+                            ) > budget
+                        {
+                            continue;
+                        }
+                        children.push(assess(&key.0, &key.1)?);
+                        seen.insert(key);
+                    }
                 }
             }
             if children.is_empty() {
@@ -220,6 +282,26 @@ pub fn plan_for(
         arch,
         PlannerConfig {
             tile_budget,
+            ..PlannerConfig::default()
+        },
+    )
+    .search()
+}
+
+/// [`plan_for`] under an explicit mapping mode (`Im2col` reproduces
+/// `plan_for` exactly; `Auto` runs the joint mapping x replication search).
+pub fn plan_for_mapped(
+    net: &Network,
+    arch: &ArchConfig,
+    tile_budget: usize,
+    mapping: MappingMode,
+) -> Result<PlanSearchResult, String> {
+    Planner::new(
+        net,
+        arch,
+        PlannerConfig {
+            tile_budget,
+            mapping,
             ..PlannerConfig::default()
         },
     )
@@ -308,6 +390,40 @@ mod tests {
             throughput.best.assessment.interval <= latency.best.assessment.interval,
             "throughput plan must win (or tie) on interval"
         );
+    }
+
+    #[test]
+    fn joint_search_never_loses_to_im2col_search() {
+        // Auto expands a superset of the im2col moves; on the paper node
+        // the conservation law makes them converge (golden_mapping.rs pins
+        // equality across all workloads — this is the cheap one-variant
+        // smoke).
+        let arch = ArchConfig::paper_node();
+        let net = vgg::build(VggVariant::A);
+        let im2col = plan_for(&net, &arch, 320).unwrap();
+        let joint = plan_for_mapped(&net, &arch, 320, MappingMode::Auto).unwrap();
+        assert!(
+            joint.best.assessment.interval <= im2col.best.assessment.interval,
+            "joint {} > im2col {}",
+            joint.best.assessment.interval,
+            im2col.best.assessment.interval
+        );
+        assert_eq!(im2col.best.mapping.summary(), "im2col");
+    }
+
+    #[test]
+    fn vwsdk_search_validates_under_its_own_selection() {
+        use crate::mapping::validate_plan_with;
+        let arch = ArchConfig::paper_node();
+        let net = vgg::build(VggVariant::A);
+        let r = plan_for_mapped(&net, &arch, 320, MappingMode::VwSdk).unwrap();
+        validate_plan_with(&net, &arch, &r.best.plan, &r.best.mapping).unwrap();
+        // Every conv entry is VW-SDK in fixed-vwsdk mode.
+        for (i, l) in net.layers().iter().enumerate() {
+            if l.is_conv() {
+                assert_eq!(r.best.mapping.kind(i), MappingKind::VwSdk);
+            }
+        }
     }
 
     // Determinism is covered by golden_planner.rs::prop_search_is_deterministic.

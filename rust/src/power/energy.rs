@@ -2,10 +2,11 @@
 //! energy of each pipeline stage, as the paper does (Sec. III / VI-D).
 //!
 //! Model: a layer's replicas collectively process its `out_pixels` positions,
-//! one position per core-group logical cycle, so the layer's crossbar work is
-//! `out_pixels x cores_per_copy` core-cycles *independent of replication* —
-//! which is exactly why the paper observes that replication and batch
-//! pipelining barely move TOPS/W.
+//! one position per core-group logical cycle (or `parallel_windows` positions
+//! per cycle under a VW-SDK packing), so the layer's crossbar work is
+//! `ceil(out_pixels / parallel_windows) x cores_per_copy` core-cycles
+//! *independent of replication* — which is exactly why the paper observes
+//! that replication and batch pipelining barely move TOPS/W.
 
 use crate::cnn::Network;
 use crate::config::ArchConfig;
@@ -66,7 +67,9 @@ impl<'a> EnergyModel<'a> {
             .demand
             .subarrays()
             .div_ceil(self.arch.subarrays_per_core) as u64;
-        l.out_pixels() * cores_per_copy * lm.reload_rounds
+        // A VW-SDK packing retires `parallel_windows` output positions per
+        // logical cycle from one (larger) copy; im2col has pw = 1.
+        l.out_pixels().div_ceil(lm.parallel_windows) * cores_per_copy * lm.reload_rounds
     }
 
     /// Tile-peripheral cycles of one layer for one image: every tile the
@@ -74,7 +77,8 @@ impl<'a> EnergyModel<'a> {
     /// this is its single buffer tile over its full streaming window — the
     /// "buffer energy" a weight-less merge/pool stage costs.
     fn layer_tile_cycles(&self, l: &crate::cnn::Layer, lm: &crate::mapping::LayerMapping) -> u64 {
-        let occupancy = l.out_pixels().div_ceil(lm.replication as u64) * lm.reload_rounds;
+        let rate = lm.replication as u64 * lm.parallel_windows;
+        let occupancy = l.out_pixels().div_ceil(rate) * lm.reload_rounds;
         occupancy * lm.tile_ids.len() as u64
     }
 
@@ -340,6 +344,31 @@ mod tests {
         let em = EnergyModel::new(&arch);
         let tpw = em.tops_per_watt(&net, &EnergyBreakdown::zero());
         assert_eq!(tpw, 0.0, "zero energy must not divide to inf/NaN");
+    }
+
+    #[test]
+    fn vwsdk_mapping_never_costs_more_core_cycles() {
+        // VW-SDK retires `parallel_windows` positions per cycle from one
+        // (larger) copy; its denser core packing can only reduce the
+        // crossbar cycle count (strictly on the VGG stem, tie elsewhere).
+        use crate::mapping::{MappingKind, MappingSelection};
+        let arch = ArchConfig::paper_node();
+        let net = vgg::build(VggVariant::A);
+        let plan = ReplicationPlan::none(&net);
+        let m0 = NetworkMapping::build(&net, &arch, &plan).unwrap();
+        let m1 = NetworkMapping::build_with(
+            &net,
+            &arch,
+            &plan,
+            &MappingSelection::uniform(MappingKind::VwSdk, net.len()),
+        )
+        .unwrap();
+        let em = EnergyModel::new(&arch);
+        assert!(
+            em.core_cycles(&net, &m1) < em.core_cycles(&net, &m0),
+            "stem pw=16 must cut VGG-A crossbar cycles"
+        );
+        assert!(em.tile_cycles(&net, &m1) <= em.tile_cycles(&net, &m0));
     }
 
     #[test]

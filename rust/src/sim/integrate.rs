@@ -5,7 +5,7 @@
 
 use crate::cnn::{vgg, Network, VggVariant};
 use crate::config::{ArchConfig, NocKind, Scenario};
-use crate::mapping::{NetworkMapping, Placement, ReplicationPlan};
+use crate::mapping::{MappingSelection, NetworkMapping, Placement, ReplicationPlan};
 use crate::noc::sim::run_flows_detailed;
 use crate::noc::Mesh;
 use crate::pipeline::{build_plans, StagePlan};
@@ -164,7 +164,30 @@ pub fn evaluate_network(
     arch: &ArchConfig,
     images: u64,
 ) -> Result<NetworkReport, String> {
-    let mapping = NetworkMapping::build(net, arch, plan)?;
+    evaluate_network_mapped(
+        net,
+        plan,
+        &MappingSelection::im2col(net.len()),
+        batch,
+        noc,
+        arch,
+        images,
+    )
+}
+
+/// [`evaluate_network`] under a per-layer mapping selection: the whole
+/// mapping -> placement -> NoC -> engine -> energy chain is driven by the
+/// selected packing (`--mapping` on the CLI).
+pub fn evaluate_network_mapped(
+    net: &Network,
+    plan: &ReplicationPlan,
+    selection: &MappingSelection,
+    batch: bool,
+    noc: NocKind,
+    arch: &ArchConfig,
+    images: u64,
+) -> Result<NetworkReport, String> {
+    let mapping = NetworkMapping::build_with(net, arch, plan, selection)?;
     let placement = Placement::snake(arch);
     let plans = build_plans(net, &mapping, arch);
     let (adjust, layer_flows) = assess_noc(noc, net, &mapping, &placement, &plans, arch);

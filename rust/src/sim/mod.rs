@@ -8,6 +8,8 @@ pub mod trace;
 pub mod traffic;
 
 pub use engine::{Engine, NocAdjust, SimResult};
-pub use integrate::{assess_noc, evaluate, evaluate_network, NetworkReport, PerfReport};
+pub use integrate::{
+    assess_noc, evaluate, evaluate_network, evaluate_network_mapped, NetworkReport, PerfReport,
+};
 pub use trace::{gantt, windows, Window};
 pub use traffic::{extract_flows, LayerFlows};

@@ -222,10 +222,11 @@ fn capacity_planner_honors_power_budget() {
 
 #[test]
 fn headline_scoreboard_passes_all_bands() {
-    // The `smart-pim reproduce` gate, as a test: all five headline
-    // metrics inside their pinned bands (metrics::headline::bands).
+    // The `smart-pim reproduce` gate, as a test: the five paper-headline
+    // metrics plus the VW-SDK search gate, all inside their pinned bands
+    // (metrics::headline::bands).
     let board = scoreboard(&ArchConfig::paper_node(), &SweepRunner::new());
-    assert_eq!(board.metrics.len(), 5);
+    assert_eq!(board.metrics.len(), 6);
     let keys: Vec<&str> = board.metrics.iter().map(|m| m.key).collect();
     assert_eq!(
         keys,
@@ -234,7 +235,8 @@ fn headline_scoreboard_passes_all_bands() {
             "best_fps",
             "best_tops_per_watt",
             "scenario_speedup",
-            "smart_speedup"
+            "smart_speedup",
+            "vwsdk_search_ratio"
         ]
     );
     for m in &board.metrics {

@@ -64,6 +64,7 @@ fn golden_engine_confirms_searched_beats_fig7() {
                 plan: ReplicationPlan::fig7(v),
                 assessment: cm.assess(&ReplicationPlan::fig7(v)).unwrap(),
                 measured_interval: None,
+                mapping: smart_pim::mapping::MappingSelection::im2col(net.len()),
             },
             plan_for(&net, &arch, PAPER_BUDGET).unwrap().best,
         ];
