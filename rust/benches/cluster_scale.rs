@@ -13,16 +13,24 @@
 //! parity at that count. Emits `BENCH_cluster_scale.json` (override with
 //! `SMART_PIM_CLUSTER_SCALE_JSON`); the run aborts if any parity pair
 //! diverges, so a committed file always certifies equivalence.
+//!
+//! A third section is the PR 8 multi-tenant study: both residency
+//! policies (reprogram-on-miss vs dedicated-partition) serving VGG-E +
+//! ResNet-18 under an anti-phase diurnal mix, with per-swap ReRAM
+//! weight-programming energy and indexed-vs-scan router parity; its rows
+//! land in the same JSON under `tenant_rows`.
 
 use std::time::Instant;
 
 use smart_pim::cluster::{
-    plan_capacity, rate_from_qps, simulate, ArrivalStream, ClusterConfig, ClusterStats,
-    NodeModel, RouteImpl, RoutePolicy,
+    plan_capacity, rate_from_qps, simulate, simulate_tenants, ArrivalStream, ClusterConfig,
+    ClusterStats, MixMode, NodeModel, Residency, RouteImpl, RoutePolicy, TenantClusterStats,
+    TenantConfig, TenantWorkload,
 };
 use smart_pim::cnn::{vgg, VggVariant};
 use smart_pim::config::ArchConfig;
-use smart_pim::mapping::ReplicationPlan;
+use smart_pim::mapping::{NetworkMapping, ReplicationPlan};
+use smart_pim::power::WriteCost;
 use smart_pim::sweep::SweepRunner;
 use smart_pim::util::bench::fmt_duration;
 use smart_pim::util::table::{fnum, Table};
@@ -208,7 +216,132 @@ fn main() {
         Err(e) => eprintln!("could not write {json_path}: {e}"),
     }
 
-    scaling_study(&model, net.name.as_str(), quick);
+    let (tenant_rows, tenant_parity_ok) = tenant_study(&arch, quick);
+    scaling_study(&model, net.name.as_str(), quick, tenant_rows, tenant_parity_ok);
+}
+
+/// Two tenant runs are interchangeable only if every observable agrees
+/// exactly, per tenant and per node.
+fn tenant_identical(a: &TenantClusterStats, b: &TenantClusterStats) -> bool {
+    a.offered == b.offered
+        && a.completed == b.completed
+        && a.rejected == b.rejected
+        && a.horizon_cycles == b.horizon_cycles
+        && a.drained_at == b.drained_at
+        && a.events_processed == b.events_processed
+        && a.peak_calendar_depth == b.peak_calendar_depth
+        && a.node_utilization == b.node_utilization
+        && a.per_node_swaps == b.per_node_swaps
+        && a.per_node_injected == b.per_node_injected
+        && a.tenants.len() == b.tenants.len()
+        && a.tenants.iter().zip(&b.tenants).all(|(x, y)| {
+            x.offered == y.offered
+                && x.completed == y.completed
+                && x.rejected == y.rejected
+                && x.swaps == y.swaps
+                && x.swap_energy_j == y.swap_energy_j
+                && x.total_latency_cycles == y.total_latency_cycles
+                && x.latency.p50() == y.latency.p50()
+                && x.latency.p99() == y.latency.p99()
+        })
+}
+
+/// PR 8 multi-tenant section: both residency policies on one fleet
+/// serving VGG-E (Fig. 7 plan) + ResNet-18 (unreplicated) under an
+/// anti-phase diurnal mix — the swap-storm benchmark, with per-swap
+/// weight-programming energy on the reprogram side — and the linear-scan
+/// router re-run at the same seed for bit-exact parity. Returns JSON rows
+/// folded into `BENCH_cluster_scale.json`.
+fn tenant_study(arch: &ArchConfig, quick: bool) -> (Vec<Json>, bool) {
+    let build = |name: &str| -> TenantWorkload {
+        let net = smart_pim::cnn::workload(name).expect("known workload");
+        let plan = match net.name.parse::<VggVariant>() {
+            Ok(v) => ReplicationPlan::fig7(v),
+            Err(_) => ReplicationPlan::none(&net),
+        };
+        let model = NodeModel::from_workload(&net, arch, &plan).expect("plan maps");
+        let mapping = NetworkMapping::build(&net, arch, &plan).expect("plan maps");
+        let write = WriteCost::of_mapping(&net, &mapping, arch);
+        TenantWorkload::from_model(&net.name, 1.0, &model, write)
+    };
+    let tenants = [build("vggE"), build("resnet18")];
+    let (nodes, arrivals) = if quick { (8usize, 30_000usize) } else { (32, 200_000) };
+    let cfg_for = |residency: Residency, imp: RouteImpl| TenantConfig {
+        nodes,
+        residency,
+        route_impl: imp,
+        rate_per_cycle: 0.02,
+        mix: MixMode::Diurnal { period: 2_000_000 },
+        fixed_requests: Some(arrivals),
+        seed: 0xC105_7E4,
+        ..TenantConfig::default()
+    };
+    println!("\n== multi-tenant study: vggE + resnet18, diurnal mix, {nodes} nodes ==");
+    let mut t = Table::new(
+        "residency policies — completions, swaps, write energy, p99 (cycles)",
+        &[
+            "residency", "tenant", "completed", "rejected", "swaps", "swap J", "p99",
+            "parity",
+        ],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    let mut all_ok = true;
+    for residency in [Residency::Reprogram, Residency::Partition] {
+        let t0 = Instant::now();
+        let ix = simulate_tenants(&tenants, &cfg_for(residency, RouteImpl::Indexed))
+            .expect("tenant sim runs");
+        let wall = t0.elapsed().as_secs_f64();
+        let sc = simulate_tenants(&tenants, &cfg_for(residency, RouteImpl::LinearScan))
+            .expect("tenant sim runs");
+        let parity_ok = tenant_identical(&ix, &sc);
+        all_ok &= parity_ok;
+        for ts in &ix.tenants {
+            t.row(&[
+                residency.name().to_string(),
+                ts.name.clone(),
+                ts.completed.to_string(),
+                ts.rejected.to_string(),
+                ts.swaps.to_string(),
+                fnum(ts.swap_energy_j, 2),
+                ts.latency.p99().to_string(),
+                if parity_ok { "ok" } else { "FAIL" }.to_string(),
+            ]);
+        }
+        let per_tenant: Vec<Json> = ix
+            .tenants
+            .iter()
+            .map(|ts| {
+                Json::obj(vec![
+                    ("tenant", ts.name.as_str().into()),
+                    ("completed", ts.completed.into()),
+                    ("rejected", ts.rejected.into()),
+                    ("swaps", ts.swaps.into()),
+                    ("swap_energy_j", ts.swap_energy_j.into()),
+                    ("latency_p99_cycles", ts.latency.p99().into()),
+                ])
+            })
+            .collect();
+        rows.push(Json::obj(vec![
+            ("nodes", nodes.into()),
+            ("residency", residency.name().into()),
+            ("route", ix.route.name().into()),
+            ("mix", "diurnal".into()),
+            ("mix_period", 2_000_000u64.into()),
+            ("arrivals", arrivals.into()),
+            ("events", ix.events_processed.into()),
+            ("peak_calendar_depth", ix.peak_calendar_depth.into()),
+            ("wall_secs", wall.into()),
+            (
+                "events_per_sec",
+                (ix.events_processed as f64 / wall.max(1e-12)).into(),
+            ),
+            ("per_tenant", Json::Arr(per_tenant)),
+            ("parity_ok", parity_ok.into()),
+        ]));
+    }
+    t.print();
+    assert!(all_ok, "tenant routing impls diverged");
+    (rows, all_ok)
 }
 
 /// Two runs are interchangeable only if every observable agrees exactly —
@@ -239,7 +372,13 @@ fn identical(a: &ClusterStats, b: &ClusterStats) -> bool {
 /// a capped arrival count — then the indexed loop re-run at that capped
 /// count and compared bit-exactly, so every speedup row doubles as a
 /// parity certificate. Writes `BENCH_cluster_scale.json`.
-fn scaling_study(model: &NodeModel, workload: &str, quick: bool) {
+fn scaling_study(
+    model: &NodeModel,
+    workload: &str,
+    quick: bool,
+    tenant_rows: Vec<Json>,
+    tenant_parity_ok: bool,
+) {
     // (fleet, arrivals through the indexed loop, arrivals for the scan
     // reference — capped so the quadratic side stays affordable).
     let points: &[(usize, usize, usize)] = if quick {
@@ -359,6 +498,8 @@ fn scaling_study(model: &NodeModel, workload: &str, quick: bool) {
         ),
         ("rows", Json::Arr(rows)),
         ("all_parity_ok", all_parity_ok.into()),
+        ("tenant_rows", Json::Arr(tenant_rows)),
+        ("tenant_parity_ok", tenant_parity_ok.into()),
     ]);
     match std::fs::write(&json_path, doc.render_pretty()) {
         Ok(()) => println!("wrote {json_path}"),

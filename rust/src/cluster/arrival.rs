@@ -383,6 +383,163 @@ impl Iterator for ArrivalStream<'_> {
     }
 }
 
+/// Salt folded into the run seed for the tenant-label RNG: labels draw
+/// from their own generator, so adding or removing tenants never perturbs
+/// the arrival *timing* stream — the same seed keeps the same cycles.
+pub const LABEL_SALT: u64 = 0x7E4A_B1E5_5EED_0001;
+
+/// How arrivals are labeled with tenants.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MixMode {
+    /// Time-invariant categorical draw over the tenant weights.
+    Static,
+    /// Phase-shifted diurnal weights: tenant `i` of `T` sees its base
+    /// weight scaled by `1 + sin(2*pi*(cycle mod period)/period -
+    /// 2*pi*i/T)` — tenants peak at staggered phases (anti-phase for
+    /// two), which is what makes reprogram-on-miss swap storms
+    /// reproducible on demand.
+    Diurnal {
+        /// Cycles per full mix period.
+        period: u64,
+    },
+    /// Deterministic round-robin over tenants in arrival order (no RNG
+    /// draw) — the two-tenant worst case for residency, and the exactly
+    /// checkable golden-trace labeling.
+    Alternate,
+}
+
+impl MixMode {
+    /// Resolve a CLI mix name; `period` parameterizes the diurnal mode.
+    pub fn from_name(name: &str, period: u64) -> Result<Self, String> {
+        match name {
+            "static" => Ok(Self::Static),
+            "diurnal" => Ok(Self::Diurnal { period }),
+            "alternate" => Ok(Self::Alternate),
+            other => Err(format!(
+                "unknown tenant mix {other:?} (static | diurnal | alternate)"
+            )),
+        }
+    }
+
+    /// Mix name for reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Static => "static",
+            Self::Diurnal { .. } => "diurnal",
+            Self::Alternate => "alternate",
+        }
+    }
+}
+
+/// Seeded tenant labeler: one label per arrival, in arrival order. A pure
+/// function of `(weights, mode, seed)` — labeling replays bit-identically
+/// with the run, independently of the timing draws (see [`LABEL_SALT`]).
+#[derive(Debug)]
+pub struct TenantMix {
+    weights: Vec<f64>,
+    mode: MixMode,
+    rng: Rng,
+    count: u64,
+    /// Per-sample modulated weights (reused across draws).
+    scratch: Vec<f64>,
+}
+
+impl TenantMix {
+    /// Build a labeler over positive tenant `weights` from the *run* seed
+    /// (salted internally).
+    pub fn new(weights: Vec<f64>, mode: MixMode, seed: u64) -> Self {
+        assert!(
+            !weights.is_empty() && weights.iter().all(|&w| w > 0.0 && w.is_finite()),
+            "tenant weights must be positive and finite: {weights:?}"
+        );
+        if let MixMode::Diurnal { period } = mode {
+            assert!(period > 0, "diurnal mix needs a positive period");
+        }
+        Self {
+            weights,
+            mode,
+            rng: Rng::new(seed ^ LABEL_SALT),
+            count: 0,
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Tenants in the mix.
+    pub fn len(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// True for an empty mix (never constructible; for clippy symmetry).
+    pub fn is_empty(&self) -> bool {
+        self.weights.is_empty()
+    }
+
+    /// Label one arrival at `cycle`. Consumes exactly one uniform draw in
+    /// the categorical modes and none under [`MixMode::Alternate`].
+    pub fn sample(&mut self, cycle: u64) -> usize {
+        let t = self.weights.len();
+        let n = self.count;
+        self.count += 1;
+        if matches!(self.mode, MixMode::Alternate) {
+            return (n % t as u64) as usize;
+        }
+        self.scratch.clear();
+        match self.mode {
+            MixMode::Diurnal { period } => {
+                let frac = (cycle % period) as f64 / period as f64;
+                for (i, &w) in self.weights.iter().enumerate() {
+                    let phase = std::f64::consts::TAU * frac
+                        - std::f64::consts::TAU * i as f64 / t as f64;
+                    self.scratch.push(w * (1.0 + phase.sin()));
+                }
+                // A trough can zero every modulated weight (two tenants in
+                // exact anti-phase at sin = -1); fall back to base weights
+                // rather than divide by zero.
+                if self.scratch.iter().sum::<f64>() <= 0.0 {
+                    self.scratch.clear();
+                    self.scratch.extend_from_slice(&self.weights);
+                }
+            }
+            _ => self.scratch.extend_from_slice(&self.weights),
+        }
+        let u = self.rng.next_f64();
+        let mut x = u * self.scratch.iter().sum::<f64>();
+        for (i, &w) in self.scratch.iter().enumerate() {
+            x -= w;
+            if x < 0.0 {
+                return i;
+            }
+        }
+        t - 1
+    }
+}
+
+/// An [`ArrivalStream`] with a tenant label attached to every event:
+/// yields `(cycle, tenant)` in arrival order. This is what the
+/// multi-tenant event loop ([`crate::cluster::tenant`]) pulls from.
+#[derive(Debug)]
+pub struct LabeledArrivals<'a> {
+    stream: ArrivalStream<'a>,
+    mix: TenantMix,
+}
+
+impl<'a> LabeledArrivals<'a> {
+    /// Attach a labeler to a timing stream.
+    pub fn new(stream: ArrivalStream<'a>, mix: TenantMix) -> Self {
+        Self { stream, mix }
+    }
+}
+
+impl Iterator for LabeledArrivals<'_> {
+    type Item = (u64, usize);
+
+    fn next(&mut self) -> Option<(u64, usize)> {
+        let cycle = self.stream.next()?;
+        let tenant = self.mix.sample(cycle);
+        Some((cycle, tenant))
+    }
+}
+
 /// Exponential(1) variate (inverse CDF on a (0, 1] uniform).
 fn exp1(rng: &mut Rng) -> f64 {
     -(1.0 - rng.next_f64()).ln()
@@ -574,6 +731,73 @@ mod tests {
             std::mem::size_of::<ArrivalStream<'static>>() <= 128,
             "stream state grew to {} bytes",
             std::mem::size_of::<ArrivalStream<'static>>()
+        );
+    }
+
+    #[test]
+    fn alternate_mix_round_robins_without_rng() {
+        let mut m = TenantMix::new(vec![1.0, 5.0, 2.0], MixMode::Alternate, 9);
+        let labels: Vec<usize> = (0..7).map(|c| m.sample(c * 100)).collect();
+        assert_eq!(labels, vec![0, 1, 2, 0, 1, 2, 0], "weights are ignored");
+    }
+
+    #[test]
+    fn static_mix_respects_weights() {
+        let mut m = TenantMix::new(vec![3.0, 1.0], MixMode::Static, 4);
+        let n = 10_000;
+        let zeros = (0..n).filter(|&c| m.sample(c) == 0).count();
+        // Expect ~75%; generous 3-sigma slack.
+        assert!((7_200..7_800).contains(&zeros), "{zeros}");
+    }
+
+    #[test]
+    fn mix_is_deterministic_per_seed_and_salted() {
+        let labels = |seed: u64| -> Vec<usize> {
+            let mut m = TenantMix::new(vec![1.0, 1.0, 1.0], MixMode::Static, seed);
+            (0..200).map(|c| m.sample(c)).collect()
+        };
+        assert_eq!(labels(7), labels(7));
+        assert_ne!(labels(7), labels(8));
+        // The salt decorrelates labels from timing: an unsalted Rng at the
+        // same seed draws a different uniform stream.
+        let mut raw = Rng::new(7);
+        let mut salted = Rng::new(7 ^ LABEL_SALT);
+        assert_ne!(raw.next_f64(), salted.next_f64());
+    }
+
+    #[test]
+    fn diurnal_mix_peaks_in_anti_phase() {
+        // Two tenants: at a quarter period tenant 0's modulated weight is
+        // 2w and tenant 1's is exactly 0 (sin = ±1), and vice versa at
+        // three quarters.
+        let period = 1_000_000u64;
+        let mut m = TenantMix::new(vec![1.0, 1.0], MixMode::Diurnal { period }, 3);
+        for _ in 0..50 {
+            assert_eq!(m.sample(period / 4), 0);
+        }
+        for _ in 0..50 {
+            assert_eq!(m.sample(3 * period / 4), 1);
+        }
+    }
+
+    #[test]
+    fn labeled_arrivals_ride_the_timing_stream() {
+        // Labels attach 1:1 to the unlabeled stream's cycles; alternate
+        // labeling is exactly checkable.
+        let p = ArrivalProcess::Trace(vec![5, 6, 40]);
+        let plain: Vec<u64> = p.stream_horizon(1.0, 100, 2).collect();
+        let labeled: Vec<(u64, usize)> = LabeledArrivals::new(
+            p.stream_horizon(1.0, 100, 2),
+            TenantMix::new(vec![1.0, 1.0], MixMode::Alternate, 2),
+        )
+        .collect();
+        assert_eq!(
+            labeled,
+            plain
+                .iter()
+                .enumerate()
+                .map(|(i, &c)| (c, i % 2))
+                .collect::<Vec<_>>()
         );
     }
 

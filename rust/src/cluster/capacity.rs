@@ -17,6 +17,7 @@ use crate::sweep::SweepRunner;
 use super::node::NodeModel;
 use super::sim::{simulate, ClusterConfig};
 use super::stats::ClusterStats;
+use super::tenant::{simulate_tenants, TenantConfig, TenantWorkload};
 
 /// One probed fleet size (for the report table).
 #[derive(Debug, Clone, Copy)]
@@ -196,6 +197,69 @@ pub fn plan_capacity(
     })
 }
 
+/// One probed fleet size of the multi-tenant ladder.
+#[derive(Debug, Clone)]
+pub struct TenantCapacityPoint {
+    /// Fleet size simulated.
+    pub nodes: usize,
+    /// The worst per-tenant p99 at this size (cycles) — the SLO is
+    /// per-tenant, so the fleet is only as good as its slowest tenant.
+    pub worst_p99: u64,
+    /// Total rejections across tenants.
+    pub rejected: u64,
+    /// Total model swaps across tenants.
+    pub swaps: u64,
+    /// Joules per completed image (idle + swaps included); `None` without
+    /// energy profiles.
+    pub joules_per_image: Option<f64>,
+    /// Every tenant met `p99 <= target` with zero rejections.
+    pub meets: bool,
+}
+
+/// Probe the multi-tenant scenario in `base` (its `nodes` field is
+/// ignored) at each fleet size in `sizes`, in parallel on `runner`, and
+/// report the per-size worst-tenant SLO outcome. Unlike single-model
+/// [`plan_capacity`] this is a *ladder*, not a section search: under
+/// reprogram-on-miss, adding nodes changes the resident striping and can
+/// shift swap storms, so per-tenant p99 is not a certified-monotone
+/// predicate over fleet size — the planner reports every probe and lets
+/// the caller pick, rather than trusting a bisection invariant that does
+/// not hold.
+pub fn tenant_capacity_ladder(
+    tenants: &[TenantWorkload],
+    base: &TenantConfig,
+    sizes: &[usize],
+    p99_target: u64,
+    runner: &SweepRunner,
+) -> Result<Vec<TenantCapacityPoint>, String> {
+    if sizes.is_empty() {
+        return Err("the capacity ladder needs at least one fleet size".to_string());
+    }
+    let probed = runner.run(sizes, |_, &n| {
+        simulate_tenants(
+            tenants,
+            &TenantConfig {
+                nodes: n,
+                ..base.clone()
+            },
+        )
+    });
+    let mut out = Vec::with_capacity(sizes.len());
+    for (&n, r) in sizes.iter().zip(probed) {
+        let s = r?;
+        let worst_p99 = s.tenants.iter().map(|t| t.latency.p99()).max().unwrap_or(0);
+        out.push(TenantCapacityPoint {
+            nodes: n,
+            worst_p99,
+            rejected: s.rejected,
+            swaps: s.total_swaps(),
+            joules_per_image: s.energy.as_ref().map(|e| e.joules_per_image()),
+            meets: s.rejected == 0 && s.completed > 0 && worst_p99 <= p99_target,
+        });
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -254,6 +318,63 @@ mod tests {
         let b = plan_capacity(&m, &cfg, 50_000, 16, None, &SweepRunner::with_threads(4)).unwrap();
         assert_eq!(a.nodes, b.nodes, "thread count must not change the answer");
         assert_eq!(a.stats.latency.p99(), b.stats.latency.p99());
+    }
+
+    #[test]
+    fn tenant_ladder_reports_every_probe_deterministically() {
+        use crate::power::WriteCost;
+        let tenants = vec![
+            TenantWorkload::new(
+                "a",
+                1.0,
+                100,
+                500,
+                WriteCost {
+                    rows: 0,
+                    latency_cycles: 1_000,
+                    energy_j: 0.5,
+                },
+            ),
+            TenantWorkload::new(
+                "b",
+                1.0,
+                300,
+                700,
+                WriteCost {
+                    rows: 0,
+                    latency_cycles: 2_000,
+                    energy_j: 0.25,
+                },
+            ),
+        ];
+        let base = TenantConfig {
+            rate_per_cycle: 0.004,
+            horizon_cycles: 400_000,
+            max_queue: 8,
+            ..TenantConfig::default()
+        };
+        let sizes = [2usize, 4, 8];
+        let pts =
+            tenant_capacity_ladder(&tenants, &base, &sizes, 100_000, &SweepRunner::with_threads(2))
+                .unwrap();
+        assert_eq!(pts.len(), 3);
+        for (p, &n) in pts.iter().zip(&sizes) {
+            assert_eq!(p.nodes, n);
+            assert!(p.joules_per_image.is_none(), "no profiles on synthetic tenants");
+        }
+        let again =
+            tenant_capacity_ladder(&tenants, &base, &sizes, 100_000, &SweepRunner::with_threads(1))
+                .unwrap();
+        for (a, b) in pts.iter().zip(&again) {
+            assert_eq!(a.worst_p99, b.worst_p99, "thread count changed the ladder");
+            assert_eq!(a.swaps, b.swaps);
+            assert_eq!(a.rejected, b.rejected);
+        }
+        assert!(
+            tenant_capacity_ladder(&tenants, &base, &[], 1, &SweepRunner::with_threads(1))
+                .is_err(),
+            "an empty ladder is a usage error"
+        );
     }
 
     #[test]

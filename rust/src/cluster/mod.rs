@@ -26,7 +26,13 @@
 //!   utilization, rejection rate;
 //! - [`capacity`] — "minimum nodes such that p99 <= target at this QPS",
 //!   by parallel section search over fleet size on [`SweepRunner`],
-//!   optionally gated by an average-fleet-power budget.
+//!   optionally gated by an average-fleet-power budget;
+//! - [`tenant`] — multi-tenant serving over the same fleet: per-node
+//!   resident-model state, residency policies (reprogram-on-miss vs
+//!   dedicated-partition), tenant-labeled arrivals
+//!   ([`arrival::TenantMix`]), and ReRAM weight-programming costs
+//!   ([`crate::power::WriteCost`]) charged per model swap into
+//!   [`FleetEnergy::weight_writes_j`].
 //!
 //! Fleet energy rides along (DESIGN.md §5): every [`NodeModel`] built
 //! from a workload carries an [`EnergyProfile`] (one injection = one
@@ -47,9 +53,16 @@ pub mod capacity;
 pub mod node;
 pub mod sim;
 pub mod stats;
+pub mod tenant;
 
-pub use arrival::{ArrivalProcess, ArrivalStream};
-pub use capacity::{plan_capacity, CapacityPoint, CapacityReport};
-pub use node::{EnergyProfile, Node, NodeModel, Served};
+pub use arrival::{ArrivalProcess, ArrivalStream, LabeledArrivals, MixMode, TenantMix};
+pub use capacity::{
+    plan_capacity, tenant_capacity_ladder, CapacityPoint, CapacityReport, TenantCapacityPoint,
+};
+pub use node::{EnergyProfile, Node, NodeModel, Served, TenantNode};
 pub use sim::{cycle_policy, rate_from_qps, simulate, ClusterConfig, RouteImpl, RoutePolicy};
 pub use stats::{ClusterStats, FleetEnergy, LatencySummary};
+pub use tenant::{
+    partition_counts, simulate_tenants, Residency, TenantClusterStats, TenantConfig,
+    TenantRoute, TenantStats, TenantWorkload,
+};

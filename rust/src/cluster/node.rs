@@ -291,6 +291,58 @@ impl Node {
     }
 }
 
+/// Mutable per-node state of the multi-tenant event loop
+/// ([`crate::cluster::tenant`]). Tenant nodes run the eager-scheduling
+/// singles model: every accepted request is injected at admission time
+/// and the node's completions are FIFO by construction (a tenant switch
+/// waits for the full drain; same-tenant completions are monotone under a
+/// constant fill), so the node reduces to a handful of cycle counters
+/// instead of a queue + dispatcher.
+#[derive(Debug, Clone)]
+pub struct TenantNode {
+    /// Tenant whose weights currently occupy the node's crossbars.
+    pub resident: usize,
+    /// Earliest hazard-free injection cycle for the next request.
+    pub next_inject: u64,
+    /// Completion cycle of the last injected request — the FIFO drain
+    /// point a model swap must wait for before reprogramming.
+    pub drain_at: u64,
+    /// Outstanding requests (admission-control gauge and jsq signal).
+    pub in_flight: u64,
+    /// Bottleneck streaming cycles (injections x the tenant's interval).
+    pub busy_cycles: u64,
+    /// Cycles spent reprogramming weights (counted into utilization: a
+    /// node mid-swap is busy, just not serving).
+    pub swap_cycles: u64,
+    /// Model swaps performed on this node.
+    pub swaps: u64,
+    /// Requests injected (every accepted request; singles, no padding).
+    pub injected: u64,
+}
+
+impl TenantNode {
+    /// A fresh node with `resident`'s weights pre-programmed (initial
+    /// programming happens before the measured span, like the single-model
+    /// fleet's).
+    pub fn new(resident: usize) -> Self {
+        Self {
+            resident,
+            next_inject: 0,
+            drain_at: 0,
+            in_flight: 0,
+            busy_cycles: 0,
+            swap_cycles: 0,
+            swaps: 0,
+            injected: 0,
+        }
+    }
+
+    /// Utilization numerator: streaming plus reprogramming cycles.
+    pub fn active_cycles(&self) -> u64 {
+        self.busy_cycles + self.swap_cycles
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -422,6 +474,16 @@ mod tests {
         let s = n.form_batches(5);
         assert_eq!(s.len(), 4);
         assert_eq!(n.injected, 4);
+    }
+
+    #[test]
+    fn tenant_node_counts_swap_time_as_active() {
+        let mut n = TenantNode::new(1);
+        assert_eq!(n.resident, 1);
+        assert_eq!(n.active_cycles(), 0);
+        n.busy_cycles = 300;
+        n.swap_cycles = 50;
+        assert_eq!(n.active_cycles(), 350, "a node mid-swap is busy");
     }
 
     #[test]

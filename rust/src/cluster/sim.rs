@@ -388,6 +388,7 @@ pub fn simulate(model: &NodeModel, cfg: &ClusterConfig) -> ClusterStats {
             dynamic_j: dynamic_mj * 1e-3,
             idle_j,
             padding_waste_j: padding_mj * 1e-3,
+            weight_writes_j: 0.0,
             span_s: span as f64 * t_s,
             completed_ops: completed * p.ops_per_image,
             completed,

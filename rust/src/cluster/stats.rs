@@ -99,6 +99,12 @@ pub struct FleetEnergy {
     /// padded to an executable size occupy real pipeline slots whose
     /// outputs are discarded.
     pub padding_waste_j: f64,
+    /// ReRAM weight-programming energy of all model swaps (J): every
+    /// reprogram-on-miss swap pays its tenant's full
+    /// [`WriteCost::energy_j`](crate::power::WriteCost) footprint. Zero
+    /// for single-tenant runs and partitioned fleets (weights are
+    /// programmed once, off the measured span).
+    pub weight_writes_j: f64,
     /// Simulated span in wall seconds (the utilization span: last
     /// completion or last reserved bottleneck slot).
     pub span_s: f64,
@@ -109,9 +115,11 @@ pub struct FleetEnergy {
 }
 
 impl FleetEnergy {
-    /// Total fleet energy: dynamic + idle (J).
+    /// Total fleet energy: dynamic + idle + weight writes (J). The
+    /// three-way split is exact — `tests/prop_tenant.rs` pins the
+    /// conservation identity.
     pub fn total_j(&self) -> f64 {
-        self.dynamic_j + self.idle_j
+        self.dynamic_j + self.idle_j + self.weight_writes_j
     }
 
     /// Joules per completed image, idle floor included (0 when nothing
@@ -151,6 +159,7 @@ impl FleetEnergy {
             ("energy_dynamic_j", self.dynamic_j.into()),
             ("energy_idle_j", self.idle_j.into()),
             ("energy_padding_waste_j", self.padding_waste_j.into()),
+            ("energy_weight_writes_j", self.weight_writes_j.into()),
             ("energy_total_j", self.total_j().into()),
             ("joules_per_image", self.joules_per_image().into()),
             ("avg_power_w", self.avg_power_w().into()),
@@ -373,6 +382,7 @@ mod tests {
             dynamic_j: 8.0,
             idle_j: 2.0,
             padding_waste_j: 0.5,
+            weight_writes_j: 0.0,
             span_s: 4.0,
             completed_ops: 100 * 39_300_000_000,
             completed: 100,
@@ -401,6 +411,15 @@ mod tests {
         e.dynamic_j = 0.0;
         e.idle_j = 0.0;
         assert_eq!(e.tops_per_watt(), 0.0, "zero energy must not divide");
+    }
+
+    #[test]
+    fn weight_writes_add_into_total() {
+        let mut e = energy();
+        e.weight_writes_j = 1.5;
+        assert_eq!(e.total_j(), 11.5);
+        let j = e.to_json().render();
+        assert!(j.contains("\"energy_weight_writes_j\":1.5"), "{j}");
     }
 
     #[test]

@@ -1,0 +1,1092 @@
+//! Multi-tenant fleet serving: which model's weights occupy which node,
+//! and what it costs to change your mind.
+//!
+//! The single-model cluster ([`super::sim`]) assumes every node serves the
+//! same network forever. A production fleet hosts *many* models, and on
+//! ReRAM the distinction matters because weight writes are orders of
+//! magnitude more expensive than reads (~1.76e-4 s and ~6.76e-7 J per
+//! crossbar row — [`crate::power::write`]): swapping the resident model on
+//! a node costs a pipeline drain plus hundreds of thousands of cycles of
+//! reprogramming, charged into [`FleetEnergy::weight_writes_j`]. Residency
+//! is therefore a first-class scheduling decision with two policies:
+//!
+//! - [`Residency::Reprogram`] (reprogram-on-miss): any node may serve any
+//!   tenant; routing prefers nodes already holding the tenant's weights
+//!   (jsq-with-affinity), and a miss pays the full
+//!   [`WriteCost`](crate::power::WriteCost) — drain the pipeline, program
+//!   every resident crossbar row, then inject. Anti-phase diurnal tenant
+//!   mixes ([`MixMode::Diurnal`]) produce reproducible *swap storms*: each
+//!   mix flip turns the whole fleet over.
+//! - [`Residency::Partition`] (dedicated-partition): a static weighted
+//!   tenant→node-set split ([`partition_counts`]); zero swaps by
+//!   construction, but a tenant whose partition saturates rejects even
+//!   while other partitions idle.
+//!
+//! The event loop is the flattened calendar idiom of [`super::sim`]
+//! (streamed arrivals, `(cycle, seq)` min-heap, indexed vs linear-scan
+//! routing with pinned bit-parity — `tests/prop_tenant.rs`), specialized
+//! to eager-scheduling FIFO singles nodes ([`TenantNode`]): every accepted
+//! request's injection and completion cycles are computed at admission, so
+//! per-request latency decomposes *exactly* into queueing (drain-wait
+//! before a swap) + swap (reprogramming) + backlog (injection-hazard
+//! wait) + fill — `tests/golden_tenant.rs` pins the decomposition on an
+//! alternating trace.
+//!
+//! Everything is deterministic from the seed; `smart-pim cluster
+//! --tenants` is the CLI surface and the per-tenant grid rides in
+//! `benches/cluster_scale.rs`.
+
+use std::cmp::Reverse;
+use std::collections::{BTreeSet, BinaryHeap};
+
+use crate::power::WriteCost;
+use crate::util::Json;
+
+use super::arrival::{ArrivalProcess, LabeledArrivals, MixMode, TenantMix};
+use super::node::{EnergyProfile, NodeModel, TenantNode};
+use super::sim::RouteImpl;
+use super::stats::{FleetEnergy, LatencySummary};
+
+/// How a node's resident model is managed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Residency {
+    /// Any node serves any tenant; a routing miss drains the pipeline and
+    /// pays the tenant's full [`WriteCost`] to reprogram.
+    Reprogram,
+    /// Static weighted tenant→node-set assignment; no swaps ever, but a
+    /// saturated partition rejects.
+    Partition,
+}
+
+impl Residency {
+    /// Policy name for tables and flags.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Residency::Reprogram => "reprogram",
+            Residency::Partition => "partition",
+        }
+    }
+}
+
+impl std::str::FromStr for Residency {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "reprogram" | "reprogram-on-miss" => Ok(Residency::Reprogram),
+            "partition" | "dedicated-partition" => Ok(Residency::Partition),
+            other => Err(format!(
+                "unknown residency policy {other:?} (reprogram | partition)"
+            )),
+        }
+    }
+}
+
+/// How arrivals pick a node (the tenant-aware subset of
+/// [`RoutePolicy`](super::RoutePolicy) — least-work has no meaning when
+/// the dominant cost is *whose weights are resident*, not queue depth).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TenantRoute {
+    /// Cycle through the tenant's candidate nodes in order (per-tenant
+    /// counter under partition, one global counter under reprogram).
+    RoundRobin,
+    /// Join the shortest queue **with residency affinity**: first the
+    /// least-loaded candidate already holding the tenant's weights, then —
+    /// under reprogram only — the least-loaded node overall (paying the
+    /// swap). Ties go to the lowest node index.
+    ShortestQueue,
+}
+
+impl TenantRoute {
+    /// Route name for tables and flags.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TenantRoute::RoundRobin => "rr",
+            TenantRoute::ShortestQueue => "jsq",
+        }
+    }
+}
+
+impl std::str::FromStr for TenantRoute {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "rr" | "round-robin" => Ok(TenantRoute::RoundRobin),
+            "jsq" | "shortest-queue" => Ok(TenantRoute::ShortestQueue),
+            other => Err(format!(
+                "unknown tenant route {other:?} (rr | jsq)"
+            )),
+        }
+    }
+}
+
+/// One hosted model: its pipeline constants, arrival share, and the price
+/// of programming its weights onto a node.
+#[derive(Debug, Clone)]
+pub struct TenantWorkload {
+    /// Tenant name for reports (usually the network name).
+    pub name: String,
+    /// Arrival-mix weight (relative share of offered traffic).
+    pub weight: f64,
+    /// Hazard-free injection interval in cycles.
+    pub interval: u64,
+    /// Injection-to-completion cycles for one image.
+    pub fill: u64,
+    /// Full weight-programming cost of one model swap.
+    pub write: WriteCost,
+    /// Per-image energy parameters; fleet energy is reported only when
+    /// *every* tenant carries a profile.
+    pub energy: Option<EnergyProfile>,
+}
+
+impl TenantWorkload {
+    /// A synthetic tenant from bare constants (tests, what-if scenarios).
+    pub fn new(name: &str, weight: f64, interval: u64, fill: u64, write: WriteCost) -> Self {
+        Self {
+            name: name.to_string(),
+            weight,
+            interval,
+            fill,
+            write,
+            energy: None,
+        }
+    }
+
+    /// A tenant from a built [`NodeModel`] (the real-workload path:
+    /// interval/fill/energy from the validated single-node chain, write
+    /// cost from the model's mapping footprint).
+    pub fn from_model(name: &str, weight: f64, model: &NodeModel, write: WriteCost) -> Self {
+        Self {
+            name: name.to_string(),
+            weight,
+            interval: model.interval,
+            fill: model.fill,
+            write,
+            energy: model.energy,
+        }
+    }
+}
+
+/// One multi-tenant scenario in simulated cycles.
+#[derive(Debug, Clone)]
+pub struct TenantConfig {
+    /// Node replicas in the fleet.
+    pub nodes: usize,
+    /// Residency policy.
+    pub residency: Residency,
+    /// Routing policy.
+    pub route: TenantRoute,
+    /// Routing implementation (bit-identical pair, like the base sim's).
+    pub route_impl: RouteImpl,
+    /// Arrival process shape (timing only; labels come from `mix`).
+    pub pattern: ArrivalProcess,
+    /// Offered arrival rate in requests per cycle, across all tenants.
+    pub rate_per_cycle: f64,
+    /// Tenant-labeling mode over the workloads' weights.
+    pub mix: MixMode,
+    /// Admission bound: max outstanding requests per node.
+    pub max_queue: u64,
+    /// Arrival horizon in cycles (ignored under `fixed_requests`).
+    pub horizon_cycles: u64,
+    /// Fixed-population mode: exactly this many arrivals.
+    pub fixed_requests: Option<usize>,
+    /// Seed for both the timing stream and the (salted) label stream.
+    pub seed: u64,
+}
+
+impl Default for TenantConfig {
+    fn default() -> Self {
+        Self {
+            nodes: 4,
+            residency: Residency::Reprogram,
+            route: TenantRoute::ShortestQueue,
+            route_impl: RouteImpl::Indexed,
+            pattern: ArrivalProcess::Poisson,
+            rate_per_cycle: 1e-4,
+            mix: MixMode::Static,
+            max_queue: 64,
+            horizon_cycles: 5_000_000,
+            fixed_requests: None,
+            seed: 0xC105_7E4,
+        }
+    }
+}
+
+/// Weighted contiguous node partition: every tenant gets at least one
+/// node, and the `nodes - tenants` remainder splits by largest-remainder
+/// apportionment over the weights (ties to the lowest tenant index).
+/// Errors when the fleet is smaller than the tenant count.
+pub fn partition_counts(nodes: usize, weights: &[f64]) -> Result<Vec<usize>, String> {
+    let t = weights.len();
+    if t == 0 {
+        return Err("partition needs at least one tenant".to_string());
+    }
+    if nodes < t {
+        return Err(format!(
+            "dedicated-partition needs >= 1 node per tenant: {t} tenants, {nodes} nodes"
+        ));
+    }
+    let total: f64 = weights.iter().sum();
+    let rem = (nodes - t) as f64;
+    let ideal: Vec<f64> = weights.iter().map(|&w| rem * w / total).collect();
+    let mut counts: Vec<usize> = ideal.iter().map(|&x| 1 + x as usize).collect();
+    let leftover = nodes - counts.iter().sum::<usize>();
+    let mut order: Vec<usize> = (0..t).collect();
+    order.sort_by(|&a, &b| {
+        let (fa, fb) = (ideal[a] - ideal[a].trunc(), ideal[b] - ideal[b].trunc());
+        fb.partial_cmp(&fa).unwrap().then(a.cmp(&b))
+    });
+    for &i in order.iter().take(leftover) {
+        counts[i] += 1;
+    }
+    Ok(counts)
+}
+
+/// Per-tenant serving outcome.
+#[derive(Debug, Clone)]
+pub struct TenantStats {
+    /// Tenant name (mirrors [`TenantWorkload::name`]).
+    pub name: String,
+    /// Arrivals labeled with this tenant.
+    pub offered: u64,
+    /// Requests served to completion.
+    pub completed: u64,
+    /// Requests rejected by admission control.
+    pub rejected: u64,
+    /// Model swaps performed on this tenant's behalf.
+    pub swaps: u64,
+    /// Routing misses (request landed on a node holding another tenant's
+    /// weights). Under reprogram-on-miss every miss swaps, so
+    /// `misses == swaps`; under partition both are zero.
+    pub misses: u64,
+    /// Weight-programming energy charged to this tenant (J):
+    /// `swaps x write.energy_j`.
+    pub swap_energy_j: f64,
+    /// End-to-end latency distribution (arrival → completion).
+    pub latency: LatencySummary,
+    /// Exact latency decomposition sums over completed requests:
+    /// Σ total = Σ queueing + Σ swap + Σ backlog + completed x fill.
+    pub total_latency_cycles: u64,
+    /// Σ drain-waits before swaps (cycles).
+    pub queueing_cycles: u64,
+    /// Σ reprogramming cycles charged to triggering requests.
+    pub swap_cycles: u64,
+    /// Σ injection-hazard waits on resident hits (cycles).
+    pub backlog_cycles: u64,
+    /// The tenant's per-request fill constant (closes the decomposition).
+    pub fill: u64,
+}
+
+impl TenantStats {
+    /// Fraction of this tenant's offered requests rejected.
+    pub fn rejection_rate(&self) -> f64 {
+        if self.offered == 0 {
+            return 0.0;
+        }
+        self.rejected as f64 / self.offered as f64
+    }
+
+    /// Machine-readable form (one row of `cluster --tenants --json`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("tenant", self.name.as_str().into()),
+            ("offered", self.offered.into()),
+            ("completed", self.completed.into()),
+            ("rejected", self.rejected.into()),
+            ("rejection_rate", self.rejection_rate().into()),
+            ("swaps", self.swaps.into()),
+            ("swap_energy_j", self.swap_energy_j.into()),
+            ("latency_mean_cycles", self.latency.mean().into()),
+            ("latency_p50_cycles", self.latency.p50().into()),
+            ("latency_p95_cycles", self.latency.p95().into()),
+            ("latency_p99_cycles", self.latency.p99().into()),
+            ("latency_p999_cycles", self.latency.p999().into()),
+            ("latency_max_cycles", self.latency.max().into()),
+            ("queueing_cycles", self.queueing_cycles.into()),
+            ("swap_cycles", self.swap_cycles.into()),
+            ("backlog_cycles", self.backlog_cycles.into()),
+        ])
+    }
+}
+
+/// Whole-run outcome of one multi-tenant scenario.
+#[derive(Debug, Clone)]
+pub struct TenantClusterStats {
+    /// Residency policy the run used.
+    pub residency: Residency,
+    /// Routing policy the run used.
+    pub route: TenantRoute,
+    /// Per-tenant outcomes, workload order.
+    pub tenants: Vec<TenantStats>,
+    /// Total arrivals offered.
+    pub offered: u64,
+    /// Total completions.
+    pub completed: u64,
+    /// Total rejections.
+    pub rejected: u64,
+    /// Effective generation span in cycles (same semantics as the base
+    /// sim: the configured horizon, clipped/replaced by the actual
+    /// arrival extent under traces and fixed populations).
+    pub horizon_cycles: u64,
+    /// Cycle of the last completion.
+    pub drained_at: u64,
+    /// Calendar events processed.
+    pub events_processed: u64,
+    /// High-water mark of the calendar.
+    pub peak_calendar_depth: usize,
+    /// Per-node busy fraction over the drain span — streaming *plus*
+    /// reprogramming cycles ([`TenantNode::active_cycles`]).
+    pub node_utilization: Vec<f64>,
+    /// Per-node model-swap counts.
+    pub per_node_swaps: Vec<u64>,
+    /// Per-node injections (accepted requests; singles, no padding).
+    pub per_node_injected: Vec<u64>,
+    /// Nodes per tenant under [`Residency::Partition`] (`None` under
+    /// reprogram).
+    pub partition: Option<Vec<usize>>,
+    /// Fleet energy with the weight-write component; present when every
+    /// tenant carried an [`EnergyProfile`].
+    pub energy: Option<FleetEnergy>,
+}
+
+impl TenantClusterStats {
+    /// Total model swaps across the fleet.
+    pub fn total_swaps(&self) -> u64 {
+        self.tenants.iter().map(|t| t.swaps).sum()
+    }
+
+    /// Total weight-programming energy across tenants (J).
+    pub fn total_swap_energy_j(&self) -> f64 {
+        self.tenants.iter().map(|t| t.swap_energy_j).sum()
+    }
+
+    /// Machine-readable form (`cluster --tenants --json`).
+    pub fn to_json(&self, logical_cycle_ns: f64) -> Json {
+        let throughput = if self.drained_at == 0 {
+            0.0
+        } else {
+            self.completed as f64 / self.drained_at as f64 / (logical_cycle_ns * 1e-9)
+        };
+        let mut doc = Json::obj(vec![
+            ("residency", self.residency.name().into()),
+            ("route", self.route.name().into()),
+            ("offered", self.offered.into()),
+            ("completed", self.completed.into()),
+            ("rejected", self.rejected.into()),
+            ("swaps", self.total_swaps().into()),
+            ("swap_energy_j", self.total_swap_energy_j().into()),
+            ("horizon_cycles", self.horizon_cycles.into()),
+            ("drained_at", self.drained_at.into()),
+            ("events_processed", self.events_processed.into()),
+            ("peak_calendar_depth", self.peak_calendar_depth.into()),
+            ("throughput_rps", throughput.into()),
+            (
+                "node_utilization",
+                Json::Arr(self.node_utilization.iter().map(|&u| u.into()).collect()),
+            ),
+            (
+                "per_node_swaps",
+                Json::Arr(self.per_node_swaps.iter().map(|&s| s.into()).collect()),
+            ),
+            (
+                "tenants",
+                Json::Arr(self.tenants.iter().map(TenantStats::to_json).collect()),
+            ),
+        ]);
+        if let (Json::Obj(pairs), Some(counts)) = (&mut doc, &self.partition) {
+            pairs.push((
+                "partition_nodes".to_string(),
+                Json::Arr(counts.iter().map(|&c| c.into()).collect()),
+            ));
+        }
+        if let (Json::Obj(pairs), Some(e)) = (&mut doc, &self.energy) {
+            if let Json::Obj(extra) = e.to_json() {
+                pairs.extend(extra);
+            }
+        }
+        doc
+    }
+}
+
+/// Calendar entry kinds. Payloads carry the decomposition so completions
+/// need no lookaside table.
+#[derive(Debug)]
+enum Ev {
+    Arrival {
+        tenant: usize,
+    },
+    Completion {
+        node: usize,
+        tenant: usize,
+        arrived: u64,
+        queueing: u64,
+        swap: u64,
+        backlog: u64,
+    },
+}
+
+/// `(cycle, seq)` min-heap — the deterministic tie-break idiom shared
+/// with [`super::sim`]'s calendar.
+#[derive(Default)]
+struct Cal {
+    heap: BinaryHeap<Reverse<(u64, u64, EvBox)>>,
+    seq: u64,
+    peak: usize,
+}
+
+/// Wrapper making `Ev` heap-storable without participating in ordering
+/// (the `(cycle, seq)` prefix is already a total order; seq is unique).
+struct EvBox(Ev);
+
+impl PartialEq for EvBox {
+    fn eq(&self, _: &Self) -> bool {
+        true
+    }
+}
+impl Eq for EvBox {}
+impl PartialOrd for EvBox {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for EvBox {
+    fn cmp(&self, _: &Self) -> std::cmp::Ordering {
+        std::cmp::Ordering::Equal
+    }
+}
+
+impl Cal {
+    fn push(&mut self, cycle: u64, ev: Ev) {
+        self.heap.push(Reverse((cycle, self.seq, EvBox(ev))));
+        self.seq += 1;
+        self.peak = self.peak.max(self.heap.len());
+    }
+
+    fn pop(&mut self) -> Option<(u64, Ev)> {
+        self.heap.pop().map(|Reverse((c, _, EvBox(e)))| (c, e))
+    }
+}
+
+/// Tenant-aware router: round-robin counters plus, for indexed jsq, a
+/// per-tenant resident index and a global occupancy index. Both
+/// implementations share one tie-break contract — lowest `(in_flight,
+/// node)` wins — so their picks (and therefore the whole run's stats) are
+/// bit-identical; `tests/prop_tenant.rs` pins the parity.
+struct TenantRouter {
+    route: TenantRoute,
+    imp: RouteImpl,
+    residency: Residency,
+    max_queue: u64,
+    rr_global: usize,
+    rr_per_tenant: Vec<usize>,
+    /// `(in_flight, node)` for every node whose resident tenant is the
+    /// index — the jsq-with-affinity pass-1 index.
+    by_tenant: Vec<BTreeSet<(u64, usize)>>,
+    /// `(in_flight, node)` over the whole fleet — the reprogram pass-2
+    /// index (under partition pass 2 never widens past pass 1).
+    global: BTreeSet<(u64, usize)>,
+}
+
+impl TenantRouter {
+    fn new(
+        route: TenantRoute,
+        imp: RouteImpl,
+        residency: Residency,
+        max_queue: u64,
+        tenants: usize,
+        resident: &[usize],
+    ) -> Self {
+        let mut by_tenant = vec![BTreeSet::new(); tenants];
+        let mut global = BTreeSet::new();
+        if route == TenantRoute::ShortestQueue && imp == RouteImpl::Indexed {
+            for (n, &t) in resident.iter().enumerate() {
+                by_tenant[t].insert((0u64, n));
+                global.insert((0u64, n));
+            }
+        }
+        Self {
+            route,
+            imp,
+            residency,
+            max_queue,
+            rr_global: 0,
+            rr_per_tenant: vec![0; tenants],
+            by_tenant,
+            global,
+        }
+    }
+
+    /// True when the occupancy indexes are live and must track changes.
+    fn tracking(&self) -> bool {
+        self.route == TenantRoute::ShortestQueue && self.imp == RouteImpl::Indexed
+    }
+
+    /// A node's outstanding count changed.
+    fn occ_changed(&mut self, node: usize, tenant: usize, old: u64, new: u64) {
+        if !self.tracking() {
+            return;
+        }
+        self.by_tenant[tenant].remove(&(old, node));
+        self.by_tenant[tenant].insert((new, node));
+        self.global.remove(&(old, node));
+        self.global.insert((new, node));
+    }
+
+    /// A node's resident tenant changed (occupancy unchanged).
+    fn resident_changed(&mut self, node: usize, occ: u64, old_t: usize, new_t: usize) {
+        if !self.tracking() {
+            return;
+        }
+        self.by_tenant[old_t].remove(&(occ, node));
+        self.by_tenant[new_t].insert((occ, node));
+    }
+
+    /// Route one arrival of `tenant`. `None` rejects. Round-robin
+    /// counters advance even when the picked node is full (stateless
+    /// cycling, matching the base sim's rr).
+    fn pick(
+        &mut self,
+        tenant: usize,
+        nodes: &[TenantNode],
+        bounds: Option<&Vec<Vec<usize>>>,
+    ) -> Option<usize> {
+        match self.route {
+            TenantRoute::RoundRobin => {
+                let n = match bounds {
+                    Some(b) => {
+                        let lst = &b[tenant];
+                        let n = lst[self.rr_per_tenant[tenant] % lst.len()];
+                        self.rr_per_tenant[tenant] += 1;
+                        n
+                    }
+                    None => {
+                        let n = self.rr_global % nodes.len();
+                        self.rr_global += 1;
+                        n
+                    }
+                };
+                (nodes[n].in_flight < self.max_queue).then_some(n)
+            }
+            TenantRoute::ShortestQueue => match self.imp {
+                RouteImpl::Indexed => {
+                    if let Some(&(occ, n)) = self.by_tenant[tenant].first() {
+                        if occ < self.max_queue {
+                            return Some(n);
+                        }
+                    }
+                    if self.residency == Residency::Reprogram {
+                        if let Some(&(occ, n)) = self.global.first() {
+                            if occ < self.max_queue {
+                                return Some(n);
+                            }
+                        }
+                    }
+                    None
+                }
+                RouteImpl::LinearScan => {
+                    let scan = |want_resident: bool| -> Option<(u64, usize)> {
+                        let mut best: Option<(u64, usize)> = None;
+                        let mut consider = |n: usize| {
+                            let nd = &nodes[n];
+                            if (!want_resident || nd.resident == tenant)
+                                && nd.in_flight < self.max_queue
+                            {
+                                let key = (nd.in_flight, n);
+                                if best.map_or(true, |b| key < b) {
+                                    best = Some(key);
+                                }
+                            }
+                        };
+                        match bounds {
+                            Some(b) => b[tenant].iter().for_each(|&n| consider(n)),
+                            None => (0..nodes.len()).for_each(&mut consider),
+                        }
+                        best
+                    };
+                    scan(true).or_else(|| scan(false)).map(|(_, n)| n)
+                }
+            },
+        }
+    }
+}
+
+/// Run one multi-tenant scenario to completion (arrivals exhausted,
+/// pipelines drained) and report per-tenant SLO stats plus fleet energy
+/// with the weight-write component. Deterministic from `cfg.seed`;
+/// bit-identical across [`RouteImpl`]s.
+pub fn simulate_tenants(
+    tenants: &[TenantWorkload],
+    cfg: &TenantConfig,
+) -> Result<TenantClusterStats, String> {
+    if tenants.is_empty() {
+        return Err("need at least one tenant workload".to_string());
+    }
+    if cfg.nodes == 0 {
+        return Err("a fleet needs at least one node".to_string());
+    }
+    for t in tenants {
+        if t.interval == 0 || t.fill == 0 {
+            return Err(format!("tenant {:?} needs positive interval and fill", t.name));
+        }
+    }
+    let t_count = tenants.len();
+    let weights: Vec<f64> = tenants.iter().map(|t| t.weight).collect();
+
+    // Initial residency: the partition map, or model i%T striped across
+    // the fleet under reprogram (every tenant starts warm somewhere).
+    let (resident_init, bounds, partition) = match cfg.residency {
+        Residency::Partition => {
+            let counts = partition_counts(cfg.nodes, &weights)?;
+            let mut resident = Vec::with_capacity(cfg.nodes);
+            let mut bounds = Vec::with_capacity(t_count);
+            let mut start = 0usize;
+            for (t, &c) in counts.iter().enumerate() {
+                resident.extend(std::iter::repeat(t).take(c));
+                bounds.push((start..start + c).collect::<Vec<usize>>());
+                start += c;
+            }
+            (resident, Some(bounds), Some(counts))
+        }
+        Residency::Reprogram => {
+            ((0..cfg.nodes).map(|i| i % t_count).collect(), None, None)
+        }
+    };
+
+    let stream = match cfg.fixed_requests {
+        Some(n) => cfg.pattern.stream_n(cfg.rate_per_cycle, n, cfg.seed),
+        None => cfg
+            .pattern
+            .stream_horizon(cfg.rate_per_cycle, cfg.horizon_cycles, cfg.seed),
+    };
+    let mut arrivals =
+        LabeledArrivals::new(stream, TenantMix::new(weights, cfg.mix, cfg.seed));
+
+    let mut nodes: Vec<TenantNode> =
+        resident_init.iter().map(|&t| TenantNode::new(t)).collect();
+    let mut router = TenantRouter::new(
+        cfg.route,
+        cfg.route_impl,
+        cfg.residency,
+        cfg.max_queue,
+        t_count,
+        &resident_init,
+    );
+
+    let mut offered = vec![0u64; t_count];
+    let mut completed = vec![0u64; t_count];
+    let mut rejected = vec![0u64; t_count];
+    let mut swaps = vec![0u64; t_count];
+    let mut misses = vec![0u64; t_count];
+    let mut lat: Vec<Vec<u64>> = vec![Vec::new(); t_count];
+    let mut q_sum = vec![0u64; t_count];
+    let mut s_sum = vec![0u64; t_count];
+    let mut b_sum = vec![0u64; t_count];
+    let mut events = 0u64;
+    let mut drained_at = 0u64;
+    let mut last_arrival: Option<u64> = None;
+
+    let mut cal = Cal::default();
+    if let Some((c, t)) = arrivals.next() {
+        last_arrival = Some(c);
+        cal.push(c, Ev::Arrival { tenant: t });
+    }
+
+    while let Some((cycle, ev)) = cal.pop() {
+        events += 1;
+        match ev {
+            Ev::Arrival { tenant: t } => {
+                // Pull-and-push FIRST: the calendar holds at most one
+                // pending arrival, and same-cycle events keep push order.
+                if let Some((c, t2)) = arrivals.next() {
+                    last_arrival = Some(c);
+                    cal.push(c, Ev::Arrival { tenant: t2 });
+                }
+                offered[t] += 1;
+                let Some(n) = router.pick(t, &nodes, bounds.as_ref()) else {
+                    rejected[t] += 1;
+                    continue;
+                };
+                let occ = nodes[n].in_flight;
+                nodes[n].in_flight = occ + 1;
+                router.occ_changed(n, nodes[n].resident, occ, occ + 1);
+                let (inject, queueing, swap, backlog);
+                if nodes[n].resident != t {
+                    debug_assert!(
+                        cfg.residency == Residency::Reprogram,
+                        "partition nodes never swap"
+                    );
+                    // Miss: drain the pipeline, reprogram, then inject.
+                    let swap_start = cycle.max(nodes[n].drain_at);
+                    queueing = swap_start - cycle;
+                    swap = tenants[t].write.latency_cycles;
+                    inject = swap_start + swap;
+                    backlog = 0;
+                    let old_t = nodes[n].resident;
+                    nodes[n].resident = t;
+                    router.resident_changed(n, occ + 1, old_t, t);
+                    swaps[t] += 1;
+                    misses[t] += 1;
+                    nodes[n].swaps += 1;
+                    nodes[n].swap_cycles += swap;
+                } else {
+                    // Hit: wait out the injection hazard only.
+                    inject = cycle.max(nodes[n].next_inject);
+                    queueing = 0;
+                    swap = 0;
+                    backlog = inject - cycle;
+                }
+                nodes[n].next_inject = inject + tenants[t].interval;
+                let comp = inject + tenants[t].fill;
+                // FIFO by construction: a tenant switch forces a full
+                // drain, and same-tenant completions are monotone under a
+                // constant fill.
+                debug_assert!(comp >= nodes[n].drain_at, "completions must stay FIFO");
+                nodes[n].drain_at = comp;
+                nodes[n].busy_cycles += tenants[t].interval;
+                nodes[n].injected += 1;
+                cal.push(
+                    comp,
+                    Ev::Completion {
+                        node: n,
+                        tenant: t,
+                        arrived: cycle,
+                        queueing,
+                        swap,
+                        backlog,
+                    },
+                );
+            }
+            Ev::Completion {
+                node: n,
+                tenant: t,
+                arrived,
+                queueing,
+                swap,
+                backlog,
+            } => {
+                let occ = nodes[n].in_flight;
+                nodes[n].in_flight = occ - 1;
+                router.occ_changed(n, nodes[n].resident, occ, occ - 1);
+                completed[t] += 1;
+                let total = cycle - arrived;
+                lat[t].push(total);
+                q_sum[t] += queueing;
+                s_sum[t] += swap;
+                b_sum[t] += backlog;
+                drained_at = drained_at.max(cycle);
+            }
+        }
+    }
+
+    // Effective generation span: same semantics as the base sim.
+    let arrival_extent = last_arrival.map_or(0, |c| c + 1);
+    let horizon_cycles = match (cfg.fixed_requests, &cfg.pattern) {
+        (Some(_), _) => arrival_extent,
+        (None, ArrivalProcess::Trace(_)) => cfg.horizon_cycles.min(arrival_extent),
+        (None, _) => cfg.horizon_cycles,
+    };
+
+    // Fleet energy, computed at drain in tenant order (one accumulation
+    // order = one exact identity: total == dynamic + idle + writes).
+    // Requires every tenant priced; a single unpriced tenant would make
+    // the split meaningless.
+    let total_completed: u64 = completed.iter().sum();
+    let energy = if tenants.iter().all(|t| t.energy.is_some()) {
+        let p0 = tenants[0].energy.as_ref().unwrap();
+        let span_s = drained_at as f64 * p0.logical_cycle_ns * 1e-9;
+        let mut dynamic_j = 0.0;
+        let mut ops = 0u64;
+        for (i, tw) in tenants.iter().enumerate() {
+            let p = tw.energy.as_ref().unwrap();
+            // Every accepted request completes (eager singles): injected
+            // == completed, so dynamic energy has no padding component.
+            dynamic_j += completed[i] as f64 * p.image_mj * 1e-3;
+            ops += completed[i] * p.ops_per_image;
+        }
+        let mut weight_writes_j = 0.0;
+        for (i, tw) in tenants.iter().enumerate() {
+            weight_writes_j += swaps[i] as f64 * tw.write.energy_j;
+        }
+        let idle_j = cfg.nodes as f64 * span_s * p0.idle_power_w;
+        Some(FleetEnergy {
+            dynamic_j,
+            idle_j,
+            padding_waste_j: 0.0,
+            weight_writes_j,
+            span_s,
+            completed_ops: ops,
+            completed: total_completed,
+        })
+    } else {
+        None
+    };
+
+    let node_utilization: Vec<f64> = nodes
+        .iter()
+        .map(|n| {
+            if drained_at == 0 {
+                0.0
+            } else {
+                n.active_cycles() as f64 / drained_at as f64
+            }
+        })
+        .collect();
+
+    let per_tenant: Vec<TenantStats> = (0..t_count)
+        .map(|i| {
+            let samples = std::mem::take(&mut lat[i]);
+            let total_latency_cycles: u64 = samples.iter().sum();
+            TenantStats {
+                name: tenants[i].name.clone(),
+                offered: offered[i],
+                completed: completed[i],
+                rejected: rejected[i],
+                swaps: swaps[i],
+                misses: misses[i],
+                swap_energy_j: swaps[i] as f64 * tenants[i].write.energy_j,
+                latency: LatencySummary::from_samples(samples),
+                total_latency_cycles,
+                queueing_cycles: q_sum[i],
+                swap_cycles: s_sum[i],
+                backlog_cycles: b_sum[i],
+                fill: tenants[i].fill,
+            }
+        })
+        .collect();
+
+    Ok(TenantClusterStats {
+        residency: cfg.residency,
+        route: cfg.route,
+        tenants: per_tenant,
+        offered: offered.iter().sum(),
+        completed: total_completed,
+        rejected: rejected.iter().sum(),
+        horizon_cycles,
+        drained_at,
+        events_processed: events,
+        peak_calendar_depth: cal.peak,
+        node_utilization,
+        per_node_swaps: nodes.iter().map(|n| n.swaps).collect(),
+        per_node_injected: nodes.iter().map(|n| n.injected).collect(),
+        partition,
+        energy,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_tenants() -> Vec<TenantWorkload> {
+        vec![
+            TenantWorkload::new(
+                "a",
+                1.0,
+                100,
+                500,
+                WriteCost {
+                    rows: 0,
+                    latency_cycles: 1_000,
+                    energy_j: 0.5,
+                },
+            ),
+            TenantWorkload::new(
+                "b",
+                1.0,
+                300,
+                700,
+                WriteCost {
+                    rows: 0,
+                    latency_cycles: 2_000,
+                    energy_j: 0.25,
+                },
+            ),
+        ]
+    }
+
+    #[test]
+    fn residency_and_route_parse() {
+        assert_eq!("reprogram".parse::<Residency>().unwrap(), Residency::Reprogram);
+        assert_eq!(
+            "dedicated-partition".parse::<Residency>().unwrap(),
+            Residency::Partition
+        );
+        assert!("lru".parse::<Residency>().is_err());
+        assert_eq!("jsq".parse::<TenantRoute>().unwrap(), TenantRoute::ShortestQueue);
+        assert_eq!("rr".parse::<TenantRoute>().unwrap(), TenantRoute::RoundRobin);
+        assert!("least-work".parse::<TenantRoute>().is_err());
+    }
+
+    #[test]
+    fn partition_counts_apportion_by_weight() {
+        assert_eq!(partition_counts(4, &[1.0, 1.0]).unwrap(), vec![2, 2]);
+        assert_eq!(partition_counts(10, &[3.0, 1.0]).unwrap(), vec![7, 3]);
+        // Every tenant keeps a floor of one node.
+        assert_eq!(partition_counts(3, &[100.0, 1.0, 1.0]).unwrap(), vec![1, 1, 1]);
+        assert!(partition_counts(1, &[1.0, 1.0]).is_err(), "1 node, 2 tenants");
+        assert!(partition_counts(4, &[]).is_err());
+    }
+
+    #[test]
+    fn partition_never_swaps_and_splits_traffic() {
+        let stats = simulate_tenants(
+            &two_tenants(),
+            &TenantConfig {
+                nodes: 4,
+                residency: Residency::Partition,
+                rate_per_cycle: 0.005,
+                horizon_cycles: 500_000,
+                max_queue: 8,
+                ..TenantConfig::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(stats.total_swaps(), 0);
+        assert_eq!(stats.total_swap_energy_j(), 0.0);
+        assert_eq!(stats.partition, Some(vec![2, 2]));
+        for t in &stats.tenants {
+            assert_eq!(t.offered, t.completed + t.rejected, "{}", t.name);
+            assert!(t.completed > 0, "{}", t.name);
+        }
+    }
+
+    #[test]
+    fn reprogram_charges_swaps_on_misses() {
+        let stats = simulate_tenants(
+            &two_tenants(),
+            &TenantConfig {
+                nodes: 2,
+                residency: Residency::Reprogram,
+                rate_per_cycle: 0.002,
+                horizon_cycles: 500_000,
+                mix: MixMode::Alternate,
+                ..TenantConfig::default()
+            },
+        )
+        .unwrap();
+        assert!(stats.total_swaps() > 0, "alternating mix on 2 nodes must miss");
+        for t in &stats.tenants {
+            assert_eq!(t.swaps, t.misses, "reprogram-on-miss swaps every miss");
+        }
+        let e = stats.energy;
+        assert!(e.is_none(), "synthetic tenants carry no energy profile");
+    }
+
+    #[test]
+    fn single_tenant_reprogram_never_swaps() {
+        let one = vec![two_tenants().remove(0)];
+        let stats = simulate_tenants(
+            &one,
+            &TenantConfig {
+                nodes: 4,
+                residency: Residency::Reprogram,
+                rate_per_cycle: 0.01,
+                horizon_cycles: 300_000,
+                ..TenantConfig::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(stats.total_swaps(), 0);
+        assert_eq!(stats.offered, stats.completed + stats.rejected);
+    }
+
+    #[test]
+    fn route_impls_are_bit_identical() {
+        for residency in [Residency::Reprogram, Residency::Partition] {
+            for route in [TenantRoute::RoundRobin, TenantRoute::ShortestQueue] {
+                let run = |imp: RouteImpl| {
+                    simulate_tenants(
+                        &two_tenants(),
+                        &TenantConfig {
+                            nodes: 4,
+                            residency,
+                            route,
+                            route_impl: imp,
+                            rate_per_cycle: 0.01,
+                            horizon_cycles: 200_000,
+                            max_queue: 4,
+                            mix: MixMode::Diurnal { period: 50_000 },
+                            ..TenantConfig::default()
+                        },
+                    )
+                    .unwrap()
+                };
+                let (a, b) = (run(RouteImpl::Indexed), run(RouteImpl::LinearScan));
+                for (x, y) in a.tenants.iter().zip(&b.tenants) {
+                    assert_eq!(x.completed, y.completed, "{residency:?} {route:?}");
+                    assert_eq!(x.rejected, y.rejected, "{residency:?} {route:?}");
+                    assert_eq!(x.swaps, y.swaps, "{residency:?} {route:?}");
+                    assert_eq!(
+                        x.total_latency_cycles, y.total_latency_cycles,
+                        "{residency:?} {route:?}"
+                    );
+                }
+                assert_eq!(a.drained_at, b.drained_at);
+            }
+        }
+    }
+
+    #[test]
+    fn latency_decomposes_exactly() {
+        let stats = simulate_tenants(
+            &two_tenants(),
+            &TenantConfig {
+                nodes: 2,
+                residency: Residency::Reprogram,
+                rate_per_cycle: 0.005,
+                horizon_cycles: 400_000,
+                mix: MixMode::Alternate,
+                max_queue: 16,
+                ..TenantConfig::default()
+            },
+        )
+        .unwrap();
+        for t in &stats.tenants {
+            assert_eq!(
+                t.total_latency_cycles,
+                t.queueing_cycles + t.swap_cycles + t.backlog_cycles + t.completed * t.fill,
+                "{}",
+                t.name
+            );
+        }
+    }
+
+    #[test]
+    fn json_carries_the_tenant_grid() {
+        let stats = simulate_tenants(
+            &two_tenants(),
+            &TenantConfig {
+                nodes: 2,
+                rate_per_cycle: 0.002,
+                horizon_cycles: 100_000,
+                mix: MixMode::Alternate,
+                ..TenantConfig::default()
+            },
+        )
+        .unwrap();
+        let j = stats.to_json(306.0).render();
+        assert!(j.contains("\"residency\":\"reprogram\""), "{j}");
+        assert!(j.contains("\"tenants\":["), "{j}");
+        assert!(j.contains("\"tenant\":\"a\""), "{j}");
+        assert!(j.contains("\"swap_energy_j\""), "{j}");
+        assert!(!j.contains("energy_weight_writes_j"), "no profile: {j}");
+    }
+
+    #[test]
+    fn config_validation_rejects_nonsense() {
+        assert!(simulate_tenants(&[], &TenantConfig::default()).is_err());
+        let mut bad = two_tenants();
+        bad[0].interval = 0;
+        assert!(simulate_tenants(&bad, &TenantConfig::default()).is_err());
+        assert!(simulate_tenants(
+            &two_tenants(),
+            &TenantConfig {
+                nodes: 1,
+                residency: Residency::Partition,
+                ..TenantConfig::default()
+            }
+        )
+        .is_err(), "2 tenants cannot partition 1 node");
+    }
+}

@@ -14,6 +14,7 @@ use crate::config::ArchConfig;
 use crate::mapping::NetworkMapping;
 use crate::pipeline::build_plans;
 use crate::planner::{evaluate_candidates, PlanCandidate, Planner, PlannerConfig};
+use crate::power::WriteCost;
 use crate::sweep::SweepRunner;
 
 use super::batcher::BatchPolicy;
@@ -32,12 +33,23 @@ pub struct StartupPlan {
     pub candidate: PlanCandidate,
     /// Stage offsets/occupancy for the dispatcher.
     pub shape: PipelineShape,
+    /// Cost of programming the chosen plan's full weight footprint onto
+    /// the node before the first request can inject — the serving
+    /// cold-start the ReRAM write model prices
+    /// ([`WriteCost::of_mapping`]). The multi-tenant cluster pays this
+    /// same cost per model swap.
+    pub programming: WriteCost,
 }
 
 impl StartupPlan {
     /// Minimum injection interval the dispatcher must enforce.
     pub fn min_interval(&self) -> u64 {
         self.shape.min_interval()
+    }
+
+    /// Cold-start weight-programming time in wall seconds.
+    pub fn cold_start_s(&self, logical_cycle_ns: f64) -> f64 {
+        self.programming.latency_s(logical_cycle_ns)
     }
 }
 
@@ -80,12 +92,14 @@ pub fn startup_plan(
     // selection (all-im2col under the default planner config).
     let mapping = NetworkMapping::build_with(&net, arch, &candidate.plan, &candidate.mapping)?;
     let shape = PipelineShape::from_plans(&build_plans(&net, &mapping, arch));
+    let programming = WriteCost::of_mapping(&net, &mapping, arch);
     Ok(StartupPlan {
         variant,
         batch_depth,
         tile_budget: result.tile_budget,
         candidate,
         shape,
+        programming,
     })
 }
 
@@ -113,6 +127,19 @@ mod tests {
         assert!(sp.candidate.measured_interval.is_some(), "engine confirmed");
         assert!(sp.min_interval() >= 1);
         assert_eq!(sp.shape.n_layers(), net.len());
+    }
+
+    #[test]
+    fn startup_prices_the_programming_cold_start() {
+        // Any VGG plan programs real rows; the cold start is sub-second
+        // but far from free (~0.18 s at the trip row-write latency).
+        let arch = ArchConfig::paper_node();
+        let sp = startup_plan(VggVariant::A, &arch, &BatchPolicy::default(), 320).unwrap();
+        assert!(sp.programming.rows > 0);
+        assert!(sp.programming.latency_cycles > 0);
+        assert!(sp.programming.energy_j > 0.0);
+        let s = sp.cold_start_s(arch.logical_cycle_ns);
+        assert!((0.01..10.0).contains(&s), "cold start {s} s");
     }
 
     #[test]

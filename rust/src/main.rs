@@ -18,6 +18,7 @@
 //! smart-pim serve --requests 64 [--artifacts artifacts]
 //! smart-pim cluster --network vgg_e --nodes 4 --qps 500 --pattern poisson [--mapping vwsdk]
 //! smart-pim cluster --qps 3000 --capacity --p99-target 20000 [--power-budget-w 60]
+//! smart-pim cluster --tenants vgg_a,resnet18:2 --residency reprogram|partition [--mix diurnal]
 //! smart-pim reproduce                 # paper-headline scoreboard + BENCH_headline.json
 //! smart-pim dump-config               # active ArchConfig in file format
 //! smart-pim report-all                # everything (minutes)
@@ -32,7 +33,7 @@ use smart_pim::coordinator::{assess_ingress, startup_plan, BatchPolicy, Server};
 use smart_pim::mapping::{
     plan_tiles, MappingKind, MappingMode, MappingSelection, ReplicationPlan,
 };
-use smart_pim::metrics::{cluster_table, paper, planner_table, Grid};
+use smart_pim::metrics::{cluster_table, paper, planner_table, tenant_table, Grid};
 use smart_pim::planner::{evaluate_candidates, Planner, PlannerConfig};
 use smart_pim::noc::{
     build_backend, run_synthetic_with, Mesh, Pattern, StepMode, SyntheticConfig,
@@ -791,9 +792,18 @@ fn cluster_cmd(args: &Args) -> Result<(), String> {
     args.check_known(&[
         "network", "plan", "mapping", "nodes", "qps", "pattern", "trace", "route",
         "route-impl", "requests", "max-queue", "horizon", "seed", "p99-target", "max-nodes",
-        "power-budget-w", "json", "threads", "config",
+        "power-budget-w", "json", "threads", "config", "tenants", "residency", "mix",
+        "mix-period",
     ])?;
     let a = arch();
+    if args.get("tenants").is_some() {
+        return cluster_tenants_cmd(args, &a);
+    }
+    for opt in ["residency", "mix", "mix-period"] {
+        if args.get(opt).is_some() {
+            return Err(format!("--{opt} only applies with --tenants"));
+        }
+    }
     let name = args.get_or("network", "vggE");
     let net = smart_pim::cnn::workload(name)?;
     let mapping: MappingMode = args.get_or("mapping", "im2col").parse()?;
@@ -1055,6 +1065,259 @@ fn cluster_cmd(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// `smart-pim cluster --tenants name[:weight],...`: multi-tenant serving
+/// over the same fleet. Each tenant is a full workload priced end to end
+/// (Fig. 7 plan for the VGGs, unreplicated otherwise), including its
+/// ReRAM weight-programming [`WriteCost`](smart_pim::power::WriteCost) —
+/// what a reprogram-on-miss model swap costs in latency and energy.
+fn cluster_tenants_cmd(args: &Args, a: &ArchConfig) -> Result<(), String> {
+    use smart_pim::cluster::{
+        rate_from_qps, simulate_tenants, ArrivalProcess, MixMode, NodeModel, Residency,
+        RouteImpl, TenantConfig, TenantRoute, TenantWorkload,
+    };
+    use smart_pim::mapping::NetworkMapping;
+    use smart_pim::power::WriteCost;
+
+    for opt in [
+        "network", "plan", "mapping", "p99-target", "max-nodes", "power-budget-w", "threads",
+    ] {
+        if args.get(opt).is_some() {
+            return Err(format!("--{opt} does not apply with --tenants"));
+        }
+    }
+    if args.flag("capacity") {
+        return Err(
+            "--capacity does not apply with --tenants (the tenant capacity \
+             ladder is `cluster::tenant_capacity_ladder`)"
+                .into(),
+        );
+    }
+
+    // Parse `name[:weight],...` into priced workloads. Every tenant runs
+    // its own validated replication plan, and its write cost is derived
+    // from the *mapped* footprint — the same subarrays the plan programs.
+    let spec = args.get("tenants").expect("branch guarded on --tenants");
+    let mut tenants: Vec<TenantWorkload> = Vec::new();
+    for part in spec.split(',').filter(|s| !s.trim().is_empty()) {
+        let part = part.trim();
+        let (name, weight) = match part.split_once(':') {
+            Some((n, w)) => (
+                n,
+                w.parse::<f64>()
+                    .map_err(|e| format!("--tenants weight {w:?} for {n}: {e}"))?,
+            ),
+            None => (part, 1.0),
+        };
+        if weight <= 0.0 || !weight.is_finite() {
+            return Err(format!(
+                "--tenants weight for {name:?} must be positive, got {weight}"
+            ));
+        }
+        let net = smart_pim::cnn::workload(name)?;
+        let plan = match net.name.parse::<VggVariant>() {
+            Ok(v) => ReplicationPlan::fig7(v),
+            Err(_) => ReplicationPlan::none(&net),
+        };
+        let model = NodeModel::from_workload(&net, a, &plan)?;
+        let mapping = NetworkMapping::build(&net, a, &plan)?;
+        let write = WriteCost::of_mapping(&net, &mapping, a);
+        tenants.push(TenantWorkload::from_model(&net.name, weight, &model, write));
+    }
+    if tenants.is_empty() {
+        return Err("--tenants needs at least one workload (name[:weight],...)".into());
+    }
+
+    let qps: f64 = args.get_parse_or("qps", 500.0)?;
+    if qps <= 0.0 || !qps.is_finite() {
+        return Err(format!("--qps must be positive, got {qps}"));
+    }
+    let pattern = match args.get("trace") {
+        Some(path) => {
+            if args.get("pattern").is_some_and(|p| p != "trace") {
+                return Err(format!(
+                    "--pattern {} conflicts with --trace (a trace replaces \
+                     the synthetic pattern); drop one of them",
+                    args.get("pattern").unwrap_or_default()
+                ));
+            }
+            if args.get("qps").is_some() {
+                return Err(
+                    "--qps conflicts with --trace (the trace fixes every \
+                     arrival time); drop one of them"
+                        .into(),
+                );
+            }
+            ArrivalProcess::from_trace_file(path)?
+        }
+        None => {
+            let p = args.get_or("pattern", "poisson");
+            if p == "trace" {
+                return Err("--pattern trace needs --trace FILE".into());
+            }
+            ArrivalProcess::from_name(p)?
+        }
+    };
+    let nodes: usize = args.get_parse_or("nodes", 4usize)?;
+    if nodes == 0 {
+        return Err("--nodes must be at least 1".into());
+    }
+    let horizon_default = if matches!(pattern, ArrivalProcess::Trace(_)) {
+        u64::MAX
+    } else {
+        5_000_000
+    };
+    let fixed_requests: Option<usize> = args.get_parse::<usize>("requests")?;
+    if let Some(n) = fixed_requests {
+        if n == 0 {
+            return Err("--requests must be at least 1".into());
+        }
+        if args.get("horizon").is_some() {
+            return Err(
+                "--horizon conflicts with --requests (a fixed population \
+                 ignores the horizon); drop one of them"
+                    .into(),
+            );
+        }
+    }
+    let mix = MixMode::from_name(
+        args.get_or("mix", "static"),
+        args.get_parse_or("mix-period", 1_000_000u64)?,
+    )?;
+    let cfg = TenantConfig {
+        nodes,
+        residency: args.get_or("residency", "reprogram").parse::<Residency>()?,
+        route: args.get_or("route", "jsq").parse::<TenantRoute>()?,
+        route_impl: args.get_or("route-impl", "indexed").parse::<RouteImpl>()?,
+        pattern,
+        rate_per_cycle: rate_from_qps(qps, a.logical_cycle_ns),
+        mix,
+        max_queue: args.get_parse_or("max-queue", 64u64)?,
+        horizon_cycles: args.get_parse_or("horizon", horizon_default)?,
+        fixed_requests,
+        seed: args.get_parse_or("seed", 0xC105_7E4u64)?,
+    };
+    let ms = |cycles: f64| cycles * a.logical_cycle_ns / 1e6;
+
+    let load = if matches!(cfg.pattern, ArrivalProcess::Trace(_)) {
+        "trace-driven arrivals".to_string()
+    } else if let Some(n) = cfg.fixed_requests {
+        format!("{qps} qps {} arrivals (fixed {n} requests)", cfg.pattern.name())
+    } else {
+        format!("{qps} qps {} arrivals", cfg.pattern.name())
+    };
+    println!(
+        "cluster tenants: {} nodes, {} residency, {} route, {} mix, {load}, max queue {}",
+        cfg.nodes,
+        cfg.residency.name(),
+        cfg.route.name(),
+        cfg.mix.name(),
+        cfg.max_queue
+    );
+    for t in &tenants {
+        println!(
+            "  {} (weight {}): interval {} cycles, fill {} cycles, reprogram \
+             {} rows = {} cycles / {} J",
+            t.name,
+            t.weight,
+            t.interval,
+            t.fill,
+            t.write.rows,
+            t.write.latency_cycles,
+            fnum(t.write.energy_j, 3)
+        );
+    }
+
+    let stats = simulate_tenants(&tenants, &cfg)?;
+
+    let mut t = Table::new(
+        format!(
+            "per-tenant stats — {} offered, seed {:#x} (latency in cycles)",
+            stats.offered, cfg.seed
+        ),
+        &[
+            "tenant", "offered", "completed", "rejected", "p50", "p95", "p99", "p999",
+            "swaps", "swap energy (J)",
+        ],
+    );
+    for ts in &stats.tenants {
+        t.row(&[
+            ts.name.clone(),
+            ts.offered.to_string(),
+            ts.completed.to_string(),
+            format!("{} ({:.2} %)", ts.rejected, 100.0 * ts.rejection_rate()),
+            ts.latency.p50().to_string(),
+            ts.latency.p95().to_string(),
+            ts.latency.p99().to_string(),
+            ts.latency.p999().to_string(),
+            ts.swaps.to_string(),
+            fnum(ts.swap_energy_j, 3),
+        ]);
+    }
+    t.print();
+
+    let mut f = Table::new("fleet summary", &["metric", "value"]);
+    f.row(&["completed".into(), stats.completed.to_string()]);
+    f.row(&["rejected".into(), stats.rejected.to_string()]);
+    f.row(&["model swaps".into(), stats.total_swaps().to_string()]);
+    f.row(&[
+        "swap energy (J)".into(),
+        fnum(stats.total_swap_energy_j(), 3),
+    ]);
+    if let Some(p) = &stats.partition {
+        let cells: Vec<String> = stats
+            .tenants
+            .iter()
+            .zip(p)
+            .map(|(ts, n)| format!("{}:{}", ts.name, n))
+            .collect();
+        f.row(&["partition (nodes per tenant)".into(), cells.join(" ")]);
+    }
+    let mean_util = if stats.node_utilization.is_empty() {
+        0.0
+    } else {
+        stats.node_utilization.iter().sum::<f64>() / stats.node_utilization.len() as f64
+    };
+    f.row(&[
+        "mean node utilization".into(),
+        format!("{:.1} %", 100.0 * mean_util),
+    ]);
+    f.row(&[
+        "drained at (cycles | ms)".into(),
+        format!(
+            "{} | {}",
+            stats.drained_at,
+            fnum(ms(stats.drained_at as f64), 3)
+        ),
+    ]);
+    f.row(&[
+        "calendar events | peak depth".into(),
+        format!("{} | {}", stats.events_processed, stats.peak_calendar_depth),
+    ]);
+    if let Some(e) = &stats.energy {
+        f.row(&[
+            "energy / image (mJ)".into(),
+            fnum(e.joules_per_image() * 1e3, 2),
+        ]);
+        f.row(&[
+            "energy dynamic | idle (J)".into(),
+            format!("{} | {}", fnum(e.dynamic_j, 2), fnum(e.idle_j, 2)),
+        ]);
+        f.row(&[
+            "energy weight writes (J)".into(),
+            fnum(e.weight_writes_j, 3),
+        ]);
+    }
+    f.print();
+
+    if let Some(path) = args.get("json") {
+        let doc = stats.to_json(a.logical_cycle_ns);
+        std::fs::write(path, doc.render_pretty())
+            .map_err(|e| format!("writing {path}: {e}"))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
 fn serve(args: &Args) -> Result<(), String> {
     args.check_known(&["requests", "artifacts", "seed", "config", "plan-variant", "tiles"])?;
     let n: usize = args.get_parse_or("requests", 32usize)?;
@@ -1175,6 +1438,8 @@ fn report_all(args: &Args) -> Result<(), String> {
     fig9()?;
     println!();
     cluster_table(&a, &SweepRunner::new())?.print();
+    println!();
+    tenant_table(&a, &SweepRunner::new())?.print();
     println!();
     fig10_11(args, true)?;
     fig10_11(args, false)?;

@@ -118,6 +118,23 @@ impl NetworkMapping {
     }
 }
 
+impl LayerMapping {
+    /// Crossbars a node keeps *programmed* for this layer: all
+    /// `replication` copies for conv layers, one reload round's share for
+    /// FC layers (the rounds time-multiplex the same physical arrays), and
+    /// nothing for weightless dataflow stages. This is the footprint the
+    /// weight-write cost model ([`crate::power::WriteCost`]) charges when
+    /// a multi-tenant node swaps models.
+    pub fn resident_subarrays(&self, layer: &crate::cnn::Layer) -> usize {
+        if !(layer.is_conv() || layer.is_fc()) {
+            return 0;
+        }
+        self.demand
+            .subarrays_replicated(self.replication)
+            .div_ceil(self.reload_rounds as usize)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -259,5 +276,30 @@ mod tests {
             let is_conv = net.layers()[lm.layer_idx].is_conv();
             assert_eq!(lm.reload_rounds, if is_conv { 1 } else { 8 });
         }
+    }
+
+    #[test]
+    fn resident_subarrays_charge_one_reload_round() {
+        let arch = ArchConfig::paper_node();
+        let net = vgg::build(VggVariant::A);
+        let plan = ReplicationPlan::none(&net);
+        let m = NetworkMapping::build(&net, &arch, &plan).unwrap();
+        for lm in &m.layers {
+            let layer = &net.layers()[lm.layer_idx];
+            let full = lm.demand.subarrays_replicated(lm.replication);
+            let resident = lm.resident_subarrays(layer);
+            if layer.is_conv() {
+                assert_eq!(resident, full, "{}", lm.name);
+            } else {
+                // fc1: 196x256 blocks / 8 rounds = 6272 resident arrays.
+                assert_eq!(resident, full.div_ceil(8), "{}", lm.name);
+            }
+        }
+        let fc1 = m
+            .layers
+            .iter()
+            .find(|lm| net.layers()[lm.layer_idx].is_fc())
+            .unwrap();
+        assert_eq!(fc1.resident_subarrays(&net.layers()[fc1.layer_idx]), 6272);
     }
 }

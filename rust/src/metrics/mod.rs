@@ -319,6 +319,83 @@ pub fn cluster_table(arch: &ArchConfig, runner: &SweepRunner) -> Result<Table, S
     Ok(t)
 }
 
+/// Multi-tenant serving rows for `report-all`: a residency-policy x
+/// fleet-size grid of a two-model fleet (VGG-A on its Fig. 7 plan +
+/// ResNet-18 unreplicated) under an anti-phase diurnal tenant mix — the
+/// swap-storm scenario. Reprogram-on-miss rows carry the model-swap count
+/// and ReRAM weight-programming energy; dedicated-partition rows are
+/// swap-free by construction but reject when a partition saturates.
+pub fn tenant_table(arch: &ArchConfig, runner: &SweepRunner) -> Result<Table, String> {
+    use crate::cluster::{
+        rate_from_qps, simulate_tenants, MixMode, NodeModel, Residency, TenantConfig,
+        TenantWorkload,
+    };
+    use crate::cnn::Network;
+    use crate::mapping::NetworkMapping;
+    use crate::power::WriteCost;
+
+    let tenant = |net: &Network,
+                  plan: &ReplicationPlan,
+                  weight: f64|
+     -> Result<TenantWorkload, String> {
+        let model = NodeModel::from_workload(net, arch, plan)?;
+        let mapping = NetworkMapping::build(net, arch, plan)?;
+        let write = WriteCost::of_mapping(net, &mapping, arch);
+        Ok(TenantWorkload::from_model(&net.name, weight, &model, write))
+    };
+    let vgg_a = crate::cnn::vgg::build(VggVariant::A);
+    let resnet = crate::cnn::workload("resnet18")?;
+    let tenants = vec![
+        tenant(&vgg_a, &ReplicationPlan::fig7(VggVariant::A), 1.0)?,
+        tenant(&resnet, &ReplicationPlan::none(&resnet), 1.0)?,
+    ];
+
+    let points: [(Residency, usize); 4] = [
+        (Residency::Reprogram, 8),
+        (Residency::Reprogram, 16),
+        (Residency::Partition, 8),
+        (Residency::Partition, 16),
+    ];
+    let stats = runner.run(&points, |_, &(residency, nodes)| {
+        simulate_tenants(
+            &tenants,
+            &TenantConfig {
+                nodes,
+                residency,
+                rate_per_cycle: rate_from_qps(1_500.0, arch.logical_cycle_ns),
+                mix: MixMode::Diurnal { period: 1_000_000 },
+                horizon_cycles: 3_000_000,
+                ..TenantConfig::default()
+            },
+        )
+    });
+    let mut t = Table::new(
+        "multi-tenant serving — VGG-A fig7 + ResNet-18, diurnal mix, jsq \
+         routing (latency in logical cycles)",
+        &[
+            "residency", "nodes", "tenant", "offered", "p50", "p99", "rejected",
+            "swaps", "swap energy (J)",
+        ],
+    );
+    for ((residency, nodes), r) in points.iter().zip(stats) {
+        let s = r?;
+        for ts in &s.tenants {
+            t.row(&[
+                residency.name().to_string(),
+                nodes.to_string(),
+                ts.name.clone(),
+                ts.offered.to_string(),
+                ts.latency.p50().to_string(),
+                ts.latency.p99().to_string(),
+                ts.rejected.to_string(),
+                ts.swaps.to_string(),
+                fnum(ts.swap_energy_j, 2),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
 /// Build the workload list for the comparison tables: all five VGGs plus
 /// the ResNets.
 pub fn all_workloads() -> Vec<crate::cnn::Network> {
@@ -439,6 +516,19 @@ mod tests {
         let out = t.render();
         assert!(out.contains("p99"), "{out}");
         assert!(out.contains("throughput"), "{out}");
+    }
+
+    #[test]
+    fn tenant_table_renders_both_residency_policies() {
+        let arch = ArchConfig::paper_node();
+        let t = tenant_table(&arch, &SweepRunner::with_threads(2)).unwrap();
+        // 4 grid points x 2 tenants.
+        assert_eq!(t.n_rows(), 8);
+        let out = t.render();
+        assert!(out.contains("reprogram"), "{out}");
+        assert!(out.contains("partition"), "{out}");
+        assert!(out.contains("vggA"), "{out}");
+        assert!(out.contains("resnet18"), "{out}");
     }
 
     #[test]

@@ -1,9 +1,12 @@
-//! Power, energy and area models — the Fig. 4 component table and the
-//! per-stage energy accounting behind Fig. 9's TOPS/W.
+//! Power, energy and area models — the Fig. 4 component table, the
+//! per-stage energy accounting behind Fig. 9's TOPS/W, and the ReRAM
+//! weight-programming (write) cost model behind model swaps.
 
 pub mod area;
 pub mod components;
 pub mod energy;
+pub mod write;
 
 pub use area::AreaBreakdown;
 pub use energy::{EnergyBreakdown, EnergyModel};
+pub use write::{WriteCost, ROW_WRITE_ENERGY_J, ROW_WRITE_LATENCY_S};

@@ -1,0 +1,141 @@
+//! ReRAM weight-programming (write) cost model.
+//!
+//! Crossbar reads stream one wordline activation per logical cycle, but
+//! *writes* run a program-and-verify loop per row that is orders of
+//! magnitude slower and more energetic. The constants follow the
+//! leliyliu/trip evaluation model (SNIPPETS.md snippet 2): ~1.76e-4 s and
+//! ~6.76e-7 J per crossbar row-write. Programming parallelism: every
+//! allocated crossbar is programmed whole (unused cells still get driven
+//! to their rest state, matching trip's per-allocated-crossbar
+//! accounting), one row programs at a time per *core* (the
+//! program-and-verify loop holds the core's shared write/verify
+//! datapath), and cores program in parallel — so reprogram latency is the
+//! busiest core's row count and reprogram energy is the total row count.
+//!
+//! [`WriteCost::of_mapping`] scales these constants by a model's mapped
+//! subarray footprint from [`NetworkMapping`]; the derived anchors for
+//! VGG-A/ResNet-18 are pinned in `rust/tests/golden_tenant.rs` (re-derived
+//! in this PR's executable mirror, PRs 5-7 discipline). The cluster's
+//! multi-tenant layer ([`crate::cluster::tenant`]) charges one
+//! [`WriteCost`] per model swap into `FleetEnergy::weight_writes_j`.
+
+use crate::cnn::Network;
+use crate::config::ArchConfig;
+use crate::mapping::NetworkMapping;
+
+/// Seconds to program-and-verify one crossbar row (trip: `write_latency`).
+pub const ROW_WRITE_LATENCY_S: f64 = 1.76e-4;
+
+/// Joules to program one crossbar row (trip: `write_energy`).
+pub const ROW_WRITE_ENERGY_J: f64 = 6.76e-7;
+
+/// The cost of programming one model's full resident weight footprint
+/// onto a node — the price of a model swap.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WriteCost {
+    /// Total crossbar rows programmed (the energy driver): every resident
+    /// subarray times the 128 rows of its array.
+    pub rows: u64,
+    /// Reprogram latency in logical cycles: the busiest core's rows times
+    /// the row-write latency (cores program in parallel, rows within a
+    /// core serially).
+    pub latency_cycles: u64,
+    /// Reprogram energy in joules: `rows x` [`ROW_WRITE_ENERGY_J`].
+    pub energy_j: f64,
+}
+
+impl WriteCost {
+    /// A free swap (useful as a test fixture and for synthetic tenants).
+    pub fn zero() -> Self {
+        Self {
+            rows: 0,
+            latency_cycles: 0,
+            energy_j: 0.0,
+        }
+    }
+
+    /// Derive the swap cost of a mapped network: conv layers program all
+    /// `replication` copies, FC layers one reload round's share
+    /// (successive rounds reuse the same physical arrays — their
+    /// steady-state rewrites are the seed pipeline model's concern, not
+    /// residency's), dataflow stages hold no weights. Per layer, rows
+    /// spread over `tiles x cores_per_tile` cores; the slowest layer's
+    /// busiest core sets the latency.
+    pub fn of_mapping(net: &Network, mapping: &NetworkMapping, arch: &ArchConfig) -> Self {
+        let mut rows_total: u64 = 0;
+        let mut worst_rows_per_core: u64 = 0;
+        for lm in &mapping.layers {
+            let layer = &net.layers()[lm.layer_idx];
+            let resident = lm.resident_subarrays(layer) as u64;
+            if resident == 0 {
+                continue;
+            }
+            let rows = resident * arch.subarray_rows as u64;
+            let cores = (lm.tile_ids.len().max(1) * arch.cores_per_tile) as u64;
+            worst_rows_per_core = worst_rows_per_core.max(rows.div_ceil(cores));
+            rows_total += rows;
+        }
+        let cycle_s = arch.logical_cycle_ns * 1e-9;
+        Self {
+            rows: rows_total,
+            latency_cycles: (worst_rows_per_core as f64 * ROW_WRITE_LATENCY_S / cycle_s)
+                .ceil() as u64,
+            energy_j: rows_total as f64 * ROW_WRITE_ENERGY_J,
+        }
+    }
+
+    /// Reprogram latency in wall seconds.
+    pub fn latency_s(&self, logical_cycle_ns: f64) -> f64 {
+        self.latency_cycles as f64 * logical_cycle_ns * 1e-9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::{vgg, VggVariant};
+    use crate::mapping::ReplicationPlan;
+
+    #[test]
+    fn constants_match_the_trip_model() {
+        assert_eq!(ROW_WRITE_LATENCY_S, 1.76e-4);
+        assert_eq!(ROW_WRITE_ENERGY_J, 6.76e-7);
+    }
+
+    #[test]
+    fn zero_cost_is_free() {
+        let z = WriteCost::zero();
+        assert_eq!(z.rows, 0);
+        assert_eq!(z.latency_cycles, 0);
+        assert_eq!(z.energy_j, 0.0);
+    }
+
+    #[test]
+    fn replication_scales_energy_not_worst_core() {
+        // fig7 programs strictly more rows than the unreplicated plan, but
+        // both saturate a deep-layer core, so latency ties.
+        let arch = ArchConfig::paper_node();
+        let net = vgg::build(VggVariant::A);
+        let none =
+            NetworkMapping::build(&net, &arch, &ReplicationPlan::none(&net)).unwrap();
+        let fig7 =
+            NetworkMapping::build(&net, &arch, &ReplicationPlan::fig7(VggVariant::A))
+                .unwrap();
+        let wn = WriteCost::of_mapping(&net, &none, &arch);
+        let wf = WriteCost::of_mapping(&net, &fig7, &arch);
+        assert!(wf.rows > wn.rows, "{} vs {}", wf.rows, wn.rows);
+        assert!(wf.energy_j > wn.energy_j);
+        assert_eq!(wf.latency_cycles, wn.latency_cycles);
+    }
+
+    #[test]
+    fn latency_seconds_roundtrip() {
+        let w = WriteCost {
+            rows: 0,
+            latency_cycles: 1_000_000,
+            energy_j: 0.0,
+        };
+        let s = w.latency_s(306.0);
+        assert!((s - 0.306).abs() < 1e-12, "{s}");
+    }
+}

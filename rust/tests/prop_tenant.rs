@@ -1,0 +1,345 @@
+//! Property tests over the multi-tenant cluster layer:
+//!
+//! 1. **per-tenant conservation**: for every residency x route x arrival
+//!    pattern x tenant mix, each tenant's arrivals = completions +
+//!    rejections at drain, swaps == routing misses (reprogram-on-miss
+//!    swaps on exactly the misses), and the per-tenant latency sum
+//!    decomposes exactly into queueing + swap + backlog + fill;
+//! 2. **partition is swap-free**: dedicated partitions never reprogram,
+//!    and the weighted apportionment covers the fleet with >= 1 node per
+//!    tenant;
+//! 3. **a lone tenant never swaps** under reprogram-on-miss (its weights
+//!    are resident everywhere from the start);
+//! 4. **fleet energy identity**: dynamic + idle + weight-writes sums
+//!    exactly (bit-equal, one accumulation order), and joules/image is
+//!    monotone non-increasing in fleet size for the pinned saturated
+//!    regime (write storms amortize over proportionally more
+//!    completions);
+//! 5. **determinism + routing parity**: identical seeds give bit-identical
+//!    per-tenant stats, and the indexed router matches the linear-scan
+//!    reference exactly on random scenarios.
+
+use smart_pim::cluster::{
+    partition_counts, simulate_tenants, ArrivalProcess, EnergyProfile, MixMode, Residency,
+    RouteImpl, TenantClusterStats, TenantConfig, TenantRoute, TenantWorkload,
+};
+use smart_pim::power::WriteCost;
+use smart_pim::prop_assert;
+use smart_pim::util::prop::{check, Config};
+
+fn wc(latency_cycles: u64, energy_j: f64) -> WriteCost {
+    WriteCost {
+        rows: 0,
+        latency_cycles,
+        energy_j,
+    }
+}
+
+/// The two-tenant grid fixture: a fast cheap-to-program model and a slow
+/// expensive one, weighted 2:1.
+fn pair() -> Vec<TenantWorkload> {
+    vec![
+        TenantWorkload::new("a", 2.0, 100, 500, wc(5_000, 0.5)),
+        TenantWorkload::new("b", 1.0, 300, 700, wc(8_000, 0.25)),
+    ]
+}
+
+/// Bit-exact equality over every observable of a tenant run.
+fn identical(a: &TenantClusterStats, b: &TenantClusterStats) -> bool {
+    a.offered == b.offered
+        && a.completed == b.completed
+        && a.rejected == b.rejected
+        && a.horizon_cycles == b.horizon_cycles
+        && a.drained_at == b.drained_at
+        && a.events_processed == b.events_processed
+        && a.peak_calendar_depth == b.peak_calendar_depth
+        && a.node_utilization == b.node_utilization
+        && a.per_node_swaps == b.per_node_swaps
+        && a.per_node_injected == b.per_node_injected
+        && a.partition == b.partition
+        && a.tenants.len() == b.tenants.len()
+        && a.tenants.iter().zip(&b.tenants).all(|(x, y)| {
+            x.offered == y.offered
+                && x.completed == y.completed
+                && x.rejected == y.rejected
+                && x.swaps == y.swaps
+                && x.misses == y.misses
+                && x.swap_energy_j == y.swap_energy_j
+                && x.total_latency_cycles == y.total_latency_cycles
+                && x.queueing_cycles == y.queueing_cycles
+                && x.swap_cycles == y.swap_cycles
+                && x.backlog_cycles == y.backlog_cycles
+                && x.latency.mean() == y.latency.mean()
+                && x.latency.p50() == y.latency.p50()
+                && x.latency.p99() == y.latency.p99()
+                && x.latency.max() == y.latency.max()
+        })
+}
+
+#[test]
+fn per_tenant_conservation_across_the_policy_grid() {
+    let tenants = pair();
+    let patterns = [
+        ArrivalProcess::Poisson,
+        ArrivalProcess::Bursty {
+            on_mean: 20_000,
+            off_mean: 20_000,
+        },
+        ArrivalProcess::Diurnal { period: 100_000 },
+    ];
+    let mixes = [
+        MixMode::Static,
+        MixMode::Alternate,
+        MixMode::Diurnal { period: 50_000 },
+    ];
+    for residency in [Residency::Reprogram, Residency::Partition] {
+        for route in [TenantRoute::RoundRobin, TenantRoute::ShortestQueue] {
+            for pattern in &patterns {
+                for mix in mixes {
+                    let s = simulate_tenants(
+                        &tenants,
+                        &TenantConfig {
+                            nodes: 4,
+                            residency,
+                            route,
+                            pattern: pattern.clone(),
+                            rate_per_cycle: 0.03,
+                            mix,
+                            max_queue: 8,
+                            horizon_cycles: 150_000,
+                            seed: 11,
+                            ..TenantConfig::default()
+                        },
+                    )
+                    .unwrap();
+                    let ctx = format!(
+                        "{}/{}/{}/{}",
+                        residency.name(),
+                        route.name(),
+                        pattern.name(),
+                        mix.name()
+                    );
+                    assert!(s.offered > 0, "{ctx}: no arrivals generated");
+                    for ts in &s.tenants {
+                        assert_eq!(
+                            ts.offered,
+                            ts.completed + ts.rejected,
+                            "{ctx}: tenant {} leaks requests",
+                            ts.name
+                        );
+                        assert_eq!(
+                            ts.swaps, ts.misses,
+                            "{ctx}: tenant {} swaps != misses",
+                            ts.name
+                        );
+                        assert_eq!(
+                            ts.total_latency_cycles,
+                            ts.queueing_cycles
+                                + ts.swap_cycles
+                                + ts.backlog_cycles
+                                + ts.completed * ts.fill,
+                            "{ctx}: tenant {} latency decomposition broke",
+                            ts.name
+                        );
+                        if residency == Residency::Partition {
+                            assert_eq!(ts.swaps, 0, "{ctx}: partition swapped");
+                        }
+                    }
+                    let per: u64 = s.tenants.iter().map(|t| t.offered).sum();
+                    assert_eq!(s.offered, per, "{ctx}: fleet offered != tenant sum");
+                    let per: u64 = s.tenants.iter().map(|t| t.completed).sum();
+                    assert_eq!(s.completed, per, "{ctx}");
+                    let per: u64 = s.tenants.iter().map(|t| t.rejected).sum();
+                    assert_eq!(s.rejected, per, "{ctx}");
+                    assert_eq!(
+                        s.per_node_swaps.iter().sum::<u64>(),
+                        s.total_swaps(),
+                        "{ctx}: node swap counts != tenant swap counts"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn single_tenant_reprogram_never_swaps() {
+    let one = vec![TenantWorkload::new("a", 1.0, 100, 500, wc(1_000, 0.5))];
+    let s = simulate_tenants(
+        &one,
+        &TenantConfig {
+            rate_per_cycle: 0.02,
+            max_queue: 8,
+            horizon_cycles: 200_000,
+            seed: 7,
+            ..TenantConfig::default()
+        },
+    )
+    .unwrap();
+    assert!(s.offered > 0);
+    assert_eq!(s.tenants[0].swaps, 0, "lone tenant should never swap");
+    assert_eq!(s.tenants[0].misses, 0);
+    assert_eq!(s.total_swap_energy_j(), 0.0);
+    assert_eq!(s.offered, s.completed + s.rejected);
+}
+
+/// A priced synthetic tenant for the energy properties (306 ns cycle, the
+/// paper node's).
+fn priced(
+    name: &str,
+    interval: u64,
+    fill: u64,
+    write: WriteCost,
+    image_mj: f64,
+    ops: u64,
+) -> TenantWorkload {
+    let mut t = TenantWorkload::new(name, 1.0, interval, fill, write);
+    t.energy = Some(EnergyProfile {
+        image_mj,
+        active_power_w: 0.0,
+        idle_power_w: 2.0,
+        ops_per_image: ops,
+        logical_cycle_ns: 306.0,
+    });
+    t
+}
+
+#[test]
+fn fleet_energy_identity_and_monotone_joules_per_image() {
+    // Pinned saturated regime (mirror-derived): heavy write costs and a
+    // tight admission bound, so swap energy dominates at small fleets and
+    // amortizes away as each tenant's node share grows.
+    let tenants = vec![
+        priced("a", 100, 500, wc(50_000, 0.5), 10.0, 1_000),
+        priced("b", 300, 700, wc(80_000, 0.25), 20.0, 2_000),
+    ];
+    let mut prev = f64::INFINITY;
+    for nodes in [2usize, 4, 8, 16] {
+        let s = simulate_tenants(
+            &tenants,
+            &TenantConfig {
+                nodes,
+                residency: Residency::Reprogram,
+                route: TenantRoute::ShortestQueue,
+                rate_per_cycle: 0.05,
+                mix: MixMode::Alternate,
+                max_queue: 32,
+                fixed_requests: Some(8_000),
+                seed: 42,
+                ..TenantConfig::default()
+            },
+        )
+        .unwrap();
+        let e = s.energy.as_ref().expect("every tenant is priced");
+        // Exact by construction: one accumulation order, no re-summation.
+        assert_eq!(e.total_j(), e.dynamic_j + e.idle_j + e.weight_writes_j);
+        assert_eq!(
+            e.weight_writes_j,
+            s.total_swap_energy_j(),
+            "fleet write energy != tenant swap energy at {nodes} nodes"
+        );
+        assert!(s.completed > 0, "{nodes} nodes completed nothing");
+        let j = e.joules_per_image();
+        assert!(
+            j <= prev,
+            "joules/image rose from {prev} to {j} at {nodes} nodes"
+        );
+        prev = j;
+    }
+}
+
+#[test]
+fn energy_absent_unless_every_tenant_is_priced() {
+    // One priced + one unpriced tenant: the fleet split would be
+    // meaningless, so no energy is reported.
+    let tenants = vec![
+        priced("a", 100, 500, wc(1_000, 0.5), 10.0, 1_000),
+        TenantWorkload::new("b", 1.0, 300, 700, wc(2_000, 0.25)),
+    ];
+    let s = simulate_tenants(
+        &tenants,
+        &TenantConfig {
+            horizon_cycles: 50_000,
+            rate_per_cycle: 0.01,
+            ..TenantConfig::default()
+        },
+    )
+    .unwrap();
+    assert!(s.energy.is_none());
+}
+
+#[test]
+fn partition_counts_cover_the_fleet() {
+    check("partition-apportionment", &Config::default(), |g| {
+        let t = 1 + g.rng.below(6) as usize;
+        let weights: Vec<f64> = (0..t)
+            .map(|_| 1.0 + g.rng.below(100) as f64 / 10.0)
+            .collect();
+        let nodes = t + g.rng.below(20) as usize;
+        let counts = partition_counts(nodes, &weights)?;
+        prop_assert!(
+            counts.iter().sum::<usize>() == nodes,
+            "counts {counts:?} do not sum to {nodes}"
+        );
+        prop_assert!(
+            counts.iter().all(|&c| c >= 1),
+            "a tenant got zero nodes: {counts:?}"
+        );
+        prop_assert!(
+            partition_counts(t - 1, &weights).is_err() || t == 1,
+            "undersized fleet must be rejected"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn determinism_and_route_parity_on_random_scenarios() {
+    let tenants = pair();
+    check("tenant-determinism-parity", &Config::default(), |g| {
+        let nodes = 2 + g.rng.below(5) as usize;
+        let residency = if g.rng.below(2) == 0 {
+            Residency::Partition
+        } else {
+            Residency::Reprogram
+        };
+        let route = if g.rng.below(2) == 0 {
+            TenantRoute::RoundRobin
+        } else {
+            TenantRoute::ShortestQueue
+        };
+        let cfg = TenantConfig {
+            nodes,
+            residency,
+            route,
+            rate_per_cycle: 0.005 + g.rng.below(30) as f64 / 1_000.0,
+            mix: MixMode::Diurnal { period: 40_000 },
+            max_queue: 1 + g.rng.below(8),
+            horizon_cycles: 60_000,
+            seed: g.rng.next_u64(),
+            ..TenantConfig::default()
+        };
+        let a = simulate_tenants(&tenants, &cfg)?;
+        let b = simulate_tenants(&tenants, &cfg)?;
+        prop_assert!(
+            identical(&a, &b),
+            "same seed diverged ({} {} {} nodes)",
+            residency.name(),
+            route.name(),
+            nodes
+        );
+        let scan = TenantConfig {
+            route_impl: RouteImpl::LinearScan,
+            ..cfg
+        };
+        let c = simulate_tenants(&tenants, &scan)?;
+        prop_assert!(
+            identical(&a, &c),
+            "indexed and linear-scan routers diverged ({} {} {} nodes)",
+            residency.name(),
+            route.name(),
+            nodes
+        );
+        Ok(())
+    });
+}
