@@ -37,6 +37,10 @@ use smart_pim::util::table::{fnum, Table};
 use smart_pim::util::Json;
 
 fn main() {
+    // Self-profiling rides along: the scaling rows carry a per-row
+    // wall-clock section breakdown (`cluster.simulate`, `tenant.simulate`,
+    // `sweep.point`), and the JSON doc ends with the run-wide aggregate.
+    smart_pim::obs::profile::enable();
     let arch = ArchConfig::paper_node();
     let net = vgg::build(VggVariant::E);
     let plan = ReplicationPlan::fig7(VggVariant::E);
@@ -421,6 +425,7 @@ fn scaling_study(
     let mut all_parity_ok = true;
     for &(nodes, arrivals, scan_arrivals) in points {
         for route in [RoutePolicy::ShortestQueue, RoutePolicy::LeastWork] {
+            let prof_before = smart_pim::obs::profile::snapshot();
             let (ix, ix_secs) = timed(&cfg_for(nodes, arrivals, route, RouteImpl::Indexed));
             let (sc, sc_secs) =
                 timed(&cfg_for(nodes, scan_arrivals, route, RouteImpl::LinearScan));
@@ -465,6 +470,16 @@ fn scaling_study(
                 ("indexed_wall_at_scan_count_secs", ix_cap_secs.into()),
                 ("speedup_at_scan_count", speedup.into()),
                 ("parity_ok", parity_ok.into()),
+                // All three runs of this row (indexed, scan, indexed@cap)
+                // land in one section delta — wall seconds inside the
+                // event loop vs the row's total.
+                (
+                    "profile",
+                    smart_pim::obs::profile::sections_json(&smart_pim::obs::profile::delta(
+                        &prof_before,
+                        &smart_pim::obs::profile::snapshot(),
+                    )),
+                ),
             ]));
         }
     }
@@ -500,6 +515,9 @@ fn scaling_study(
         ("all_parity_ok", all_parity_ok.into()),
         ("tenant_rows", Json::Arr(tenant_rows)),
         ("tenant_parity_ok", tenant_parity_ok.into()),
+        // Run-wide self-profiling aggregate (every section since
+        // process start, across all three studies).
+        ("profile", smart_pim::obs::profile::report_json()),
     ]);
     match std::fs::write(&json_path, doc.render_pretty()) {
         Ok(()) => println!("wrote {json_path}"),

@@ -60,9 +60,12 @@ pub use capacity::{
     plan_capacity, tenant_capacity_ladder, CapacityPoint, CapacityReport, TenantCapacityPoint,
 };
 pub use node::{EnergyProfile, Node, NodeModel, Served, TenantNode};
-pub use sim::{cycle_policy, rate_from_qps, simulate, ClusterConfig, RouteImpl, RoutePolicy};
-pub use stats::{ClusterStats, FleetEnergy, LatencySummary};
+pub use sim::{
+    cycle_policy, rate_from_qps, simulate, simulate_with_sink, ClusterConfig, RouteImpl,
+    RoutePolicy,
+};
+pub use stats::{ClusterStats, FleetEnergy, LatencySummary, EXACT_SAMPLE_CAP};
 pub use tenant::{
-    partition_counts, simulate_tenants, Residency, TenantClusterStats, TenantConfig,
-    TenantRoute, TenantStats, TenantWorkload,
+    partition_counts, simulate_tenants, simulate_tenants_with_sink, Residency,
+    TenantClusterStats, TenantConfig, TenantRoute, TenantStats, TenantWorkload,
 };

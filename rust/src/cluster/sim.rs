@@ -8,6 +8,8 @@ use std::cmp::Reverse;
 use std::collections::{BTreeSet, BinaryHeap};
 
 use crate::coordinator::{BatchPolicy, Clock, VirtualClock};
+use crate::obs::metrics::{LogHistogram, MetricsRegistry};
+use crate::obs::trace::{NullSink, TraceEvent, TracePhase, TraceSink};
 
 use super::arrival::ArrivalProcess;
 use super::node::{Node, NodeModel, Served};
@@ -248,6 +250,21 @@ impl Calendar {
 /// flattening preserves bit-identical stats against the original loop —
 /// see DESIGN.md §4a and `tests/prop_cluster_perf.rs`.
 pub fn simulate(model: &NodeModel, cfg: &ClusterConfig) -> ClusterStats {
+    simulate_with_sink(model, cfg, &mut NullSink)
+}
+
+/// [`simulate`] with a [`TraceSink`] tap. Three subsystems report:
+/// `cluster.route` (arrival/reject instants on the router track),
+/// `cluster.batch` (batch-form and live-deadline instants per node), and
+/// `cluster.node` (per-request service spans `[injected, completed)` plus
+/// completion instants per node). Stats are bit-identical whatever sink
+/// is attached (`tests/obs_parity.rs`).
+pub fn simulate_with_sink(
+    model: &NodeModel,
+    cfg: &ClusterConfig,
+    sink: &mut dyn TraceSink,
+) -> ClusterStats {
+    let _prof = crate::obs::profile::scope("cluster.simulate");
     assert!(cfg.nodes > 0, "a cluster needs at least one node");
     assert!(
         !cfg.policy.sizes.is_empty() && cfg.policy.sizes.iter().all(|&s| s > 0),
@@ -264,6 +281,19 @@ pub fn simulate(model: &NodeModel, cfg: &ClusterConfig) -> ClusterStats {
         .map(|_| Node::new(model, cfg.policy.clone()))
         .collect();
     let mut router = Router::new(cfg.route, cfg.route_impl, cfg.nodes, model.interval);
+    let traced = sink.enabled();
+    if traced {
+        sink.name_track("cluster.route", 0, cfg.route.name());
+        for i in 0..cfg.nodes {
+            sink.name_track("cluster.batch", i as u64, &format!("node {i}"));
+            sink.name_track("cluster.node", i as u64, &format!("node {i}"));
+        }
+    }
+    // Operation counters folded into the stats' metrics block at drain —
+    // plain u64s (and one local histogram) so the hot loop never touches
+    // a map.
+    let mut released_hist = LogHistogram::new();
+    let (mut n_rejected, mut n_deadline_live, mut n_deadline_stale) = (0u64, 0u64, 0u64);
     // Deadline suppression state: `armed[i] == Some(t)` iff the calendar
     // holds exactly one live Deadline event for node i at cycle t.
     let mut armed: Vec<Option<u64>> = vec![None; cfg.nodes];
@@ -302,7 +332,18 @@ pub fn simulate(model: &NodeModel, cfg: &ClusterConfig) -> ClusterStats {
                     last_arrival = c;
                 }
                 let target = router.pick(&nodes, now);
-                if nodes[target].offer(id, now, cfg.max_queue) {
+                let admitted = nodes[target].offer(id, now, cfg.max_queue);
+                if traced {
+                    sink.record(TraceEvent {
+                        subsystem: "cluster.route",
+                        track: 0,
+                        name: if admitted { "arrival" } else { "reject" },
+                        ts: now,
+                        phase: TracePhase::Instant,
+                        args: vec![("request", id), ("node", target as u64)],
+                    });
+                }
+                if admitted {
                     service_node(
                         &mut cal,
                         &mut nodes[target],
@@ -310,7 +351,11 @@ pub fn simulate(model: &NodeModel, cfg: &ClusterConfig) -> ClusterStats {
                         now,
                         &mut armed[target],
                         &mut scratch,
+                        sink,
+                        &mut released_hist,
                     );
+                } else {
+                    n_rejected += 1;
                 }
                 router.refresh(target, &nodes[target], now);
             }
@@ -318,6 +363,17 @@ pub fn simulate(model: &NodeModel, cfg: &ClusterConfig) -> ClusterStats {
                 if armed[node] == Some(now) {
                     // Live: consume the armed slot and let the node form
                     // whatever ripened (service re-arms for the new head).
+                    n_deadline_live += 1;
+                    if traced {
+                        sink.record(TraceEvent {
+                            subsystem: "cluster.batch",
+                            track: node as u64,
+                            name: "deadline",
+                            ts: now,
+                            phase: TracePhase::Instant,
+                            args: Vec::new(),
+                        });
+                    }
                     armed[node] = None;
                     service_node(
                         &mut cal,
@@ -326,8 +382,12 @@ pub fn simulate(model: &NodeModel, cfg: &ClusterConfig) -> ClusterStats {
                         now,
                         &mut armed[node],
                         &mut scratch,
+                        sink,
+                        &mut released_hist,
                     );
                     router.refresh(node, &nodes[node], now);
+                } else {
+                    n_deadline_stale += 1;
                 }
                 // Superseded deadlines skip without touching the node: the
                 // queue has not changed since its last service call, and
@@ -341,6 +401,16 @@ pub fn simulate(model: &NodeModel, cfg: &ClusterConfig) -> ClusterStats {
             } => {
                 nodes[node].complete_one();
                 router.refresh(node, &nodes[node], now);
+                if traced {
+                    sink.record(TraceEvent {
+                        subsystem: "cluster.node",
+                        track: node as u64,
+                        name: "complete",
+                        ts: now,
+                        phase: TracePhase::Instant,
+                        args: vec![("latency", now - arrived), ("queueing", injected - arrived)],
+                    });
+                }
                 latencies.push(now - arrived);
                 queueing.push(injected - arrived);
                 drained_at = drained_at.max(now);
@@ -355,6 +425,23 @@ pub fn simulate(model: &NodeModel, cfg: &ClusterConfig) -> ClusterStats {
         offered,
         "conservation: every arrival completes or is rejected at drain"
     );
+    debug_assert_eq!(n_rejected, rejected, "router-side and node-side reject counts agree");
+    // The metrics block: a pure function of the run (never of the sink),
+    // so the parity suite can compare it field-for-field across sinks.
+    // `events.*` migrate the ad-hoc gauges (`events_processed`,
+    // `peak_calendar_depth`) into the registry alongside the per-kind
+    // breakdown the legacy fields never had.
+    let mut metrics = MetricsRegistry::new();
+    metrics.incr("cluster.events.arrival", offered);
+    metrics.incr("cluster.events.rejected", rejected);
+    metrics.incr("cluster.events.deadline_live", n_deadline_live);
+    metrics.incr("cluster.events.deadline_stale", n_deadline_stale);
+    metrics.incr("cluster.events.completion", completed);
+    metrics.incr("cluster.events.processed", cal.pops);
+    metrics.gauge("cluster.calendar.peak_depth", cal.peak as f64);
+    if released_hist.count() > 0 {
+        metrics.set_histogram("cluster.batch.released", released_hist);
+    }
     // The effective generation span: under `fixed_requests` the configured
     // horizon is ignored entirely, and a trace replay only uses it as an
     // upper bound — report what the arrivals actually covered.
@@ -412,6 +499,7 @@ pub fn simulate(model: &NodeModel, cfg: &ClusterConfig) -> ClusterStats {
         per_node_rejected: nodes.iter().map(|n| n.rejected).collect(),
         per_node_injected: nodes.iter().map(|n| n.injected).collect(),
         energy,
+        metrics,
     }
 }
 
@@ -428,6 +516,7 @@ pub fn simulate(model: &NodeModel, cfg: &ClusterConfig) -> ClusterStats {
 /// Superseded entries (the head they were armed for already formed early)
 /// stay in the heap and fire as skipped no-ops; they cannot outnumber the
 /// batches in flight.
+#[allow(clippy::too_many_arguments)]
 fn service_node(
     cal: &mut Calendar,
     node: &mut Node,
@@ -435,9 +524,36 @@ fn service_node(
     now: u64,
     armed: &mut Option<u64>,
     scratch: &mut Vec<Served>,
+    sink: &mut dyn TraceSink,
+    released: &mut LogHistogram,
 ) {
     scratch.clear();
     node.form_batches_into(now, scratch);
+    if !scratch.is_empty() {
+        released.observe(scratch.len() as u64);
+        if sink.enabled() {
+            sink.record(TraceEvent {
+                subsystem: "cluster.batch",
+                track: node_idx as u64,
+                name: "form",
+                ts: now,
+                phase: TracePhase::Instant,
+                args: vec![("released", scratch.len() as u64)],
+            });
+            for s in scratch.iter() {
+                sink.record(TraceEvent {
+                    subsystem: "cluster.node",
+                    track: node_idx as u64,
+                    name: "service",
+                    ts: s.injected,
+                    phase: TracePhase::Span {
+                        dur: s.completed - s.injected,
+                    },
+                    args: vec![("request", s.id)],
+                });
+            }
+        }
+    }
     for s in scratch.iter() {
         cal.push(
             s.completed,
@@ -990,6 +1106,56 @@ mod tests {
         assert_eq!(RouteImpl::Indexed.name(), "indexed");
         assert_eq!(RouteImpl::LinearScan.name(), "scan");
         assert!("btree".parse::<RouteImpl>().is_err());
+    }
+
+    #[test]
+    fn metrics_registry_mirrors_the_legacy_gauges() {
+        let s = simulate(&model(), &light_cfg());
+        let m = &s.metrics;
+        assert_eq!(m.counter("cluster.events.processed"), s.events_processed);
+        assert_eq!(
+            m.gauge_value("cluster.calendar.peak_depth"),
+            Some(s.peak_calendar_depth as f64)
+        );
+        assert_eq!(m.counter("cluster.events.arrival"), s.offered);
+        assert_eq!(m.counter("cluster.events.completion"), s.completed);
+        assert_eq!(m.counter("cluster.events.rejected"), s.rejected);
+        // Per-kind counts partition the calendar pops exactly.
+        assert_eq!(
+            m.counter("cluster.events.arrival")
+                + m.counter("cluster.events.completion")
+                + m.counter("cluster.events.deadline_live")
+                + m.counter("cluster.events.deadline_stale"),
+            s.events_processed
+        );
+        // Every completed request was released by exactly one batch form.
+        let h = m.histogram("cluster.batch.released").expect("batches formed");
+        assert_eq!(h.sum(), s.completed as u128);
+    }
+
+    #[test]
+    fn recording_sink_covers_three_subsystems_without_perturbing_stats() {
+        use crate::obs::trace::RecordingSink;
+        let base = simulate(&model(), &light_cfg());
+        let mut sink = RecordingSink::new();
+        let traced = simulate_with_sink(&model(), &light_cfg(), &mut sink);
+        // The full cross-sink parity matrix lives in tests/obs_parity.rs;
+        // this is the in-crate smoke.
+        assert_eq!(base.offered, traced.offered);
+        assert_eq!(base.drained_at, traced.drained_at);
+        assert_eq!(base.latency.p999(), traced.latency.p999());
+        assert_eq!(base.node_utilization, traced.node_utilization);
+        assert_eq!(base.metrics, traced.metrics);
+        for sub in ["cluster.route", "cluster.batch", "cluster.node"] {
+            assert!(!sink.events_for(sub).is_empty(), "no {sub} events");
+        }
+        // One service span and one complete instant per completion.
+        let spans = sink
+            .events_for("cluster.node")
+            .iter()
+            .filter(|e| e.name == "service")
+            .count();
+        assert_eq!(spans as u64, traced.completed);
     }
 
     #[test]

@@ -1,34 +1,81 @@
-//! Serving statistics for cluster runs: exact latency percentiles,
-//! throughput, per-node utilization, rejection rate — the SLO surface a
-//! capacity planner bisects against.
+//! Serving statistics for cluster runs: latency percentiles, throughput,
+//! per-node utilization, rejection rate — the SLO surface a capacity
+//! planner bisects against — plus the run's [`MetricsRegistry`] block.
 
+use crate::obs::metrics::{LogHistogram, MetricsRegistry};
 use crate::util::Json;
 
-/// Exact latency percentiles over the full sample set (no sketches: a
-/// cluster run holds every completion anyway, and SLO math on p999 cannot
-/// afford approximation error).
+/// Sample count above which [`LatencySummary`] switches from exact
+/// storage to the streaming [`LogHistogram`] sketch. At or below the cap
+/// every percentile is exact (bit-identical to the historical
+/// store-everything summary); above it memory stays bounded (~2k buckets)
+/// at the cost of ≤[`crate::obs::metrics::ALPHA`] (1%) relative error on
+/// percentiles — `count`, `mean`, and `max` stay exact in both modes.
+/// 256Ki samples ≈ 2 MiB per summary, comfortably under any bench
+/// scenario today; fleet-year horizons blow past it.
+pub const EXACT_SAMPLE_CAP: usize = 262_144;
+
+/// Latency percentiles over a sample set: exact below
+/// [`EXACT_SAMPLE_CAP`], streaming log-histogram sketch above (see the
+/// cap's docs for the error contract).
 #[derive(Debug, Clone, Default)]
 pub struct LatencySummary {
-    /// All per-request latencies in cycles, sorted ascending.
+    /// All per-request latencies in cycles, sorted ascending (exact mode;
+    /// empty in sketch mode).
     sorted: Vec<u64>,
+    /// Bounded-memory sketch (sketch mode only).
+    sketch: Option<LogHistogram>,
 }
 
 impl LatencySummary {
-    /// Summarize a sample set (takes ownership; sorts once).
-    pub fn from_samples(mut samples: Vec<u64>) -> Self {
+    /// Summarize a sample set (takes ownership; sorts once). Switches to
+    /// the sketch above [`EXACT_SAMPLE_CAP`].
+    pub fn from_samples(samples: Vec<u64>) -> Self {
+        Self::from_samples_with_cap(samples, EXACT_SAMPLE_CAP)
+    }
+
+    /// [`Self::from_samples`] with an explicit exact-storage cap — the
+    /// error-band tests force the sketch on small sets with this.
+    pub fn from_samples_with_cap(mut samples: Vec<u64>, cap: usize) -> Self {
+        if samples.len() > cap {
+            let mut h = LogHistogram::new();
+            for &v in &samples {
+                h.observe(v);
+            }
+            return Self {
+                sorted: Vec::new(),
+                sketch: Some(h),
+            };
+        }
         samples.sort_unstable();
-        Self { sorted: samples }
+        Self {
+            sorted: samples,
+            sketch: None,
+        }
+    }
+
+    /// True when the summary holds the bounded sketch instead of the
+    /// exact sample set.
+    pub fn is_sketched(&self) -> bool {
+        self.sketch.is_some()
     }
 
     /// Number of samples.
     pub fn count(&self) -> usize {
-        self.sorted.len()
+        match &self.sketch {
+            Some(h) => h.count() as usize,
+            None => self.sorted.len(),
+        }
     }
 
-    /// Exact percentile by the nearest-rank method (`p` in (0, 100]):
-    /// the smallest sample such that at least `p`% of samples are <= it.
+    /// Percentile by the nearest-rank method (`p` in (0, 100]): the
+    /// smallest sample such that at least `p`% of samples are <= it.
+    /// Exact in exact mode; within 1% relative error in sketch mode.
     /// 0 for an empty summary.
     pub fn percentile(&self, p: f64) -> u64 {
+        if let Some(h) = &self.sketch {
+            return h.percentile(p);
+        }
         if self.sorted.is_empty() {
             return 0;
         }
@@ -58,17 +105,23 @@ impl LatencySummary {
         self.percentile(99.9)
     }
 
-    /// Arithmetic mean in cycles (0 when empty).
+    /// Arithmetic mean in cycles (exact in both modes; 0 when empty).
     pub fn mean(&self) -> f64 {
+        if let Some(h) = &self.sketch {
+            return h.mean();
+        }
         if self.sorted.is_empty() {
             return 0.0;
         }
         self.sorted.iter().map(|&x| x as u128).sum::<u128>() as f64 / self.sorted.len() as f64
     }
 
-    /// Largest sample (0 when empty).
+    /// Largest sample (exact in both modes; 0 when empty).
     pub fn max(&self) -> u64 {
-        self.sorted.last().copied().unwrap_or(0)
+        match &self.sketch {
+            Some(h) => h.max(),
+            None => self.sorted.last().copied().unwrap_or(0),
+        }
     }
 }
 
@@ -215,6 +268,12 @@ pub struct ClusterStats {
     /// Fleet energy accounting; `None` when the node model carried no
     /// [`EnergyProfile`](super::node::EnergyProfile).
     pub energy: Option<FleetEnergy>,
+    /// Structured operation counters and distributions from the event
+    /// loop (arrivals, rejections, deadline live/stale fires, batch-size
+    /// histogram, ...), rendered as the `metrics` block in `--json`
+    /// output. A pure function of the run: identical seeds give identical
+    /// registries.
+    pub metrics: MetricsRegistry,
 }
 
 impl ClusterStats {
@@ -290,6 +349,11 @@ impl ClusterStats {
                 pairs.extend(extra);
             }
         }
+        if !self.metrics.is_empty() {
+            if let Json::Obj(pairs) = &mut doc {
+                pairs.push(("metrics".to_string(), self.metrics.to_json()));
+            }
+        }
         doc
     }
 }
@@ -324,6 +388,42 @@ mod tests {
         assert_eq!(s.p99(), 0);
         assert_eq!(s.mean(), 0.0);
         assert_eq!(s.count(), 0);
+        assert!(!s.is_sketched());
+    }
+
+    #[test]
+    fn sketch_mode_stays_within_the_error_band() {
+        // Force the sketch on a sample set small enough to also keep
+        // exactly, and check every promised bound: count/mean/max exact,
+        // percentiles within ALPHA relative error of the exact
+        // nearest-rank answer.
+        use crate::util::Rng;
+        let mut rng = Rng::new(0xC1A5_51C);
+        let samples: Vec<u64> = (0..20_000).map(|_| rng.below(2_000_000)).collect();
+        let exact = LatencySummary::from_samples(samples.clone());
+        let sketched = LatencySummary::from_samples_with_cap(samples, 1_000);
+        assert!(sketched.is_sketched() && !exact.is_sketched());
+        assert_eq!(sketched.count(), exact.count());
+        assert_eq!(sketched.max(), exact.max());
+        assert!((sketched.mean() - exact.mean()).abs() < 1e-9);
+        for p in [50.0, 95.0, 99.0, 99.9] {
+            let (e, s) = (exact.percentile(p), sketched.percentile(p));
+            let rel = (s as f64 - e as f64).abs() / (e as f64).max(1.0);
+            assert!(
+                rel <= crate::obs::metrics::ALPHA + 1e-9,
+                "p{p}: exact {e} sketch {s} rel {rel}"
+            );
+        }
+    }
+
+    #[test]
+    fn cap_boundary_is_exact_inclusive() {
+        // Exactly at the cap stays exact; one past switches to the sketch.
+        let at = LatencySummary::from_samples_with_cap((0..100).collect(), 100);
+        let over = LatencySummary::from_samples_with_cap((0..101).collect(), 100);
+        assert!(!at.is_sketched());
+        assert!(over.is_sketched());
+        assert_eq!(over.count(), 101);
     }
 
     fn stats() -> ClusterStats {
@@ -342,6 +442,7 @@ mod tests {
             per_node_rejected: vec![1, 1],
             per_node_injected: vec![5, 5],
             energy: None,
+            metrics: MetricsRegistry::new(),
         }
     }
 
@@ -375,6 +476,18 @@ mod tests {
         assert!(j.contains("\"node_utilization\""), "{j}");
         assert!(j.contains("\"per_node_injected\""), "{j}");
         assert!(!j.contains("energy_total_j"), "no profile, no energy: {j}");
+        assert!(!j.contains("\"metrics\""), "empty registry is omitted: {j}");
+    }
+
+    #[test]
+    fn json_appends_metrics_block_when_present() {
+        let mut s = stats();
+        s.metrics.incr("cluster.events.arrival", 10);
+        s.metrics.observe("cluster.batch.size", 4);
+        let j = s.to_json(306.0).render();
+        assert!(j.contains("\"metrics\""), "{j}");
+        assert!(j.contains("\"cluster.events.arrival\":10"), "{j}");
+        assert!(j.contains("\"cluster.batch.size\""), "{j}");
     }
 
     fn energy() -> FleetEnergy {

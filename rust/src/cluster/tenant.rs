@@ -39,6 +39,8 @@
 use std::cmp::Reverse;
 use std::collections::{BTreeSet, BinaryHeap};
 
+use crate::obs::metrics::MetricsRegistry;
+use crate::obs::trace::{NullSink, TraceEvent, TracePhase, TraceSink};
 use crate::power::WriteCost;
 use crate::util::Json;
 
@@ -348,6 +350,10 @@ pub struct TenantClusterStats {
     /// Fleet energy with the weight-write component; present when every
     /// tenant carried an [`EnergyProfile`].
     pub energy: Option<FleetEnergy>,
+    /// Structured operation counters (arrivals, misses, swaps, calendar
+    /// gauges), rendered as the `metrics` block in `--json` output. A pure
+    /// function of the run.
+    pub metrics: MetricsRegistry,
 }
 
 impl TenantClusterStats {
@@ -403,6 +409,11 @@ impl TenantClusterStats {
         if let (Json::Obj(pairs), Some(e)) = (&mut doc, &self.energy) {
             if let Json::Obj(extra) = e.to_json() {
                 pairs.extend(extra);
+            }
+        }
+        if !self.metrics.is_empty() {
+            if let Json::Obj(pairs) = &mut doc {
+                pairs.push(("metrics".to_string(), self.metrics.to_json()));
             }
         }
         doc
@@ -619,6 +630,21 @@ pub fn simulate_tenants(
     tenants: &[TenantWorkload],
     cfg: &TenantConfig,
 ) -> Result<TenantClusterStats, String> {
+    simulate_tenants_with_sink(tenants, cfg, &mut NullSink)
+}
+
+/// [`simulate_tenants`] with a [`TraceSink`] tap. The `tenant` subsystem
+/// reports one track per node: on a miss, a `drain` span (pipeline
+/// drain-wait), a `reprogram` span carrying the write cost
+/// (rows/latency), and the `service` span; on a hit, the `service` span
+/// alone; plus a `complete` instant per completion. Stats are
+/// bit-identical whatever sink is attached (`tests/obs_parity.rs`).
+pub fn simulate_tenants_with_sink(
+    tenants: &[TenantWorkload],
+    cfg: &TenantConfig,
+    sink: &mut dyn TraceSink,
+) -> Result<TenantClusterStats, String> {
+    let _prof = crate::obs::profile::scope("tenant.simulate");
     if tenants.is_empty() {
         return Err("need at least one tenant workload".to_string());
     }
@@ -686,6 +712,18 @@ pub fn simulate_tenants(
     let mut drained_at = 0u64;
     let mut last_arrival: Option<u64> = None;
 
+    let traced = sink.enabled();
+    if traced {
+        for i in 0..cfg.nodes {
+            sink.name_track("tenant", i as u64, &format!("node {i}"));
+        }
+        sink.name_track("tenant", cfg.nodes as u64, "router");
+    }
+    // Stream-order request counter: only trace args use it, but it is
+    // maintained unconditionally so traced and untraced control flow are
+    // textually identical.
+    let mut arrival_seq = 0u64;
+
     let mut cal = Cal::default();
     if let Some((c, t)) = arrivals.next() {
         last_arrival = Some(c);
@@ -696,6 +734,8 @@ pub fn simulate_tenants(
         events += 1;
         match ev {
             Ev::Arrival { tenant: t } => {
+                let req = arrival_seq;
+                arrival_seq += 1;
                 // Pull-and-push FIRST: the calendar holds at most one
                 // pending arrival, and same-cycle events keep push order.
                 if let Some((c, t2)) = arrivals.next() {
@@ -705,13 +745,24 @@ pub fn simulate_tenants(
                 offered[t] += 1;
                 let Some(n) = router.pick(t, &nodes, bounds.as_ref()) else {
                     rejected[t] += 1;
+                    if traced {
+                        sink.record(TraceEvent {
+                            subsystem: "tenant",
+                            track: cfg.nodes as u64,
+                            name: "reject",
+                            ts: cycle,
+                            phase: TracePhase::Instant,
+                            args: vec![("request", req), ("tenant", t as u64)],
+                        });
+                    }
                     continue;
                 };
                 let occ = nodes[n].in_flight;
                 nodes[n].in_flight = occ + 1;
                 router.occ_changed(n, nodes[n].resident, occ, occ + 1);
+                let missed = nodes[n].resident != t;
                 let (inject, queueing, swap, backlog);
-                if nodes[n].resident != t {
+                if missed {
                     debug_assert!(
                         cfg.residency == Residency::Reprogram,
                         "partition nodes never swap"
@@ -738,6 +789,42 @@ pub fn simulate_tenants(
                 }
                 nodes[n].next_inject = inject + tenants[t].interval;
                 let comp = inject + tenants[t].fill;
+                if traced {
+                    let track = n as u64;
+                    if missed {
+                        if queueing > 0 {
+                            sink.record(TraceEvent {
+                                subsystem: "tenant",
+                                track,
+                                name: "drain",
+                                ts: cycle,
+                                phase: TracePhase::Span { dur: queueing },
+                                args: vec![("request", req), ("tenant", t as u64)],
+                            });
+                        }
+                        sink.record(TraceEvent {
+                            subsystem: "tenant",
+                            track,
+                            name: "reprogram",
+                            ts: cycle + queueing,
+                            phase: TracePhase::Span { dur: swap },
+                            args: vec![
+                                ("request", req),
+                                ("tenant", t as u64),
+                                ("write_rows", tenants[t].write.rows),
+                                ("write_cycles", tenants[t].write.latency_cycles),
+                            ],
+                        });
+                    }
+                    sink.record(TraceEvent {
+                        subsystem: "tenant",
+                        track,
+                        name: "service",
+                        ts: inject,
+                        phase: TracePhase::Span { dur: comp - inject },
+                        args: vec![("request", req), ("tenant", t as u64)],
+                    });
+                }
                 // FIFO by construction: a tenant switch forces a full
                 // drain, and same-tenant completions are monotone under a
                 // constant fill.
@@ -770,6 +857,22 @@ pub fn simulate_tenants(
                 router.occ_changed(n, nodes[n].resident, occ, occ - 1);
                 completed[t] += 1;
                 let total = cycle - arrived;
+                if traced {
+                    sink.record(TraceEvent {
+                        subsystem: "tenant",
+                        track: n as u64,
+                        name: "complete",
+                        ts: cycle,
+                        phase: TracePhase::Instant,
+                        args: vec![
+                            ("tenant", t as u64),
+                            ("latency", total),
+                            ("queueing", queueing),
+                            ("swap", swap),
+                            ("backlog", backlog),
+                        ],
+                    });
+                }
                 lat[t].push(total);
                 q_sum[t] += queueing;
                 s_sum[t] += swap;
@@ -855,6 +958,17 @@ pub fn simulate_tenants(
         })
         .collect();
 
+    // The metrics block mirrors the ad-hoc gauges into the registry and
+    // adds the per-kind breakdown; a pure function of the run.
+    let mut metrics = MetricsRegistry::new();
+    metrics.incr("tenant.events.arrival", offered.iter().sum());
+    metrics.incr("tenant.events.rejected", rejected.iter().sum());
+    metrics.incr("tenant.events.completion", total_completed);
+    metrics.incr("tenant.events.processed", events);
+    metrics.incr("tenant.swaps", swaps.iter().sum());
+    metrics.incr("tenant.misses", misses.iter().sum());
+    metrics.gauge("tenant.calendar.peak_depth", cal.peak as f64);
+
     Ok(TenantClusterStats {
         residency: cfg.residency,
         route: cfg.route,
@@ -871,6 +985,7 @@ pub fn simulate_tenants(
         per_node_injected: nodes.iter().map(|n| n.injected).collect(),
         partition,
         energy,
+        metrics,
     })
 }
 
@@ -1071,6 +1186,50 @@ mod tests {
         assert!(j.contains("\"tenant\":\"a\""), "{j}");
         assert!(j.contains("\"swap_energy_j\""), "{j}");
         assert!(!j.contains("energy_weight_writes_j"), "no profile: {j}");
+    }
+
+    #[test]
+    fn sink_and_metrics_ride_along_without_perturbing_stats() {
+        use crate::obs::trace::RecordingSink;
+        let cfg = TenantConfig {
+            nodes: 2,
+            residency: Residency::Reprogram,
+            rate_per_cycle: 0.002,
+            horizon_cycles: 300_000,
+            mix: MixMode::Alternate,
+            ..TenantConfig::default()
+        };
+        let base = simulate_tenants(&two_tenants(), &cfg).unwrap();
+        let mut sink = RecordingSink::new();
+        let traced = simulate_tenants_with_sink(&two_tenants(), &cfg, &mut sink).unwrap();
+        assert_eq!(base.offered, traced.offered);
+        assert_eq!(base.drained_at, traced.drained_at);
+        assert_eq!(base.total_swaps(), traced.total_swaps());
+        assert_eq!(base.metrics, traced.metrics);
+        assert_eq!(
+            traced.metrics.counter("tenant.events.processed"),
+            traced.events_processed
+        );
+        assert_eq!(traced.metrics.counter("tenant.swaps"), traced.total_swaps());
+        assert_eq!(traced.metrics.counter("tenant.misses"), traced.total_swaps());
+        // An alternating mix on a 2-node reprogram fleet swaps, so every
+        // span kind shows up; one service span per completion.
+        for name in ["reprogram", "service", "complete"] {
+            assert!(
+                sink.events_for("tenant").iter().any(|e| e.name == name),
+                "no {name} events"
+            );
+        }
+        let services = sink
+            .events_for("tenant")
+            .iter()
+            .filter(|e| e.name == "service")
+            .count();
+        assert_eq!(services as u64, traced.completed);
+        // The metrics block renders in --json.
+        let j = traced.to_json(306.0).render();
+        assert!(j.contains("\"metrics\""), "{j}");
+        assert!(j.contains("\"tenant.swaps\""), "{j}");
     }
 
     #[test]

@@ -34,6 +34,7 @@ pub mod coordinator;
 pub mod mapping;
 pub mod metrics;
 pub mod noc;
+pub mod obs;
 pub mod pipeline;
 pub mod planner;
 pub mod power;

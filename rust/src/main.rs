@@ -20,12 +20,17 @@
 //! smart-pim cluster --qps 3000 --capacity --p99-target 20000 [--power-budget-w 60]
 //! smart-pim cluster --tenants vgg_a,resnet18:2 --residency reprogram|partition [--mix diurnal]
 //! smart-pim reproduce                 # paper-headline scoreboard + BENCH_headline.json
+//! smart-pim profile [--json FILE]     # self-profiling micro-suite (hot-path wall times)
 //! smart-pim dump-config               # active ArchConfig in file format
 //! smart-pim report-all                # everything (minutes)
 //! ```
 //!
 //! Every command accepts `--config FILE` (a `key = value` override file,
-//! see `config/parse.rs`) to simulate nodes other than the paper's.
+//! see `config/parse.rs`) to simulate nodes other than the paper's, and
+//! `--profile` to append a wall-clock hot-path timing table. `simulate`,
+//! `noc`, and `cluster` accept `--trace-out FILE` to export the run as
+//! Chrome trace-event JSON (loadable in Perfetto / `chrome://tracing`;
+//! timestamps are virtual cycles, so traces are deterministic per seed).
 
 use smart_pim::cnn::{vgg, VggVariant};
 use smart_pim::config::{ArchConfig, NocKind, Scenario};
@@ -34,13 +39,10 @@ use smart_pim::mapping::{
     plan_tiles, MappingKind, MappingMode, MappingSelection, ReplicationPlan,
 };
 use smart_pim::metrics::{cluster_table, paper, planner_table, tenant_table, Grid};
+use smart_pim::noc::{build_backend, Mesh, Pattern, StepMode, SyntheticConfig};
 use smart_pim::planner::{evaluate_candidates, Planner, PlannerConfig};
-use smart_pim::noc::{
-    build_backend, run_synthetic_with, Mesh, Pattern, StepMode, SyntheticConfig,
-};
 use smart_pim::power::components::{aggregates, CORE_ROWS, TILE_ROWS};
 use smart_pim::power::AreaBreakdown;
-use smart_pim::sim::evaluate;
 use smart_pim::sweep::{SweepRunner, SyntheticSweep};
 use smart_pim::util::cli::Args;
 use smart_pim::util::table::{fnum, Table};
@@ -50,15 +52,15 @@ fn main() {
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() {
         eprintln!(
-            "usage: smart-pim <fig4..fig11|plan|simulate|noc|serve|cluster|reproduce|report-all> \
-             [options]"
+            "usage: smart-pim <fig4..fig11|plan|simulate|noc|serve|cluster|profile|reproduce|\
+             report-all> [options]"
         );
         std::process::exit(2);
     }
     let cmd = argv.remove(0);
     let args = match Args::parse(
         argv,
-        &["batch", "no-batch", "gantt", "compare", "frontier", "capacity"],
+        &["batch", "no-batch", "gantt", "compare", "frontier", "capacity", "profile"],
     ) {
         Ok(a) => a,
         Err(e) => {
@@ -69,6 +71,12 @@ fn main() {
     if let Err(e) = init_arch(&args) {
         eprintln!("error: {e}");
         std::process::exit(2);
+    }
+    // Global `--profile`: wall-clock timers on the crate's hot paths,
+    // reported after the command finishes. Never perturbs simulated stats
+    // (virtual time is untouched).
+    if args.flag("profile") || cmd == "profile" {
+        smart_pim::obs::profile::enable();
     }
     let result = match cmd.as_str() {
         "fig4" => fig4(),
@@ -84,6 +92,7 @@ fn main() {
         "noc" => noc_cmd(&args),
         "serve" => serve(&args),
         "cluster" => cluster_cmd(&args),
+        "profile" => profile_cmd(&args),
         "reproduce" => reproduce(&args),
         "dump-config" => {
             print!("{}", smart_pim::config::render_arch(&arch()));
@@ -92,6 +101,12 @@ fn main() {
         "report-all" => report_all(&args),
         other => Err(format!("unknown command {other:?}")),
     };
+    // The `profile` subcommand prints its own report (it owns layout and
+    // the optional --json export); --profile on any other command appends
+    // the aggregate table here.
+    if args.flag("profile") && cmd != "profile" {
+        print!("\n{}", smart_pim::obs::profile::report_table());
+    }
     if let Err(e) = result {
         eprintln!("error: {e}");
         std::process::exit(1);
@@ -115,6 +130,15 @@ fn arch() -> ArchConfig {
         .get()
         .cloned()
         .unwrap_or_else(ArchConfig::paper_node)
+}
+
+/// Write a recorded trace to `path` as Chrome trace-event JSON (the
+/// `--trace-out` surface; Perfetto / `chrome://tracing` load it directly).
+fn write_trace(path: &str, rec: &smart_pim::obs::trace::RecordingSink) -> Result<(), String> {
+    std::fs::write(path, rec.chrome_trace().render_pretty())
+        .map_err(|e| format!("writing {path}: {e}"))?;
+    println!("wrote trace {path} ({} events)", rec.len());
+    Ok(())
 }
 
 fn fig4() -> Result<(), String> {
@@ -545,7 +569,9 @@ fn mapping_compare_table(net: &smart_pim::cnn::Network, a: &ArchConfig) -> Table
 }
 
 fn simulate(args: &Args) -> Result<(), String> {
-    args.check_known(&["vgg", "network", "scenario", "noc", "mapping", "config"])?;
+    args.check_known(&[
+        "vgg", "network", "scenario", "noc", "mapping", "config", "trace-out",
+    ])?;
     let s: Scenario = args.get_or("scenario", "4").parse()?;
     let n: NocKind = args.get_or("noc", "smart").parse()?;
     let mapping: MappingMode = args.get_or("mapping", "im2col").parse()?;
@@ -555,7 +581,7 @@ fn simulate(args: &Args) -> Result<(), String> {
     // they have no Fig. 7 hand plan).
     if let Some(name) = args.get("network") {
         if name.parse::<VggVariant>().is_err() {
-            return simulate_network(name, s, n, &a, mapping, args.flag("gantt"));
+            return simulate_network(name, s, n, &a, mapping, args.flag("gantt"), args);
         }
     }
     let v: VggVariant = match args.get("network") {
@@ -566,9 +592,18 @@ fn simulate(args: &Args) -> Result<(), String> {
         // The classic VGG path replays the seed im2col goldens (Fig. 7 +
         // `sim::evaluate`); a non-default mapping runs the same workload
         // through the generic mapped path instead.
-        return simulate_network(v.name(), s, n, &a, mapping, args.flag("gantt"));
+        return simulate_network(v.name(), s, n, &a, mapping, args.flag("gantt"), args);
     }
-    let r = evaluate(v, s, n, &a);
+    let rec = args
+        .get("trace-out")
+        .map(|_| smart_pim::obs::trace::RecordingSink::new().shared());
+    let shared = rec
+        .clone()
+        .map(|r| r as smart_pim::obs::trace::SharedSink);
+    let r = smart_pim::sim::evaluate_traced(v, s, n, &a, shared);
+    if let (Some(path), Some(sink)) = (args.get("trace-out"), &rec) {
+        write_trace(path, &sink.borrow())?;
+    }
     let mut t = Table::new(
         format!(
             "simulate {} scenario {} noc {}",
@@ -632,6 +667,7 @@ fn simulate(args: &Args) -> Result<(), String> {
 /// replication, `vwsdk`/`auto` apply the VW-SDK backend uniformly — at a
 /// fixed replication a VW-SDK layer retires `pw`x more positions per
 /// cycle, so its interval can only improve.
+#[allow(clippy::too_many_arguments)]
 fn simulate_network(
     name: &str,
     s: Scenario,
@@ -639,6 +675,7 @@ fn simulate_network(
     a: &ArchConfig,
     mapping: MappingMode,
     gantt: bool,
+    args: &Args,
 ) -> Result<(), String> {
     let net = smart_pim::cnn::workload(name)?;
     let (plan, selection) = if s.replication() {
@@ -648,8 +685,25 @@ fn simulate_network(
         (ReplicationPlan::none(&net), selection_for(mapping, net.len()))
     };
     let images = smart_pim::sim::integrate::default_images(s);
-    let r =
-        smart_pim::sim::evaluate_network_mapped(&net, &plan, &selection, s.batch(), n, a, images)?;
+    let rec = args
+        .get("trace-out")
+        .map(|_| smart_pim::obs::trace::RecordingSink::new().shared());
+    let shared = rec
+        .clone()
+        .map(|r| r as smart_pim::obs::trace::SharedSink);
+    let r = smart_pim::sim::evaluate_network_mapped_traced(
+        &net,
+        &plan,
+        &selection,
+        s.batch(),
+        n,
+        a,
+        images,
+        shared,
+    )?;
+    if let (Some(path), Some(sink)) = (args.get("trace-out"), &rec) {
+        write_trace(path, &sink.borrow())?;
+    }
     if gantt {
         // Re-derive the stage plans for the trace view (same as the VGG
         // path does).
@@ -704,7 +758,7 @@ fn selection_for(mapping: MappingMode, n: usize) -> MappingSelection {
 
 fn noc_cmd(args: &Args) -> Result<(), String> {
     args.check_known(&[
-        "pattern", "rate", "noc", "mesh", "measure", "seed", "config", "mode",
+        "pattern", "rate", "noc", "mesh", "measure", "seed", "config", "mode", "trace-out",
     ])?;
     let pattern: Pattern = args.get_or("pattern", "uniform_random").parse()?;
     let rate: f64 = args.get_parse_or("rate", 0.1)?;
@@ -727,7 +781,16 @@ fn noc_cmd(args: &Args) -> Result<(), String> {
         seed: args.get_parse_or("seed", 0xA5A5u64)?,
         ..Default::default()
     };
-    let s = run_synthetic_with(kind, mesh, &cfg, arch().hpc_max, mode);
+    let rec = args
+        .get("trace-out")
+        .map(|_| smart_pim::obs::trace::RecordingSink::new().shared());
+    let shared = rec
+        .clone()
+        .map(|r| r as smart_pim::obs::trace::SharedSink);
+    let s = smart_pim::noc::run_synthetic_traced(kind, mesh, &cfg, arch().hpc_max, mode, shared);
+    if let (Some(path), Some(r)) = (args.get("trace-out"), &rec) {
+        write_trace(path, &r.borrow())?;
+    }
     println!(
         "{} {} rate {}: net latency {}, total latency {}, reception {}, completed {}, dropped {}{}",
         kind.name(),
@@ -785,15 +848,16 @@ fn reproduce(args: &Args) -> Result<(), String> {
 /// fleet power budget).
 fn cluster_cmd(args: &Args) -> Result<(), String> {
     use smart_pim::cluster::{
-        plan_capacity, rate_from_qps, simulate as cluster_simulate, ArrivalProcess,
-        ClusterConfig, NodeModel, RouteImpl, RoutePolicy,
+        plan_capacity, rate_from_qps, simulate_with_sink, ArrivalProcess, ClusterConfig,
+        NodeModel, RouteImpl, RoutePolicy,
     };
+    use smart_pim::obs::trace::{NullSink, RecordingSink};
 
     args.check_known(&[
         "network", "plan", "mapping", "nodes", "qps", "pattern", "trace", "route",
         "route-impl", "requests", "max-queue", "horizon", "seed", "p99-target", "max-nodes",
         "power-budget-w", "json", "threads", "config", "tenants", "residency", "mix",
-        "mix-period",
+        "mix-period", "trace-out",
     ])?;
     let a = arch();
     if args.get("tenants").is_some() {
@@ -870,6 +934,13 @@ fn cluster_cmd(args: &Args) -> Result<(), String> {
         }
     };
     let capacity_mode = args.flag("capacity");
+    if capacity_mode && args.get("trace-out").is_some() {
+        return Err(
+            "--trace-out conflicts with --capacity (the search evaluates many \
+             fleets; trace a single run at the chosen size instead)"
+                .into(),
+        );
+    }
     if capacity_mode && args.get("nodes").is_some() {
         return Err(
             "--nodes conflicts with --capacity (the planner searches the \
@@ -992,8 +1063,13 @@ fn cluster_cmd(args: &Args) -> Result<(), String> {
             r.nodes
         );
         r.stats
+    } else if let Some(path) = args.get("trace-out") {
+        let mut sink = RecordingSink::new();
+        let s = simulate_with_sink(&model, &cfg, &mut sink);
+        write_trace(path, &sink)?;
+        s
     } else {
-        cluster_simulate(&model, &cfg)
+        simulate_with_sink(&model, &cfg, &mut NullSink)
     };
 
     let mut t = Table::new(
@@ -1072,10 +1148,11 @@ fn cluster_cmd(args: &Args) -> Result<(), String> {
 /// what a reprogram-on-miss model swap costs in latency and energy.
 fn cluster_tenants_cmd(args: &Args, a: &ArchConfig) -> Result<(), String> {
     use smart_pim::cluster::{
-        rate_from_qps, simulate_tenants, ArrivalProcess, MixMode, NodeModel, Residency,
-        RouteImpl, TenantConfig, TenantRoute, TenantWorkload,
+        rate_from_qps, simulate_tenants_with_sink, ArrivalProcess, MixMode, NodeModel,
+        Residency, RouteImpl, TenantConfig, TenantRoute, TenantWorkload,
     };
     use smart_pim::mapping::NetworkMapping;
+    use smart_pim::obs::trace::{NullSink, RecordingSink};
     use smart_pim::power::WriteCost;
 
     for opt in [
@@ -1227,7 +1304,14 @@ fn cluster_tenants_cmd(args: &Args, a: &ArchConfig) -> Result<(), String> {
         );
     }
 
-    let stats = simulate_tenants(&tenants, &cfg)?;
+    let stats = if let Some(path) = args.get("trace-out") {
+        let mut sink = RecordingSink::new();
+        let s = simulate_tenants_with_sink(&tenants, &cfg, &mut sink)?;
+        write_trace(path, &sink)?;
+        s
+    } else {
+        simulate_tenants_with_sink(&tenants, &cfg, &mut NullSink)?
+    };
 
     let mut t = Table::new(
         format!(
@@ -1311,6 +1395,124 @@ fn cluster_tenants_cmd(args: &Args, a: &ArchConfig) -> Result<(), String> {
 
     if let Some(path) = args.get("json") {
         let doc = stats.to_json(a.logical_cycle_ns);
+        std::fs::write(path, doc.render_pretty())
+            .map_err(|e| format!("writing {path}: {e}"))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// `smart-pim profile`: a canned micro-suite over the crate's profiled
+/// hot paths (NoC sweep points, a planner search, both cluster engines),
+/// reported as wall-clock section timings. Simulated results are
+/// discarded — this command measures the simulator, not the paper.
+fn profile_cmd(args: &Args) -> Result<(), String> {
+    use smart_pim::cluster::{
+        rate_from_qps, simulate_tenants_with_sink, simulate_with_sink, ArrivalProcess,
+        ClusterConfig, NodeModel, TenantConfig, TenantWorkload,
+    };
+    use smart_pim::mapping::NetworkMapping;
+    use smart_pim::obs::trace::NullSink;
+    use smart_pim::power::WriteCost;
+
+    args.check_known(&["json", "config"])?;
+    let a = arch();
+    println!("profile micro-suite (wall-clock; virtual-time results discarded)");
+
+    // NoC sweep points: a few synthetic 8x8 runs through the SweepRunner,
+    // so `sweep.point` shows per-point cost.
+    {
+        let kind: NocKind = "smart".parse()?;
+        let mode: StepMode = "event".parse()?;
+        let pattern: Pattern = "uniform_random".parse()?;
+        let mesh = Mesh::new(8, 8);
+        let rates = [0.02f64, 0.06, 0.10];
+        let runner = SweepRunner::with_threads(1);
+        let _ = runner.run(&rates, |i, &rate| {
+            let cfg = SyntheticConfig {
+                pattern,
+                injection_rate: rate,
+                measure: 2_000,
+                seed: 0xA5A5 + i as u64,
+                ..Default::default()
+            };
+            smart_pim::noc::run_synthetic_traced(kind, mesh, &cfg, a.hpc_max, mode, None)
+        });
+    }
+
+    // Planner search on a non-VGG workload (`planner.search` /
+    // `planner.round`).
+    {
+        let net = smart_pim::cnn::workload("resnet18")?;
+        let _ = smart_pim::planner::plan_for_mapped(&net, &a, 0, MappingMode::Im2col)?;
+    }
+
+    // Cluster event loop (`cluster.simulate`) on the VGG-E anchor.
+    let (net, model) = {
+        let net = smart_pim::cnn::workload("vggE")?;
+        let plan = ReplicationPlan::fig7(net.name.parse::<VggVariant>().expect("vggE"));
+        let model = NodeModel::from_workload(&net, &a, &plan)?;
+        (net, model)
+    };
+    {
+        let cfg = ClusterConfig {
+            nodes: 4,
+            rate_per_cycle: rate_from_qps(2_000.0, a.logical_cycle_ns),
+            pattern: ArrivalProcess::from_name("poisson")?,
+            horizon_cycles: 2_000_000,
+            seed: 0xC105_7E4,
+            ..ClusterConfig::default()
+        };
+        let _ = simulate_with_sink(&model, &cfg, &mut NullSink);
+    }
+
+    // Multi-tenant loop (`tenant.simulate`): two tenants sharing the fleet
+    // under reprogram-on-miss, so swap costs are exercised too.
+    {
+        let net_b = smart_pim::cnn::workload("vggA")?;
+        let plan_b = ReplicationPlan::fig7(net_b.name.parse::<VggVariant>().expect("vggA"));
+        let model_b = NodeModel::from_workload(&net_b, &a, &plan_b)?;
+        let tenants = vec![
+            TenantWorkload::from_model(
+                &net.name,
+                1.0,
+                &model,
+                WriteCost::of_mapping(
+                    &net,
+                    &NetworkMapping::build(&net, &a, &ReplicationPlan::fig7(VggVariant::E))?,
+                    &a,
+                ),
+            ),
+            TenantWorkload::from_model(
+                &net_b.name,
+                1.0,
+                &model_b,
+                WriteCost::of_mapping(
+                    &net_b,
+                    &NetworkMapping::build(&net_b, &a, &plan_b)?,
+                    &a,
+                ),
+            ),
+        ];
+        let cfg = TenantConfig {
+            nodes: 4,
+            residency: "reprogram".parse()?,
+            route: "jsq".parse()?,
+            route_impl: "indexed".parse()?,
+            pattern: ArrivalProcess::from_name("poisson")?,
+            rate_per_cycle: rate_from_qps(1_000.0, a.logical_cycle_ns),
+            mix: smart_pim::cluster::MixMode::from_name("alternate", 250_000)?,
+            max_queue: 64,
+            horizon_cycles: 1_000_000,
+            fixed_requests: None,
+            seed: 0xC105_7E4,
+        };
+        let _ = simulate_tenants_with_sink(&tenants, &cfg, &mut NullSink)?;
+    }
+
+    print!("{}", smart_pim::obs::profile::report_table());
+    if let Some(path) = args.get("json") {
+        let doc = smart_pim::obs::profile::report_json();
         std::fs::write(path, doc.render_pretty())
             .map_err(|e| format!("writing {path}: {e}"))?;
         println!("wrote {path}");

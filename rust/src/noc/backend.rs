@@ -10,6 +10,7 @@
 //! no longer means editing every driver match.
 
 use crate::config::NocKind;
+use crate::obs::trace::SharedSink;
 
 use super::ideal::IdealNet;
 use super::network::Network;
@@ -69,6 +70,11 @@ pub trait NocBackend {
     /// Run until quiescent or `max_cycles` elapse; returns cycles run.
     /// Implementations jump over idle spans rather than stepping them.
     fn drain(&mut self, max_cycles: u64) -> u64;
+
+    /// Attach an observability sink for packet-level trace events
+    /// (subsystem `"noc"`). Observational only — attaching a sink must
+    /// never change routing or stats. Default: events are dropped.
+    fn attach_trace(&mut self, _sink: SharedSink) {}
 }
 
 impl NocBackend for Network {
@@ -107,6 +113,10 @@ impl NocBackend for Network {
     fn drain(&mut self, max_cycles: u64) -> u64 {
         Network::drain(self, max_cycles)
     }
+
+    fn attach_trace(&mut self, sink: SharedSink) {
+        Network::attach_trace(self, sink);
+    }
 }
 
 impl NocBackend for IdealNet {
@@ -144,6 +154,10 @@ impl NocBackend for IdealNet {
 
     fn drain(&mut self, max_cycles: u64) -> u64 {
         IdealNet::drain(self, max_cycles)
+    }
+
+    fn attach_trace(&mut self, sink: SharedSink) {
+        IdealNet::attach_trace(self, sink);
     }
 }
 

@@ -3,6 +3,8 @@
 //! (`t_w x 1` in Eq. (3)), with only injection/ejection serialization and
 //! zero in-network contention.
 
+use crate::obs::trace::{SharedSink, TraceEvent, TracePhase};
+
 use super::packet::PacketTable;
 
 /// Analytic ideal network with the same driver interface as [`super::Network`]
@@ -24,6 +26,8 @@ pub struct IdealNet {
     /// (eject_cycle, pkt, flit_idx) min-heap substitute: sorted insertion is
     /// overkill; we keep a simple bucket queue keyed by cycle.
     pending: std::collections::BTreeMap<u64, Vec<u32>>,
+    /// Optional trace sink (observational only; `None` = no overhead).
+    trace: Option<SharedSink>,
 }
 
 impl IdealNet {
@@ -38,6 +42,36 @@ impl IdealNet {
             flits_injected: 0,
             flits_ejected: 0,
             pending: std::collections::BTreeMap::new(),
+            trace: None,
+        }
+    }
+
+    /// Report packet inject/eject events (subsystem `"noc"`, track =
+    /// endpoint) to `sink`. Observational only: delivery schedules and
+    /// stats stay bit-identical.
+    pub fn attach_trace(&mut self, sink: SharedSink) {
+        self.trace = Some(sink);
+    }
+
+    fn trace_instant(
+        &self,
+        node: usize,
+        name: &'static str,
+        ts: u64,
+        args: Vec<(&'static str, u64)>,
+    ) {
+        if let Some(t) = &self.trace {
+            let mut t = t.borrow_mut();
+            if t.enabled() {
+                t.record(TraceEvent {
+                    subsystem: "noc",
+                    track: node as u64,
+                    name,
+                    ts,
+                    phase: TracePhase::Instant,
+                    args,
+                });
+            }
         }
     }
 
@@ -62,6 +96,12 @@ impl IdealNet {
         p.stops.push(dst as u32);
         self.pending.entry(done).or_default().push(id);
         self.flits_injected += len as u64;
+        self.trace_instant(
+            src,
+            "inject",
+            start,
+            vec![("pkt", id as u64), ("dst", dst as u64), ("len", len as u64)],
+        );
         id
     }
 
@@ -75,10 +115,19 @@ impl IdealNet {
             .collect();
         for c in due {
             for id in self.pending.remove(&c).unwrap() {
-                let p = self.table.get_mut(id);
-                p.delivered = p.len;
-                p.done_cycle = c;
-                self.flits_ejected += p.len as u64;
+                let (dst, latency) = {
+                    let p = self.table.get_mut(id);
+                    p.delivered = p.len;
+                    p.done_cycle = c;
+                    self.flits_ejected += p.len as u64;
+                    (p.dst, c.saturating_sub(p.inject_cycle))
+                };
+                self.trace_instant(
+                    dst as usize,
+                    "eject",
+                    c,
+                    vec![("pkt", id as u64), ("latency", latency)],
+                );
             }
         }
     }

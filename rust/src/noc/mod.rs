@@ -19,7 +19,8 @@ pub use backend::{build_backend, NocBackend};
 pub use ideal::IdealNet;
 pub use network::Network;
 pub use sim::{
-    run_flows, run_synthetic, run_synthetic_with, NocStats, StepMode, SyntheticConfig,
+    run_flows, run_flows_detailed_traced, run_synthetic, run_synthetic_traced, run_synthetic_with,
+    NocStats, StepMode, SyntheticConfig,
 };
 pub use topology::{Dir, Mesh};
 pub use traffic::{Flow, Pattern};

@@ -36,6 +36,8 @@
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
 
+use crate::obs::trace::{SharedSink, TraceEvent, TracePhase};
+
 use super::packet::{Flit, PacketTable};
 use super::topology::{Dir, Mesh};
 
@@ -95,6 +97,9 @@ pub struct Network {
     /// Nodes with a non-empty source queue (event-driven injection scan).
     active_src: Vec<u32>,
     src_active: Vec<bool>,
+    /// Optional trace sink (None = zero overhead beyond one `Option`
+    /// check per packet event site; behavior is identical either way).
+    trace: Option<SharedSink>,
     /// All packets ever injected (stats source).
     pub table: PacketTable,
     /// Current NoC cycle.
@@ -140,10 +145,40 @@ impl Network {
             woken: Vec::new(),
             active_src: Vec::new(),
             src_active: vec![false; n],
+            trace: None,
             table: PacketTable::default(),
             now: 0,
             flits_injected: 0,
             flits_ejected: 0,
+        }
+    }
+
+    /// Report timeline events (packet inject/hop/bypass/eject, subsystem
+    /// `"noc"`, track = node) to `sink`. Tracing is observational only:
+    /// routing, arbitration, and every stat stay bit-identical
+    /// (`tests/obs_parity.rs`).
+    pub fn attach_trace(&mut self, sink: SharedSink) {
+        self.trace = Some(sink);
+    }
+
+    /// True when a sink is attached and currently recording.
+    #[inline]
+    fn tracing(&self) -> bool {
+        self.trace.as_ref().is_some_and(|t| t.borrow().enabled())
+    }
+
+    /// Record one instant event at (`node`, `name`) — call only after a
+    /// [`Self::tracing`] check.
+    fn trace_instant(&self, node: usize, name: &'static str, args: Vec<(&'static str, u64)>) {
+        if let Some(t) = &self.trace {
+            t.borrow_mut().record(TraceEvent {
+                subsystem: "noc",
+                track: node as u64,
+                name,
+                ts: self.now,
+                phase: TracePhase::Instant,
+                args,
+            });
         }
     }
 
@@ -484,10 +519,20 @@ impl Network {
             self.node_flits[node] -= 1;
             self.flits_ejected += 1;
             let now = self.now;
-            let p = self.table.get_mut(f.pkt);
-            p.delivered += 1;
-            if p.delivered == p.len {
-                p.done_cycle = now;
+            let (done, latency) = {
+                let p = self.table.get_mut(f.pkt);
+                p.delivered += 1;
+                if p.delivered == p.len {
+                    p.done_cycle = now;
+                }
+                (p.delivered == p.len, now.saturating_sub(p.inject_cycle))
+            };
+            if done && self.tracing() {
+                self.trace_instant(
+                    node,
+                    "eject",
+                    vec![("pkt", f.pkt as u64), ("latency", latency)],
+                );
             }
             return true;
         }
@@ -499,6 +544,18 @@ impl Network {
         }
         let path = &seg[..len];
         let stop = path[len - 1];
+        // SMART observability: a head flit committing a multi-hop segment
+        // is a bypass (intermediate router pipelines skipped); a one-hop
+        // segment is an ordinary wormhole hop. Body flits replay the
+        // head's segmentation and are not re-reported.
+        if f.is_head() && self.tracing() {
+            let name = if len > 1 { "bypass" } else { "hop" };
+            self.trace_instant(
+                node,
+                name,
+                vec![("pkt", f.pkt as u64), ("hops", len as u64), ("to", stop as u64)],
+            );
+        }
         // Commit: consume links, update locks, move the flit. The whole
         // traversed segment is locked packet-wise (the SSR reserves the
         // path): locking only the segment-start output would let another
@@ -560,13 +617,20 @@ impl Network {
             return;
         }
         let idx = self.src_next_flit[node];
-        let len = {
+        let (len, dst) = {
             let p = self.table.get_mut(pkt);
             if p.inject_cycle == u64::MAX {
                 p.inject_cycle = self.now;
             }
-            p.len
+            (p.len, p.dst)
         };
+        if idx == 0 && self.tracing() {
+            self.trace_instant(
+                node,
+                "inject",
+                vec![("pkt", pkt as u64), ("dst", dst as u64), ("len", len as u64)],
+            );
+        }
         let ready_at = self.now + self.router_latency;
         self.buffers[local].push_back(Flit {
             pkt,

@@ -8,6 +8,7 @@
 //! [`NocStats`] (`rust/tests/golden_noc_parity.rs`).
 
 use crate::config::NocKind;
+use crate::obs::trace::SharedSink;
 use crate::util::stats::Accumulator;
 use crate::util::Rng;
 
@@ -106,6 +107,13 @@ impl DriverNet {
         match self {
             DriverNet::Backend(n) => n.flits_ejected(),
             DriverNet::Reference(n) => n.flits_ejected,
+        }
+    }
+
+    fn attach_trace(&mut self, sink: SharedSink) {
+        match self {
+            DriverNet::Backend(n) => n.attach_trace(sink),
+            DriverNet::Reference(n) => n.attach_trace(sink),
         }
     }
 }
@@ -210,8 +218,27 @@ pub fn run_synthetic_with(
     hpc_max: usize,
     mode: StepMode,
 ) -> NocStats {
+    run_synthetic_traced(kind, mesh, cfg, hpc_max, mode, None)
+}
+
+/// [`run_synthetic_with`] with an optional trace sink attached to the
+/// backend (packet inject/hop/bypass/eject events, subsystem `"noc"`).
+/// Tracing is observational: stats are bit-identical with or without a
+/// sink (`tests/obs_parity.rs`).
+pub fn run_synthetic_traced(
+    kind: NocKind,
+    mesh: Mesh,
+    cfg: &SyntheticConfig,
+    hpc_max: usize,
+    mode: StepMode,
+    trace: Option<SharedSink>,
+) -> NocStats {
+    let _prof = crate::obs::profile::scope("noc.synthetic_point");
     let (rl, depth) = cfg.router_for(kind);
     let mut net = DriverNet::build(kind, mesh, hpc_max, rl, depth, mode);
+    if let Some(sink) = trace {
+        net.attach_trace(sink);
+    }
     let mut rng = Rng::new(cfg.seed);
     // Bernoulli packet generation: rate flits/node/cycle -> p per cycle.
     let p_gen = cfg.injection_rate / cfg.packet_len as f64;
@@ -299,7 +326,39 @@ pub fn run_flows_detailed(
     router_latency: u64,
     buffer_depth: usize,
 ) -> Vec<FlowStats> {
+    run_flows_detailed_traced(
+        kind,
+        mesh,
+        flows,
+        warmup,
+        measure,
+        drain,
+        hpc_max,
+        router_latency,
+        buffer_depth,
+        None,
+    )
+}
+
+/// [`run_flows_detailed`] with an optional trace sink attached to the
+/// backend. Observational only; per-flow stats are bit-identical.
+#[allow(clippy::too_many_arguments)]
+pub fn run_flows_detailed_traced(
+    kind: NocKind,
+    mesh: Mesh,
+    flows: &[Flow],
+    warmup: u64,
+    measure: u64,
+    drain: u64,
+    hpc_max: usize,
+    router_latency: u64,
+    buffer_depth: usize,
+    trace: Option<SharedSink>,
+) -> Vec<FlowStats> {
     let mut net = build_backend(kind, mesh, hpc_max, router_latency, buffer_depth);
+    if let Some(sink) = trace {
+        net.attach_trace(sink);
+    }
     let mut pacers: Vec<FlowPacer> = flows.iter().map(|&f| FlowPacer::new(f)).collect();
     // All packets ever generated per flow, plus how many were offered
     // inside the measurement window.

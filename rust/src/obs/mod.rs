@@ -1,0 +1,28 @@
+//! Observability: deterministic trace export, a metrics registry, and
+//! self-profiling hooks (DESIGN.md §7).
+//!
+//! Three independent planes, all zero-dependency:
+//!
+//! - [`trace`] — an object-safe [`TraceSink`] every engine reports
+//!   timeline events to (virtual-cycle timestamps, so recordings are
+//!   deterministic per seed), exported as Chrome trace-event JSON via
+//!   `--trace-out` on the `noc`, `simulate`, and `cluster` subcommands;
+//! - [`metrics`] — named counters/gauges plus bounded-memory streaming
+//!   histograms (≤1% relative error), rendered as the `metrics` block in
+//!   `--json` outputs;
+//! - [`profile`] — wall-clock scoped timers around the hot paths,
+//!   aggregated into the `smart-pim profile` report and the bench rows.
+//!
+//! Contract: instrumentation must never change simulated behavior. With
+//! a [`NullSink`] every stat is bit-identical to an uninstrumented
+//! build, and a recording run reports exactly the stats of a no-op run
+//! (`tests/obs_parity.rs`).
+
+pub mod metrics;
+pub mod profile;
+pub mod trace;
+
+pub use metrics::{LogHistogram, MetricsRegistry};
+pub use trace::{
+    chrome_trace, NullSink, RecordingSink, SharedSink, TraceEvent, TracePhase, TraceSink,
+};

@@ -1,0 +1,223 @@
+//! Self-profiling: scoped wall-clock timers around the crate's hot paths
+//! (sweep points, cluster event-loop phases, planner search rounds,
+//! engine runs), aggregated into a process-global report.
+//!
+//! The profiler measures **wall time only** — it never touches virtual
+//! cycles, so enabling it cannot change any simulated stat (the parity
+//! suite runs with it both off and on). It is disabled by default;
+//! when disabled a [`scope`] costs one relaxed atomic load. Sections are
+//! thread-safe (sweep points run on worker threads) and keyed by static
+//! names, so the report is a deterministic *set* of sections even though
+//! the timings themselves are machine-dependent.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+fn sections() -> &'static Mutex<BTreeMap<&'static str, Section>> {
+    static SECTIONS: OnceLock<Mutex<BTreeMap<&'static str, Section>>> = OnceLock::new();
+    SECTIONS.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+/// Aggregated timings of one named code section.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Section {
+    /// Times the section was entered.
+    pub calls: u64,
+    /// Total nanoseconds across all calls.
+    pub nanos: u128,
+}
+
+impl Section {
+    /// Mean nanoseconds per call (0 when never called).
+    pub fn mean_nanos(&self) -> f64 {
+        if self.calls == 0 {
+            0.0
+        } else {
+            self.nanos as f64 / self.calls as f64
+        }
+    }
+}
+
+/// Turn profiling on (timers start recording).
+pub fn enable() {
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Turn profiling off (scopes become one atomic load again).
+pub fn disable() {
+    ENABLED.store(false, Ordering::Relaxed);
+}
+
+/// Whether timers are currently recording.
+pub fn is_enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Drop all recorded sections (does not change enablement).
+pub fn reset() {
+    sections().lock().unwrap().clear();
+}
+
+/// Fold a pre-aggregated measurement into section `name`. Hot loops that
+/// cannot afford one `Instant::now` pair per iteration accumulate
+/// locally and call this once.
+pub fn add(name: &'static str, calls: u64, nanos: u128) {
+    if calls == 0 && nanos == 0 {
+        return;
+    }
+    let mut map = sections().lock().unwrap();
+    let s = map.entry(name).or_default();
+    s.calls += calls;
+    s.nanos += nanos;
+}
+
+/// RAII timer: measures from construction to drop when profiling is
+/// enabled, otherwise does nothing.
+pub struct Scope {
+    name: &'static str,
+    start: Option<Instant>,
+}
+
+/// Open a timed scope over `name`.
+pub fn scope(name: &'static str) -> Scope {
+    Scope {
+        name,
+        start: is_enabled().then(Instant::now),
+    }
+}
+
+impl Drop for Scope {
+    fn drop(&mut self) {
+        if let Some(start) = self.start {
+            add(self.name, 1, start.elapsed().as_nanos());
+        }
+    }
+}
+
+/// Snapshot of all sections recorded so far (sorted by name).
+pub fn snapshot() -> BTreeMap<&'static str, Section> {
+    sections().lock().unwrap().clone()
+}
+
+/// Per-section difference `after - before`, dropping empty deltas — the
+/// bench uses this to attribute profile time to individual rows.
+pub fn delta(
+    before: &BTreeMap<&'static str, Section>,
+    after: &BTreeMap<&'static str, Section>,
+) -> BTreeMap<&'static str, Section> {
+    let mut out = BTreeMap::new();
+    for (&name, a) in after {
+        let b = before.get(name).copied().unwrap_or_default();
+        let d = Section {
+            calls: a.calls - b.calls,
+            nanos: a.nanos - b.nanos,
+        };
+        if d.calls > 0 || d.nanos > 0 {
+            out.insert(name, d);
+        }
+    }
+    out
+}
+
+/// Render sections as JSON: `{"section": {"calls": n, "total_ms": x,
+/// "mean_us": y}, ...}`.
+pub fn sections_json(map: &BTreeMap<&'static str, Section>) -> Json {
+    Json::Obj(
+        map.iter()
+            .map(|(&name, s)| {
+                (
+                    name.to_string(),
+                    Json::obj(vec![
+                        ("calls", s.calls.into()),
+                        ("total_ms", (s.nanos as f64 / 1e6).into()),
+                        ("mean_us", (s.mean_nanos() / 1e3).into()),
+                    ]),
+                )
+            })
+            .collect(),
+    )
+}
+
+/// The current aggregate report as JSON.
+pub fn report_json() -> Json {
+    sections_json(&snapshot())
+}
+
+/// Human-readable report table (one line per section, widest first by
+/// total time).
+pub fn report_table() -> String {
+    let snap = snapshot();
+    if snap.is_empty() {
+        return "profile: no sections recorded (is profiling enabled?)\n".to_string();
+    }
+    let mut rows: Vec<(&'static str, Section)> = snap.into_iter().collect();
+    rows.sort_by(|a, b| b.1.nanos.cmp(&a.1.nanos).then(a.0.cmp(b.0)));
+    let mut out = String::from(
+        "section                          calls     total ms      mean us\n",
+    );
+    for (name, s) in rows {
+        out.push_str(&format!(
+            "{:<30} {:>8} {:>12.3} {:>12.3}\n",
+            name,
+            s.calls,
+            s.nanos as f64 / 1e6,
+            s.mean_nanos() / 1e3,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The profiler is process-global state shared across the test
+    // harness's threads: tests that toggle enablement serialize on this
+    // lock, and every test uses its own section names.
+    static TOGGLE: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn disabled_scope_records_nothing() {
+        let _guard = TOGGLE.lock().unwrap();
+        disable();
+        drop(scope("test.disabled"));
+        assert!(snapshot().get("test.disabled").is_none());
+    }
+
+    #[test]
+    fn enabled_scope_records_calls() {
+        let _guard = TOGGLE.lock().unwrap();
+        enable();
+        {
+            let _s = scope("test.enabled");
+        }
+        {
+            let _s = scope("test.enabled");
+        }
+        disable();
+        let snap = snapshot();
+        let s = snap.get("test.enabled").unwrap();
+        assert_eq!(s.calls, 2);
+    }
+
+    #[test]
+    fn add_and_delta_fold_correctly() {
+        add("test.fold", 3, 3_000);
+        let before = snapshot();
+        add("test.fold", 2, 1_000);
+        let d = delta(&before, &snapshot());
+        let s = d.get("test.fold").unwrap();
+        assert_eq!(s.calls, 2);
+        assert_eq!(s.nanos, 1_000);
+        assert!((s.mean_nanos() - 500.0).abs() < 1e-9);
+        let doc = sections_json(&d).render();
+        assert!(doc.contains("\"test.fold\""), "{doc}");
+        assert!(report_table().contains("test.fold"));
+    }
+}

@@ -1,0 +1,317 @@
+//! Trace events and sinks: the crate-wide instrumentation tap.
+//!
+//! Every engine (NoC, pipeline, cluster, tenant) reports what happened —
+//! and *when*, in virtual cycles — through the object-safe [`TraceSink`]
+//! trait, mirroring the [`crate::noc::NocBackend`] /
+//! [`crate::mapping::MappingBackend`] idiom. The default [`NullSink`]
+//! discards everything; a [`RecordingSink`] keeps the event stream and
+//! exports it as Chrome trace-event JSON (loadable in Perfetto /
+//! `chrome://tracing`).
+//!
+//! Determinism contract: timestamps are **virtual cycles**, never wall
+//! clock, so a recorded trace is a pure function of the run's seed and
+//! configuration — two runs with the same seed produce byte-identical
+//! trace files. The dual parity contract (pinned by
+//! `tests/obs_parity.rs`): a run with the [`NullSink`] is bit-identical
+//! to an uninstrumented run, and attaching a [`RecordingSink`] changes
+//! no reported stat.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use crate::util::json::Json;
+
+/// What kind of mark an event leaves on the timeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TracePhase {
+    /// A point event (Chrome phase `i`).
+    Instant,
+    /// A closed interval starting at `ts` (Chrome phase `X`).
+    Span {
+        /// Duration in virtual cycles.
+        dur: u64,
+    },
+    /// A sampled counter value (Chrome phase `C`).
+    Counter {
+        /// The counter's value at `ts`.
+        value: u64,
+    },
+}
+
+/// One timeline event. `subsystem` maps to a Chrome *process*, `track`
+/// to a *thread* within it (a node index, stage index, or router id), so
+/// Perfetto groups related activity onto shared swimlanes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Emitting subsystem (e.g. `"noc"`, `"pipeline"`, `"cluster.node"`).
+    pub subsystem: &'static str,
+    /// Track (swimlane) within the subsystem.
+    pub track: u64,
+    /// Event name (static so the hot path never allocates).
+    pub name: &'static str,
+    /// Timestamp in virtual cycles.
+    pub ts: u64,
+    /// Instant / span / counter.
+    pub phase: TracePhase,
+    /// Small numeric payload, rendered into the Chrome `args` object.
+    pub args: Vec<(&'static str, u64)>,
+}
+
+/// Object-safe event consumer. Hot paths must guard event construction
+/// on [`TraceSink::enabled`] so the no-op case costs one branch.
+pub trait TraceSink {
+    /// Whether events should be built and recorded at all.
+    fn enabled(&self) -> bool;
+    /// Consume one event (no-op sinks discard it).
+    fn record(&mut self, ev: TraceEvent);
+    /// Attach a human-readable name to a track (emitted as Chrome
+    /// `thread_name` metadata). Default: ignore.
+    fn name_track(&mut self, _subsystem: &'static str, _track: u64, _name: &str) {}
+}
+
+/// The no-op sink: every un-traced entry point routes through this, and
+/// the parity suite pins that doing so changes nothing observable.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NullSink;
+
+impl TraceSink for NullSink {
+    fn enabled(&self) -> bool {
+        false
+    }
+
+    fn record(&mut self, _ev: TraceEvent) {}
+}
+
+/// Shared sink handle for engines that outlive a single call (the NoC
+/// backends own their sink across `step`/`drain`; the caller keeps a
+/// clone to read the recording back). Single-threaded by construction —
+/// each sweep worker builds its own network and sink.
+pub type SharedSink = Rc<RefCell<dyn TraceSink>>;
+
+/// In-memory recording sink.
+#[derive(Debug, Clone, Default)]
+pub struct RecordingSink {
+    events: Vec<TraceEvent>,
+    names: BTreeMap<(&'static str, u64), String>,
+}
+
+impl RecordingSink {
+    /// An empty recording.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Wrap a recording in the shared handle the NoC backends take. Keep
+    /// the original `Rc` to inspect the recording after the run:
+    /// `Rc::new(RefCell::new(sink))` then coerce clones.
+    pub fn shared(self) -> Rc<RefCell<RecordingSink>> {
+        Rc::new(RefCell::new(self))
+    }
+
+    /// All recorded events, in recording order.
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    /// Number of recorded events.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// True when nothing was recorded.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Events of one subsystem, in recording order.
+    pub fn events_for(&self, subsystem: &str) -> Vec<&TraceEvent> {
+        self.events
+            .iter()
+            .filter(|e| e.subsystem == subsystem)
+            .collect()
+    }
+
+    /// Export as a Chrome trace-event document (see [`chrome_trace`]).
+    pub fn chrome_trace(&self) -> Json {
+        chrome_trace(&self.events, &self.names)
+    }
+}
+
+impl TraceSink for RecordingSink {
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    fn record(&mut self, ev: TraceEvent) {
+        self.events.push(ev);
+    }
+
+    fn name_track(&mut self, subsystem: &'static str, track: u64, name: &str) {
+        self.names
+            .entry((subsystem, track))
+            .or_insert_with(|| name.to_string());
+    }
+}
+
+/// Build a Chrome trace-event JSON document (the `{"traceEvents": [...]}`
+/// envelope Perfetto and `chrome://tracing` load directly).
+///
+/// - each distinct `subsystem` becomes a process (`pid` assigned in
+///   lexicographic order, so the mapping is deterministic), announced by
+///   `process_name` metadata;
+/// - each named track becomes `thread_name` metadata;
+/// - events are stably sorted by timestamp, which makes per-track
+///   timestamps monotone even when an engine records a span before an
+///   earlier-starting span on another arrival path;
+/// - `ts`/`dur` carry virtual cycles directly in the microsecond fields
+///   (1 cycle renders as 1 "us"), keeping traces seed-deterministic.
+pub fn chrome_trace(events: &[TraceEvent], names: &BTreeMap<(&'static str, u64), String>) -> Json {
+    let mut subsystems: Vec<&'static str> = events.iter().map(|e| e.subsystem).collect();
+    subsystems.extend(names.keys().map(|(s, _)| *s));
+    subsystems.sort_unstable();
+    subsystems.dedup();
+    let pid_of = |s: &str| -> u64 {
+        1 + subsystems
+            .iter()
+            .position(|&x| x == s)
+            .expect("subsystem registered") as u64
+    };
+
+    let mut out: Vec<Json> = Vec::with_capacity(events.len() + subsystems.len() + names.len());
+    for s in &subsystems {
+        out.push(Json::obj(vec![
+            ("ph", "M".into()),
+            ("pid", pid_of(s).into()),
+            ("name", "process_name".into()),
+            ("args", Json::obj(vec![("name", (*s).into())])),
+        ]));
+    }
+    for ((s, track), name) in names {
+        out.push(Json::obj(vec![
+            ("ph", "M".into()),
+            ("pid", pid_of(s).into()),
+            ("tid", (*track).into()),
+            ("name", "thread_name".into()),
+            ("args", Json::obj(vec![("name", name.as_str().into())])),
+        ]));
+    }
+
+    let mut ordered: Vec<&TraceEvent> = events.iter().collect();
+    ordered.sort_by_key(|e| e.ts);
+    for e in ordered {
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("name", e.name.into()),
+            ("pid", pid_of(e.subsystem).into()),
+            ("tid", e.track.into()),
+            ("ts", e.ts.into()),
+        ];
+        match e.phase {
+            TracePhase::Instant => {
+                pairs.push(("ph", "i".into()));
+                pairs.push(("s", "t".into()));
+            }
+            TracePhase::Span { dur } => {
+                pairs.push(("ph", "X".into()));
+                pairs.push(("dur", dur.into()));
+            }
+            TracePhase::Counter { .. } => {
+                pairs.push(("ph", "C".into()));
+            }
+        }
+        let mut args: Vec<(&str, Json)> = Vec::with_capacity(e.args.len() + 1);
+        if let TracePhase::Counter { value } = e.phase {
+            args.push(("value", value.into()));
+        }
+        for (k, v) in &e.args {
+            args.push((k, (*v).into()));
+        }
+        if !args.is_empty() {
+            pairs.push(("args", Json::obj(args)));
+        }
+        out.push(Json::obj(pairs));
+    }
+    Json::obj(vec![("traceEvents", Json::Arr(out))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(subsystem: &'static str, track: u64, ts: u64, phase: TracePhase) -> TraceEvent {
+        TraceEvent {
+            subsystem,
+            track,
+            name: "e",
+            ts,
+            phase,
+            args: vec![("x", 7)],
+        }
+    }
+
+    #[test]
+    fn null_sink_reports_disabled() {
+        assert!(!NullSink.enabled());
+        NullSink.record(ev("a", 0, 0, TracePhase::Instant));
+    }
+
+    #[test]
+    fn recording_sink_keeps_order_and_names() {
+        let mut s = RecordingSink::new();
+        s.name_track("a", 3, "node 3");
+        s.record(ev("a", 3, 10, TracePhase::Span { dur: 5 }));
+        s.record(ev("b", 0, 2, TracePhase::Instant));
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.events()[0].ts, 10);
+        assert_eq!(s.events_for("b").len(), 1);
+    }
+
+    #[test]
+    fn chrome_export_sorts_by_ts_and_round_trips() {
+        let mut s = RecordingSink::new();
+        s.name_track("beta", 1, "track one");
+        s.record(ev("beta", 1, 30, TracePhase::Span { dur: 4 }));
+        s.record(ev("alpha", 0, 10, TracePhase::Instant));
+        s.record(ev("beta", 1, 20, TracePhase::Counter { value: 9 }));
+        let doc = s.chrome_trace();
+        let parsed = Json::parse(&doc.render()).unwrap();
+        let evs = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 process_name + 1 thread_name + 3 events.
+        assert_eq!(evs.len(), 6);
+        // Metadata first; then events in ts order regardless of recording
+        // order.
+        let ts: Vec<f64> = evs
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str() != Some("M"))
+            .map(|e| e.get("ts").unwrap().as_f64().unwrap())
+            .collect();
+        assert_eq!(ts, vec![10.0, 20.0, 30.0]);
+        // pids are assigned lexicographically: alpha=1, beta=2.
+        let first = &evs[0];
+        assert_eq!(
+            first.get("args").unwrap().get("name").unwrap().as_str(),
+            Some("alpha")
+        );
+        assert_eq!(first.get("pid").unwrap().as_f64(), Some(1.0));
+        // Counter events carry their value in args.
+        let c = evs
+            .iter()
+            .find(|e| e.get("ph").unwrap().as_str() == Some("C"))
+            .unwrap();
+        assert_eq!(
+            c.get("args").unwrap().get("value").unwrap().as_f64(),
+            Some(9.0)
+        );
+    }
+
+    #[test]
+    fn export_is_deterministic() {
+        let build = || {
+            let mut s = RecordingSink::new();
+            s.record(ev("z", 0, 5, TracePhase::Instant));
+            s.record(ev("a", 1, 5, TracePhase::Span { dur: 1 }));
+            s.chrome_trace().render_pretty()
+        };
+        assert_eq!(build(), build());
+    }
+}

@@ -128,6 +128,7 @@ impl<'a> Planner<'a> {
     /// Run the search. Errors when even the all-ones plan exceeds the
     /// budget (the network simply does not fit that many tiles).
     pub fn search(&self) -> Result<PlanSearchResult, String> {
+        let _prof = crate::obs::profile::scope("planner.search");
         let cm = CostModel::new(self.net, self.arch);
         let budget = self.budget();
         let b = self.cfg.batch_depth.max(1);
@@ -191,6 +192,7 @@ impl<'a> Planner<'a> {
         let lift_all = b == 1;
 
         loop {
+            let _round = crate::obs::profile::scope("planner.round");
             let mut children: Vec<PlanCandidate> = Vec::new();
             for state in &beam {
                 let bottleneck = state.assessment.interval;

@@ -13,6 +13,7 @@
 
 use std::collections::VecDeque;
 
+use crate::obs::trace::{NullSink, TraceEvent, TracePhase, TraceSink};
 use crate::pipeline::StagePlan;
 
 /// Ring size for delayed-visibility snapshots; must exceed every stage
@@ -102,6 +103,9 @@ struct Stage {
     /// finish_emit[img] = cycle the stage emitted the last unit (u64::MAX
     /// while unfinished).
     finish_emit: Vec<u64>,
+    /// start_emit[img] = cycle the stage emitted its first unit (u64::MAX
+    /// while unstarted) — the exact trace-window left edge.
+    start_emit: Vec<u64>,
     /// Ring of (image, emitted) snapshots, indexed by cycle % RING.
     ring: Vec<(u64, u64)>,
 }
@@ -119,6 +123,7 @@ impl Stage {
             queue: VecDeque::new(),
             emitted: 0,
             finish_emit: vec![u64::MAX; images],
+            start_emit: vec![u64::MAX; images],
             ring: vec![(u64::MAX, 0); RING],
         }
     }
@@ -189,7 +194,24 @@ impl Engine {
 
     /// Run to completion of all images (or the safety cap) and return the
     /// schedule.
-    pub fn run(mut self) -> SimResult {
+    pub fn run(self) -> SimResult {
+        self.run_with_sink(&mut NullSink)
+    }
+
+    /// [`Engine::run`] reporting trace events to `sink`: one `"stage"`
+    /// span per (stage, image) — the **exact** emission window, unlike
+    /// the static reconstruction in [`crate::sim::windows`] — plus
+    /// `"inject"` / `"complete"` instants. With [`NullSink`] this is
+    /// exactly [`Engine::run`] (the schedule is bit-identical either
+    /// way; pinned by `tests/obs_parity.rs`).
+    pub fn run_with_sink(mut self, sink: &mut dyn TraceSink) -> SimResult {
+        let _prof = crate::obs::profile::scope("engine.run");
+        if sink.enabled() {
+            for (i, s) in self.stages.iter().enumerate() {
+                sink.name_track("pipeline", i as u64, &s.plan.name);
+            }
+            sink.name_track("pipeline", self.stages.len() as u64, "inject");
+        }
         // Generous cap: serial execution of everything at the *effective*
         // (NoC-throttled) rates, times 4.
         let serial: u64 = self
@@ -201,7 +223,7 @@ impl Engine {
             .saturating_mul(4)
             .max(10_000);
         while self.done_count() < self.images {
-            self.step();
+            self.step(sink);
             assert!(
                 self.now < serial,
                 "engine exceeded safety cap {serial} (deadlock?)"
@@ -233,7 +255,7 @@ impl Engine {
                     .collect();
                 eprintln!("t={} {}", self.now, prog.join(" "));
             }
-            self.step();
+            self.step(&mut NullSink);
         }
         SimResult {
             completions: self.completions,
@@ -246,7 +268,7 @@ impl Engine {
         self.next_done
     }
 
-    fn step(&mut self) {
+    fn step(&mut self, sink: &mut dyn TraceSink) {
         let now = self.now;
         // Injection policy (evaluated at cycle start).
         if self.injected < self.images {
@@ -265,6 +287,16 @@ impl Engine {
                 }
                 self.injections[img as usize] = now;
                 self.injected += 1;
+                if sink.enabled() {
+                    sink.record(TraceEvent {
+                        subsystem: "pipeline",
+                        track: self.stages.len() as u64,
+                        name: "inject",
+                        ts: now,
+                        phase: TracePhase::Instant,
+                        args: vec![("image", img)],
+                    });
+                }
             }
         }
 
@@ -304,9 +336,9 @@ impl Engine {
             let s = &mut self.stages[i];
             if let Some(&img) = s.queue.front() {
                 if can > s.emitted {
-                    if let Some(r) = s.rate_int {
+                    let emit = if let Some(r) = s.rate_int {
                         // Fast path: unthrottled integer rate (no credit).
-                        s.emitted += r.min(can - s.emitted);
+                        r.min(can - s.emitted)
                     } else {
                         s.credit += s.rate;
                         let burst = s.credit.floor() as u64;
@@ -315,14 +347,36 @@ impl Engine {
                         // Cap credit so idle periods don't bank an
                         // unbounded burst.
                         s.credit = s.credit.min(s.rate.max(1.0));
-                        s.emitted += emit;
+                        emit
+                    };
+                    if emit > 0 && s.emitted == 0 {
+                        s.start_emit[img as usize] = now;
                     }
+                    s.emitted += emit;
                 }
                 if s.emitted >= s.plan.p_total {
                     s.finish_emit[img as usize] = now;
                     s.queue.pop_front();
                     s.emitted = 0;
                     s.credit = 0.0;
+                    if sink.enabled() {
+                        // Zero-unit stages (none exist today) would pop
+                        // without emitting; fall back to a 1-cycle span.
+                        let start = match s.start_emit[img as usize] {
+                            u64::MAX => now,
+                            t => t,
+                        };
+                        sink.record(TraceEvent {
+                            subsystem: "pipeline",
+                            track: i as u64,
+                            name: "stage",
+                            ts: start,
+                            phase: TracePhase::Span {
+                                dur: now + 1 - start,
+                            },
+                            args: vec![("image", img), ("stage", i as u64)],
+                        });
+                    }
                 }
             }
             self.write_ring(i);
@@ -330,12 +384,23 @@ impl Engine {
         // Image completes when the last stage's tail drains its pipe.
         // Stages process images in order, so completions fill in order.
         let last = self.stages.last().unwrap();
+        let last_track = self.stages.len() as u64 - 1;
         while self.next_done < self.images {
             let f = last.finish_emit[self.next_done as usize];
             if f == u64::MAX || f + last.depth > now {
                 break;
             }
             self.completions[self.next_done as usize] = f + last.depth;
+            if sink.enabled() {
+                sink.record(TraceEvent {
+                    subsystem: "pipeline",
+                    track: last_track,
+                    name: "complete",
+                    ts: f + last.depth,
+                    phase: TracePhase::Instant,
+                    args: vec![("image", self.next_done)],
+                });
+            }
             self.next_done += 1;
         }
         self.now += 1;

@@ -6,8 +6,9 @@
 use crate::cnn::{vgg, Network, VggVariant};
 use crate::config::{ArchConfig, NocKind, Scenario};
 use crate::mapping::{MappingSelection, NetworkMapping, Placement, ReplicationPlan};
-use crate::noc::sim::run_flows_detailed;
+use crate::noc::sim::run_flows_detailed_traced;
 use crate::noc::Mesh;
+use crate::obs::trace::SharedSink;
 use crate::pipeline::{build_plans, StagePlan};
 use crate::power::{EnergyBreakdown, EnergyModel};
 
@@ -43,6 +44,21 @@ pub fn assess_noc(
     plans: &[StagePlan],
     arch: &ArchConfig,
 ) -> (NocAdjust, Vec<LayerFlows>) {
+    assess_noc_traced(kind, net, mapping, placement, plans, arch, None)
+}
+
+/// [`assess_noc`] with an optional trace sink attached to the NoC backend
+/// (subsystem `"noc"` events from the CNN flow run). Observational only.
+#[allow(clippy::too_many_arguments)]
+pub fn assess_noc_traced(
+    kind: NocKind,
+    net: &Network,
+    mapping: &NetworkMapping,
+    placement: &Placement,
+    plans: &[StagePlan],
+    arch: &ArchConfig,
+    trace: Option<SharedSink>,
+) -> (NocAdjust, Vec<LayerFlows>) {
     let layer_flows = extract_flows(net, mapping, placement, plans, arch);
     let n = plans.len();
     let mut adjust = NocAdjust::identity(n);
@@ -56,7 +72,7 @@ pub fn assess_noc(
     }
     let (rl, depth) = router_params(kind);
     let mesh = Mesh::new(arch.tiles_x, arch.tiles_y);
-    let stats = run_flows_detailed(
+    let stats = run_flows_detailed_traced(
         kind,
         mesh,
         &flows,
@@ -66,6 +82,7 @@ pub fn assess_noc(
         arch.hpc_max,
         rl,
         depth,
+        trace,
     );
     let phi = arch.noc_cycles_per_logical();
     // Aggregate per layer, weighted by offered packets: the stage's
@@ -187,11 +204,35 @@ pub fn evaluate_network_mapped(
     arch: &ArchConfig,
     images: u64,
 ) -> Result<NetworkReport, String> {
+    evaluate_network_mapped_traced(net, plan, selection, batch, noc, arch, images, None)
+}
+
+/// [`evaluate_network_mapped`] with an optional trace sink threaded
+/// through both halves of the co-simulation: the NoC flow run (subsystem
+/// `"noc"`) and the pipeline engine (subsystem `"pipeline"`). With `None`
+/// this *is* [`evaluate_network_mapped`]; with a sink, every reported
+/// number is still bit-identical (`tests/obs_parity.rs`).
+#[allow(clippy::too_many_arguments)]
+pub fn evaluate_network_mapped_traced(
+    net: &Network,
+    plan: &ReplicationPlan,
+    selection: &MappingSelection,
+    batch: bool,
+    noc: NocKind,
+    arch: &ArchConfig,
+    images: u64,
+    trace: Option<SharedSink>,
+) -> Result<NetworkReport, String> {
     let mapping = NetworkMapping::build_with(net, arch, plan, selection)?;
     let placement = Placement::snake(arch);
     let plans = build_plans(net, &mapping, arch);
-    let (adjust, layer_flows) = assess_noc(noc, net, &mapping, &placement, &plans, arch);
-    let sim = Engine::new(&plans, &adjust, batch, images).run();
+    let (adjust, layer_flows) =
+        assess_noc_traced(noc, net, &mapping, &placement, &plans, arch, trace.clone());
+    let engine = Engine::new(&plans, &adjust, batch, images);
+    let sim = match &trace {
+        Some(sink) => engine.run_with_sink(&mut *sink.borrow_mut()),
+        None => engine.run(),
+    };
 
     let interval = sim.interval_or_makespan();
     let lats = sim.latencies();
@@ -241,19 +282,33 @@ pub fn evaluate(
     noc: NocKind,
     arch: &ArchConfig,
 ) -> PerfReport {
+    evaluate_traced(variant, scenario, noc, arch, None)
+}
+
+/// [`evaluate`] with an optional trace sink (see
+/// [`evaluate_network_mapped_traced`]); backs `simulate --trace-out`.
+pub fn evaluate_traced(
+    variant: VggVariant,
+    scenario: Scenario,
+    noc: NocKind,
+    arch: &ArchConfig,
+    trace: Option<SharedSink>,
+) -> PerfReport {
     let net = vgg::build(variant);
     let plan = if scenario.replication() {
         ReplicationPlan::fig7(variant)
     } else {
         ReplicationPlan::none(&net)
     };
-    let r = evaluate_network(
+    let r = evaluate_network_mapped_traced(
         &net,
         &plan,
+        &MappingSelection::im2col(net.len()),
         scenario.batch(),
         noc,
         arch,
         default_images(scenario),
+        trace,
     )
     .expect("mapping must fit");
     PerfReport {

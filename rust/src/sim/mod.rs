@@ -9,7 +9,8 @@ pub mod traffic;
 
 pub use engine::{Engine, NocAdjust, SimResult};
 pub use integrate::{
-    assess_noc, evaluate, evaluate_network, evaluate_network_mapped, NetworkReport, PerfReport,
+    assess_noc, assess_noc_traced, evaluate, evaluate_network, evaluate_network_mapped,
+    evaluate_network_mapped_traced, evaluate_traced, NetworkReport, PerfReport,
 };
-pub use trace::{gantt, windows, Window};
+pub use trace::{gantt, windows, windows_from_trace, Window};
 pub use traffic::{extract_flows, LayerFlows};

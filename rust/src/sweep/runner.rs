@@ -63,7 +63,14 @@ impl SweepRunner {
         }
         let workers = self.threads.min(n);
         if workers <= 1 {
-            return points.iter().enumerate().map(|(i, p)| f(i, p)).collect();
+            return points
+                .iter()
+                .enumerate()
+                .map(|(i, p)| {
+                    let _prof = crate::obs::profile::scope("sweep.point");
+                    f(i, p)
+                })
+                .collect();
         }
         // Work stealing: a shared cursor; each worker grabs the next
         // unclaimed index. Long points therefore never gate short ones the
@@ -79,7 +86,11 @@ impl SweepRunner {
                         if i >= n {
                             break;
                         }
-                        local.push((i, f(i, &points[i])));
+                        let r = {
+                            let _prof = crate::obs::profile::scope("sweep.point");
+                            f(i, &points[i])
+                        };
+                        local.push((i, r));
                     }
                     if !local.is_empty() {
                         collected.lock().unwrap().extend(local);

@@ -1,0 +1,344 @@
+//! Observability parity suite: the hard contract of the `obs` layer.
+//!
+//! 1. Running any engine through its `*_with_sink` / `*_traced` entry
+//!    point with the [`NullSink`] produces **bit-identical** stats to the
+//!    legacy entry point (which now merely delegates) — instrumentation
+//!    with tracing off costs one branch and changes nothing observable.
+//! 2. Attaching a [`RecordingSink`] still changes nothing observable:
+//!    recorded runs report the same stats, percentiles, perf gauges, and
+//!    metrics registries as un-recorded runs.
+//! 3. The Chrome trace-event export round-trips through the in-tree JSON
+//!    parser, keeps per-track timestamps monotone, spans at least three
+//!    subsystems for a cluster run, and is byte-deterministic per seed.
+
+use smart_pim::cluster::{
+    rate_from_qps, simulate, simulate_tenants, simulate_tenants_with_sink, simulate_with_sink,
+    ClusterConfig, ClusterStats, NodeModel, Residency, TenantConfig, TenantWorkload,
+};
+use smart_pim::cnn::{vgg, VggVariant};
+use smart_pim::config::{ArchConfig, NocKind};
+use smart_pim::mapping::{NetworkMapping, ReplicationPlan};
+use smart_pim::noc::{
+    run_synthetic_traced, run_synthetic_with, Mesh, StepMode, SyntheticConfig,
+};
+use smart_pim::obs::trace::{NullSink, RecordingSink, SharedSink, TracePhase};
+use smart_pim::power::WriteCost;
+use smart_pim::sim::{Engine, NocAdjust};
+use smart_pim::util::Json;
+
+// ---- NoC event engine ----------------------------------------------------
+
+#[test]
+fn noc_stats_are_bit_identical_across_sinks() {
+    let arch = ArchConfig::paper_node();
+    let mesh = Mesh::new(8, 8);
+    let cfg = SyntheticConfig {
+        injection_rate: 0.08,
+        measure: 3_000,
+        ..Default::default()
+    };
+    for kind in NocKind::ALL {
+        for mode in [StepMode::EventDriven, StepMode::CycleStepped] {
+            let base = run_synthetic_with(kind, mesh, &cfg, arch.hpc_max, mode);
+            let null = run_synthetic_traced(kind, mesh, &cfg, arch.hpc_max, mode, None);
+            let rec = RecordingSink::new().shared();
+            let traced = run_synthetic_traced(
+                kind,
+                mesh,
+                &cfg,
+                arch.hpc_max,
+                mode,
+                Some(rec.clone() as SharedSink),
+            );
+            assert_eq!(base, null, "{kind:?} {mode:?}: NullSink perturbed stats");
+            assert_eq!(base, traced, "{kind:?} {mode:?}: recording perturbed stats");
+            let sink = rec.borrow();
+            assert!(
+                !sink.events_for("noc").is_empty(),
+                "{kind:?} {mode:?}: no noc events recorded"
+            );
+            for name in ["inject", "eject"] {
+                assert!(
+                    sink.events().iter().any(|e| e.name == name),
+                    "{kind:?} {mode:?}: missing {name:?} events"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn smart_noc_records_bypass_events_at_low_load() {
+    let arch = ArchConfig::paper_node();
+    let cfg = SyntheticConfig {
+        injection_rate: 0.02,
+        measure: 3_000,
+        ..Default::default()
+    };
+    let rec = RecordingSink::new().shared();
+    let _ = run_synthetic_traced(
+        NocKind::Smart,
+        Mesh::new(8, 8),
+        &cfg,
+        arch.hpc_max,
+        StepMode::EventDriven,
+        Some(rec.clone() as SharedSink),
+    );
+    // SMART's whole point: multi-hop bypass under low contention.
+    assert!(
+        rec.borrow().events().iter().any(|e| e.name == "bypass"),
+        "no SMART bypass events at 2% load"
+    );
+}
+
+// ---- pipeline engine -----------------------------------------------------
+
+#[test]
+fn pipeline_engine_schedule_is_bit_identical_across_sinks() {
+    let arch = ArchConfig::paper_node();
+    let net = vgg::build(VggVariant::A);
+    let plan = ReplicationPlan::none(&net);
+    let mapping = NetworkMapping::build(&net, &arch, &plan).expect("VGG-A maps");
+    let plans = smart_pim::pipeline::build_plans(&net, &mapping, &arch);
+    let adjust = NocAdjust::identity(plans.len());
+    let images = 4u64;
+
+    let base = Engine::new(&plans, &adjust, true, images).run();
+    let mut null = NullSink;
+    let with_null = Engine::new(&plans, &adjust, true, images).run_with_sink(&mut null);
+    let mut rec = RecordingSink::new();
+    let traced = Engine::new(&plans, &adjust, true, images).run_with_sink(&mut rec);
+
+    for r in [&with_null, &traced] {
+        assert_eq!(base.completions, r.completions);
+        assert_eq!(base.injections, r.injections);
+        assert_eq!(base.cycles, r.cycles);
+    }
+    // Exactly one emission-window span per (stage, image), one inject and
+    // one complete instant per image.
+    let spans = rec
+        .events()
+        .iter()
+        .filter(|e| e.name == "stage" && matches!(e.phase, TracePhase::Span { .. }))
+        .count();
+    assert_eq!(spans, plans.len() * images as usize);
+    for name in ["inject", "complete"] {
+        let n = rec.events().iter().filter(|e| e.name == name).count();
+        assert_eq!(n, images as usize, "{name} instants");
+    }
+}
+
+// ---- cluster event loop --------------------------------------------------
+
+fn cluster_fixture() -> (NodeModel, ClusterConfig) {
+    let arch = ArchConfig::paper_node();
+    let net = vgg::build(VggVariant::E);
+    let plan = ReplicationPlan::fig7(VggVariant::E);
+    let model = NodeModel::from_workload(&net, &arch, &plan).expect("VGG-E fig7 maps");
+    let cfg = ClusterConfig {
+        nodes: 3,
+        rate_per_cycle: rate_from_qps(2_500.0, arch.logical_cycle_ns),
+        fixed_requests: Some(2_000),
+        seed: 0x0B5_CAFE,
+        ..ClusterConfig::default()
+    };
+    (model, cfg)
+}
+
+fn cluster_identical(a: &ClusterStats, b: &ClusterStats) {
+    assert_eq!(a.offered, b.offered);
+    assert_eq!(a.completed, b.completed);
+    assert_eq!(a.rejected, b.rejected);
+    assert_eq!(a.drained_at, b.drained_at);
+    assert_eq!(a.events_processed, b.events_processed);
+    assert_eq!(a.peak_calendar_depth, b.peak_calendar_depth);
+    assert_eq!(a.latency.p50(), b.latency.p50());
+    assert_eq!(a.latency.p99(), b.latency.p99());
+    assert_eq!(a.latency.p999(), b.latency.p999());
+    assert_eq!(a.latency.mean(), b.latency.mean());
+    assert_eq!(a.queueing.p99(), b.queueing.p99());
+    assert_eq!(a.node_utilization, b.node_utilization);
+    assert_eq!(a.per_node_completed, b.per_node_completed);
+    assert_eq!(a.metrics, b.metrics);
+}
+
+#[test]
+fn cluster_stats_are_bit_identical_across_sinks() {
+    let (model, cfg) = cluster_fixture();
+    let base = simulate(&model, &cfg);
+    let with_null = simulate_with_sink(&model, &cfg, &mut NullSink);
+    let mut rec = RecordingSink::new();
+    let traced = simulate_with_sink(&model, &cfg, &mut rec);
+    cluster_identical(&base, &with_null);
+    cluster_identical(&base, &traced);
+    assert!(!base.metrics.is_empty(), "cluster metrics registry empty");
+
+    // The recorded stream covers the route / batch / node subsystems.
+    for sub in ["cluster.route", "cluster.batch", "cluster.node"] {
+        assert!(
+            !rec.events_for(sub).is_empty(),
+            "no {sub} events in a loaded run"
+        );
+    }
+    let services = rec
+        .events_for("cluster.node")
+        .iter()
+        .filter(|e| e.name == "service")
+        .count();
+    assert_eq!(services as u64, base.completed);
+}
+
+// ---- multi-tenant loop ---------------------------------------------------
+
+fn tenant_fixture() -> (Vec<TenantWorkload>, TenantConfig) {
+    let arch = ArchConfig::paper_node();
+    let build = |name: &str| -> TenantWorkload {
+        let net = smart_pim::cnn::workload(name).expect("known workload");
+        let plan = match net.name.parse::<VggVariant>() {
+            Ok(v) => ReplicationPlan::fig7(v),
+            Err(_) => ReplicationPlan::none(&net),
+        };
+        let model = NodeModel::from_workload(&net, &arch, &plan).expect("plan maps");
+        let mapping = NetworkMapping::build(&net, &arch, &plan).expect("plan maps");
+        TenantWorkload::from_model(
+            &net.name,
+            1.0,
+            &model,
+            WriteCost::of_mapping(&net, &mapping, &arch),
+        )
+    };
+    let tenants = vec![build("vggE"), build("resnet18")];
+    let cfg = TenantConfig {
+        nodes: 3,
+        residency: Residency::Reprogram,
+        mix: smart_pim::cluster::MixMode::Alternate,
+        rate_per_cycle: 0.01,
+        fixed_requests: Some(1_500),
+        seed: 0x0B5_CAFE,
+        ..TenantConfig::default()
+    };
+    (tenants, cfg)
+}
+
+#[test]
+fn tenant_stats_are_bit_identical_across_sinks() {
+    let (tenants, cfg) = tenant_fixture();
+    let base = simulate_tenants(&tenants, &cfg).expect("tenant sim runs");
+    let with_null =
+        simulate_tenants_with_sink(&tenants, &cfg, &mut NullSink).expect("tenant sim runs");
+    let mut rec = RecordingSink::new();
+    let traced = simulate_tenants_with_sink(&tenants, &cfg, &mut rec).expect("tenant sim runs");
+
+    for r in [&with_null, &traced] {
+        assert_eq!(base.offered, r.offered);
+        assert_eq!(base.completed, r.completed);
+        assert_eq!(base.rejected, r.rejected);
+        assert_eq!(base.drained_at, r.drained_at);
+        assert_eq!(base.events_processed, r.events_processed);
+        assert_eq!(base.peak_calendar_depth, r.peak_calendar_depth);
+        assert_eq!(base.per_node_swaps, r.per_node_swaps);
+        assert_eq!(base.node_utilization, r.node_utilization);
+        assert_eq!(base.metrics, r.metrics);
+        for (x, y) in base.tenants.iter().zip(&r.tenants) {
+            assert_eq!(x.completed, y.completed);
+            assert_eq!(x.swaps, y.swaps);
+            assert_eq!(x.latency.p99(), y.latency.p99());
+        }
+    }
+    // An alternating two-tenant mix on a reprogram fleet must swap, and
+    // every swap leaves a reprogram span with the write cost attached.
+    assert!(base.total_swaps() > 0, "fixture produced no swaps");
+    let reprograms: Vec<_> = rec
+        .events_for("tenant")
+        .into_iter()
+        .filter(|e| e.name == "reprogram")
+        .collect();
+    assert_eq!(reprograms.len() as u64, base.total_swaps());
+    assert!(reprograms
+        .iter()
+        .all(|e| e.args.iter().any(|&(k, v)| k == "write_cycles" && v > 0)));
+    let services = rec
+        .events_for("tenant")
+        .iter()
+        .filter(|e| e.name == "service")
+        .count();
+    assert_eq!(services as u64, base.completed);
+}
+
+// ---- Chrome export -------------------------------------------------------
+
+#[test]
+fn chrome_export_round_trips_and_is_deterministic() {
+    let (model, cfg) = cluster_fixture();
+    let render = || {
+        let mut rec = RecordingSink::new();
+        let _ = simulate_with_sink(&model, &cfg, &mut rec);
+        rec.chrome_trace().render_pretty()
+    };
+    let text = render();
+    assert_eq!(text, render(), "trace export not deterministic per seed");
+
+    let doc = Json::parse(&text).expect("export parses");
+    let events = doc
+        .get("traceEvents")
+        .expect("traceEvents envelope")
+        .as_arr()
+        .expect("traceEvents is an array");
+    assert!(!events.is_empty());
+
+    let mut pids = std::collections::BTreeSet::new();
+    let mut phases = std::collections::BTreeSet::new();
+    let mut last_ts: std::collections::BTreeMap<(u64, u64), f64> =
+        std::collections::BTreeMap::new();
+    for e in events {
+        let ph = e.get("ph").and_then(|p| p.as_str()).expect("ph");
+        if ph == "M" {
+            continue;
+        }
+        phases.insert(ph.to_string());
+        let pid = e.get("pid").and_then(|p| p.as_f64()).expect("pid") as u64;
+        let tid = e.get("tid").and_then(|t| t.as_f64()).unwrap_or(0.0) as u64;
+        let ts = e.get("ts").and_then(|t| t.as_f64()).expect("ts");
+        pids.insert(pid);
+        let prev = last_ts.insert((pid, tid), ts).unwrap_or(f64::MIN);
+        assert!(ts >= prev, "track ({pid},{tid}) went backwards: {prev} -> {ts}");
+    }
+    assert!(pids.len() >= 3, "expected >=3 subsystems, got {pids:?}");
+    assert!(phases.contains("X") && phases.contains("i"), "{phases:?}");
+}
+
+// ---- metrics surface -----------------------------------------------------
+
+#[test]
+fn cluster_json_carries_the_metrics_block() {
+    let (model, cfg) = cluster_fixture();
+    let stats = simulate(&model, &cfg);
+    let text = stats.to_json(ArchConfig::paper_node().logical_cycle_ns).render_pretty();
+    let doc = Json::parse(&text).expect("stats JSON parses");
+    let metrics = doc.get("metrics").expect("metrics block");
+    for name in [
+        "cluster.events.arrival",
+        "cluster.events.completion",
+        "cluster.events.processed",
+    ] {
+        assert!(
+            metrics.get("counters").and_then(|c| c.get(name)).is_some(),
+            "missing counter {name}"
+        );
+    }
+    assert!(
+        metrics
+            .get("gauges")
+            .and_then(|g| g.get("cluster.calendar.peak_depth"))
+            .is_some(),
+        "missing peak-depth gauge"
+    );
+    assert!(
+        metrics
+            .get("histograms")
+            .and_then(|h| h.get("cluster.batch.released"))
+            .and_then(|h| h.get("count"))
+            .is_some(),
+        "missing released-batch histogram"
+    );
+}
