@@ -2,14 +2,15 @@
 //! reception rate for the six synthetic traffic patterns on the 8x8 mesh
 //! (Sec. VII), wormhole vs SMART — through the unified parallel sweep
 //! engine, then time the event-driven engine against the seed
-//! cycle-stepped loop and emit machine-readable results to
+//! cycle-stepped loop, rerun a uniform-random slice on every fabric
+//! (mesh / torus / Parallel-Prism), and emit machine-readable results to
 //! `BENCH_noc.json` (override the path with `SMART_PIM_BENCH_JSON`) so the
 //! perf trajectory is trackable across PRs.
 
 use std::time::Instant;
 
-use smart_pim::config::ArchConfig;
-use smart_pim::noc::{Mesh, StepMode, SyntheticConfig};
+use smart_pim::config::{ArchConfig, TopologyKind};
+use smart_pim::noc::{AnyTopology, Mesh, Pattern, StepMode, SyntheticConfig};
 use smart_pim::sweep::{SweepRunner, SyntheticOutcome, SyntheticSweep};
 use smart_pim::util::bench::fmt_duration;
 use smart_pim::util::table::{fnum, Table};
@@ -165,6 +166,73 @@ fn main() {
     );
     println!("parity (identical NocStats): {parity_ok}");
 
+    // ---- topology study: same traffic, different fabrics ---------------
+    // One uniform-random slice per fabric (mesh / torus / prism), plus the
+    // fabric's all-pairs mean hop distance — the structural quantity that
+    // explains the latency gap between the rows.
+    println!("\n== topology study: uniform_random per fabric ==");
+    let mut topo_rows: Vec<Json> = Vec::new();
+    let mut tt = Table::new(
+        "per-topology uniform_random (8x8)",
+        &[
+            "topology",
+            "avg hops",
+            "rate",
+            "wormhole lat",
+            "smart lat",
+            "smart speedup",
+        ],
+    );
+    let mut avg_hops_of = [0.0f64; 3];
+    for (ti, &tk) in TopologyKind::ALL.iter().enumerate() {
+        let topo = AnyTopology::new(tk, 8, 8);
+        let n = topo.nodes();
+        let mut hop_sum = 0u64;
+        for s in 0..n {
+            for d in 0..n {
+                hop_sum += topo.hops(s, d) as u64;
+            }
+        }
+        let avg_hops = hop_sum as f64 / (n * (n - 1)) as f64;
+        avg_hops_of[ti] = avg_hops;
+        let mut ts = SyntheticSweep::new(topo, arch.hpc_max);
+        ts.patterns = vec![Pattern::UniformRandom];
+        ts.rates = vec![0.02, 0.05, 0.1];
+        ts.base = base_cfg();
+        ts.per_point_seeds = false;
+        let out = ts.run(&runner);
+        for pair in out.chunks(2) {
+            let (w, s) = (&pair[0], &pair[1]);
+            tt.row(&[
+                tk.name().into(),
+                fnum(avg_hops, 4),
+                format!("{}", w.rate),
+                fnum(w.stats.avg_latency, 1),
+                fnum(s.stats.avg_latency, 1),
+                fnum(w.stats.avg_latency / s.stats.avg_latency, 4),
+            ]);
+            topo_rows.push(Json::obj(vec![
+                ("topology", tk.name().into()),
+                ("avg_hops", avg_hops.into()),
+                ("rate", w.rate.into()),
+                ("wormhole_latency", w.stats.avg_latency.into()),
+                ("smart_latency", s.stats.avg_latency.into()),
+                (
+                    "smart_speedup",
+                    (w.stats.avg_latency / s.stats.avg_latency).into(),
+                ),
+            ]));
+        }
+    }
+    tt.print();
+    // Acceptance invariant (ISSUE 10): wrap links must shorten routes.
+    assert!(
+        avg_hops_of[1] < avg_hops_of[0],
+        "torus avg hops {} must beat mesh {}",
+        avg_hops_of[1],
+        avg_hops_of[0]
+    );
+
     // ---- machine-readable trajectory ----------------------------------
     let json_path = std::env::var("SMART_PIM_BENCH_JSON")
         .unwrap_or_else(|_| "BENCH_noc.json".to_string());
@@ -176,6 +244,7 @@ fn main() {
         runner.threads(),
         parity_ok,
         seed_out.len(),
+        topo_rows,
     );
     match std::fs::write(&json_path, json.render_pretty()) {
         Ok(()) => println!("wrote {json_path}"),
@@ -192,6 +261,7 @@ fn bench_json(
     threads: usize,
     parity_ok: bool,
     perf_points: usize,
+    topo_rows: Vec<Json>,
 ) -> Json {
     let epoch_secs = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
@@ -201,6 +271,7 @@ fn bench_json(
         .iter()
         .map(|o| {
             Json::obj(vec![
+                ("topology", "mesh".into()),
                 ("pattern", o.pattern.name().into()),
                 ("rate", o.rate.into()),
                 ("backend", o.kind.name().into()),
@@ -220,6 +291,7 @@ fn bench_json(
         ("mesh", "8x8".into()),
         ("threads", threads.into()),
         ("grid", Json::Arr(grid)),
+        ("topologies", Json::Arr(topo_rows)),
         (
             "perf",
             Json::obj(vec![

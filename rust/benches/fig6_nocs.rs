@@ -1,12 +1,17 @@
 //! Bench: regenerate Fig. 6 — speedup of SMART and ideal NoCs over the
-//! wormhole baseline for every VGG in every pipelining scenario.
+//! wormhole baseline for every VGG in every pipelining scenario — then
+//! rerun the headline scenario on the torus and Parallel-Prism fabrics and
+//! fold the per-topology geomeans into `BENCH_noc.json` (read-modify-write,
+//! so the fig-10/11 bench's grid in the same file survives).
 
 use smart_pim::cnn::VggVariant;
-use smart_pim::config::{ArchConfig, NocKind, Scenario};
+use smart_pim::config::{ArchConfig, NocKind, Scenario, TopologyKind};
 use smart_pim::metrics::{paper, Grid};
 use smart_pim::sweep::SweepRunner;
 use smart_pim::util::bench::Bencher;
 use smart_pim::util::stats::geomean;
+use smart_pim::util::table::{fnum, Table};
+use smart_pim::util::Json;
 
 fn main() {
     let arch = ArchConfig::paper_node();
@@ -32,6 +37,53 @@ fn main() {
         geomean(&ideal_all),
         paper::FIG6_IDEAL_GEOMEAN
     );
+
+    // ---- Fig. 6 per topology (headline scenario only) ------------------
+    // The mesh grid above is the paper's pinned figure; the torus and
+    // Parallel-Prism rows are informational (ISSUE 10) and land in
+    // BENCH_noc.json next to the fig-10/11 synthetic rows.
+    println!("\n== Fig. 6 per topology — scenario 4, all VGGs ==");
+    let mut topo_rows: Vec<Json> = Vec::new();
+    let mut t = Table::new(
+        "fig6 geomeans per topology (scenario 4)",
+        &["topology", "smart/wormhole", "ideal/wormhole"],
+    );
+    for tk in TopologyKind::ALL {
+        let mut a = arch.clone();
+        a.topology = tk;
+        let g = Grid::run_with(
+            &runner,
+            &a,
+            &VggVariant::ALL,
+            &[Scenario::ReplicationBatch],
+            &NocKind::ALL,
+        );
+        let (_, geo) = g.fig6_table(Scenario::ReplicationBatch, &VggVariant::ALL);
+        t.row(&[tk.name().into(), fnum(geo[0], 4), fnum(geo[1], 4)]);
+        topo_rows.push(Json::obj(vec![
+            ("topology", tk.name().into()),
+            ("scenario", "replication_batch".into()),
+            ("smart_geomean", geo[0].into()),
+            ("ideal_geomean", geo[1].into()),
+        ]));
+    }
+    t.print();
+
+    // Read-modify-write: keep whatever the fig-10/11 bench already wrote.
+    let json_path = std::env::var("SMART_PIM_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_noc.json".to_string());
+    let mut json = std::fs::read_to_string(&json_path)
+        .ok()
+        .and_then(|s| Json::parse(&s).ok())
+        .unwrap_or_else(|| Json::obj(vec![("schema", "smart-pim/bench-noc/v1".into())]));
+    if let Json::Obj(kvs) = &mut json {
+        kvs.retain(|(k, _)| k != "fig6_topology");
+        kvs.push(("fig6_topology".to_string(), Json::Arr(topo_rows)));
+    }
+    match std::fs::write(&json_path, json.render_pretty()) {
+        Ok(()) => println!("wrote {json_path}"),
+        Err(e) => eprintln!("could not write {json_path}: {e}"),
+    }
 
     println!("\n== timing: NoC co-simulation per kind ==");
     let mut b = Bencher::macro_bench();

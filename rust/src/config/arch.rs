@@ -1,6 +1,8 @@
 //! Architecture configuration: the paper's node / tile / core / subarray
 //! hierarchy (Sec. III) plus the timing calibration constants (DESIGN.md §5).
 
+use super::TopologyKind;
+
 /// Geometry and electrical parameters of one PIM node.
 ///
 /// Defaults reproduce the paper's node: a 16x20 mesh of tiles, 12 cores per
@@ -8,10 +10,13 @@
 /// feature maps, 1-bit DACs (bit-serial input over 16 phases) and 8-bit ADCs.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ArchConfig {
-    /// Mesh width in tiles (X dimension of the NoC).
+    /// NoC grid width in tiles (X dimension).
     pub tiles_x: usize,
-    /// Mesh height in tiles (Y dimension of the NoC).
+    /// NoC grid height in tiles (Y dimension).
     pub tiles_y: usize,
+    /// NoC topology over the tile grid (paper: 2D mesh; torus and
+    /// Parallel-Prism are PR-10 study axes — the pinned claims stay mesh).
+    pub topology: TopologyKind,
     /// Cores per tile.
     pub cores_per_tile: usize,
     /// ReRAM subarrays per core.
@@ -64,6 +69,7 @@ impl ArchConfig {
         Self {
             tiles_x: 16,
             tiles_y: 20,
+            topology: TopologyKind::Mesh,
             cores_per_tile: 12,
             subarrays_per_core: 8,
             subarray_rows: 128,

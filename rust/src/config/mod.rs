@@ -7,4 +7,4 @@ pub mod scenario;
 
 pub use arch::ArchConfig;
 pub use parse::{load_arch, parse_arch, render_arch};
-pub use scenario::{NocKind, Scenario};
+pub use scenario::{NocKind, Scenario, TopologyKind};

@@ -54,6 +54,7 @@ fn apply(cfg: &mut ArchConfig, key: &str, value: &str) -> Result<(), String> {
     match key {
         "tiles_x" => cfg.tiles_x = p(key, value)?,
         "tiles_y" => cfg.tiles_y = p(key, value)?,
+        "topology" => cfg.topology = p(key, value)?,
         "cores_per_tile" => cfg.cores_per_tile = p(key, value)?,
         "subarrays_per_core" => cfg.subarrays_per_core = p(key, value)?,
         "subarray_rows" => cfg.subarray_rows = p(key, value)?,
@@ -83,7 +84,7 @@ fn apply(cfg: &mut ArchConfig, key: &str, value: &str) -> Result<(), String> {
 pub fn render_arch(cfg: &ArchConfig) -> String {
     format!(
         "# smart-pim architecture config\n\
-         tiles_x = {}\ntiles_y = {}\ncores_per_tile = {}\n\
+         tiles_x = {}\ntiles_y = {}\ntopology = {}\ncores_per_tile = {}\n\
          subarrays_per_core = {}\nsubarray_rows = {}\nsubarray_cols = {}\n\
          cell_bits = {}\nweight_bits = {}\nact_bits = {}\nadc_bits = {}\n\
          flit_bits = {}\nlogical_cycle_ns = {}\nnoc_cycle_ns = {}\n\
@@ -91,6 +92,7 @@ pub fn render_arch(cfg: &ArchConfig) -> String {
          fc_reload_rounds = {}\n",
         cfg.tiles_x,
         cfg.tiles_y,
+        cfg.topology.name(),
         cfg.cores_per_tile,
         cfg.subarrays_per_core,
         cfg.subarray_rows,
@@ -165,9 +167,18 @@ mod tests {
         let mut base = ArchConfig::paper_node();
         base.tiles_x = 4;
         base.hpc_max = 9;
+        base.topology = crate::config::TopologyKind::Torus;
         let text = render_arch(&base);
         let parsed = parse_arch(&text, &ArchConfig::paper_node()).unwrap();
         assert_eq!(parsed, base);
+    }
+
+    #[test]
+    fn topology_key_parses() {
+        let cfg = parse_arch("topology = prism\n", &ArchConfig::paper_node()).unwrap();
+        assert_eq!(cfg.topology, crate::config::TopologyKind::Prism);
+        let err = parse_arch("topology = ring\n", &ArchConfig::paper_node()).unwrap_err();
+        assert!(err.contains("unknown topology"), "{err}");
     }
 
     #[test]

@@ -79,6 +79,47 @@ impl NocKind {
     }
 }
 
+/// NoC topology selection (PR 10: the fabric behind the flow control —
+/// [`crate::noc::AnyTopology`] is built from this plus the tile grid).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TopologyKind {
+    /// The paper's 2D mesh (the default; all pinned claims use it).
+    Mesh,
+    /// 2D torus: mesh plus wrap links, shortest-direction routing.
+    Torus,
+    /// Parallel-Prism-style chain-with-stride pipeline fabric
+    /// (arxiv 1906.03474).
+    Prism,
+}
+
+impl TopologyKind {
+    /// Every topology, in reporting order (mesh first: the pinned claim).
+    pub const ALL: [TopologyKind; 3] =
+        [TopologyKind::Mesh, TopologyKind::Torus, TopologyKind::Prism];
+
+    /// Topology name (`mesh` / `torus` / `prism`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TopologyKind::Mesh => "mesh",
+            TopologyKind::Torus => "torus",
+            TopologyKind::Prism => "prism",
+        }
+    }
+}
+
+impl std::str::FromStr for TopologyKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "mesh" => Ok(TopologyKind::Mesh),
+            "torus" => Ok(TopologyKind::Torus),
+            "prism" => Ok(TopologyKind::Prism),
+            other => Err(format!("unknown topology {other:?} (mesh|torus|prism)")),
+        }
+    }
+}
+
 impl std::str::FromStr for NocKind {
     type Err = String;
 
@@ -126,6 +167,11 @@ mod tests {
             assert_eq!(k.name(), s);
         }
         assert!("toroidal".parse::<NocKind>().is_err());
+        for s in ["mesh", "torus", "prism"] {
+            let t: TopologyKind = s.parse().unwrap();
+            assert_eq!(t.name(), s);
+        }
+        assert!("hypercube".parse::<TopologyKind>().is_err());
         for (s, want) in [("1", Scenario::Baseline), ("4", Scenario::ReplicationBatch)] {
             assert_eq!(s.parse::<Scenario>().unwrap(), want);
         }

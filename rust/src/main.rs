@@ -14,7 +14,7 @@
 //! smart-pim fig10 | fig11             # synthetic-traffic sweeps
 //! smart-pim plan --network resnet18 [--tiles 320] [--depth 8] [--mapping vwsdk] [--compare] [--frontier]
 //! smart-pim simulate --network vgg19|resnet18 --scenario 4 --noc smart [--mapping auto] [--gantt]
-//! smart-pim noc --pattern tornado --rate 0.1 [--noc smart]
+//! smart-pim noc --pattern tornado --rate 0.1 [--noc smart] [--topology torus] [--json FILE]
 //! smart-pim serve --requests 64 [--artifacts artifacts]
 //! smart-pim cluster --network vgg_e --nodes 4 --qps 500 --pattern poisson [--mapping vwsdk]
 //! smart-pim cluster --qps 3000 --capacity --p99-target 20000 [--power-budget-w 60]
@@ -26,20 +26,23 @@
 //! ```
 //!
 //! Every command accepts `--config FILE` (a `key = value` override file,
-//! see `config/parse.rs`) to simulate nodes other than the paper's, and
+//! see `config/parse.rs`) to simulate nodes other than the paper's;
+//! `noc`, `simulate`, `fig10`, and `fig11` also take
+//! `--topology mesh|torus|prism` to swap the fabric (default: the config's
+//! `topology` key, which is the paper's mesh). Every command accepts
 //! `--profile` to append a wall-clock hot-path timing table. `simulate`,
 //! `noc`, and `cluster` accept `--trace-out FILE` to export the run as
 //! Chrome trace-event JSON (loadable in Perfetto / `chrome://tracing`;
 //! timestamps are virtual cycles, so traces are deterministic per seed).
 
 use smart_pim::cnn::{vgg, VggVariant};
-use smart_pim::config::{ArchConfig, NocKind, Scenario};
+use smart_pim::config::{ArchConfig, NocKind, Scenario, TopologyKind};
 use smart_pim::coordinator::{assess_ingress, startup_plan, BatchPolicy, Server};
 use smart_pim::mapping::{
     plan_tiles, MappingKind, MappingMode, MappingSelection, ReplicationPlan,
 };
 use smart_pim::metrics::{cluster_table, paper, planner_table, tenant_table, Grid};
-use smart_pim::noc::{build_backend, Mesh, Pattern, StepMode, SyntheticConfig};
+use smart_pim::noc::{build_backend, AnyTopology, Mesh, Pattern, StepMode, SyntheticConfig};
 use smart_pim::planner::{evaluate_candidates, Planner, PlannerConfig};
 use smart_pim::power::components::{aggregates, CORE_ROWS, TILE_ROWS};
 use smart_pim::power::AreaBreakdown;
@@ -298,7 +301,7 @@ fn fig9() -> Result<(), String> {
 
 fn fig10_11(args: &Args, latency: bool) -> Result<(), String> {
     args.check_known(&[
-        "rates", "measure", "seed", "scenario", "noc", "config", "threads",
+        "rates", "measure", "seed", "scenario", "noc", "config", "threads", "topology",
     ])?;
     let rates: Vec<f64> = args
         .get_or("rates", "0.02,0.05,0.08,0.12,0.2,0.3,0.5,0.8")
@@ -311,8 +314,12 @@ fn fig10_11(args: &Args, latency: bool) -> Result<(), String> {
         Some(t) => SweepRunner::with_threads(t.parse().map_err(|e| format!("--threads: {e}"))?),
         None => SweepRunner::new(),
     };
+    let tkind: TopologyKind = match args.get("topology") {
+        Some(t) => t.parse()?,
+        None => arch().topology,
+    };
     // The whole figure is one parallel sweep over the grid.
-    let mut sweep = SyntheticSweep::new(Mesh::new(8, 8), arch().hpc_max);
+    let mut sweep = SyntheticSweep::new(AnyTopology::new(tkind, 8, 8), arch().hpc_max);
     sweep.rates = rates;
     sweep.base = SyntheticConfig {
         measure,
@@ -331,10 +338,14 @@ fn fig10_11(args: &Args, latency: bool) -> Result<(), String> {
     for pattern in Pattern::ALL {
         let mut t = Table::new(
             format!(
-                "Fig. {} — {} / {}",
+                "Fig. {} — {} / {}{}",
                 if latency { 10 } else { 11 },
                 pattern.name(),
-                which
+                which,
+                match tkind {
+                    TopologyKind::Mesh => String::new(),
+                    other => format!(" [{}]", other.name()),
+                }
             ),
             &["rate", "wormhole", "smart"],
         );
@@ -570,12 +581,17 @@ fn mapping_compare_table(net: &smart_pim::cnn::Network, a: &ArchConfig) -> Table
 
 fn simulate(args: &Args) -> Result<(), String> {
     args.check_known(&[
-        "vgg", "network", "scenario", "noc", "mapping", "config", "trace-out",
+        "vgg", "network", "scenario", "noc", "mapping", "config", "trace-out", "topology",
     ])?;
     let s: Scenario = args.get_or("scenario", "4").parse()?;
     let n: NocKind = args.get_or("noc", "smart").parse()?;
     let mapping: MappingMode = args.get_or("mapping", "im2col").parse()?;
-    let a = arch();
+    let mut a = arch();
+    if let Some(t) = args.get("topology") {
+        // Swap the fabric for this run: placement, flow extraction, and
+        // the flit engine all follow `arch.topology`.
+        a.topology = t.parse()?;
+    }
     // `--network` runs any workload through the generic path (branching
     // workloads use the searched plan when the scenario replicates, since
     // they have no Fig. 7 hand plan).
@@ -606,10 +622,14 @@ fn simulate(args: &Args) -> Result<(), String> {
     }
     let mut t = Table::new(
         format!(
-            "simulate {} scenario {} noc {}",
+            "simulate {} scenario {} noc {}{}",
             v.name(),
             s.label(),
-            n.name()
+            n.name(),
+            match a.topology {
+                TopologyKind::Mesh => String::new(),
+                other => format!(" topology {}", other.name()),
+            }
         ),
         &["metric", "value"],
     );
@@ -627,6 +647,15 @@ fn simulate(args: &Args) -> Result<(), String> {
     t.row(&["  core (mJ)".into(), fnum(r.energy.core_mj, 3)]);
     t.row(&["  tile periph (mJ)".into(), fnum(r.energy.tile_mj, 3)]);
     t.row(&["  noc (mJ)".into(), fnum(r.energy.noc_mj, 3)]);
+    t.row(&[
+        "  noc per link (uJ)".into(),
+        // Total NoC energy spread over the fabric's directed link set
+        // (see EnergyModel::mean_link_energy_mj).
+        fnum(
+            r.energy.noc_mj * 1e3 / AnyTopology::for_node(&a).n_links() as f64,
+            4,
+        ),
+    ]);
     t.row(&["efficiency (TOPS/W)".into(), fnum(r.tops_per_watt, 4)]);
     {
         use smart_pim::power::EnergyModel;
@@ -651,7 +680,7 @@ fn simulate(args: &Args) -> Result<(), String> {
             ReplicationPlan::none(&net)
         };
         let m = NetworkMapping::build(&net, &a, &plan)?;
-        let _ = Placement::snake(&a);
+        let _ = Placement::for_topology(&a);
         let plans = build_plans(&net, &m, &a);
         println!("{}", smart_pim::sim::gantt(&plans, &r.sim, 100));
     }
@@ -758,7 +787,8 @@ fn selection_for(mapping: MappingMode, n: usize) -> MappingSelection {
 
 fn noc_cmd(args: &Args) -> Result<(), String> {
     args.check_known(&[
-        "pattern", "rate", "noc", "mesh", "measure", "seed", "config", "mode", "trace-out",
+        "pattern", "rate", "noc", "mesh", "topology", "measure", "seed", "config", "mode",
+        "trace-out", "json",
     ])?;
     let pattern: Pattern = args.get_or("pattern", "uniform_random").parse()?;
     let rate: f64 = args.get_parse_or("rate", 0.1)?;
@@ -770,7 +800,13 @@ fn noc_cmd(args: &Args) -> Result<(), String> {
     let (w, h) = mesh_s
         .split_once('x')
         .ok_or_else(|| format!("--mesh {mesh_s:?} (expected WxH)"))?;
-    let mesh = Mesh::new(
+    // --topology overrides the config's `topology` key for this run.
+    let tkind: TopologyKind = match args.get("topology") {
+        Some(t) => t.parse()?,
+        None => arch().topology,
+    };
+    let topo = AnyTopology::new(
+        tkind,
         w.parse().map_err(|e| format!("{e}"))?,
         h.parse().map_err(|e| format!("{e}"))?,
     );
@@ -787,12 +823,13 @@ fn noc_cmd(args: &Args) -> Result<(), String> {
     let shared = rec
         .clone()
         .map(|r| r as smart_pim::obs::trace::SharedSink);
-    let s = smart_pim::noc::run_synthetic_traced(kind, mesh, &cfg, arch().hpc_max, mode, shared);
+    let s = smart_pim::noc::run_synthetic_traced(kind, topo, &cfg, arch().hpc_max, mode, shared);
     if let (Some(path), Some(r)) = (args.get("trace-out"), &rec) {
         write_trace(path, &r.borrow())?;
     }
     println!(
-        "{} {} rate {}: net latency {}, total latency {}, reception {}, completed {}, dropped {}{}",
+        "{} {} {} rate {}: net latency {}, total latency {}, reception {}, completed {}, dropped {}{}",
+        tkind.name(),
         kind.name(),
         pattern.name(),
         rate,
@@ -803,6 +840,26 @@ fn noc_cmd(args: &Args) -> Result<(), String> {
         s.dropped,
         if s.saturated() { " [SATURATED]" } else { "" }
     );
+    // --json: one machine-readable row per run, keyed by topology, for
+    // scripts and the CI determinism gate.
+    if let Some(path) = args.get("json") {
+        use smart_pim::util::json::Json;
+        let row = Json::obj(vec![
+            ("schema", Json::Str("smart-pim/noc-point/v1".into())),
+            ("topology", Json::Str(tkind.name().into())),
+            ("mesh", Json::Str(mesh_s.to_string())),
+            ("noc", Json::Str(kind.name().into())),
+            ("pattern", Json::Str(pattern.name().into())),
+            ("rate", Json::Num(rate)),
+            ("avg_net_latency", Json::Num(s.avg_net_latency)),
+            ("avg_latency", Json::Num(s.avg_latency)),
+            ("reception_rate", Json::Num(s.reception_rate)),
+            ("completed", Json::Num(s.completed as f64)),
+            ("dropped", Json::Num(s.dropped as f64)),
+        ]);
+        std::fs::write(path, row.render_pretty()).map_err(|e| format!("writing {path}: {e}"))?;
+        println!("wrote {path}");
+    }
     Ok(())
 }
 
@@ -826,9 +883,54 @@ fn reproduce(args: &Args) -> Result<(), String> {
     );
     let board = smart_pim::metrics::scoreboard(&arch(), &runner);
     board.table().print();
+    // Informational topology study (PR-10): the pinned claims above are
+    // mesh-only; rerun the VGG-E scenario-4 SMART-vs-wormhole point per
+    // fabric. Rows are reported and exported but never gate the exit code.
+    let mut study = Vec::new();
+    {
+        let mut t = Table::new(
+            "topology study (informational) — VGG-E scenario 4",
+            &["topology", "wormhole FPS", "smart FPS", "smart/wormhole"],
+        );
+        for tk in TopologyKind::ALL {
+            let mut a = arch();
+            a.topology = tk;
+            let fps = |k| {
+                smart_pim::sim::evaluate(VggVariant::E, Scenario::ReplicationBatch, k, &a).fps
+            };
+            let (w, s) = (fps(NocKind::Wormhole), fps(NocKind::Smart));
+            t.row(&[
+                tk.name().into(),
+                fnum(w, 1),
+                fnum(s, 1),
+                fnum(s / w, 4),
+            ]);
+            study.push((tk, w, s));
+        }
+        t.print();
+    }
     let path = args.get_or("json", "BENCH_headline.json");
-    std::fs::write(path, board.to_json().render_pretty())
-        .map_err(|e| format!("writing {path}: {e}"))?;
+    let mut json = board.to_json();
+    if let smart_pim::util::json::Json::Obj(kvs) = &mut json {
+        use smart_pim::util::json::Json;
+        kvs.push((
+            "topology_study".into(),
+            Json::Arr(
+                study
+                    .iter()
+                    .map(|&(tk, w, s)| {
+                        Json::obj(vec![
+                            ("topology", Json::Str(tk.name().into())),
+                            ("wormhole_fps", Json::Num(w)),
+                            ("smart_fps", Json::Num(s)),
+                            ("smart_speedup", Json::Num(s / w)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ));
+    }
+    std::fs::write(path, json.render_pretty()).map_err(|e| format!("writing {path}: {e}"))?;
     println!("wrote {path}");
     if board.all_pass() {
         println!("all 6 headline metrics within their pinned bands");
@@ -1599,11 +1701,11 @@ fn serve(args: &Args) -> Result<(), String> {
         fnum(stats.latency_percentile_ms(99.0), 2)
     );
     println!("class histogram: {classes:?}");
-    // Simulated mesh-crossing cost of the request path, through the same
+    // Simulated fabric-crossing cost of the request path, through the same
     // NocBackend trait the sweeps use (the coordinator's ingress model).
-    let mesh = Mesh::new(a.tiles_x, a.tiles_y);
-    let mut noc = build_backend(NocKind::Smart, mesh, a.hpc_max, 1, a.buffer_depth);
-    let ing = assess_ingress(noc.as_mut(), 0, mesh.nodes() / 2, n as u64, 4, 4);
+    let topo = AnyTopology::for_node(&a);
+    let mut noc = build_backend(NocKind::Smart, topo, a.hpc_max, 1, a.buffer_depth);
+    let ing = assess_ingress(noc.as_mut(), 0, topo.nodes() / 2, n as u64, 4, 4);
     println!(
         "simulated ingress (I/O tile -> entry tile over SMART mesh): \
          mean {} NoC cycles, max {} ({}/{} delivered)",

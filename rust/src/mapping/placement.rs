@@ -5,8 +5,14 @@
 //! pairs — physically adjacent, which is what a sane mapper does and what
 //! keeps the baseline NoC comparison fair (the paper's gains must come from
 //! flow control, not from a strawman placement).
+//!
+//! Placement is topology-aware ([`Placement::for_topology`]): the snake
+//! walk is right for the mesh and torus (grid-adjacent ⇒ link-adjacent),
+//! but Parallel-Prism's dedicated forward links follow *linear chain
+//! order*, so there a row-major walk puts pipeline-adjacent layers on the
+//! one-hop chain links.
 
-use crate::config::ArchConfig;
+use crate::config::{ArchConfig, TopologyKind};
 
 /// (x, y) mesh coordinate of a tile/router.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -54,6 +60,18 @@ impl Placement {
             coords,
             width: w,
             height: h,
+        }
+    }
+
+    /// Placement matched to `arch.topology`: snake for the mesh and torus
+    /// (consecutive ids stay one grid link apart), row-major for
+    /// Parallel-Prism (node id == chain position, so consecutive ids sit
+    /// on the dedicated one-hop forward chain links — including across row
+    /// ends, where the mesh would pay a full row of hops).
+    pub fn for_topology(arch: &ArchConfig) -> Self {
+        match arch.topology {
+            TopologyKind::Mesh | TopologyKind::Torus => Self::snake(arch),
+            TopologyKind::Prism => Self::row_major(arch),
         }
     }
 
@@ -143,6 +161,30 @@ mod tests {
         let p = Placement::row_major(&arch);
         // End of row 0 to start of row 1 is 15+1 hops: snake beats row-major.
         assert_eq!(p.coord(15).hops(&p.coord(16)), 16);
+    }
+
+    #[test]
+    fn for_topology_matches_fabric() {
+        use crate::noc::{AnyTopology, Mesh};
+        let mut arch = ArchConfig::test_node(); // 4x4
+        arch.topology = TopologyKind::Mesh;
+        let pm = Placement::for_topology(&arch);
+        assert_eq!(pm.coord(5), Placement::snake(&arch).coord(5));
+        arch.topology = TopologyKind::Torus;
+        let pt = Placement::for_topology(&arch);
+        assert_eq!(pt.coord(7), Placement::snake(&arch).coord(7));
+        arch.topology = TopologyKind::Prism;
+        let pp = Placement::for_topology(&arch);
+        // Row-major: consecutive ids are consecutive chain positions, so
+        // every producer/consumer pair is one prism hop — even across row
+        // ends where a mesh placement would pay a full row of hops.
+        let prism = AnyTopology::new(TopologyKind::Prism, arch.tiles_x, arch.tiles_y);
+        for i in 1..pp.len() {
+            assert_eq!(pp.node_of(i), pp.node_of(i - 1) + 1);
+            assert_eq!(prism.hops(pp.node_of(i - 1), pp.node_of(i)), 1);
+        }
+        let mesh = Mesh::new(arch.tiles_x, arch.tiles_y);
+        assert_eq!(mesh.hops(pp.node_of(3), pp.node_of(4)), 4);
     }
 
     #[test]

@@ -1,10 +1,10 @@
 //! The interconnect abstraction (DESIGN.md §1): every NoC model — the
-//! flit-level mesh ([`super::Network`], wormhole or SMART depending on
-//! `hpc_max`) and the analytic [`super::IdealNet`] — implements
-//! [`NocBackend`], so drivers (synthetic sweeps, CNN flow co-simulation,
-//! the coordinator's ingress model) are written once against the trait and
-//! work with any backend, including future ones (tori, buses, analytic
-//! queueing models).
+//! flit-level engine ([`super::Network`], wormhole or SMART depending on
+//! `hpc_max`, over any [`super::Topology`]) and the analytic
+//! [`super::IdealNet`] — implements [`NocBackend`], so drivers (synthetic
+//! sweeps, CNN flow co-simulation, the coordinator's ingress model) are
+//! written once against the trait and work with any backend, including
+//! future ones (buses, analytic queueing models).
 //!
 //! The trait replaces the seed's closed `NocModel` enum: adding a backend
 //! no longer means editing every driver match.
@@ -15,7 +15,7 @@ use crate::obs::trace::SharedSink;
 use super::ideal::IdealNet;
 use super::network::Network;
 use super::packet::PacketTable;
-use super::topology::Mesh;
+use super::topology::AnyTopology;
 
 /// A cycle-addressable interconnect with packet bookkeeping.
 ///
@@ -161,25 +161,29 @@ impl NocBackend for IdealNet {
     }
 }
 
-/// Build a backend for a [`NocKind`]. Wormhole is the mesh engine with
-/// `HPC_max = 1`; SMART is the same engine with the configured reach.
+/// Build a backend for a [`NocKind`]. Wormhole is the flit engine with
+/// `HPC_max = 1`; SMART is the same engine with the configured reach. The
+/// topology (mesh, torus, Parallel-Prism) is orthogonal to the flow
+/// control and any `impl Into<AnyTopology>` is accepted.
 pub fn build_backend(
     kind: NocKind,
-    mesh: Mesh,
+    topo: impl Into<AnyTopology>,
     hpc_max: usize,
     router_latency: u64,
     buffer_depth: usize,
 ) -> Box<dyn NocBackend> {
+    let topo = topo.into();
     match kind {
-        NocKind::Wormhole => Box::new(Network::new(mesh, 1, router_latency, buffer_depth)),
-        NocKind::Smart => Box::new(Network::new(mesh, hpc_max, router_latency, buffer_depth)),
-        NocKind::Ideal => Box::new(IdealNet::new(mesh.nodes())),
+        NocKind::Wormhole => Box::new(Network::new(topo, 1, router_latency, buffer_depth)),
+        NocKind::Smart => Box::new(Network::new(topo, hpc_max, router_latency, buffer_depth)),
+        NocKind::Ideal => Box::new(IdealNet::new(topo.nodes())),
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::noc::topology::Mesh;
 
     fn deliver_all(net: &mut dyn NocBackend) {
         net.enqueue(0, 5, 3);
@@ -200,6 +204,18 @@ mod tests {
         for kind in NocKind::ALL {
             let mut net = build_backend(kind, mesh, 6, 1, 4);
             deliver_all(net.as_mut());
+        }
+    }
+
+    #[test]
+    fn all_topologies_deliver_through_the_trait() {
+        use crate::config::TopologyKind;
+        for tk in TopologyKind::ALL {
+            let topo = AnyTopology::new(tk, 4, 4);
+            for kind in NocKind::ALL {
+                let mut net = build_backend(kind, topo, 6, 1, 4);
+                deliver_all(net.as_mut());
+            }
         }
     }
 

@@ -1,7 +1,9 @@
-//! Ideal interconnect (Sec. VI-B's "ideal" NoC): behaves like a fully
-//! connected topology — every packet crosses the fabric in one hop
-//! (`t_w x 1` in Eq. (3)), with only injection/ejection serialization and
-//! zero in-network contention.
+//! Ideal interconnect (Sec. VI-B's "ideal" NoC): a topology-free upper
+//! bound — every packet crosses the fabric in one hop (`t_w x 1` in
+//! Eq. (3)), with only injection/ejection serialization and zero
+//! in-network contention. It deliberately ignores the configured
+//! [`Topology`](super::Topology) (only the endpoint count matters), so it
+//! bounds every topology's latency from below.
 
 use crate::obs::trace::{SharedSink, TraceEvent, TracePhase};
 

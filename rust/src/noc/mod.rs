@@ -1,9 +1,11 @@
 //! Flit-level cycle-accurate NoC simulator (the garnet2.0 substitute,
-//! DESIGN.md §1): 2D mesh, XY routing, wormhole flow control, SMART
+//! DESIGN.md §1): pluggable topologies ([`Mesh2D`] — the paper's fabric —
+//! plus [`Torus2D`] and [`PrismCnn`] behind the [`Topology`] trait),
+//! minimal deterministic routing, wormhole flow control, SMART
 //! single-cycle multi-hop bypass, and an ideal interconnect, plus the six
 //! synthetic traffic patterns of Sec. VII.
 //!
-//! Every interconnect implements the [`NocBackend`] trait; the mesh engine
+//! Every interconnect implements the [`NocBackend`] trait; the flit engine
 //! is event-driven (a wakeup calendar skips idle routers) with the seed
 //! cycle-stepped engine retained as a golden reference (DESIGN.md §1).
 
@@ -22,5 +24,5 @@ pub use sim::{
     run_flows, run_flows_detailed_traced, run_synthetic, run_synthetic_traced, run_synthetic_with,
     NocStats, StepMode, SyntheticConfig,
 };
-pub use topology::{Dir, Mesh};
+pub use topology::{AnyTopology, Dir, Mesh, Mesh2D, PrismCnn, Topology, Torus2D};
 pub use traffic::{Flow, Pattern};

@@ -1,10 +1,13 @@
-//! Flit-level cycle-accurate mesh network: wormhole flow control with
-//! optional SMART single-cycle multi-hop bypass (Sec. V).
+//! Flit-level cycle-accurate NoC: wormhole flow control with optional
+//! SMART single-cycle multi-hop bypass (Sec. V), over any
+//! [`super::topology::Topology`] (mesh / torus / prism — the engine asks
+//! the [`AnyTopology`] carrier for routes, straight runs, and links and
+//! hard-codes no XY math).
 //!
 //! One engine implements both: `hpc_max = 1` *is* the wormhole baseline
 //! (every flit buffers at every router and pays the full router pipeline);
 //! `hpc_max > 1` enables SMART: a flit that wins switch allocation traverses
-//! up to `hpc_max` hops along its XY straight run in a single cycle,
+//! up to `hpc_max` hops along its topology straight run in a single cycle,
 //! bypassing the intermediate router pipelines, with the paper's SSR
 //! priority rule — a *buffered* (local) flit at an intermediate router beats
 //! a bypassing flit, truncating the bypass at that router.
@@ -39,14 +42,14 @@ use std::collections::{BinaryHeap, VecDeque};
 use crate::obs::trace::{SharedSink, TraceEvent, TracePhase};
 
 use super::packet::{Flit, PacketTable};
-use super::topology::{Dir, Mesh};
+use super::topology::{AnyTopology, Dir};
 
 const PORTS: usize = 5;
 
-/// Cycle-accurate mesh NoC (wormhole / SMART).
+/// Cycle-accurate NoC (wormhole / SMART) over any shipped topology.
 pub struct Network {
-    /// Mesh geometry this router array covers.
-    pub mesh: Mesh,
+    /// Fabric geometry/routing this router array covers.
+    pub topo: AnyTopology,
     /// Max hops traversed per cycle: 1 = wormhole, >1 = SMART HPC_max.
     pub hpc_max: usize,
     /// Router pipeline depth in cycles (buffer write .. switch allocation).
@@ -117,21 +120,28 @@ const NO_DESIRE: u8 = u8::MAX;
 const MAX_SEG: usize = 64;
 
 impl Network {
-    /// A mesh network; `hpc_max = 1` is the wormhole baseline,
-    /// `hpc_max > 1` enables SMART multi-hop bypass.
-    pub fn new(mesh: Mesh, hpc_max: usize, router_latency: u64, buffer_depth: usize) -> Self {
+    /// A network over `topo` (any [`AnyTopology`]-convertible fabric);
+    /// `hpc_max = 1` is the wormhole baseline, `hpc_max > 1` enables SMART
+    /// multi-hop bypass.
+    pub fn new(
+        topo: impl Into<AnyTopology>,
+        hpc_max: usize,
+        router_latency: u64,
+        buffer_depth: usize,
+    ) -> Self {
+        let topo = topo.into();
         assert!(hpc_max >= 1);
         assert!(buffer_depth >= 1);
-        let n = mesh.nodes();
+        let n = topo.nodes();
         Self {
-            mesh,
+            topo,
             hpc_max,
             router_latency,
             buffer_depth,
             buffers: vec![VecDeque::new(); n * PORTS],
             out_lock: vec![None; n * PORTS],
             rr: vec![0; n * PORTS],
-            link_stamp: vec![u64::MAX; mesh.n_links()],
+            link_stamp: vec![u64::MAX; topo.n_links()],
             eject_stamp: vec![u64::MAX; n],
             src_q: vec![VecDeque::new(); n],
             src_next_flit: vec![0; n],
@@ -184,7 +194,7 @@ impl Network {
 
     /// Queue a packet for injection at `src`. Returns the packet id.
     pub fn enqueue(&mut self, src: usize, dst: usize, len: u16) -> u32 {
-        debug_assert!(src < self.mesh.nodes() && dst < self.mesh.nodes());
+        debug_assert!(src < self.topo.nodes() && dst < self.topo.nodes());
         debug_assert!(src != dst, "self-addressed packet");
         debug_assert!(len >= 1);
         let id = self.table.add(src as u32, dst as u32, len, self.now);
@@ -218,11 +228,11 @@ impl Network {
             return Dir::Local;
         }
         if f.is_head() {
-            self.mesh.xy_route(node, p.dst as usize)
+            self.topo.route(node, p.dst as usize)
         } else {
             // Body flits replay the head's stop list.
             let next = p.stops[f.seg as usize + 1] as usize;
-            self.mesh.xy_route(node, next)
+            self.topo.route(node, next)
         }
     }
 
@@ -261,7 +271,7 @@ impl Network {
     /// stays valid until that flit moves (moves reset it to NO_DESIRE);
     /// only invalidated or newly-ready ports are recomputed.
     fn snapshot_desires(&mut self) {
-        for node in 0..self.mesh.nodes() {
+        for node in 0..self.topo.nodes() {
             if self.node_flits[node] == 0 {
                 self.contenders[node] = 0;
                 continue;
@@ -333,20 +343,20 @@ impl Network {
         // Maximum run: wormhole = 1; SMART = up to hpc_max along the
         // current straight run; body flits go exactly to their next stop.
         let max_run = if f.is_head() {
-            self.hpc_max.min(self.mesh.straight_run(node, dst)).max(1)
+            self.hpc_max.min(self.topo.straight_run(node, dst)).max(1)
         } else {
             let next = p.stops[f.seg as usize + 1] as usize;
-            self.mesh.hops(node, next)
+            self.topo.hops(node, next)
         };
         debug_assert!(max_run <= MAX_SEG);
         let mut len = 0usize;
         let mut at = node;
         for hop in 0..max_run {
             // Link must be free this cycle.
-            if self.link_stamp[self.mesh.link_id(at, d)] == self.now {
+            if self.link_stamp[self.topo.link_id(at, d)] == self.now {
                 break;
             }
-            let next = match self.mesh.neighbor(at, d) {
+            let next = match self.topo.neighbor(at, d) {
                 Some(n) => n,
                 None => break, // mesh edge (cannot happen on minimal routes)
             };
@@ -362,7 +372,7 @@ impl Network {
                 // blocked on this packet's lock would deadlock.
                 let blocked = matches!(lock, Some(owner) if owner != f.pkt)
                     || (f.is_head() && self.has_local_contender(next, d))
-                    || self.link_stamp[self.mesh.link_id(next, d)] == self.now;
+                    || self.link_stamp[self.topo.link_id(next, d)] == self.now;
                 path[len] = next;
                 len += 1;
                 if blocked {
@@ -454,7 +464,7 @@ impl Network {
         if self.buffered > 0 {
             self.snapshot_desires();
             // Switch allocation + traversal, router by router in fixed order.
-            for node in 0..self.mesh.nodes() {
+            for node in 0..self.topo.nodes() {
                 // Idle routers (no buffered flits) are skipped outright.
                 if self.contenders[node] != 0 {
                     self.route_node(node);
@@ -462,7 +472,7 @@ impl Network {
             }
         }
         if self.src_pkts > 0 {
-            for node in 0..self.mesh.nodes() {
+            for node in 0..self.topo.nodes() {
                 self.inject_node(node);
             }
         }
@@ -567,7 +577,7 @@ impl Network {
         };
         let mut at = node;
         for &next in path {
-            let lid = self.mesh.link_id(at, out);
+            let lid = self.topo.link_id(at, out);
             debug_assert!(self.link_stamp[lid] != self.now);
             self.link_stamp[lid] = self.now;
             let oidx = at * PORTS + out.index();
@@ -654,7 +664,7 @@ impl Network {
     /// Debug aid: print the first `limit` stuck buffer heads and any locks.
     pub fn debug_dump(&self, limit: usize) {
         let mut shown = 0;
-        for node in 0..self.mesh.nodes() {
+        for node in 0..self.topo.nodes() {
             for port in 0..PORTS {
                 if let Some(f) = self.buffers[node * PORTS + port].front() {
                     if shown >= limit {
@@ -743,6 +753,7 @@ impl Network {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::noc::topology::Mesh;
 
     fn net(hpc: usize) -> Network {
         Network::new(Mesh::new(8, 8), hpc, 1, 4)
@@ -824,11 +835,11 @@ mod tests {
         n.drain(100_000);
         for id in ids {
             let p = n.table.get(id);
-            let mut remaining = n.mesh.hops(p.src as usize, p.dst as usize);
+            let mut remaining = n.topo.hops(p.src as usize, p.dst as usize);
             for w in p.stops.windows(2) {
-                let step = n.mesh.hops(w[0] as usize, w[1] as usize);
+                let step = n.topo.hops(w[0] as usize, w[1] as usize);
                 assert!(step >= 1);
-                let new_rem = n.mesh.hops(w[1] as usize, p.dst as usize);
+                let new_rem = n.topo.hops(w[1] as usize, p.dst as usize);
                 assert_eq!(new_rem + step, remaining, "non-minimal segment");
                 remaining = new_rem;
             }

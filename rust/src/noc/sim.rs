@@ -15,7 +15,7 @@ use crate::util::Rng;
 use super::backend::{build_backend, NocBackend};
 use super::network::Network;
 use super::packet::PacketTable;
-use super::topology::Mesh;
+use super::topology::AnyTopology;
 use super::traffic::{Flow, FlowPacer, Pattern};
 
 /// Which stepping engine drives the run.
@@ -41,9 +41,9 @@ impl std::str::FromStr for StepMode {
 }
 
 /// Internal driver handle: either any backend through the trait (event
-/// path) or the mesh engine pinned to its reference stepping functions.
+/// path) or the flit engine pinned to its reference stepping functions.
 /// The ideal NoC has a single engine, so the reference mode only differs
-/// for the mesh kinds.
+/// for the routed kinds.
 enum DriverNet {
     Backend(Box<dyn NocBackend>),
     Reference(Network),
@@ -52,7 +52,7 @@ enum DriverNet {
 impl DriverNet {
     fn build(
         kind: NocKind,
-        mesh: Mesh,
+        topo: AnyTopology,
         hpc_max: usize,
         router_latency: u64,
         buffer_depth: usize,
@@ -60,14 +60,14 @@ impl DriverNet {
     ) -> Self {
         match (mode, kind) {
             (StepMode::CycleStepped, NocKind::Wormhole) => {
-                DriverNet::Reference(Network::new(mesh, 1, router_latency, buffer_depth))
+                DriverNet::Reference(Network::new(topo, 1, router_latency, buffer_depth))
             }
             (StepMode::CycleStepped, NocKind::Smart) => {
-                DriverNet::Reference(Network::new(mesh, hpc_max, router_latency, buffer_depth))
+                DriverNet::Reference(Network::new(topo, hpc_max, router_latency, buffer_depth))
             }
             _ => DriverNet::Backend(build_backend(
                 kind,
-                mesh,
+                topo,
                 hpc_max,
                 router_latency,
                 buffer_depth,
@@ -203,8 +203,13 @@ impl NocStats {
 
 /// Run one synthetic-traffic point (Figs. 10-11 are sweeps of this) with
 /// the event-driven engine.
-pub fn run_synthetic(kind: NocKind, mesh: Mesh, cfg: &SyntheticConfig, hpc_max: usize) -> NocStats {
-    run_synthetic_with(kind, mesh, cfg, hpc_max, StepMode::EventDriven)
+pub fn run_synthetic(
+    kind: NocKind,
+    topo: impl Into<AnyTopology>,
+    cfg: &SyntheticConfig,
+    hpc_max: usize,
+) -> NocStats {
+    run_synthetic_with(kind, topo, cfg, hpc_max, StepMode::EventDriven)
 }
 
 /// Run one synthetic-traffic point with an explicit stepping engine. The
@@ -213,12 +218,12 @@ pub fn run_synthetic(kind: NocKind, mesh: Mesh, cfg: &SyntheticConfig, hpc_max: 
 /// bit-identical stats.
 pub fn run_synthetic_with(
     kind: NocKind,
-    mesh: Mesh,
+    topo: impl Into<AnyTopology>,
     cfg: &SyntheticConfig,
     hpc_max: usize,
     mode: StepMode,
 ) -> NocStats {
-    run_synthetic_traced(kind, mesh, cfg, hpc_max, mode, None)
+    run_synthetic_traced(kind, topo, cfg, hpc_max, mode, None)
 }
 
 /// [`run_synthetic_with`] with an optional trace sink attached to the
@@ -227,15 +232,16 @@ pub fn run_synthetic_with(
 /// sink (`tests/obs_parity.rs`).
 pub fn run_synthetic_traced(
     kind: NocKind,
-    mesh: Mesh,
+    topo: impl Into<AnyTopology>,
     cfg: &SyntheticConfig,
     hpc_max: usize,
     mode: StepMode,
     trace: Option<SharedSink>,
 ) -> NocStats {
     let _prof = crate::obs::profile::scope("noc.synthetic_point");
+    let topo = topo.into();
     let (rl, depth) = cfg.router_for(kind);
-    let mut net = DriverNet::build(kind, mesh, hpc_max, rl, depth, mode);
+    let mut net = DriverNet::build(kind, topo, hpc_max, rl, depth, mode);
     if let Some(sink) = trace {
         net.attach_trace(sink);
     }
@@ -251,9 +257,9 @@ pub fn run_synthetic_traced(
         if cycle == cfg.warmup {
             ejected_at_warmup = net.flits_ejected();
         }
-        for src in 0..mesh.nodes() {
+        for src in 0..topo.nodes() {
             if rng.chance(p_gen) {
-                if let Some(dst) = cfg.pattern.dest(&mesh, src, &mut rng) {
+                if let Some(dst) = cfg.pattern.dest_on(&topo, src, &mut rng) {
                     let id = net.enqueue(src, dst, cfg.packet_len);
                     if cycle >= cfg.warmup {
                         window_pkts.push(id);
@@ -286,7 +292,7 @@ pub fn run_synthetic_traced(
         avg_net_latency: net_lat.mean(),
         avg_latency: tot_lat.mean(),
         reception_rate: (ejected_at_end - ejected_at_warmup) as f64
-            / (mesh.nodes() as f64 * cfg.measure as f64),
+            / (topo.nodes() as f64 * cfg.measure as f64),
         completed: net_lat.count(),
         dropped,
     }
@@ -317,7 +323,7 @@ pub struct FlowStats {
 #[allow(clippy::too_many_arguments)]
 pub fn run_flows_detailed(
     kind: NocKind,
-    mesh: Mesh,
+    topo: impl Into<AnyTopology>,
     flows: &[Flow],
     warmup: u64,
     measure: u64,
@@ -328,7 +334,7 @@ pub fn run_flows_detailed(
 ) -> Vec<FlowStats> {
     run_flows_detailed_traced(
         kind,
-        mesh,
+        topo,
         flows,
         warmup,
         measure,
@@ -345,7 +351,7 @@ pub fn run_flows_detailed(
 #[allow(clippy::too_many_arguments)]
 pub fn run_flows_detailed_traced(
     kind: NocKind,
-    mesh: Mesh,
+    topo: impl Into<AnyTopology>,
     flows: &[Flow],
     warmup: u64,
     measure: u64,
@@ -355,7 +361,7 @@ pub fn run_flows_detailed_traced(
     buffer_depth: usize,
     trace: Option<SharedSink>,
 ) -> Vec<FlowStats> {
-    let mut net = build_backend(kind, mesh, hpc_max, router_latency, buffer_depth);
+    let mut net = build_backend(kind, topo, hpc_max, router_latency, buffer_depth);
     if let Some(sink) = trace {
         net.attach_trace(sink);
     }
@@ -430,7 +436,7 @@ pub fn run_flows_detailed_traced(
 #[allow(clippy::too_many_arguments)]
 pub fn run_flows(
     kind: NocKind,
-    mesh: Mesh,
+    topo: impl Into<AnyTopology>,
     flows: &[Flow],
     warmup: u64,
     measure: u64,
@@ -439,7 +445,8 @@ pub fn run_flows(
     router_latency: u64,
     buffer_depth: usize,
 ) -> NocStats {
-    let mut net = build_backend(kind, mesh, hpc_max, router_latency, buffer_depth);
+    let topo = topo.into();
+    let mut net = build_backend(kind, topo, hpc_max, router_latency, buffer_depth);
     let mut pacers: Vec<FlowPacer> = flows.iter().map(|&f| FlowPacer::new(f)).collect();
     let mut window_pkts: Vec<u32> = Vec::new();
     let mut ejected_at_warmup = 0u64;
@@ -448,7 +455,7 @@ pub fn run_flows(
         .iter()
         .map(|f| f.packets_per_cycle * f.packet_len as f64)
         .sum::<f64>()
-        / mesh.nodes() as f64;
+        / topo.nodes() as f64;
 
     let total = warmup + measure;
     for cycle in 0..total {
@@ -488,7 +495,7 @@ pub fn run_flows(
         avg_net_latency: net_lat.mean(),
         avg_latency: tot_lat.mean(),
         reception_rate: (ejected_at_end - ejected_at_warmup) as f64
-            / (mesh.nodes() as f64 * measure as f64),
+            / (topo.nodes() as f64 * measure as f64),
         completed: net_lat.count(),
         dropped,
     }
@@ -497,6 +504,7 @@ pub fn run_flows(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::noc::topology::Mesh;
 
     fn quick(kind: NocKind, rate: f64, pattern: Pattern) -> NocStats {
         let cfg = SyntheticConfig {
@@ -622,6 +630,49 @@ mod tests {
             let ev = run_synthetic_with(kind, Mesh::new(8, 8), &cfg, 14, StepMode::EventDriven);
             let re = run_synthetic_with(kind, Mesh::new(8, 8), &cfg, 14, StepMode::CycleStepped);
             assert_eq!(ev, re, "{kind:?} engines diverged");
+        }
+    }
+
+    #[test]
+    fn torus_and_prism_run_clean_at_low_load() {
+        use crate::config::TopologyKind;
+        let cfg = SyntheticConfig {
+            injection_rate: 0.02,
+            warmup: 300,
+            measure: 1_000,
+            drain: 6_000,
+            seed: 11,
+            ..Default::default()
+        };
+        for tk in [TopologyKind::Torus, TopologyKind::Prism] {
+            let topo = AnyTopology::new(tk, 8, 8);
+            for kind in [NocKind::Wormhole, NocKind::Smart, NocKind::Ideal] {
+                let s = run_synthetic(kind, topo, &cfg, 14);
+                assert!(s.completed > 0, "{tk:?} {kind:?}: {s:?}");
+                assert_eq!(s.dropped, 0, "{tk:?} {kind:?}: {s:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn step_modes_agree_on_every_topology() {
+        use crate::config::TopologyKind;
+        let cfg = SyntheticConfig {
+            pattern: Pattern::UniformRandom,
+            injection_rate: 0.05,
+            warmup: 200,
+            measure: 800,
+            drain: 4_000,
+            seed: 0xBEEF,
+            ..Default::default()
+        };
+        for tk in TopologyKind::ALL {
+            let topo = AnyTopology::new(tk, 8, 8);
+            for kind in [NocKind::Wormhole, NocKind::Smart] {
+                let ev = run_synthetic_with(kind, topo, &cfg, 14, StepMode::EventDriven);
+                let re = run_synthetic_with(kind, topo, &cfg, 14, StepMode::CycleStepped);
+                assert_eq!(ev, re, "{tk:?} {kind:?} engines diverged");
+            }
         }
     }
 

@@ -3,7 +3,7 @@
 
 use crate::util::Rng;
 
-use super::topology::Mesh;
+use super::topology::{AnyTopology, Mesh};
 
 /// Synthetic traffic patterns (garnet2.0's standard set, Sec. VII-A).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -82,6 +82,16 @@ impl Pattern {
             Pattern::BitComplement => mesh.id(w - 1 - x, h - 1 - y),
         };
         (dst != src).then_some(dst)
+    }
+
+    /// [`Pattern::dest`] over any topology. The pattern's coordinate map is
+    /// defined on the logical `(w, h)` grid, which all topologies share
+    /// (they differ in *links*, not node layout), so the destination is
+    /// computed on the grid and is bit-identical to [`Pattern::dest`] for
+    /// the mesh — only routing below changes per topology.
+    pub fn dest_on(&self, topo: &AnyTopology, src: usize, rng: &mut Rng) -> Option<usize> {
+        let (w, h) = topo.dims();
+        self.dest(&Mesh::new(w, h), src, rng)
     }
 }
 
@@ -213,6 +223,28 @@ mod tests {
             let d = Pattern::UniformRandom.dest(&m, src, &mut rng).unwrap();
             assert_ne!(d, src);
             assert!(d < m.nodes());
+        }
+    }
+
+    #[test]
+    fn dest_on_matches_mesh_dest() {
+        use crate::config::TopologyKind;
+        let m = mesh();
+        for kind in TopologyKind::ALL {
+            let topo = AnyTopology::new(kind, 8, 8);
+            for pattern in Pattern::ALL {
+                // Same seed -> identical RNG draws -> identical destinations
+                // (the coordinate map is topology-independent).
+                let mut ra = Rng::new(9);
+                let mut rb = Rng::new(9);
+                for src in 0..m.nodes() {
+                    assert_eq!(
+                        pattern.dest_on(&topo, src, &mut ra),
+                        pattern.dest(&m, src, &mut rb),
+                        "{kind:?} {pattern:?} src {src}"
+                    );
+                }
+            }
         }
     }
 

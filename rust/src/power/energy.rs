@@ -173,6 +173,25 @@ impl<'a> EnergyModel<'a> {
             .collect()
     }
 
+    /// Mean per-link energy for one image (mJ): the total flit-hop energy
+    /// spread over the topology's directed link set
+    /// ([`crate::noc::Topology::n_links`] via the [`AnyTopology`] carrier).
+    /// A fleet-planning number: under uniform link utilization this is
+    /// what each physical link dissipates per image, and it shifts with
+    /// the fabric (a torus moves the same traffic over fewer hops; the
+    /// prism's chain links carry pipeline-adjacent traffic at one hop).
+    ///
+    /// [`AnyTopology`]: crate::noc::AnyTopology
+    pub fn mean_link_energy_mj(
+        &self,
+        topo: &crate::noc::AnyTopology,
+        net: &Network,
+        mapping: &NetworkMapping,
+        hops: &[f64],
+    ) -> f64 {
+        self.flit_hops(net, mapping, hops) * self.flit_hop_pj * 1e-9 / topo.n_links() as f64
+    }
+
     /// Tera-operations per second per watt given per-image energy.
     /// Dataflow layers contribute 0 MACs to `Network::ops` and 0 core
     /// energy, so DAG workloads divide compute ops by compute-plus-buffer
@@ -323,6 +342,25 @@ mod tests {
             }
         }
         assert_eq!(dataflow, 9, "8 Adds + 1 GAP in ResNet-18");
+    }
+
+    #[test]
+    fn mean_link_energy_sums_back_to_noc_energy() {
+        use crate::noc::AnyTopology;
+        let (net, m, arch) = setup(VggVariant::E, true);
+        let em = EnergyModel::new(&arch);
+        let hops = vec![2.0; net.len()];
+        let topo = AnyTopology::for_node(&arch);
+        let per_link = em.mean_link_energy_mj(&topo, &net, &m, &hops);
+        let e = em.image_energy(&net, &m, &hops);
+        // per-link mean x directed link count == total NoC energy.
+        assert!(
+            (per_link * topo.n_links() as f64 - e.noc_mj).abs() < 1e-9,
+            "{} vs {}",
+            per_link * topo.n_links() as f64,
+            e.noc_mj
+        );
+        assert!(per_link > 0.0);
     }
 
     #[test]

@@ -7,7 +7,7 @@ use crate::cnn::{vgg, Network, VggVariant};
 use crate::config::{ArchConfig, NocKind, Scenario};
 use crate::mapping::{MappingSelection, NetworkMapping, Placement, ReplicationPlan};
 use crate::noc::sim::run_flows_detailed_traced;
-use crate::noc::Mesh;
+use crate::noc::AnyTopology;
 use crate::obs::trace::SharedSink;
 use crate::pipeline::{build_plans, StagePlan};
 use crate::power::{EnergyBreakdown, EnergyModel};
@@ -71,10 +71,10 @@ pub fn assess_noc_traced(
         return (adjust, layer_flows);
     }
     let (rl, depth) = router_params(kind);
-    let mesh = Mesh::new(arch.tiles_x, arch.tiles_y);
+    let topo = AnyTopology::for_node(arch);
     let stats = run_flows_detailed_traced(
         kind,
-        mesh,
+        topo,
         &flows,
         NOC_WARMUP,
         NOC_MEASURE,
@@ -224,7 +224,7 @@ pub fn evaluate_network_mapped_traced(
     trace: Option<SharedSink>,
 ) -> Result<NetworkReport, String> {
     let mapping = NetworkMapping::build_with(net, arch, plan, selection)?;
-    let placement = Placement::snake(arch);
+    let placement = Placement::for_topology(arch);
     let plans = build_plans(net, &mapping, arch);
     let (adjust, layer_flows) =
         assess_noc_traced(noc, net, &mapping, &placement, &plans, arch, trace.clone());

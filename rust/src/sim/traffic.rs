@@ -1,11 +1,13 @@
 //! Inter-layer NoC traffic extraction: turn a mapped, placed network plus a
-//! pipeline schedule into the point-to-point flow set the mesh must carry
+//! pipeline schedule into the point-to-point flow set the fabric must carry
 //! while the pipeline streams (Sec. VI's processing/interconnect co-model).
+//! Hop counts come from the configured topology (`arch.topology`), so the
+//! same extraction serves mesh, torus, and Parallel-Prism runs.
 
 use crate::cnn::Network;
 use crate::config::ArchConfig;
 use crate::mapping::{NetworkMapping, Placement};
-use crate::noc::Flow;
+use crate::noc::{AnyTopology, Flow};
 use crate::pipeline::StagePlan;
 
 /// Flows of one producer layer (layer i -> each of its DAG successors),
@@ -16,8 +18,9 @@ pub struct LayerFlows {
     pub layer_idx: usize,
     /// Point-to-point flows this layer injects into the mesh.
     pub flows: Vec<Flow>,
-    /// Mean XY hop count across the whole flow set (Eq. (3)-style
-    /// reporting).
+    /// Mean topology hop count across the whole flow set (Eq. (3)-style
+    /// reporting; minimal-route hops on the configured fabric — Manhattan
+    /// distance on the mesh).
     pub mean_hops: f64,
     /// Sum over DAG successors of that successor's mean hop count — the
     /// per-image hop cost of moving one full OFM copy to *each* consumer
@@ -35,6 +38,7 @@ pub fn extract_flows(
     arch: &ArchConfig,
 ) -> Vec<LayerFlows> {
     let phi = arch.noc_cycles_per_logical();
+    let topo = AnyTopology::for_node(arch);
     let layers = net.layers();
     let mut out = Vec::new();
     for i in 0..layers.len() {
@@ -79,7 +83,7 @@ pub fn extract_flows(
                     if src == dst {
                         continue; // same router: the tile bus handles it
                     }
-                    set_hops += placement.coord(s).hops(&placement.coord(d)) as f64;
+                    set_hops += topo.hops(src, dst) as f64;
                     flows.push(Flow {
                         src,
                         dst,

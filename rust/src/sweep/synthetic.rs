@@ -5,7 +5,7 @@
 use std::time::Instant;
 
 use crate::config::NocKind;
-use crate::noc::{run_synthetic_with, Mesh, NocStats, Pattern, StepMode, SyntheticConfig};
+use crate::noc::{run_synthetic_with, AnyTopology, NocStats, Pattern, StepMode, SyntheticConfig};
 
 use super::runner::SweepRunner;
 use super::point_seed;
@@ -22,8 +22,8 @@ pub struct SyntheticPoint {
     pub kind: NocKind,
     /// Fully-resolved run configuration.
     pub cfg: SyntheticConfig,
-    /// Mesh geometry.
-    pub mesh: Mesh,
+    /// Fabric topology and geometry.
+    pub topo: AnyTopology,
     /// SMART bypass budget (1 = wormhole).
     pub hpc_max: usize,
 }
@@ -44,11 +44,11 @@ pub struct SyntheticOutcome {
     pub wall_secs: f64,
 }
 
-/// A sweep grid: patterns x rates x kinds over one mesh.
+/// A sweep grid: patterns x rates x kinds over one fabric.
 #[derive(Debug, Clone)]
 pub struct SyntheticSweep {
-    /// Mesh geometry for every point.
-    pub mesh: Mesh,
+    /// Fabric topology and geometry for every point.
+    pub topo: AnyTopology,
     /// SMART bypass budget for the smart points.
     pub hpc_max: usize,
     /// Patterns axis of the grid.
@@ -66,10 +66,10 @@ pub struct SyntheticSweep {
 }
 
 impl SyntheticSweep {
-    /// The Figs. 10-11 default grid on the given mesh.
-    pub fn new(mesh: Mesh, hpc_max: usize) -> Self {
+    /// The Figs. 10-11 default grid on the given fabric.
+    pub fn new(topo: impl Into<AnyTopology>, hpc_max: usize) -> Self {
         Self {
-            mesh,
+            topo: topo.into(),
             hpc_max,
             patterns: Pattern::ALL.to_vec(),
             rates: vec![0.02, 0.05, 0.08, 0.12, 0.2, 0.3, 0.5, 0.8],
@@ -98,7 +98,7 @@ impl SyntheticSweep {
                         rate,
                         kind,
                         cfg,
-                        mesh: self.mesh,
+                        topo: self.topo,
                         hpc_max: self.hpc_max,
                     });
                 }
@@ -118,7 +118,7 @@ impl SyntheticSweep {
         let points = self.points();
         runner.run(&points, move |_, p| {
             let t0 = Instant::now();
-            let stats = run_synthetic_with(p.kind, p.mesh, &p.cfg, p.hpc_max, mode);
+            let stats = run_synthetic_with(p.kind, p.topo, &p.cfg, p.hpc_max, mode);
             SyntheticOutcome {
                 pattern: p.pattern,
                 rate: p.rate,
@@ -144,6 +144,7 @@ mod tests {
     use super::*;
 
     fn tiny() -> SyntheticSweep {
+        use crate::noc::Mesh;
         let mut s = SyntheticSweep::new(Mesh::new(4, 4), 6);
         s.patterns = vec![Pattern::UniformRandom, Pattern::Transpose];
         s.rates = vec![0.02, 0.05];

@@ -1,8 +1,11 @@
 //! Property tests over the NoC simulator (hand-rolled harness in
-//! `util::prop` — the vendored crate set has no proptest).
+//! `util::prop` — the vendored crate set has no proptest). The mesh-only
+//! properties above the fold are the seed set; the topology-generic block
+//! at the bottom replays conservation / minimality / latency-ordering on
+//! the torus and Parallel-Prism fabrics too (ISSUE 10).
 
-use smart_pim::config::NocKind;
-use smart_pim::noc::{build_backend, run_flows, Flow, Mesh, Network};
+use smart_pim::config::{NocKind, TopologyKind};
+use smart_pim::noc::{build_backend, run_flows, AnyTopology, Flow, Mesh, Network, Topology, Torus2D};
 use smart_pim::util::prop::{check, Config, Gen};
 use smart_pim::{prop_assert, prop_assert_eq};
 
@@ -240,6 +243,183 @@ fn conservation_holds_for_every_backend() {
             );
             prop_assert_eq!(net.flits_injected(), net.flits_ejected());
             prop_assert_eq!(net.flits_ejected(), offered);
+        }
+        Ok(())
+    });
+}
+
+// ---- topology-generic properties (ISSUE 10) ----------------------------
+
+/// Draw a random fabric: random kind on random dims (>= 2x2 so every node
+/// has neighbors in both dimensions).
+fn random_topo(g: &mut Gen) -> AnyTopology {
+    let w = 2 + g.rng.below_usize(7);
+    let h = 2 + g.rng.below_usize(7);
+    let kind = TopologyKind::ALL[g.rng.below_usize(TopologyKind::ALL.len())];
+    AnyTopology::new(kind, w, h)
+}
+
+/// Inject random packets into `net` (a fabric with `nodes` endpoints),
+/// interleaving injection with stepping to vary occupancy.
+fn random_packets_on(g: &mut Gen, net: &mut Network, nodes: usize) -> Vec<u32> {
+    let n_pkts = g.scaled(120);
+    let mut ids = Vec::new();
+    for _ in 0..n_pkts {
+        let src = g.rng.below_usize(nodes);
+        let dst = g.rng.below_usize(nodes);
+        if src == dst {
+            continue;
+        }
+        let len = 1 + g.rng.below(6) as u16;
+        ids.push(net.enqueue(src, dst, len));
+        if g.rng.chance(0.5) {
+            net.step();
+        }
+    }
+    ids
+}
+
+#[test]
+fn delivery_and_minimal_routes_on_every_topology() {
+    // Conservation, exactly-once delivery, and stop-list minimality under
+    // the fabric's own hop metric — the same invariants the mesh tests pin,
+    // replayed on a random topology each case.
+    check("topo-delivery-minimality", &Config::default(), |g| {
+        let topo = random_topo(g);
+        let hpc = 1 + g.rng.below_usize(14);
+        let rl = 1 + g.rng.below(4);
+        let depth = 1 + g.rng.below_usize(4);
+        let mut net = Network::new(topo, hpc, rl, depth);
+        let ids = random_packets_on(g, &mut net, topo.nodes());
+        let cycles = net.drain(2_000_000);
+        prop_assert!(
+            net.quiescent(),
+            "{topo:?} not quiescent after {cycles} cycles"
+        );
+        prop_assert_eq!(net.flits_injected, net.flits_ejected);
+        for id in ids {
+            let p = net.table.get(id);
+            prop_assert!(p.is_done(), "packet {id} undelivered on {topo:?}");
+            prop_assert_eq!(p.delivered, p.len);
+            prop_assert_eq!(p.stops[0], p.src);
+            prop_assert_eq!(*p.stops.last().unwrap(), p.dst);
+            let mut remaining = topo.hops(p.src as usize, p.dst as usize);
+            for w in p.stops.windows(2) {
+                let step = topo.hops(w[0] as usize, w[1] as usize);
+                prop_assert!(step >= 1, "zero-length segment in {:?}", p.stops);
+                let after = topo.hops(w[1] as usize, p.dst as usize);
+                prop_assert_eq!(after + step, remaining);
+                remaining = after;
+            }
+            prop_assert_eq!(remaining, 0usize);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn latency_order_holds_on_every_topology() {
+    // ideal <= SMART <= wormhole is a flow-control property, not a mesh
+    // property: it must survive the fabric swap.
+    check("topo-latency-order", &Config::default(), |g| {
+        let flows = random_flows(g);
+        if flows.is_empty() {
+            return Ok(());
+        }
+        for tk in TopologyKind::ALL {
+            let topo = AnyTopology::new(tk, 8, 8);
+            let run = |kind| run_flows(kind, topo, &flows, 200, 2_000, 40_000, 14, 1, 4);
+            let w = run(NocKind::Wormhole);
+            let s = run(NocKind::Smart);
+            let i = run(NocKind::Ideal);
+            prop_assert_eq!(w.dropped, 0u64);
+            prop_assert_eq!(s.dropped, 0u64);
+            prop_assert_eq!(i.dropped, 0u64);
+            prop_assert!(
+                i.avg_net_latency <= s.avg_net_latency + 1e-9,
+                "{tk:?}: ideal {} > smart {} (flows {:?})",
+                i.avg_net_latency,
+                s.avg_net_latency,
+                flows
+            );
+            prop_assert!(
+                s.avg_net_latency <= w.avg_net_latency + 1e-9,
+                "{tk:?}: smart {} > wormhole {} (flows {:?})",
+                s.avg_net_latency,
+                w.avg_net_latency,
+                flows
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn conservation_holds_for_every_backend_on_every_topology() {
+    // The backend-trait conservation property, fabric-generalized: one
+    // packet list replayed into all three backends on a random topology.
+    check("topo-backend-conservation", &Config::default(), |g| {
+        let topo = random_topo(g);
+        let hpc = 1 + g.rng.below_usize(14);
+        let rl = 1 + g.rng.below(4);
+        let depth = 1 + g.rng.below_usize(4);
+        let n_pkts = g.scaled(80);
+        let pkts: Vec<(usize, usize, u16, bool)> = (0..n_pkts)
+            .map(|_| {
+                (
+                    g.rng.below_usize(topo.nodes()),
+                    g.rng.below_usize(topo.nodes()),
+                    1 + g.rng.below(6) as u16,
+                    g.rng.chance(0.5),
+                )
+            })
+            .collect();
+        for kind in NocKind::ALL {
+            let mut net = build_backend(kind, topo, hpc, rl, depth);
+            let mut offered = 0u64;
+            for &(src, dst, len, step) in &pkts {
+                if src != dst {
+                    net.enqueue(src, dst, len);
+                    offered += len as u64;
+                }
+                if step {
+                    net.step();
+                }
+            }
+            let cycles = net.drain(2_000_000);
+            prop_assert!(
+                net.quiescent(),
+                "{kind:?} on {topo:?} not quiescent after {cycles} cycles"
+            );
+            prop_assert_eq!(net.flits_injected(), net.flits_ejected());
+            prop_assert_eq!(net.flits_ejected(), offered);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn torus_hops_symmetric_and_never_longer_than_mesh() {
+    // Wrap links only ever shorten routes, and the min-wrap metric is
+    // symmetric even though the routing function breaks direction ties.
+    check("torus-hop-metric", &Config::default(), |g| {
+        let w = 1 + g.rng.below_usize(8);
+        let h = 1 + g.rng.below_usize(8);
+        let torus = Torus2D::new(w, h);
+        let mesh = Mesh::new(w, h);
+        for a in 0..torus.nodes() {
+            for b in 0..torus.nodes() {
+                let t = torus.hops(a, b);
+                prop_assert!(
+                    t == torus.hops(b, a),
+                    "torus {w}x{h}: d({a},{b}) != d({b},{a})"
+                );
+                prop_assert!(
+                    t <= mesh.hops(a, b),
+                    "torus {w}x{h}: d({a},{b}) = {t} > mesh {}",
+                    mesh.hops(a, b)
+                );
+            }
         }
         Ok(())
     });
